@@ -1,0 +1,76 @@
+//! Ablation driver for the three proposed methods (DESIGN.md §5):
+//!
+//! * FGGP vs DSW partitioning (same budgets),
+//! * SLMT on (3 sThreads) vs off (1),
+//! * PLOF instruction fusion is structural (always on) — its effect is
+//!   shown through the edge-traffic column (dim_edge = 0 for GCN).
+//!
+//!   cargo run --release --example ablation
+
+use switchblade::compiler::{compile, compile_with, CompilerOptions};
+use switchblade::coordinator::GraphCache;
+use switchblade::graph::datasets::Dataset;
+use switchblade::ir::models::Model;
+use switchblade::partition::{partition_dsw, partition_fggp};
+use switchblade::sim::{simulate, AcceleratorConfig};
+use switchblade::util::report::{f, Table};
+
+fn main() {
+    let cache = GraphCache::new(7);
+    let g = cache.get(Dataset::Sl);
+    let prog = compile(&Model::Gcn.build_paper());
+    let mut t = Table::new(
+        "GCN on soc-LiveJournal: method ablation",
+        &["config", "cycles", "norm", "traffic MB", "overall util"],
+    );
+    let mut base = None;
+    for (name, fggp, threads) in [
+        ("FGGP + SLMT(3)  [paper]", true, 3u32),
+        ("FGGP + SLMT(1)  [no SLMT]", true, 1),
+        ("DSW  + SLMT(3)  [no FGGP]", false, 3),
+        ("DSW  + SLMT(1)  [neither]", false, 1),
+    ] {
+        let accel = AcceleratorConfig::switchblade().with_sthreads(threads);
+        let pc = accel.partition_config(&prog);
+        let parts = if fggp { partition_fggp(&g, pc) } else { partition_dsw(&g, pc) };
+        let r = simulate(&prog, &parts, &accel);
+        let b = *base.get_or_insert(r.cycles);
+        t.row(vec![
+            name.into(),
+            format!("{:.0}", r.cycles),
+            f(r.cycles / b, 3),
+            f(r.traffic.total() as f64 / 1e6, 1),
+            f(r.overall_utilization(), 2),
+        ]);
+    }
+    t.print();
+
+    // Instruction-level ablations: PLOF peephole fusion and the prologue
+    // projection sweep (GAT exercises both).
+    let mut t2 = Table::new(
+        "GAT on soc-LiveJournal: compiler ablation (3 sThreads, FGGP)",
+        &["config", "dim_edge", "cycles", "norm", "traffic MB"],
+    );
+    let gat = Model::Gat.build_paper();
+    let accel = AcceleratorConfig::switchblade();
+    let mut base = None;
+    for (name, fuse, pro) in [
+        ("fusion + prologue  [default]", true, true),
+        ("no fusion", false, true),
+        ("no prologue", true, false),
+        ("neither", false, false),
+    ] {
+        let prog = compile_with(&gat, CompilerOptions { fuse_gathers: fuse, prologue: pro });
+        let parts = partition_fggp(&g, accel.partition_config(&prog));
+        let r = simulate(&prog, &parts, &accel);
+        let b = *base.get_or_insert(r.cycles);
+        t2.row(vec![
+            name.into(),
+            prog.dim_edge.to_string(),
+            format!("{:.0}", r.cycles),
+            f(r.cycles / b, 3),
+            f(r.traffic.total() as f64 / 1e6, 1),
+        ]);
+    }
+    t2.print();
+}

@@ -1,0 +1,73 @@
+//! End-to-end driver (the EXPERIMENTS.md headline run): exercises every
+//! layer of the stack on a real small workload —
+//!
+//! 1. **L1/L2 via PJRT**: load the AOT-compiled JAX models (Pallas kernels
+//!    inlined) and run them on a real graph through the Rust runtime;
+//!    check them against the Rust IR oracle AND the compiled-ISA
+//!    executor (three-way numerics).
+//! 2. **L3**: run the full 4-model × 5-dataset evaluation sweep and print
+//!    the paper's headline metric (Fig 7 speedup + Fig 8 energy).
+//!
+//!   make artifacts && cargo run --release --example end_to_end
+
+use switchblade::compiler::compile;
+use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::exec::{reference, weights, Executor, Matrix};
+use switchblade::graph::Csr;
+use switchblade::ir::models::Model;
+use switchblade::partition::partition_fggp;
+use switchblade::runtime::{artifacts_dir, ArtifactShape, Runtime};
+use switchblade::sim::AcceleratorConfig;
+
+fn main() {
+    // ---- Part 1: numerics through the real PJRT runtime -------------------
+    let shape = ArtifactShape::default();
+    let dir = artifacts_dir();
+    if dir.join(shape.file_name("gcn")).exists() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        println!("PJRT platform: {}", rt.platform());
+        let el = switchblade::graph::generators::rmat(shape.n, shape.e, 0.57, 0.19, 0.19, 99);
+        let g = Csr::from_edge_list(&el);
+        let mut src = vec![0i32; shape.e];
+        let mut dst = vec![0i32; shape.e];
+        for (s, d, id) in g.edges_canonical() {
+            src[id as usize] = s as i32;
+            dst[id as usize] = d as i32;
+        }
+        let deg: Vec<f32> = (0..shape.n).map(|v| g.in_degree(v as u32) as f32).collect();
+        let x = weights::init_features(7, shape.n, shape.d);
+        for m in Model::ALL {
+            let name = m.name().to_lowercase();
+            let exe = rt.load_model(&dir, &name, shape).expect("load model");
+            let got = exe.run(&x, &src, &dst, &deg).expect("pjrt run");
+            let ir = m.build(2, shape.d as u32, shape.d as u32, shape.d as u32);
+            let want = reference::evaluate(&ir, &g, &x);
+            let prog = compile(&ir);
+            let accel = AcceleratorConfig::switchblade();
+            let parts = partition_fggp(&g, accel.partition_config(&prog));
+            let deg_m = Matrix::from_vec(shape.n, 1, deg.clone());
+            let isa_out = Executor::new(&prog, &parts).run(&x, &deg_m);
+            println!(
+                "{:5}  PJRT vs oracle: {:.2e}   ISA vs PJRT: {:.2e}",
+                m.name(),
+                got.max_abs_diff(&want),
+                isa_out.max_abs_diff(&got)
+            );
+            assert!(got.allclose(&want, 1e-3, 1e-4));
+            assert!(isa_out.allclose(&got, 1e-3, 1e-4));
+        }
+        println!("three-way numerics agreement: OK\n");
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT check)\n");
+    }
+
+    // ---- Part 2: the paper's headline metric -------------------------------
+    let h = Harness { scale: 7, ..Default::default() };
+    let cache = GraphCache::new(h.scale);
+    println!("running the 4x5 evaluation sweep (scale 1/2^7)...");
+    let rows = h.eval_all(&cache);
+    h.fig07(&rows).print();
+    println!();
+    h.fig08(&rows).print();
+    println!("\npaper headline: 1.85x speedup / 19.03x energy saving vs V100.");
+}

@@ -1,0 +1,40 @@
+//! Perf probe: stage-by-stage timing of the hot path (graph generation →
+//! CSR indexing → partitioning → simulation) on the largest workload.
+//! Drives the EXPERIMENTS.md §Perf iteration log.
+
+use std::time::Instant;
+use switchblade::compiler::compile;
+use switchblade::graph::datasets::Dataset;
+use switchblade::graph::Csr;
+use switchblade::ir::models::Model;
+use switchblade::partition::{partition_fggp, partition_dsw};
+use switchblade::sim::{simulate, AcceleratorConfig};
+
+fn main() {
+    let scale: u32 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let t0 = Instant::now();
+    let el = Dataset::Sl.generate(scale);
+    let t_gen = t0.elapsed();
+    let t0 = Instant::now();
+    let g = Csr::from_edge_list(&el);
+    let t_csr = t0.elapsed();
+    let prog = compile(&Model::Gcn.build_paper());
+    let accel = AcceleratorConfig::switchblade();
+    let pc = accel.partition_config(&prog);
+    let t0 = Instant::now();
+    let parts = partition_fggp(&g, pc);
+    let t_fggp = t0.elapsed();
+    let t0 = Instant::now();
+    let parts_d = partition_dsw(&g, pc);
+    let t_dsw = t0.elapsed();
+    let t0 = Instant::now();
+    let r = simulate(&prog, &parts, &accel);
+    let t_sim = t0.elapsed();
+    println!("scale={scale} |V|={} |E|={}", g.num_vertices(), g.num_edges());
+    println!("generate   {t_gen:?}");
+    println!("csr build  {t_csr:?}");
+    println!("fggp       {t_fggp:?} ({} shards)", parts.shards.len());
+    println!("dsw        {t_dsw:?} ({} shards)", parts_d.shards.len());
+    println!("simulate   {t_sim:?} ({:.1} M simulated cycles, {:.1} Mcyc/s)",
+        r.cycles / 1e6, r.cycles / 1e6 / t_sim.as_secs_f64());
+}

@@ -1,0 +1,46 @@
+//! Quickstart: the whole SWITCHBLADE pipeline on one small workload.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. Build the GCN model IR (Tbl I row 1) and compile it to PLOF phases.
+//! 2. Generate the ak2010 stand-in graph and partition it with FGGP.
+//! 3. Simulate the accelerator and print latency/utilisation/traffic.
+//! 4. Cross-check the numerics of the compiled program against the IR
+//!    reference oracle.
+
+use switchblade::compiler::compile;
+use switchblade::coordinator::validate_numerics;
+use switchblade::graph::datasets::Dataset;
+use switchblade::ir::models::Model;
+use switchblade::partition::{partition_fggp, stats};
+use switchblade::sim::{simulate, AcceleratorConfig};
+
+fn main() {
+    // 1. Compile.
+    let ir = Model::Gcn.build_paper();
+    let prog = compile(&ir);
+    println!("compiled {}: {} groups, {} instructions, dim_src={}, dim_edge={}",
+        prog.model_name, prog.groups.len(), prog.num_instrs(), prog.dim_src, prog.dim_edge);
+
+    // 2. Partition.
+    let g = Dataset::Ak.load(2);
+    let accel = AcceleratorConfig::switchblade();
+    let parts = partition_fggp(&g, accel.partition_config(&prog));
+    parts.validate().expect("valid partitioning");
+    let st = stats::analyze(&parts);
+    println!("partitioned ak2010 ({} vertices, {} edges): {} intervals, {} shards, occupancy {:.1}%",
+        g.num_vertices(), g.num_edges(), st.num_intervals, st.num_shards,
+        100.0 * st.occupancy_rate);
+
+    // 3. Simulate.
+    let r = simulate(&prog, &parts, &accel);
+    println!("simulated: {:.0} cycles ({:.3} ms @ 1 GHz), overall utilisation {:.1}%, DRAM {:.1} MB",
+        r.cycles, r.seconds * 1e3, 100.0 * r.overall_utilization(),
+        r.traffic.total() as f64 / 1e6);
+
+    // 4. Validate numerics.
+    let diff = validate_numerics(Model::Gcn, &g, &accel);
+    println!("numerics vs oracle: max |delta| = {diff:.2e}");
+    assert!(diff < 1e-4);
+    println!("quickstart OK");
+}

@@ -1,0 +1,160 @@
+"""AOT pipeline: lower each JAX model (with Pallas kernels inlined under
+interpret=True) to HLO *text* consumed by the Rust PJRT runtime.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape-specialised: `<model>_n{N}_e{E}_d{D}.hlo.txt` takes
+`(x [N,D], src [E] i32, dst [E] i32, deg [N,1])` and returns the 1-tuple
+`([N,D],)`. Python runs only here — never on the Rust request path.
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Validation-graph default shapes (mirrored in rust/src/runtime/).
+DEFAULT_N = 64
+DEFAULT_E = 256
+DEFAULT_D = 16
+LAYERS = 2
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, n: int, e: int, d: int, use_pallas: bool) -> str:
+    """Lower one model. Weights are *arguments*, not closure constants: the
+    HLO text writer elides large literals as `{...}`, which would silently
+    zero the parameters after the text round-trip. The Rust runtime
+    reconstructs the same weights from the shared integer-mixing init and
+    passes them positionally (order = build_params order, which mirrors
+    the Rust compiler's WeightInfo order)."""
+    params = M.build_params(name, LAYERS, d, d, d)
+    flat, treedef = jax.tree_util.tree_flatten(params)
+
+    def fn(x, src, dst, deg, *ws):
+        # Keep `deg` alive even for models that ignore it so the lowered
+        # entry always has the same 4 + num_weights signature (jit DCEs
+        # unused parameters otherwise).
+        x = x + 0.0 * deg
+        p = jax.tree_util.tree_unflatten(treedef, list(ws))
+        return (M.forward(name, p, x, src, dst, deg, use_pallas=use_pallas),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((n, d), jnp.float32),
+        jax.ShapeDtypeStruct((e,), jnp.int32),
+        jax.ShapeDtypeStruct((e,), jnp.int32),
+        jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        *[jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in flat],
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_train(name: str, n: int, e: int, d: int) -> str:
+    """Training-step artifact: returns a single `[1 + P]` vector packing
+    `[loss, flat_grads...]` so the Rust SGD loop needs only one output
+    buffer. Gradients flow through the pure-jnp reference ops (the Pallas
+    kernels are forward-path; interpret-mode `pallas_call` has no VJP)."""
+    params = M.build_params(name, LAYERS, d, d, d)
+    flat, treedef = jax.tree_util.tree_flatten(params)
+
+    def loss_fn(ws, x, src, dst, deg, target):
+        p = jax.tree_util.tree_unflatten(treedef, list(ws))
+        out = M.forward(name, p, x, src, dst, deg, use_pallas=False)
+        return jnp.mean((out - target) ** 2)
+
+    def fn(x, src, dst, deg, target, *ws):
+        x = x + 0.0 * deg
+        loss, grads = jax.value_and_grad(loss_fn)(list(ws), x, src, dst, deg, target)
+        packed = jnp.concatenate(
+            [loss[None]] + [g.reshape(-1) for g in grads]
+        )
+        return (packed,)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((n, d), jnp.float32),
+        jax.ShapeDtypeStruct((e,), jnp.int32),
+        jax.ShapeDtypeStruct((e,), jnp.int32),
+        jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        jax.ShapeDtypeStruct((n, d), jnp.float32),
+        *[jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in flat],
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="single-file mode (Makefile stamp)")
+    ap.add_argument("--n", type=int, default=DEFAULT_N)
+    ap.add_argument("--e", type=int, default=DEFAULT_E)
+    ap.add_argument("--d", type=int, default=DEFAULT_D)
+    ap.add_argument(
+        "--models", default="gcn,gat,sage,ggnn", help="comma-separated subset"
+    )
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the pure-jnp reference instead of the Pallas kernels",
+    )
+    ap.add_argument(
+        "--train-models",
+        default="gcn",
+        help="comma-separated models to emit training-step artifacts for",
+    )
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    for name in args.models.split(","):
+        name = name.strip()
+        assert name in M.MODELS, f"unknown model {name}"
+        text = lower_model(name, args.n, args.e, args.d, not args.no_pallas)
+        path = os.path.join(
+            out_dir, f"{name}_n{args.n}_e{args.e}_d{args.d}.hlo.txt"
+        )
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    for name in filter(None, (m.strip() for m in args.train_models.split(","))):
+        assert name in M.MODELS, f"unknown model {name}"
+        text = lower_train(name, args.n, args.e, args.d)
+        path = os.path.join(
+            out_dir, f"{name}_train_n{args.n}_e{args.e}_d{args.d}.hlo.txt"
+        )
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    if args.out:
+        # Makefile stamp: a tiny matmul+bias computation for the runtime
+        # smoke test / quickstart serving demo.
+        def toy(x, y):
+            return (jnp.matmul(x, y) + 2.0,)
+
+        spec = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+        text = to_hlo_text(jax.jit(toy).lower(spec, spec))
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"wrote {args.out} ({len(text)} chars)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: VMEM-tiled matmul — the DMM hot-spot executed by the
+accelerator's MU (32×128 output-stationary systolic array).
+
+TPU adaptation: 128×128 output tiles (MXU-shaped), K-innermost
+accumulation — the same output-stationary dataflow as the paper's MU. The
+BlockSpec index maps express the HBM↔VMEM schedule the accelerator's LSU
+performs with its prefetch flag. `interpret=True` for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _matmul_kernel(a_ref, w_ref, out_ref, *, k_steps: int):
+    """Output-stationary: the out tile accumulates over the K grid axis."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        a_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, rows, cols):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+@jax.jit
+def matmul(a, w):
+    """`a [M, K] × w [K, N] → [M, N]` with 128×128×128 VMEM tiles.
+
+    Shapes are padded up to tile multiples (the accelerator's MU pads rows
+    the same way; macro row counts V/S/E are runtime values).
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul shape mismatch {a.shape} x {w.shape}"
+    tm, tk, tn = min(TILE, m), min(TILE, k), min(TILE, n)
+    gm = (m + tm - 1) // tm
+    gk = (k + tk - 1) // tk
+    gn = (n + tn - 1) // tn
+    a_p = _pad_to(a, gm * tm, gk * tk)
+    w_p = _pad_to(w, gk * tk, gn * tn)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * tm, gn * tn), jnp.float32),
+        interpret=True,
+    )(a_p, w_p)
+    return out[:m, :n]

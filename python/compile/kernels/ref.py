@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE kernel correctness
+signal: pytest asserts kernel == ref over shape/dtype sweeps).
+
+Conventions shared with the Rust executor/reference (rust/src/exec/):
+  * gather over an empty in-edge set yields zeros (also for max),
+  * rsqrt(0) := 1, recip(0) := 0.
+"""
+
+import jax.numpy as jnp
+
+
+def seg_sum(edge_vals, dst, num_vertices):
+    """Segment sum of edge rows by destination: out[v] = sum over e with dst[e]=v."""
+    return jnp.zeros((num_vertices, edge_vals.shape[1]), edge_vals.dtype).at[dst].add(
+        edge_vals
+    )
+
+
+def seg_max(edge_vals, dst, num_vertices):
+    """Segment max; vertices with no in-edges get 0 (shared convention)."""
+    neg = jnp.full((num_vertices, edge_vals.shape[1]), -jnp.inf, edge_vals.dtype)
+    m = neg.at[dst].max(edge_vals)
+    count = jnp.zeros((num_vertices,), jnp.int32).at[dst].add(1)
+    return jnp.where((count > 0)[:, None], m, 0.0)
+
+
+def seg_mean(edge_vals, dst, num_vertices):
+    """Segment mean; empty rows are 0."""
+    s = seg_sum(edge_vals, dst, num_vertices)
+    count = jnp.zeros((num_vertices,), jnp.int32).at[dst].add(1)
+    denom = jnp.maximum(count, 1).astype(edge_vals.dtype)
+    return s / denom[:, None]
+
+
+def matmul(a, w):
+    """Dense matmul oracle (fp32 accumulation)."""
+    return jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+
+def gather_rows(x, idx):
+    """Row gather: x[idx] — the ScatterOp of the paper (vertex-to-edge copy)."""
+    return x[idx]

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: COO segment-reduce — the GatherOp hot-spot of the
+accelerator's GatherPhase (paper §V-B1: "each core is responsible for one
+destination vertex in GatherOp").
+
+TPU adaptation (DESIGN.md §4): the destination-interval tile stays resident
+in VMEM (the accelerator's DstBuffer) while edges stream; feature columns
+are tiled so a (interval × feature-tile) block plus the edge stream fits
+VMEM. `interpret=True` everywhere — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU efficiency is assessed structurally
+(EXPERIMENTS.md §Perf L1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Feature-tile width: one VPU lane group (8×128 fp32 VREG layout).
+FEATURE_TILE = 128
+
+
+def _seg_reduce_kernel(dst_ref, vals_ref, out_ref, *, reduce: str, edges: int):
+    """One grid step owns a feature tile; edges stream in a fori_loop.
+
+    VMEM residency: `out_ref` (the destination tile) is the accumulator —
+    the DSW dual-window guarantees all of a shard's destinations fall in
+    the resident interval, so accumulation never leaves VMEM.
+    """
+    if reduce == "max":
+        out_ref[...] = jnp.full_like(out_ref, -jnp.inf)
+    else:
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def body(e, _):
+        d = dst_ref[e]
+        row = vals_ref[e, :]
+        cur = pl.load(out_ref, (d, slice(None)))
+        new = jnp.maximum(cur, row) if reduce == "max" else cur + row
+        pl.store(out_ref, (d, slice(None)), new)
+        return 0
+
+    jax.lax.fori_loop(0, edges, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices", "reduce"))
+def seg_reduce(edge_vals, dst, num_vertices, reduce="sum"):
+    """Segment-reduce `edge_vals [E, D]` by `dst [E]` into `[N, D]`.
+
+    `reduce` ∈ {"sum", "max", "mean"}; empty rows produce 0 (the
+    convention shared with the Rust stack and ref.py).
+    """
+    e, d = edge_vals.shape
+    base = "max" if reduce == "max" else "sum"
+    grid = (max(1, (d + FEATURE_TILE - 1) // FEATURE_TILE),)
+    tile = min(d, FEATURE_TILE)
+    out = pl.pallas_call(
+        functools.partial(_seg_reduce_kernel, reduce=base, edges=e),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((e,), lambda i: (0,)),  # dst ids: replicated per tile
+            pl.BlockSpec((e, tile), lambda i: (0, i)),  # edge-value tile
+        ],
+        out_specs=pl.BlockSpec((num_vertices, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((num_vertices, d), edge_vals.dtype),
+        interpret=True,
+    )(dst, edge_vals)
+
+    count = jnp.zeros((num_vertices,), jnp.int32).at[dst].add(1)
+    if reduce == "max":
+        return jnp.where((count > 0)[:, None], out, 0.0)
+    if reduce == "mean":
+        return out / jnp.maximum(count, 1).astype(out.dtype)[:, None]
+    return out

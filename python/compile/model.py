@@ -1,0 +1,210 @@
+"""L2: the four Tbl I GNN models in JAX, numerics-identical to the Rust IR
+reference (rust/src/exec/reference.rs) and the compiled-ISA executor.
+
+Weight/feature initialisation uses pure 64-bit integer mixing so every
+layer of the stack (Rust, JAX, and the AOT'd HLO) sees bit-identical f32
+parameters — see rust/src/exec/weights.rs.
+
+`use_pallas=True` routes the gather and matmul hot-spots through the L1
+Pallas kernels so they lower into the same HLO at AOT time.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.matmul import matmul as pallas_matmul
+from .kernels.seg_reduce import seg_reduce
+
+MASK = (1 << 64) - 1
+
+
+def _mix(z: int) -> int:
+    """splitmix64 finalizer — mirrors rust/src/exec/weights.rs::mix."""
+    z = (z + 0x9E3779B97F4A7C15) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return z ^ (z >> 31)
+
+
+def weight_elem(seed: int, i: int, j: int, cols: int) -> float:
+    h = _mix(seed ^ _mix(i * cols + j + 1))
+    unit = (h >> 11) * (1.0 / (1 << 53))
+    return np.float32((unit * 2.0 - 1.0) * 0.1)
+
+
+def init_weight(seed: int, rows: int, cols: int) -> np.ndarray:
+    w = np.empty((rows, cols), np.float32)
+    for i in range(rows):
+        for j in range(cols):
+            w[i, j] = weight_elem(seed, i, j, cols)
+    return w
+
+
+def init_features(seed: int, n: int, dim: int) -> np.ndarray:
+    x = np.empty((n, dim), np.float32)
+    for i in range(n):
+        for j in range(dim):
+            h = _mix(seed ^ _mix((i * dim + j) ^ 0xFEED))
+            unit = (h >> 11) * (1.0 / (1 << 53))
+            x[i, j] = np.float32(unit * 2.0 - 1.0)
+    return x
+
+
+def model_seed(model: str, layer: int, which: int) -> int:
+    """Mirror of rust/src/ir/models.rs::seed."""
+    mid = {"gcn": 1, "gat": 2, "sage": 3, "ggnn": 4}.get(model, 9)
+    return mid * 1_000_000 + layer * 1_000 + which
+
+
+# ---- shared numeric conventions ---------------------------------------------
+
+
+def rsqrt_deg(deg):
+    """rsqrt with the rsqrt(0) := 1 convention (isolated vertices)."""
+    return jnp.where(deg > 0, 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-30)), 1.0)
+
+
+def safe_recip(x):
+    """recip(0) := 0 (GAT softmax denominators of isolated vertices)."""
+    return jnp.where(x == 0, 0.0, 1.0 / jnp.where(x == 0, 1.0, x))
+
+
+def leaky_relu(x):
+    return jnp.where(x >= 0, x, 0.01 * x)
+
+
+def _ops(use_pallas: bool):
+    if use_pallas:
+        return pallas_matmul, seg_reduce
+
+    def _ref_seg(vals, dst, n, reduce="sum"):
+        if reduce == "sum":
+            return ref.seg_sum(vals, dst, n)
+        if reduce == "max":
+            return ref.seg_max(vals, dst, n)
+        return ref.seg_mean(vals, dst, n)
+
+    return ref.matmul, _ref_seg
+
+
+# ---- layers ------------------------------------------------------------------
+
+
+def gcn_layer(x, src, dst, deg, w, *, use_pallas=False):
+    mm, seg = _ops(use_pallas)
+    n = x.shape[0]
+    dn = rsqrt_deg(deg)
+    hs = x * dn
+    a = seg(hs[src], dst, n, reduce="sum")
+    z = mm(a, w)
+    return jnp.maximum(z * dn, 0.0)
+
+
+def gat_layer(x, src, dst, deg, params, *, use_pallas=False):
+    mm, seg = _ops(use_pallas)
+    del deg
+    n = x.shape[0]
+    w, al, ar = params
+    hw = mm(x, w)
+    el = mm(hw, al)  # [N, 1] dst attention term
+    er = mm(hw, ar)  # [N, 1] src attention term
+    s = leaky_relu(el[dst] + er[src])  # [E, 1]
+    m = seg(s, dst, n, reduce="max")
+    ex = jnp.exp(s - m[dst])
+    den = seg(ex, dst, n, reduce="sum")
+    msg = hw[src] * ex
+    num = seg(msg, dst, n, reduce="sum")
+    a = num * safe_recip(den)
+    return jnp.maximum(a, 0.0)
+
+
+def sage_layer(x, src, dst, deg, params, *, use_pallas=False):
+    mm, seg = _ops(use_pallas)
+    del deg
+    n = x.shape[0]
+    wp, b, w = params
+    t = mm(x, wp) + b
+    a = seg(t[src], dst, n, reduce="max")
+    cat = jnp.concatenate([x, a], axis=1)
+    return jnp.maximum(mm(cat, w), 0.0)
+
+
+def ggnn_layer(x, src, dst, deg, params, *, use_pallas=False):
+    mm, seg = _ops(use_pallas)
+    del deg
+    n = x.shape[0]
+    w, b, wz, uz, wr, ur, wh, uh = params
+    t = mm(x, w) + b
+    a = seg(t[src], dst, n, reduce="sum")
+    z = 1.0 / (1.0 + jnp.exp(-(mm(a, wz) + mm(x, uz))))
+    r = 1.0 / (1.0 + jnp.exp(-(mm(a, wr) + mm(x, ur))))
+    hc = jnp.tanh(mm(a, wh) + mm(r * x, uh))
+    return (1.0 - z) * x + z * hc
+
+
+# ---- stacked models ----------------------------------------------------------
+
+MODELS = ("gcn", "gat", "sage", "ggnn")
+
+
+def _dims(layers, in_dim, hid_dim, out_dim):
+    return [
+        (
+            in_dim if l == 0 else hid_dim,
+            out_dim if l == layers - 1 else hid_dim,
+        )
+        for l in range(layers)
+    ]
+
+
+def build_params(model: str, layers: int, in_dim: int, hid_dim: int, out_dim: int):
+    """Materialise all weights for a stacked model, in layer order."""
+    params = []
+    for l, (di, do) in enumerate(_dims(layers, in_dim, hid_dim, out_dim)):
+        if model == "gcn":
+            params.append(init_weight(model_seed("gcn", l, 0), di, do))
+        elif model == "gat":
+            params.append(
+                (
+                    init_weight(model_seed("gat", l, 0), di, do),
+                    init_weight(model_seed("gat", l, 1), do, 1),
+                    init_weight(model_seed("gat", l, 2), do, 1),
+                )
+            )
+        elif model == "sage":
+            params.append(
+                (
+                    init_weight(model_seed("sage", l, 0), di, di),
+                    init_weight(model_seed("sage", l, 1), 1, di),
+                    init_weight(model_seed("sage", l, 2), 2 * di, do),
+                )
+            )
+        elif model == "ggnn":
+            params.append(
+                tuple(
+                    init_weight(model_seed("ggnn", l, k), di, di)
+                    if k != 1
+                    else init_weight(model_seed("ggnn", l, 1), 1, di)
+                    for k in range(8)
+                )
+            )
+        else:
+            raise ValueError(model)
+    return params
+
+
+LAYER_FNS = {
+    "gcn": gcn_layer,
+    "gat": gat_layer,
+    "sage": sage_layer,
+    "ggnn": ggnn_layer,
+}
+
+
+def forward(model: str, params, x, src, dst, deg, *, use_pallas=False):
+    """Stacked forward pass. Returns the `[N, out_dim]` embedding matrix."""
+    h = x
+    for layer_params in params:
+        h = LAYER_FNS[model](h, src, dst, deg, layer_params, use_pallas=use_pallas)
+    return h

@@ -1,0 +1,118 @@
+"""Pallas kernels vs pure-jnp oracle — the CORE kernel correctness signal.
+
+hypothesis sweeps shapes/dtypes/edge distributions; fixed cases pin the
+conventions (empty segments, hub destinations, padding).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.matmul import matmul as pl_matmul
+from compile.kernels.seg_reduce import seg_reduce
+
+
+def coo(rng, n, e):
+    return (
+        rng.integers(0, n, size=e).astype(np.int32),
+        rng.integers(0, n, size=e).astype(np.int32),
+    )
+
+
+# ---- seg_reduce -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("reduce", ["sum", "max", "mean"])
+def test_seg_reduce_matches_ref_fixed(reduce):
+    rng = np.random.default_rng(0)
+    n, e, d = 37, 160, 24
+    _, dst = coo(rng, n, e)
+    vals = rng.standard_normal((e, d)).astype(np.float32)
+    got = seg_reduce(vals, dst, n, reduce=reduce)
+    want = {"sum": ref.seg_sum, "max": ref.seg_max, "mean": ref.seg_mean}[reduce](
+        vals, dst, n
+    )
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 80),
+    e=st.integers(1, 300),
+    d=st.sampled_from([1, 3, 8, 16, 127, 128, 130]),
+    reduce=st.sampled_from(["sum", "max", "mean"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_seg_reduce_matches_ref_sweep(n, e, d, reduce, seed):
+    rng = np.random.default_rng(seed)
+    _, dst = coo(rng, n, e)
+    vals = (rng.standard_normal((e, d)) * 4).astype(np.float32)
+    got = np.asarray(seg_reduce(vals, dst, n, reduce=reduce))
+    want = np.asarray(
+        {"sum": ref.seg_sum, "max": ref.seg_max, "mean": ref.seg_mean}[reduce](
+            vals, dst, n
+        )
+    )
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_seg_reduce_empty_segments_are_zero():
+    # Vertices 5.. receive no edges; the shared convention says 0 even for max.
+    n, e, d = 10, 6, 4
+    dst = np.zeros(e, np.int32)
+    vals = -np.abs(np.random.default_rng(1).standard_normal((e, d))).astype(np.float32)
+    for reduce in ["sum", "max", "mean"]:
+        out = np.asarray(seg_reduce(vals, dst, n, reduce=reduce))
+        assert np.all(out[1:] == 0.0), f"{reduce}: empty rows must be exactly 0"
+
+
+def test_seg_reduce_hub_destination():
+    # All edges land on one vertex (power-law hub).
+    n, e, d = 8, 500, 16
+    dst = np.full(e, 3, np.int32)
+    vals = np.random.default_rng(2).standard_normal((e, d)).astype(np.float32)
+    got = np.asarray(seg_reduce(vals, dst, n, reduce="sum"))
+    assert_allclose(got[3], vals.sum(axis=0), rtol=1e-4, atol=1e-4)
+    assert np.all(got[[0, 1, 2, 4, 5, 6, 7]] == 0)
+
+
+# ---- matmul ---------------------------------------------------------------
+
+
+def test_matmul_matches_ref_fixed():
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((200, 96)).astype(np.float32)
+    w = rng.standard_normal((96, 144)).astype(np.float32)
+    assert_allclose(
+        np.asarray(pl_matmul(a, w)), np.asarray(ref.matmul(a, w)), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.sampled_from([1, 7, 16, 128, 130]),
+    n=st.sampled_from([1, 5, 64, 128, 129]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_sweep(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    assert_allclose(
+        np.asarray(pl_matmul(a, w)),
+        np.asarray(ref.matmul(a, w)),
+        rtol=2e-4,
+        atol=2e-4,
+    )
+
+
+def test_matmul_exact_on_tile_multiples():
+    rng = np.random.default_rng(4)
+    a = rng.standard_normal((256, 128)).astype(np.float32)
+    w = rng.standard_normal((128, 256)).astype(np.float32)
+    assert_allclose(
+        np.asarray(pl_matmul(a, w)), np.asarray(ref.matmul(a, w)), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,79 @@
+"""L2 model tests: shapes, cross-path (pallas vs ref) agreement, weight-init
+parity with the Rust stack, and numeric-convention pins."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+
+def graph(rng, n, e):
+    src = rng.integers(0, n, size=e).astype(np.int32)
+    dst = rng.integers(0, n, size=e).astype(np.int32)
+    deg = np.zeros((n, 1), np.float32)
+    np.add.at(deg, (dst, 0), 1.0)
+    return src, dst, deg
+
+
+@pytest.mark.parametrize("name", M.MODELS)
+def test_forward_shapes(name):
+    rng = np.random.default_rng(0)
+    n, e, d = 40, 180, 8
+    src, dst, deg = graph(rng, n, e)
+    x = M.init_features(7, n, d)
+    params = M.build_params(name, 2, d, d, d)
+    out = M.forward(name, params, x, src, dst, deg)
+    assert out.shape == (n, d)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+@pytest.mark.parametrize("name", M.MODELS)
+def test_pallas_path_matches_ref_path(name):
+    rng = np.random.default_rng(1)
+    n, e, d = 32, 140, 16
+    src, dst, deg = graph(rng, n, e)
+    x = M.init_features(3, n, d)
+    params = M.build_params(name, 2, d, d, d)
+    a = M.forward(name, params, x, src, dst, deg, use_pallas=False)
+    b = M.forward(name, params, x, src, dst, deg, use_pallas=True)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_weight_init_matches_rust_pins():
+    # Pinned in rust/src/exec/weights.rs::known_values_pinned.
+    assert abs(M.weight_elem(42, 0, 0, 16) - (-0.0010140946)) < 1e-7
+    assert abs(M.weight_elem(42, 3, 5, 16) - 0.04941747) < 1e-7
+
+
+def test_weight_init_deterministic():
+    a = M.init_weight(5, 8, 8)
+    b = M.init_weight(5, 8, 8)
+    c = M.init_weight(6, 8, 8)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert np.all((a >= -0.1) & (a < 0.1))
+
+
+def test_isolated_vertices_conventions():
+    # Vertex n-1 has no in-edges: GCN must pass its features through the
+    # rsqrt(0)=1 convention; GAT must emit exactly 0 for it.
+    n, d = 8, 4
+    src = np.array([0, 1, 2], np.int32)
+    dst = np.array([1, 2, 3], np.int32)
+    deg = np.zeros((n, 1), np.float32)
+    np.add.at(deg, (dst, 0), 1.0)
+    x = M.init_features(9, n, d)
+    out_gat = np.asarray(
+        M.forward("gat", M.build_params("gat", 1, d, d, d), x, src, dst, deg)
+    )
+    assert np.all(out_gat[4:] == 0.0)
+    out_gcn = np.asarray(
+        M.forward("gcn", M.build_params("gcn", 1, d, d, d), x, src, dst, deg)
+    )
+    assert np.all(np.isfinite(out_gcn))
+
+
+def test_model_seed_mirror():
+    assert M.model_seed("gcn", 0, 0) == 1_000_000
+    assert M.model_seed("ggnn", 1, 7) == 4_001_007

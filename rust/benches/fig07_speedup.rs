@@ -1,0 +1,16 @@
+//! Fig 7 — speedup over the V100 GPU across 4 models × 5 datasets.
+//! Regenerates the figure series and times the harness (hand-rolled
+//! harness; criterion is unavailable offline).
+
+use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::util::bench;
+
+fn main() {
+    let scale = 8; // bench scale: fast but non-trivial
+    let h = Harness { scale, ..Default::default() };
+    let cache = GraphCache::new(scale);
+    let stats = bench::bench(1, 3, || h.eval_all(&cache));
+    bench::report("fig07/eval_all(4x5)", &stats);
+    let rows = h.eval_all(&cache);
+    h.fig07(&rows).print();
+}

@@ -1,0 +1,8 @@
+//! Evaluation baselines (paper §VI): the NVIDIA V100 running DGL in the
+//! operator-by-operator paradigm, and the authors' HyGCN reproduction.
+
+pub mod gpu;
+pub mod hygcn;
+
+pub use gpu::{gpu_run, GpuConfig, GpuResult};
+pub use hygcn::{hygcn_run, HygcnConfig, HygcnResult};

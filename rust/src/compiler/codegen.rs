@@ -1,0 +1,950 @@
+//! ISA code generation from the unified computational graph.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::ir::{IrGraph, IrOp, Loc, NodeId};
+use crate::isa::{
+    DataRef, Dim, Instr, PhaseGroup, Program, ScatterDir, Space, Sym, SymInfo, SymbolTable,
+    WeightInfo,
+};
+
+/// Compiler feature toggles — the ablation axes of the instruction-level
+/// design choices (DESIGN.md §5; `examples/ablation.rs` sweeps them).
+#[derive(Clone, Copy, Debug)]
+pub struct CompilerOptions {
+    /// PLOF peephole: fuse Scatter(+RowScale)+Gather into `GSCTR`,
+    /// removing the `num_edge × dim_edge` Equ. 1 term.
+    pub fuse_gathers: bool,
+    /// Precompute depth-0 vertex projections once per vertex (prologue
+    /// sweep) instead of re-running the MU per shard occurrence.
+    pub prologue: bool,
+}
+
+impl Default for CompilerOptions {
+    fn default() -> Self {
+        CompilerOptions {
+            fuse_gathers: true,
+            prologue: true,
+        }
+    }
+}
+
+/// Compile a validated IR graph into a PLOF program (default options).
+pub fn compile(ir: &IrGraph) -> Program {
+    compile_with(ir, CompilerOptions::default())
+}
+
+/// Compile with explicit feature toggles.
+pub fn compile_with(ir: &IrGraph, opts: CompilerOptions) -> Program {
+    ir.validate().expect("IR must validate before compilation");
+    let mut cg = Codegen::new(ir);
+    cg.opts = opts;
+    cg.assign_groups();
+    if opts.prologue {
+        cg.assign_prologue();
+    }
+    cg.analyze_stores();
+    cg.emit_all();
+    cg.finish()
+}
+
+
+struct Codegen<'a> {
+    opts: CompilerOptions,
+    ir: &'a IrGraph,
+    depth: Vec<u32>,
+    users: Vec<Vec<NodeId>>,
+    num_groups: u32,
+    /// Group assignment for edge-located nodes (incl. gathers).
+    egroup: Vec<u32>,
+    /// Depth-0 vertex DMM nodes precomputed once per vertex in a prologue
+    /// sweep (computing them per shard would replicate MU work by the
+    /// source-redundancy factor — see module docs).
+    prologue: Vec<NodeId>,
+    /// Vertex nodes that must be spilled to DRAM (`ST.D`) by their
+    /// producing group.
+    store_d: HashSet<NodeId>,
+    /// Edge nodes that must be spilled (`ST.E`) by their producing group.
+    store_e: HashSet<NodeId>,
+    // Symbol allocation.
+    next_id: HashMap<Space, u32>,
+    symbols: SymbolTable,
+    d_sym: HashMap<NodeId, Sym>,
+    s_sym: HashMap<(u32, NodeId), Sym>,
+    e_sym: HashMap<NodeId, Sym>,
+    w_sym: HashMap<NodeId, Sym>,
+    weights: Vec<WeightInfo>,
+    // Per-group emission state.
+    groups: Vec<PhaseGroup>,
+    d_resident: HashSet<NodeId>,
+    e_loaded: HashSet<NodeId>,
+}
+
+impl<'a> Codegen<'a> {
+    fn new(ir: &'a IrGraph) -> Self {
+        let depth = ir.gather_depth();
+        let users = ir.users();
+        // Models without any GTR still get one group (pure ApplyPhase).
+        let num_groups = ir.num_groups().max(1);
+        Codegen {
+            opts: CompilerOptions::default(),
+            ir,
+            depth,
+            users,
+            num_groups,
+            egroup: vec![u32::MAX; ir.nodes.len()],
+            prologue: Vec::new(),
+            store_d: HashSet::new(),
+            store_e: HashSet::new(),
+            next_id: HashMap::new(),
+            symbols: SymbolTable::default(),
+            d_sym: HashMap::new(),
+            s_sym: HashMap::new(),
+            e_sym: HashMap::new(),
+            w_sym: HashMap::new(),
+            weights: Vec::new(),
+            groups: Vec::new(),
+            d_resident: HashSet::new(),
+            e_loaded: HashSet::new(),
+        }
+    }
+
+    fn node(&self, n: NodeId) -> &crate::ir::Node {
+        &self.ir.nodes[n]
+    }
+
+    fn is_gather(&self, n: NodeId) -> bool {
+        matches!(self.node(n).op, IrOp::Gather(_))
+    }
+
+    fn is_edge(&self, n: NodeId) -> bool {
+        self.node(n).loc == Loc::Edge
+    }
+
+    /// The sweep that *produces* this vertex value in D space: `-1` for
+    /// the prologue, `g` for group g's gather/apply, None for inputs and
+    /// rematerialised depth-0 computes.
+    fn produced_group(&self, n: NodeId) -> Option<i64> {
+        if self.prologue.contains(&n) {
+            return Some(-1);
+        }
+        match self.node(n).op {
+            IrOp::Input | IrOp::Degree | IrOp::Weight { .. } | IrOp::Bias { .. } => None,
+            IrOp::Gather(_) => Some(self.depth[n] as i64),
+            _ if self.node(n).loc == Loc::Vertex => {
+                if self.depth[n] >= 1 {
+                    Some(self.depth[n] as i64 - 1)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Pick the prologue set: depth-0 vertex `Dmm` nodes. Their
+    /// (cheap, ELW-only) consumers still rematerialise per role, but read
+    /// the stored projection instead of re-running the MU per shard.
+    fn assign_prologue(&mut self) {
+        for n in 0..self.ir.nodes.len() {
+            if self.node(n).loc == Loc::Vertex
+                && self.depth[n] == 0
+                && matches!(self.node(n).op, IrOp::Dmm)
+            {
+                self.prologue.push(n);
+            }
+        }
+    }
+
+    /// Step 2 of phase construction: edge-node groups (see module docs).
+    fn assign_groups(&mut self) {
+        // Reverse topological order = reverse insertion order.
+        for id in (0..self.ir.nodes.len()).rev() {
+            let node = self.node(id);
+            if !self.is_edge(id) {
+                continue;
+            }
+            if self.is_gather(id) {
+                unreachable!("gathers are vertex-located");
+            }
+            let mut g = u32::MAX;
+            for &u in &self.users[id] {
+                let ug = if self.is_gather(u) {
+                    self.depth[u]
+                } else if self.is_edge(u) {
+                    self.egroup[u]
+                } else {
+                    continue;
+                };
+                g = g.min(ug);
+            }
+            // An edge value consumed by no gather (dead end) stays at its
+            // own depth; model outputs are vertex-located so this only
+            // happens in synthetic tests.
+            if g == u32::MAX {
+                g = self.depth[id];
+            }
+            assert!(
+                g >= self.depth[id],
+                "edge node {} ({}) scheduled before its inputs exist",
+                id,
+                node.name
+            );
+            self.egroup[id] = g;
+        }
+    }
+
+    /// Decide which values must round-trip through DRAM.
+    fn analyze_stores(&mut self) {
+        for u in 0..self.ir.nodes.len() {
+            match self.node(u).op {
+                IrOp::ScatterSrc => {
+                    // Source rows always stream from DRAM; the scattered
+                    // vertex value must be stored unless it is an input or
+                    // a rematerialised depth-0 chain.
+                    let i = self.node(u).inputs[0];
+                    if self.produced_group(i).is_some() {
+                        self.store_d.insert(i);
+                    }
+                }
+                IrOp::ScatterDst => {
+                    let i = self.node(u).inputs[0];
+                    if let Some(pg) = self.produced_group(i) {
+                        let gu = self.egroup[u] as i64;
+                        assert!(
+                            pg < gu,
+                            "ScatterDst consumes a value produced in the same sweep"
+                        );
+                        self.store_d.insert(i);
+                    }
+                }
+                IrOp::Output => {
+                    let i = self.node(u).inputs[0];
+                    if self.produced_group(i).is_some() {
+                        self.store_d.insert(i);
+                    }
+                }
+                _ if self.is_edge(u) => {
+                    let inputs = self.node(u).inputs.clone();
+                    for i in inputs {
+                        if self.is_edge(i) && self.egroup[i] < self.egroup[u] {
+                            self.store_e.insert(i);
+                        }
+                    }
+                }
+                _ if self.node(u).loc == Loc::Vertex => {
+                    // Vertex compute consuming vertex values from earlier
+                    // sweeps loads them via LD.D/LD.S — they must be
+                    // stored. Homeless (depth-0) chains rematerialise in
+                    // whatever sweep consumes them, so *any* produced
+                    // input of theirs needs a store.
+                    let hu = self.home(u);
+                    let inputs = self.node(u).inputs.clone();
+                    for i in inputs {
+                        if self.node(i).loc != Loc::Vertex {
+                            continue;
+                        }
+                        match (self.produced_group(i), hu) {
+                            (Some(pg), Some(hu)) if pg < hu as i64 => {
+                                self.store_d.insert(i);
+                            }
+                            (Some(_), None) if self.home(u).is_none()
+                                && self.produced_group(u).is_none() =>
+                            {
+                                self.store_d.insert(i);
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// ApplyPhase group hosting this vertex compute node, if any.
+    fn home(&self, n: NodeId) -> Option<u32> {
+        match self.node(n).op {
+            IrOp::Input | IrOp::Degree | IrOp::Weight { .. } | IrOp::Bias { .. } => None,
+            IrOp::Gather(_) => None, // produced by the gather phase itself
+            IrOp::Output => Some(self.num_groups - 1),
+            _ if self.node(n).loc == Loc::Vertex => {
+                if self.depth[n] >= 1 {
+                    Some(self.depth[n] - 1)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+
+    // ---- symbol helpers -----------------------------------------------------
+
+    fn alloc(&mut self, space: Space, cols: u32, rows: Dim, origin: &str) -> Sym {
+        let id = self.next_id.entry(space).or_insert(0);
+        let sym = Sym::new(space, *id);
+        *id += 1;
+        self.symbols.insert(SymInfo {
+            sym,
+            cols,
+            rows,
+            origin: origin.to_string(),
+        });
+        sym
+    }
+
+    fn weight_sym(&mut self, n: NodeId) -> Sym {
+        if let Some(&s) = self.w_sym.get(&n) {
+            return s;
+        }
+        let node = self.node(n).clone();
+        let (rows, seed) = match node.op {
+            IrOp::Weight { rows, seed } => (rows, seed),
+            IrOp::Bias { seed } => (1, seed),
+            _ => panic!("not a weight node"),
+        };
+        let sym = self.alloc(Space::W, node.cols, Dim::Lit(rows), &node.name);
+        self.weights.push(WeightInfo {
+            sym,
+            rows,
+            cols: node.cols,
+            seed,
+        });
+        self.w_sym.insert(n, sym);
+        sym
+    }
+
+    fn data_ref(&self, n: NodeId) -> DataRef {
+        match self.node(n).op {
+            IrOp::Input => DataRef::Input,
+            IrOp::Degree => DataRef::Degree,
+            _ => DataRef::Node(n),
+        }
+    }
+
+    // ---- materialisation ----------------------------------------------------
+
+    /// Materialise vertex value `n` on the current shard's source rows
+    /// (S space) inside group `g`'s GatherPhase.
+    fn mat_s(&mut self, n: NodeId, g: u32, out: &mut Vec<Instr>) -> Sym {
+        if let Some(&s) = self.s_sym.get(&(g, n)) {
+            return s;
+        }
+        let node = self.node(n).clone();
+        assert_eq!(node.loc, Loc::Vertex, "mat_s on non-vertex {}", node.name);
+        let sym = match node.op {
+            IrOp::Input | IrOp::Degree => {
+                let sym = self.alloc(Space::S, node.cols, Dim::S, &node.name);
+                out.push(Instr::Ld {
+                    sym,
+                    data: self.data_ref(n),
+                    rows: Dim::S,
+                    cols: node.cols,
+                });
+                sym
+            }
+            _ if self.produced_group(n).is_some() => {
+                // Stored by an earlier sweep: stream source rows.
+                debug_assert!(self.produced_group(n).unwrap() < g as i64);
+                debug_assert!(self.store_d.contains(&n));
+                let sym = self.alloc(Space::S, node.cols, Dim::S, &node.name);
+                out.push(Instr::Ld {
+                    sym,
+                    data: DataRef::Node(n),
+                    rows: Dim::S,
+                    cols: node.cols,
+                });
+                sym
+            }
+            _ => {
+                // Depth-0 compute chain: rematerialise on shard rows.
+                let sym = self.alloc(Space::S, node.cols, Dim::S, &node.name);
+                self.emit_compute(n, sym, Dim::S, g, RoleCtx::SrcRows, out);
+                sym
+            }
+        };
+        self.s_sym.insert((g, n), sym);
+        sym
+    }
+
+    /// Materialise vertex value `n` on the current destination interval
+    /// (D space), emitting into `out` (a ScatterPhase or ApplyPhase list).
+    fn mat_d(&mut self, n: NodeId, g: u32, out: &mut Vec<Instr>) -> Sym {
+        if self.d_resident.contains(&n) {
+            return self.d_sym[&n];
+        }
+        let node = self.node(n).clone();
+        assert_eq!(node.loc, Loc::Vertex, "mat_d on non-vertex {}", node.name);
+        let sym = self.d_sym_for(n);
+        match node.op {
+            IrOp::Input | IrOp::Degree => {
+                out.push(Instr::Ld {
+                    sym,
+                    data: self.data_ref(n),
+                    rows: Dim::V,
+                    cols: node.cols,
+                });
+            }
+            _ if self.produced_group(n).is_some_and(|pg| pg < g as i64) => {
+                debug_assert!(self.store_d.contains(&n));
+                out.push(Instr::Ld {
+                    sym,
+                    data: DataRef::Node(n),
+                    rows: Dim::V,
+                    cols: node.cols,
+                });
+            }
+            _ if self.produced_group(n) == Some(g as i64) => {
+                panic!(
+                    "mat_d of {} before its producer ran in group {g}",
+                    node.name
+                );
+            }
+            _ => {
+                // Depth-0 chain rematerialised on interval rows.
+                self.emit_compute(n, sym, Dim::V, g, RoleCtx::DstRows, out);
+            }
+        }
+        self.d_resident.insert(n);
+        sym
+    }
+
+    /// Materialise a vertex value inside the prologue sweep (inputs and
+    /// cheap depth-0 chains only — prologue nodes are emitted in topo
+    /// order so their prologue deps are already resident).
+    fn mat_d_pro(&mut self, n: NodeId, out: &mut Vec<Instr>) -> Sym {
+        if self.d_resident.contains(&n) {
+            return self.d_sym[&n];
+        }
+        let node = self.node(n).clone();
+        let sym = self.d_sym_for(n);
+        match node.op {
+            IrOp::Input | IrOp::Degree => {
+                out.push(Instr::Ld {
+                    sym,
+                    data: self.data_ref(n),
+                    rows: Dim::V,
+                    cols: node.cols,
+                });
+            }
+            _ => {
+                // depth-0 ELW chain.
+                let inputs = node.inputs.clone();
+                for i in inputs {
+                    if self.node(i).loc == Loc::Vertex {
+                        self.mat_d_pro(i, out);
+                    }
+                }
+                self.emit_compute(n, sym, Dim::V, 0, RoleCtx::DstRows, out);
+            }
+        }
+        self.d_resident.insert(n);
+        sym
+    }
+
+    fn d_sym_for(&mut self, n: NodeId) -> Sym {
+        if let Some(&s) = self.d_sym.get(&n) {
+            return s;
+        }
+        let (cols, name) = (self.node(n).cols, self.node(n).name.clone());
+        let sym = self.alloc(Space::D, cols, Dim::V, &name);
+        self.d_sym.insert(n, sym);
+        sym
+    }
+
+    fn e_sym_for(&mut self, n: NodeId) -> Sym {
+        if let Some(&s) = self.e_sym.get(&n) {
+            return s;
+        }
+        let (cols, name) = (self.node(n).cols, self.node(n).name.clone());
+        let sym = self.alloc(Space::E, cols, Dim::E, &name);
+        self.e_sym.insert(n, sym);
+        sym
+    }
+
+    /// Emit the compute instruction for node `n` writing `dst` with row
+    /// dimension `rows`. Operands are materialised in the same role.
+    fn emit_compute(
+        &mut self,
+        n: NodeId,
+        dst: Sym,
+        rows: Dim,
+        g: u32,
+        role: RoleCtx,
+        out: &mut Vec<Instr>,
+    ) {
+        let node = self.node(n).clone();
+        let operand = |cg: &mut Self, i: NodeId, out: &mut Vec<Instr>| -> Sym {
+            let inode = cg.node(i).clone();
+            match inode.op {
+                IrOp::Weight { .. } | IrOp::Bias { .. } => cg.weight_sym(i),
+                _ => match role {
+                    RoleCtx::SrcRows => cg.mat_s(i, g, out),
+                    RoleCtx::DstRows => cg.mat_d(i, g, out),
+                    RoleCtx::EdgeRows => {
+                        if inode.loc == Loc::Edge {
+                            cg.edge_operand(i, g, out)
+                        } else {
+                            panic!("vertex operand {} in edge compute", inode.name)
+                        }
+                    }
+                },
+            }
+        };
+        match node.op {
+            IrOp::Dmm => {
+                let a = operand(self, node.inputs[0], out);
+                let w = self.weight_sym(node.inputs[1]);
+                let k = self.node(node.inputs[0]).cols;
+                out.push(Instr::Dmm {
+                    dst,
+                    a,
+                    w,
+                    rows,
+                    k,
+                    n: node.cols,
+                });
+            }
+            IrOp::Unary(op) => {
+                let a = operand(self, node.inputs[0], out);
+                out.push(Instr::Elw {
+                    op,
+                    dst,
+                    a,
+                    b: None,
+                    broadcast_b: false,
+                    rows,
+                    cols: node.cols,
+                });
+            }
+            IrOp::Binary(op) => {
+                let a = operand(self, node.inputs[0], out);
+                let bnode = node.inputs[1];
+                let is_bias = matches!(self.node(bnode).op, IrOp::Bias { .. });
+                let b = operand(self, bnode, out);
+                out.push(Instr::Elw {
+                    op,
+                    dst,
+                    a,
+                    b: Some(b),
+                    broadcast_b: is_bias,
+                    rows,
+                    cols: node.cols,
+                });
+            }
+            IrOp::RowScale => {
+                let a = operand(self, node.inputs[0], out);
+                let scale = operand(self, node.inputs[1], out);
+                out.push(Instr::RowScale {
+                    dst,
+                    a,
+                    scale,
+                    rows,
+                    cols: node.cols,
+                });
+            }
+            IrOp::Concat => {
+                let a = operand(self, node.inputs[0], out);
+                let b = operand(self, node.inputs[1], out);
+                out.push(Instr::Concat {
+                    dst,
+                    a,
+                    b,
+                    rows,
+                    cols_a: self.node(node.inputs[0]).cols,
+                    cols_b: self.node(node.inputs[1]).cols,
+                });
+            }
+            ref op => panic!("emit_compute on {op:?} ({})", node.name),
+        }
+    }
+
+    /// Resolve an edge operand inside group `g`'s GatherPhase: either it
+    /// was computed earlier in this phase (topo order), or it was spilled
+    /// by an earlier group and needs an `LD.E`.
+    fn edge_operand(&mut self, i: NodeId, g: u32, out: &mut Vec<Instr>) -> Sym {
+        let sym = self.e_sym_for(i);
+        if self.egroup[i] < g && !self.e_loaded.contains(&i) {
+            debug_assert!(self.store_e.contains(&i));
+            out.push(Instr::Ld {
+                sym,
+                data: DataRef::Node(i),
+                rows: Dim::E,
+                cols: self.node(i).cols,
+            });
+            self.e_loaded.insert(i);
+        }
+        sym
+    }
+
+    // ---- per-group emission -------------------------------------------------
+
+    fn emit_all(&mut self) {
+        // Prologue sweep: per-vertex projections computed once and stored
+        // (a PhaseGroup with only a ScatterPhase — the iThread pre-compute
+        // role of §V-B2).
+        if !self.prologue.is_empty() {
+            self.d_resident.clear();
+            let mut instrs = Vec::new();
+            let order = self.prologue.clone();
+            for n in order {
+                let node = self.node(n).clone();
+                for &i in &node.inputs {
+                    if self.node(i).loc == Loc::Vertex {
+                        self.mat_d_pro(i, &mut instrs);
+                    }
+                }
+                let dst = self.d_sym_for(n);
+                self.emit_compute(n, dst, Dim::V, 0, RoleCtx::DstRows, &mut instrs);
+                self.d_resident.insert(n);
+                instrs.push(Instr::St {
+                    sym: dst,
+                    data: DataRef::Node(n),
+                    rows: Dim::V,
+                    cols: node.cols,
+                });
+            }
+            self.groups.push(PhaseGroup {
+                scatter: instrs,
+                gather: Vec::new(),
+                apply: Vec::new(),
+            });
+        }
+        for g in 0..self.num_groups {
+            self.d_resident.clear();
+            self.e_loaded.clear();
+            let mut group = PhaseGroup::default();
+
+            // ScatterPhase: interval-side values feeding ScatterDst ops of
+            // this group.
+            for n in 0..self.ir.nodes.len() {
+                if matches!(self.node(n).op, IrOp::ScatterDst) && self.egroup[n] == g {
+                    let input = self.node(n).inputs[0];
+                    let mut instrs = std::mem::take(&mut group.scatter);
+                    self.mat_d(input, g, &mut instrs);
+                    group.scatter = instrs;
+                }
+            }
+
+            // GatherPhase: all edge nodes assigned to this group plus the
+            // gathers terminating it, in topological order.
+            for n in 0..self.ir.nodes.len() {
+                let node = self.node(n).clone();
+                if self.is_gather(n) && self.depth[n] == g {
+                    let mut instrs = std::mem::take(&mut group.gather);
+                    let src = self.edge_operand(node.inputs[0], g, &mut instrs);
+                    let dst = self.d_sym_for(n);
+                    let IrOp::Gather(reduce) = node.op else { unreachable!() };
+                    instrs.push(Instr::Gather {
+                        reduce,
+                        dst,
+                        src,
+                        cols: node.cols,
+                    });
+                    group.gather = instrs;
+                    self.d_resident.insert(n);
+                    continue;
+                }
+                if !self.is_edge(n) || self.egroup[n] != g {
+                    continue;
+                }
+                let mut instrs = std::mem::take(&mut group.gather);
+                match node.op {
+                    IrOp::ScatterSrc => {
+                        let s = self.mat_s(node.inputs[0], g, &mut instrs);
+                        let dst = self.e_sym_for(n);
+                        instrs.push(Instr::Scatter {
+                            dir: ScatterDir::SrcToEdge,
+                            dst,
+                            src: s,
+                            cols: node.cols,
+                        });
+                    }
+                    IrOp::ScatterDst => {
+                        // Interval data was prepared by this group's
+                        // ScatterPhase (or an earlier group + LD.D there).
+                        let input = node.inputs[0];
+                        assert!(
+                            self.d_resident.contains(&input),
+                            "ScatterDst input {} not resident",
+                            self.node(input).name
+                        );
+                        let src = self.d_sym[&input];
+                        let dst = self.e_sym_for(n);
+                        instrs.push(Instr::Scatter {
+                            dir: ScatterDir::DstToEdge,
+                            dst,
+                            src,
+                            cols: node.cols,
+                        });
+                    }
+                    _ => {
+                        let dst = self.e_sym_for(n);
+                        self.emit_compute(n, dst, Dim::E, g, RoleCtx::EdgeRows, &mut instrs);
+                    }
+                }
+                // Spill edge values needed by later groups.
+                if self.store_e.contains(&n) {
+                    instrs.push(Instr::St {
+                        sym: self.e_sym[&n],
+                        data: DataRef::Node(n),
+                        rows: Dim::E,
+                        cols: node.cols,
+                    });
+                }
+                group.gather = instrs;
+            }
+
+            // ApplyPhase: vertex computes homed here, then stores.
+            for n in 0..self.ir.nodes.len() {
+                if self.home(n) != Some(g) || matches!(self.node(n).op, IrOp::Output) {
+                    continue;
+                }
+                let node = self.node(n).clone();
+                let mut instrs = std::mem::take(&mut group.apply);
+                // Materialise vertex operands not yet resident.
+                for &i in &node.inputs {
+                    if self.node(i).loc == Loc::Vertex {
+                        self.mat_d(i, g, &mut instrs);
+                    }
+                }
+                let dst = self.d_sym_for(n);
+                self.emit_compute(n, dst, Dim::V, g, RoleCtx::DstRows, &mut instrs);
+                self.d_resident.insert(n);
+                group.apply = instrs;
+            }
+            // The final result may be a depth-0 chain (GTR-free models):
+            // materialise it on interval rows in the last group so the
+            // store below has something to write.
+            if g + 1 == self.num_groups {
+                let result = self.node(self.ir.output.unwrap()).inputs[0];
+                if self.produced_group(result).is_none() {
+                    let mut instrs = std::mem::take(&mut group.apply);
+                    self.mat_d(result, g, &mut instrs);
+                    instrs.push(Instr::St {
+                        sym: self.d_sym[&result],
+                        data: DataRef::Node(result),
+                        rows: Dim::V,
+                        cols: self.node(result).cols,
+                    });
+                    group.apply = instrs;
+                }
+            }
+            // Stores: every value produced in this group that later groups
+            // (or the host) read back.
+            for n in 0..self.ir.nodes.len() {
+                if self.produced_group(n) == Some(g as i64) && self.store_d.contains(&n) {
+                    let sym = self.d_sym[&n];
+                    group.apply.push(Instr::St {
+                        sym,
+                        data: DataRef::Node(n),
+                        rows: Dim::V,
+                        cols: self.node(n).cols,
+                    });
+                }
+            }
+            self.groups.push(group);
+        }
+    }
+
+    fn finish(mut self) -> Program {
+        let groups = std::mem::take(&mut self.groups);
+        let groups = if self.opts.fuse_gathers {
+            fuse_gathers(groups)
+        } else {
+            groups
+        };
+        let (groups, symbols) = super::liveness::merge_symbols(groups, &self.symbols);
+        let out_node = self.ir.output.expect("validated IR has output");
+        let result_node = self.node(out_node).inputs[0];
+
+        // Partitioning parameters (§V-C3): per-group resident widths.
+        let mut dim_src = 0u32;
+        let mut dim_edge = 0u32;
+        let mut dim_dst = 0u32;
+        for g in &groups {
+            let mut s_syms: HashMap<Sym, u32> = HashMap::new();
+            let mut e_syms: HashMap<Sym, u32> = HashMap::new();
+            let mut d_syms: HashMap<Sym, u32> = HashMap::new();
+            for i in g.all_instrs() {
+                for sym in i.def().into_iter().chain(i.uses()) {
+                    let cols = symbols.cols(sym);
+                    match sym.space {
+                        Space::S => {
+                            s_syms.insert(sym, cols);
+                        }
+                        Space::E => {
+                            e_syms.insert(sym, cols);
+                        }
+                        Space::D => {
+                            d_syms.insert(sym, cols);
+                        }
+                        Space::W => {}
+                    }
+                }
+            }
+            dim_src = dim_src.max(s_syms.values().sum());
+            dim_edge = dim_edge.max(e_syms.values().sum());
+            dim_dst = dim_dst.max(d_syms.values().sum());
+        }
+
+        let in_dim = self
+            .ir
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, IrOp::Input))
+            .map(|n| n.cols)
+            .unwrap_or(0);
+
+        Program {
+            model_name: self.ir.name.clone(),
+            has_prologue: !self.prologue.is_empty(),
+            groups,
+            symbols,
+            weights: std::mem::take(&mut self.weights),
+            dim_src,
+            dim_edge,
+            dim_dst,
+            in_dim,
+            out_dim: self.node(result_node).cols,
+        }
+    }
+}
+
+/// Row-role under which a compute chain is being rematerialised.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum RoleCtx {
+    SrcRows,
+    DstRows,
+    EdgeRows,
+}
+
+/// The PLOF peephole (§IV-B at instruction granularity): fuse
+///
+/// * `SCTR.F  %E0, %Sx` + `GTHR %D, %E0`                    → `GSCTR %D, %Sx`
+/// * `SCTR.F  %E1, %Sx` + `RSCALE %E0, %E1, %Es` + `GTHR %D, %E0`
+///                                                          → `GSCTR %D, %Sx, %Es`
+///
+/// when the intermediate edge symbols have no other readers and are never
+/// spilled. This removes the `num_edge × dim_edge` term of Equ. 1 for the
+/// dominant aggregation pattern: the hardware's VU cores stream source
+/// rows through the crossbar straight into the destination accumulator
+/// instead of materialising `[E, cols]` messages in the SrcEdgeBuffer.
+fn fuse_gathers(groups: Vec<PhaseGroup>) -> Vec<PhaseGroup> {
+    use std::collections::HashMap as Map;
+    // Count uses of every E symbol across the whole program (spills and
+    // cross-group loads keep symbols alive).
+    let mut e_reads: Map<Sym, usize> = Map::new();
+    let mut e_spilled: std::collections::HashSet<Sym> = Default::default();
+    for g in &groups {
+        for i in g.all_instrs() {
+            for u in i.uses() {
+                if u.space == Space::E {
+                    *e_reads.entry(u).or_insert(0) += 1;
+                }
+            }
+            if let Instr::St { sym, .. } = i {
+                if sym.space == Space::E {
+                    e_spilled.insert(*sym);
+                }
+            }
+            if let Instr::Ld { sym, .. } = i {
+                if sym.space == Space::E {
+                    // Reloaded symbols alias DRAM state; don't fuse through.
+                    e_spilled.insert(*sym);
+                }
+            }
+        }
+    }
+
+    groups
+        .into_iter()
+        .map(|mut g| {
+            let instrs = std::mem::take(&mut g.gather);
+            let mut out: Vec<Instr> = Vec::with_capacity(instrs.len());
+            for i in instrs {
+                if let Instr::Gather {
+                    reduce,
+                    dst,
+                    src,
+                    cols,
+                } = i
+                {
+                    // Pattern 2: ... SCTR.F e1,sx ; RSCALE src,e1,es ; GTHR dst,src
+                    if out.len() >= 2 && e_reads.get(&src) == Some(&1) && !e_spilled.contains(&src)
+                    {
+                        let n = out.len();
+                        if let (
+                            Instr::Scatter {
+                                dir: ScatterDir::SrcToEdge,
+                                dst: e1,
+                                src: sx,
+                                ..
+                            },
+                            Instr::RowScale {
+                                dst: rs_dst,
+                                a: rs_a,
+                                scale,
+                                ..
+                            },
+                        ) = (out[n - 2].clone(), out[n - 1].clone())
+                        {
+                            if rs_dst == src
+                                && rs_a == e1
+                                && e_reads.get(&e1) == Some(&1)
+                                && !e_spilled.contains(&e1)
+                                && sx.space == Space::S
+                                && scale.space == Space::E
+                            {
+                                out.truncate(n - 2);
+                                out.push(Instr::FusedGather {
+                                    reduce,
+                                    dst,
+                                    src: sx,
+                                    scale: Some(scale),
+                                    cols,
+                                });
+                                continue;
+                            }
+                        }
+                    }
+                    // Pattern 1: ... SCTR.F src,sx ; GTHR dst,src
+                    if let Some(Instr::Scatter {
+                        dir: ScatterDir::SrcToEdge,
+                        dst: e0,
+                        src: sx,
+                        ..
+                    }) = out.last().cloned()
+                    {
+                        if e0 == src
+                            && e_reads.get(&e0) == Some(&1)
+                            && !e_spilled.contains(&e0)
+                            && sx.space == Space::S
+                        {
+                            out.pop();
+                            out.push(Instr::FusedGather {
+                                reduce,
+                                dst,
+                                src: sx,
+                                scale: None,
+                                cols,
+                            });
+                            continue;
+                        }
+                    }
+                    out.push(Instr::Gather {
+                        reduce,
+                        dst,
+                        src,
+                        cols,
+                    });
+                } else {
+                    out.push(i);
+                }
+            }
+            g.gather = out;
+            g
+        })
+        .collect()
+}

@@ -1,0 +1,233 @@
+//! Memory-symbol liveness analysis and merging (paper §V-C3): "GC first
+//! calculates the size of each symbol and then merges two symbols of the
+//! same size if the former is no longer in use", improving on-chip buffer
+//! utilisation and shrinking `dim_src` / `dim_edge` / `dim_dst`.
+//!
+//! Implementation: a linear scan over the static instruction order (groups
+//! in sequence; scatter → gather → apply inside a group). Two symbols may
+//! share a slot iff they live in the same space, have the same column
+//! width and the same row-dimension class — the address arithmetic the
+//! hardware controller performs (§V-A) depends on all three.
+
+use std::collections::HashMap;
+
+use crate::isa::{Instr, PhaseGroup, Space, Sym, SymInfo, SymbolTable};
+
+/// Merge dead symbols; returns rewritten groups and the new symbol table.
+pub fn merge_symbols(
+    groups: Vec<PhaseGroup>,
+    symbols: &SymbolTable,
+) -> (Vec<PhaseGroup>, SymbolTable) {
+    // 1. Linearise and compute live ranges [first_def, last_touch].
+    let mut order: Vec<&Instr> = Vec::new();
+    // Gather phases are *loops* at runtime (re-executed per shard), so
+    // record their static extents: D-space symbols touched inside one are
+    // loop-carried (accumulators, DstToEdge sources) and must stay live —
+    // and slot-exclusive — for the whole phase.
+    let mut gather_extents: Vec<(usize, usize)> = Vec::new();
+    for g in &groups {
+        order.extend(g.scatter.iter());
+        let gstart = order.len();
+        order.extend(g.gather.iter());
+        gather_extents.push((gstart, order.len()));
+        order.extend(g.apply.iter());
+    }
+    let mut first: HashMap<Sym, usize> = HashMap::new();
+    let mut last: HashMap<Sym, usize> = HashMap::new();
+    for (idx, i) in order.iter().enumerate() {
+        for s in i.def().into_iter().chain(i.uses()) {
+            if s.space == Space::W {
+                continue; // weights are resident, never merged
+            }
+            let (mut f, mut l) = (idx, idx);
+            if s.space == Space::D {
+                // Extend across any gather loop containing this touch.
+                for &(gs, ge) in &gather_extents {
+                    if idx >= gs && idx < ge {
+                        f = gs;
+                        l = ge.saturating_sub(1);
+                    }
+                }
+            }
+            let e = first.entry(s).or_insert(f);
+            *e = (*e).min(f);
+            let e = last.entry(s).or_insert(l);
+            *e = (*e).max(l);
+        }
+    }
+
+    // 2. Greedy linear scan per (space, cols, rows) class.
+    #[derive(PartialEq, Eq, Hash)]
+    struct Class {
+        space: Space,
+        cols: u32,
+        rows: crate::isa::Dim,
+    }
+    let mut ranges: Vec<(Sym, usize, usize)> = first
+        .iter()
+        .map(|(&s, &f)| (s, f, last[&s]))
+        .collect();
+    ranges.sort_by_key(|&(_, f, _)| f);
+
+    let mut free: HashMap<Class, Vec<(Sym, usize)>> = HashMap::new(); // (slot, free_from)
+    let mut next_slot: HashMap<Space, u32> = HashMap::new();
+    let mut remap: HashMap<Sym, Sym> = HashMap::new();
+    let mut new_table = SymbolTable::default();
+    // Keep W symbols as-is.
+    for info in symbols.iter() {
+        if info.sym.space == Space::W {
+            new_table.insert(info.clone());
+        }
+    }
+
+    for (sym, f, l) in ranges {
+        let info = symbols.get(sym).expect("symbol in table").clone();
+        let class = Class {
+            space: sym.space,
+            cols: info.cols,
+            rows: info.rows,
+        };
+        let slots = free.entry(class).or_default();
+        // Reuse the slot that freed earliest, if it freed before this def.
+        let slot = if let Some(pos) = slots.iter().position(|&(_, when)| when <= f) {
+            slots.remove(pos).0
+        } else {
+            let id = next_slot.entry(sym.space).or_insert(0);
+            let s = Sym::new(sym.space, *id);
+            *id += 1;
+            new_table.insert(SymInfo {
+                sym: s,
+                cols: info.cols,
+                rows: info.rows,
+                origin: info.origin.clone(),
+            });
+            s
+        };
+        remap.insert(sym, slot);
+        let class = Class {
+            space: sym.space,
+            cols: info.cols,
+            rows: info.rows,
+        };
+        free.entry(class).or_default().push((slot, l + 1));
+    }
+
+    // 3. Rewrite instructions.
+    let rw = |s: Sym| -> Sym {
+        if s.space == Space::W {
+            s
+        } else {
+            remap[&s]
+        }
+    };
+    let groups = groups
+        .into_iter()
+        .map(|g| PhaseGroup {
+            scatter: g.scatter.into_iter().map(|i| rewrite(i, &rw)).collect(),
+            gather: g.gather.into_iter().map(|i| rewrite(i, &rw)).collect(),
+            apply: g.apply.into_iter().map(|i| rewrite(i, &rw)).collect(),
+        })
+        .collect();
+
+    (groups, new_table)
+}
+
+fn rewrite(i: Instr, rw: &impl Fn(Sym) -> Sym) -> Instr {
+    match i {
+        Instr::Elw {
+            op,
+            dst,
+            a,
+            b,
+            broadcast_b,
+            rows,
+            cols,
+        } => Instr::Elw {
+            op,
+            dst: rw(dst),
+            a: rw(a),
+            b: b.map(rw),
+            broadcast_b,
+            rows,
+            cols,
+        },
+        Instr::RowScale {
+            dst,
+            a,
+            scale,
+            rows,
+            cols,
+        } => Instr::RowScale {
+            dst: rw(dst),
+            a: rw(a),
+            scale: rw(scale),
+            rows,
+            cols,
+        },
+        Instr::Concat {
+            dst,
+            a,
+            b,
+            rows,
+            cols_a,
+            cols_b,
+        } => Instr::Concat {
+            dst: rw(dst),
+            a: rw(a),
+            b: rw(b),
+            rows,
+            cols_a,
+            cols_b,
+        },
+        Instr::Dmm { dst, a, w, rows, k, n } => Instr::Dmm {
+            dst: rw(dst),
+            a: rw(a),
+            w: rw(w),
+            rows,
+            k,
+            n,
+        },
+        Instr::Scatter { dir, dst, src, cols } => Instr::Scatter {
+            dir,
+            dst: rw(dst),
+            src: rw(src),
+            cols,
+        },
+        Instr::Gather {
+            reduce,
+            dst,
+            src,
+            cols,
+        } => Instr::Gather {
+            reduce,
+            dst: rw(dst),
+            src: rw(src),
+            cols,
+        },
+        Instr::FusedGather {
+            reduce,
+            dst,
+            src,
+            scale,
+            cols,
+        } => Instr::FusedGather {
+            reduce,
+            dst: rw(dst),
+            src: rw(src),
+            scale: scale.map(rw),
+            cols,
+        },
+        Instr::Ld { sym, data, rows, cols } => Instr::Ld {
+            sym: rw(sym),
+            data,
+            rows,
+            cols,
+        },
+        Instr::St { sym, data, rows, cols } => Instr::St {
+            sym: rw(sym),
+            data,
+            rows,
+            cols,
+        },
+    }
+}

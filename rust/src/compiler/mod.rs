@@ -1,0 +1,41 @@
+//! The PLOF compiler (paper §IV-B, §V-C): maps a unified computational
+//! graph onto PLOF phase groups, generates ISA code, performs
+//! memory-symbol liveness merging, and exports the partitioning
+//! parameters (`dim_src`, `dim_edge`).
+//!
+//! ## Phase construction (§V-C2)
+//!
+//! 1. **Gather depth** — for every node, the number of `Gather` ops on the
+//!    longest input path (`IrGraph::gather_depth`). Gather nodes of depth
+//!    `g` terminate PLOF group `g`; the model needs `G = max depth + 1`
+//!    groups, each a full dual-sliding-window sweep (Alg 2).
+//! 2. **Edge-node groups** — an edge-located op is scheduled in the group
+//!    of the *earliest* gather that (transitively) consumes it, but never
+//!    before its inputs exist. Edge values crossing a group boundary are
+//!    spilled (`ST.E`) and reloaded (`LD.E`) — this is where PLOF still
+//!    pays DRAM traffic, and exactly at phase boundaries as §IV-B states.
+//! 3. **Vertex-node placement** —
+//!    * depth ≥ 1 ⇒ ApplyPhase of group `depth − 1` (computed once per
+//!      destination interval, `Dim::V` rows);
+//!    * depth 0 vertex values have no "home": they are *rematerialised*
+//!      per role — on shard source rows (`Dim::S`) inside the GatherPhase
+//!      that needs them for `ScatterSrc`, or on interval rows (`Dim::V`)
+//!      inside the ScatterPhase for `ScatterDst`. Recomputing a depth-0
+//!      chain per shard trades FLOPs for DRAM traffic, which is the
+//!      paper's central bandwidth-over-compute trade (§III-A).
+//!
+//! ## Code generation (§V-C3)
+//!
+//! Every IR value gets per-role memory symbols (`D`/`S`/`E` spaces);
+//! memory instructions are inserted whenever a symbol is not produced in
+//! the phase that consumes it. A final linear-scan pass merges dead
+//! symbols of identical shape (`liveness`), then `dim_src`/`dim_edge` are
+//! the per-group maxima of resident S/E widths.
+
+mod codegen;
+mod liveness;
+
+pub use codegen::{compile, compile_with, CompilerOptions};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,394 @@
+//! Compiler unit tests: structural properties of generated programs.
+
+use crate::compiler::compile;
+use crate::ir::models::Model;
+use crate::ir::IrGraph;
+use crate::isa::{Dim, Instr, Reduce, Space};
+
+fn all_programs() -> Vec<crate::isa::Program> {
+    Model::ALL.iter().map(|m| compile(&m.build(2, 16, 16, 16))).collect()
+}
+
+#[test]
+fn group_counts_match_ir() {
+    for m in Model::ALL {
+        let ir = m.build(2, 16, 16, 16);
+        let p = compile(&ir);
+        let expect = ir.num_groups() + u32::from(p.has_prologue);
+        assert_eq!(
+            p.groups.len() as u32,
+            expect,
+            "{}: group count",
+            m.name()
+        );
+    }
+}
+
+#[test]
+fn gathers_only_in_gather_phase() {
+    let is_gather =
+        |i: &Instr| matches!(i, Instr::Gather { .. } | Instr::FusedGather { .. });
+    for p in all_programs() {
+        for (gi, g) in p.groups.iter().enumerate() {
+            assert!(!g.scatter.iter().any(is_gather));
+            assert!(!g.apply.iter().any(is_gather));
+            if gi == 0 && p.has_prologue {
+                assert!(g.gather.is_empty(), "{}: prologue has no gather", p.model_name);
+                continue;
+            }
+            assert!(
+                g.gather.iter().any(is_gather),
+                "{}: every group ends in a gather",
+                p.model_name
+            );
+        }
+    }
+}
+
+#[test]
+fn phase_space_discipline() {
+    // ScatterPhase and ApplyPhase are iThread interval work: they may only
+    // touch D and W spaces. GatherPhase may touch everything but performs
+    // no V-row compute.
+    for p in all_programs() {
+        for g in &p.groups {
+            for i in g.scatter.iter().chain(g.apply.iter()) {
+                for s in i.def().into_iter().chain(i.uses()) {
+                    assert!(
+                        matches!(s.space, Space::D | Space::W),
+                        "{}: iThread instr touches {}: {}",
+                        p.model_name,
+                        s,
+                        i.render()
+                    );
+                }
+            }
+            for i in &g.gather {
+                if let Instr::Ld { sym, .. } = i {
+                    assert_ne!(sym.space, Space::D, "GatherPhase must not LD.D");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn defs_precede_uses_statically() {
+    for p in all_programs() {
+        let mut defined: std::collections::HashSet<_> = p
+            .weights
+            .iter()
+            .map(|w| w.sym)
+            .collect();
+        for g in &p.groups {
+            for i in g
+                .scatter
+                .iter()
+                .chain(g.gather.iter())
+                .chain(g.apply.iter())
+            {
+                for u in i.uses() {
+                    // Gathers read their own accumulator (init by
+                    // hardware); skip the self-use.
+                    if let Instr::Gather { dst, .. } | Instr::FusedGather { dst, .. } = i {
+                        if u == *dst {
+                            continue;
+                        }
+                    }
+                    assert!(
+                        defined.contains(&u),
+                        "{}: use of undefined {} in {}",
+                        p.model_name,
+                        u,
+                        i.render()
+                    );
+                }
+                if let Some(d) = i.def() {
+                    defined.insert(d);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn loads_and_stores_pair_up() {
+    // Every LD of a Node(i) DataRef must be preceded (in group order) by a
+    // ST of the same DataRef.
+    use crate::isa::DataRef;
+    for p in all_programs() {
+        let mut stored: std::collections::HashSet<DataRef> = Default::default();
+        for g in &p.groups {
+            // Loads of this group may rely on stores from *earlier* groups
+            // only (gather/scatter phases) — except ApplyPhase LD.D of a
+            // value stored in this same group is impossible by
+            // construction (it would still be resident).
+            for i in g
+                .scatter
+                .iter()
+                .chain(g.gather.iter())
+                .chain(g.apply.iter())
+            {
+                if let Instr::Ld { data, .. } = i {
+                    if let DataRef::Node(_) = data {
+                        assert!(
+                            stored.contains(data),
+                            "{}: LD of never-stored {data}",
+                            p.model_name
+                        );
+                    }
+                }
+            }
+            for i in g
+                .scatter
+                .iter()
+                .chain(g.gather.iter())
+                .chain(g.apply.iter())
+            {
+                if let Instr::St { data, .. } = i {
+                    stored.insert(*data);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dims_exported_for_partitioner() {
+    for p in all_programs() {
+        assert!(p.dim_src > 0, "{}: dim_src", p.model_name);
+        assert!(p.dim_dst > 0, "{}: dim_dst", p.model_name);
+        // Every model scatters ≥16-wide messages plus degree-or-score data.
+        assert!(p.dim_src >= 16);
+    }
+}
+
+#[test]
+fn gcn_structure() {
+    let p = compile(&Model::Gcn.build(2, 16, 16, 16));
+    assert_eq!(p.groups.len(), 2);
+    // GCN GatherPhase: LD.S input, LD.S degree, rsqrt, rowscale, scatter,
+    // gather(sum).
+    let g0 = &p.groups[0];
+    assert!(g0.scatter.is_empty(), "GCN has no ScatterDst");
+    let has = |k: fn(&Instr) -> bool| g0.gather.iter().any(k);
+    assert!(has(|i| matches!(i, Instr::Ld { .. })));
+    assert!(has(|i| matches!(i, Instr::RowScale { .. })));
+    // The scatter+gather pair fuses into GSCTR (PLOF peephole): no edge
+    // data is materialised for GCN at all.
+    assert!(has(|i| matches!(
+        i,
+        Instr::FusedGather {
+            reduce: Reduce::Sum,
+            ..
+        }
+    )));
+    assert_eq!(p.dim_edge, 0, "GCN needs no SEB edge storage");
+    // ApplyPhase: DMM on V rows + final store.
+    assert!(g0
+        .apply
+        .iter()
+        .any(|i| matches!(i, Instr::Dmm { rows: Dim::V, .. })));
+    assert!(p.groups[1]
+        .apply
+        .iter()
+        .any(|i| matches!(i, Instr::St { .. })));
+}
+
+#[test]
+fn gat_spills_edge_scores_across_groups() {
+    let p = compile(&Model::Gat.build(1, 8, 8, 8));
+    assert!(p.has_prologue, "GAT precomputes hw/el/er");
+    assert_eq!(p.groups.len(), 3);
+    let g0 = 1; // prologue shifts group indices
+    let st_e = p.groups[g0]
+        .gather
+        .iter()
+        .any(|i| matches!(i, Instr::St { sym, .. } if sym.space == Space::E));
+    let ld_e = p.groups[g0 + 1]
+        .gather
+        .iter()
+        .any(|i| matches!(i, Instr::Ld { sym, .. } if sym.space == Space::E));
+    assert!(st_e, "group 0 must ST.E the edge scores");
+    assert!(ld_e, "group 1 must LD.E the edge scores");
+    // Group 1 has the DstToEdge scatter of the max (softmax centring).
+    assert!(p.groups[g0 + 1].gather.iter().any(|i| matches!(
+        i,
+        Instr::Scatter {
+            dir: crate::isa::ScatterDir::DstToEdge,
+            ..
+        }
+    )));
+    // And its ScatterPhase loads the stored max back.
+    assert!(!p.groups[g0 + 1].scatter.is_empty());
+}
+
+#[test]
+fn sage_prologue_and_fused_max() {
+    let p = compile(&Model::Sage.build(1, 8, 8, 8));
+    // The pool projection is precomputed once per vertex in the prologue
+    // (MU-efficient V-row GEMM), not per shard.
+    assert!(p.has_prologue);
+    assert!(p.groups[0]
+        .scatter
+        .iter()
+        .any(|i| matches!(i, Instr::Dmm { rows: Dim::V, .. })));
+    assert!(p.groups[1]
+        .apply
+        .iter()
+        .any(|i| matches!(i, Instr::Concat { .. })));
+    // Max-reduce gather (fused with its scatter).
+    assert!(p.groups[1].gather.iter().any(|i| matches!(
+        i,
+        Instr::FusedGather {
+            reduce: Reduce::Max,
+            ..
+        }
+    )));
+}
+
+#[test]
+fn ggnn_apply_has_gru() {
+    let p = compile(&Model::Ggnn.build(1, 8, 8, 8));
+    // The GRU's h-side projections (U_z h, U_r h) are depth-0 and move to
+    // the prologue; the a-side ones stay in the ApplyPhase. Together the
+    // layer still runs 7 matmuls.
+    let apply_dmms = p
+        .groups
+        .last()
+        .unwrap()
+        .apply
+        .iter()
+        .filter(|i| matches!(i, Instr::Dmm { .. }))
+        .count();
+    let pro_dmms = p.groups[0]
+        .scatter
+        .iter()
+        .filter(|i| matches!(i, Instr::Dmm { .. }))
+        .count();
+    assert!(apply_dmms >= 4, "a-side matmuls in apply, got {apply_dmms}");
+    assert_eq!(apply_dmms + pro_dmms, 7, "GRU + projection = 7 matmuls");
+}
+
+#[test]
+fn liveness_merging_reduces_symbols() {
+    // A 2-layer model reuses layer-1 symbols for layer-2 if merging works:
+    // total distinct S symbols should be well under the naive count.
+    let ir = Model::Gat.build(2, 16, 16, 16);
+    let p = compile(&ir);
+    // Naive: each (group, node) S materialisation is distinct; merged
+    // programs reuse slots across groups.
+    let s_count = p.symbols.count(Space::S);
+    assert!(
+        s_count <= 4,
+        "expected few merged S symbols, got {s_count}"
+    );
+}
+
+#[test]
+fn weight_seeds_unique() {
+    for p in all_programs() {
+        let mut seen = std::collections::HashSet::new();
+        for w in &p.weights {
+            assert!(seen.insert(w.seed), "duplicate weight seed {}", w.seed);
+        }
+    }
+}
+
+#[test]
+fn disassembly_roundtrips_phases() {
+    let p = compile(&Model::Gcn.build_paper());
+    let d = p.disassemble();
+    assert!(d.contains("GSCTR.SUM"));
+    assert!(d.contains("LD.S"));
+    assert!(d.contains("ST.D"));
+}
+
+#[test]
+fn ablation_options_preserve_numerics() {
+    use crate::compiler::{compile_with, CompilerOptions};
+    use crate::exec::{reference, weights, Executor, Matrix};
+    use crate::graph::generators;
+    use crate::partition::{partition_fggp, PartitionConfig};
+
+    let g = crate::graph::Csr::from_edge_list(&generators::rmat(
+        1 << 7,
+        700,
+        0.57,
+        0.19,
+        0.19,
+        21,
+    ));
+    let x = weights::init_features(5, g.num_vertices(), 8);
+    let mut deg = Matrix::zeros(g.num_vertices(), 1);
+    for v in 0..g.num_vertices() {
+        deg.set(v, 0, g.in_degree(v as u32) as f32);
+    }
+    for m in Model::ALL {
+        let ir = m.build(2, 8, 8, 8);
+        let want = reference::evaluate(&ir, &g, &x);
+        for fuse in [true, false] {
+            for pro in [true, false] {
+                let prog = compile_with(
+                    &ir,
+                    CompilerOptions {
+                        fuse_gathers: fuse,
+                        prologue: pro,
+                    },
+                );
+                let cfg = PartitionConfig {
+                    shard_bytes: 8 * 1024,
+                    dst_bytes: 16 * 1024,
+                    dim_src: prog.dim_src.max(1),
+                    dim_edge: prog.dim_edge.max(1),
+                    dim_dst: prog.dim_dst.max(1),
+                    num_sthreads: 2,
+                };
+                let parts = partition_fggp(&g, cfg);
+                let got = Executor::new(&prog, &parts).run(&x, &deg);
+                assert!(
+                    got.allclose(&want, 1e-4, 1e-5),
+                    "{} fuse={fuse} prologue={pro}: {}",
+                    m.name(),
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fusion_off_restores_edge_materialisation() {
+    use crate::compiler::{compile_with, CompilerOptions};
+    let ir = Model::Gcn.build(2, 16, 16, 16);
+    let fused = compile_with(&ir, CompilerOptions::default());
+    let unfused = compile_with(
+        &ir,
+        CompilerOptions {
+            fuse_gathers: false,
+            prologue: true,
+        },
+    );
+    assert_eq!(fused.dim_edge, 0);
+    assert!(unfused.dim_edge >= 16, "unfused GCN materialises messages");
+}
+
+#[test]
+fn no_gtr_model_compiles_to_pure_apply() {
+    // An MLP (no graph ops) must compile to a single group with empty
+    // scatter/gather phases.
+    let mut ir = IrGraph::new("mlp");
+    let x = ir.input(8);
+    let w = ir.weight(8, 8, 1, "w");
+    let z = ir.dmm(x, w, "z");
+    let r = ir.unary(crate::isa::ElwOp::Relu, z, "r");
+    ir.set_output(r);
+    let p = compile(&ir);
+    // dmm(x, w) is a depth-0 projection → prologue + one (empty-gather)
+    // group that loads and finishes the result.
+    assert!(p.has_prologue);
+    assert_eq!(p.groups.len(), 2);
+    assert!(p.groups.iter().all(|g| g.gather.is_empty()));
+    assert_eq!(p.dim_src, 0);
+    assert_eq!(p.dim_edge, 0);
+}

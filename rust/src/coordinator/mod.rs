@@ -1,0 +1,445 @@
+//! Experiment coordinator: fans the (model × dataset × config) sweeps out
+//! over OS threads, caches graphs/programs, and renders every table and
+//! figure of the paper's evaluation (§VII). This is the L3 driver the
+//! `switchblade repro` subcommand and all bench targets call into.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::baseline::{gpu_run, hygcn_run, GpuConfig, GpuResult, HygcnConfig, HygcnResult};
+use crate::compiler::compile;
+use crate::energy::{switchblade_energy, tbl5_rows, EnergyResult, TBL5};
+use crate::exec::Matrix;
+use crate::graph::datasets::Dataset;
+use crate::graph::Csr;
+use crate::ir::models::Model;
+use crate::isa::Program;
+use crate::partition::{partition_dsw, partition_fggp, stats as pstats, Partitions};
+use crate::sim::{simulate, AcceleratorConfig, SimResult};
+use crate::util::report::{f, speedup, Table};
+use crate::util::{geomean, mean};
+
+/// Harness parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Harness {
+    /// Dataset scale: graphs are generated at `1/2^scale` of paper size
+    /// (see `graph::datasets`).
+    pub scale: u32,
+    pub accel: AcceleratorConfig,
+    pub gpu: GpuConfig,
+    pub hygcn: HygcnConfig,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Harness {
+            scale: crate::graph::datasets::DEFAULT_SCALE,
+            accel: AcceleratorConfig::switchblade(),
+            gpu: GpuConfig::default(),
+            hygcn: HygcnConfig::default(),
+        }
+    }
+}
+
+/// One (model, dataset) evaluation under a given accelerator config.
+#[derive(Clone, Debug)]
+pub struct EvalRow {
+    pub model: Model,
+    pub dataset: Dataset,
+    pub sim: SimResult,
+    pub energy: EnergyResult,
+    pub gpu: GpuResult,
+    pub hygcn: Option<HygcnResult>,
+}
+
+impl EvalRow {
+    pub fn speedup_vs_gpu(&self) -> f64 {
+        self.gpu.seconds / self.sim.seconds
+    }
+
+    pub fn energy_saving_vs_gpu(&self) -> f64 {
+        self.gpu.energy_j / self.energy.total_j()
+    }
+}
+
+/// Graph cache shared across the sweep (generation dominates runtime).
+pub struct GraphCache {
+    scale: u32,
+    graphs: Mutex<HashMap<Dataset, std::sync::Arc<Csr>>>,
+}
+
+impl GraphCache {
+    pub fn new(scale: u32) -> Self {
+        GraphCache {
+            scale,
+            graphs: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn get(&self, d: Dataset) -> std::sync::Arc<Csr> {
+        if let Some(g) = self.graphs.lock().unwrap().get(&d) {
+            return g.clone();
+        }
+        let g = std::sync::Arc::new(d.load(self.scale));
+        self.graphs
+            .lock()
+            .unwrap()
+            .entry(d)
+            .or_insert(g)
+            .clone()
+    }
+}
+
+impl Harness {
+    /// Compile + partition + simulate one combination.
+    pub fn eval_one(&self, model: Model, g: &Csr, accel: &AcceleratorConfig) -> (Program, Partitions, SimResult) {
+        let ir = model.build_paper();
+        let prog = compile(&ir);
+        let pc = accel.partition_config(&prog);
+        let parts = partition_fggp(g, pc);
+        let sim = simulate(&prog, &parts, accel);
+        (prog, parts, sim)
+    }
+
+    /// Full 4×5 sweep (Fig 7/8/9/10 input), fanned out over OS threads.
+    pub fn eval_all(&self, cache: &GraphCache) -> Vec<EvalRow> {
+        let combos: Vec<(Model, Dataset)> = Model::ALL
+            .iter()
+            .flat_map(|&m| Dataset::ALL.iter().map(move |&d| (m, d)))
+            .collect();
+        let results: Mutex<Vec<EvalRow>> = Mutex::new(Vec::new());
+        let results_ref = &results;
+        std::thread::scope(|s| {
+            for chunk in combos.chunks(combos.len().div_ceil(num_workers())) {
+                s.spawn(move || {
+                    for &(m, d) in chunk {
+                        let g = cache.get(d);
+                        let (_, _, sim) = self.eval_one(m, &g, &self.accel);
+                        let energy = switchblade_energy(&sim, self.accel.freq_hz, true);
+                        let gpu = gpu_run(&m.build_paper(), &g, &self.gpu);
+                        let hygcn = (m == Model::Gcn)
+                            .then(|| hygcn_run(&g, 2, 128, &self.hygcn));
+                        results_ref.lock().unwrap().push(EvalRow {
+                            model: m,
+                            dataset: d,
+                            sim,
+                            energy,
+                            gpu,
+                            hygcn,
+                        });
+                    }
+                });
+            }
+        });
+        let mut rows = results.into_inner().unwrap();
+        rows.sort_by_key(|r| {
+            (
+                Model::ALL.iter().position(|&m| m == r.model),
+                Dataset::ALL.iter().position(|&d| d == r.dataset),
+            )
+        });
+        rows
+    }
+
+    // ---- Figure renderers ----------------------------------------------------
+
+    /// Fig 7: speedup over the V100 (plus HyGCN on GCN workloads).
+    pub fn fig07(&self, rows: &[EvalRow]) -> Table {
+        let mut t = Table::new(
+            "Fig 7 — speedup over V100 GPU (higher is better)",
+            &["model", "AK", "AD", "HW", "CP", "SL", "geomean", "vs HyGCN (GCN)"],
+        );
+        let mut all = Vec::new();
+        for m in Model::ALL {
+            let mut cells = vec![m.name().to_string()];
+            let mut sp = Vec::new();
+            let mut hyg = Vec::new();
+            for d in Dataset::ALL {
+                let r = rows
+                    .iter()
+                    .find(|r| r.model == m && r.dataset == d)
+                    .expect("row");
+                sp.push(r.speedup_vs_gpu());
+                cells.push(speedup(r.speedup_vs_gpu()));
+                if let Some(h) = &r.hygcn {
+                    hyg.push(h.seconds / r.sim.seconds);
+                }
+            }
+            all.extend(sp.clone());
+            cells.push(speedup(geomean(&sp)));
+            cells.push(if hyg.is_empty() {
+                "-".into()
+            } else {
+                speedup(geomean(&hyg))
+            });
+            t.row(cells);
+        }
+        t.row(vec![
+            "ALL".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+            speedup(geomean(&all)),
+            "".into(),
+        ]);
+        t
+    }
+
+    /// Fig 8: energy saving over the V100.
+    pub fn fig08(&self, rows: &[EvalRow]) -> Table {
+        let mut t = Table::new(
+            "Fig 8 — energy saving over V100 GPU (higher is better)",
+            &["model", "AK", "AD", "HW", "CP", "SL", "geomean"],
+        );
+        let mut all = Vec::new();
+        for m in Model::ALL {
+            let mut cells = vec![m.name().to_string()];
+            let mut sv = Vec::new();
+            for d in Dataset::ALL {
+                let r = rows
+                    .iter()
+                    .find(|r| r.model == m && r.dataset == d)
+                    .expect("row");
+                sv.push(r.energy_saving_vs_gpu());
+                cells.push(speedup(r.energy_saving_vs_gpu()));
+            }
+            all.extend(sv.clone());
+            cells.push(speedup(geomean(&sv)));
+            t.row(cells);
+        }
+        t.row(vec![
+            "ALL".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+            speedup(geomean(&all)),
+        ]);
+        t
+    }
+
+    /// Fig 9: off-chip traffic with PLOF, normalised to the GPU
+    /// operator-by-operator paradigm (lower is better).
+    pub fn fig09(&self, rows: &[EvalRow]) -> Table {
+        let mut t = Table::new(
+            "Fig 9 — off-chip data transfer normalised to GPU op-by-op (lower is better)",
+            &["model", "AK", "AD", "HW", "CP", "SL", "mean"],
+        );
+        for m in Model::ALL {
+            let mut cells = vec![m.name().to_string()];
+            let mut vals = Vec::new();
+            for d in Dataset::ALL {
+                let r = rows
+                    .iter()
+                    .find(|r| r.model == m && r.dataset == d)
+                    .expect("row");
+                let ratio = r.sim.traffic.total() as f64 / r.gpu.dram_bytes as f64;
+                vals.push(ratio);
+                cells.push(f(ratio, 3));
+            }
+            cells.push(f(mean(&vals), 3));
+            t.row(cells);
+        }
+        t
+    }
+
+    /// Fig 10: overall HW utilisation, SLMT (3 sThreads) vs off (1).
+    pub fn fig10(&self, cache: &GraphCache) -> Table {
+        let mut t = Table::new(
+            "Fig 10 — overall utilisation (mean of BW/VU/MU), 1 vs 3 sThreads",
+            &["model", "dataset", "util@1", "util@3", "gain"],
+        );
+        for m in Model::ALL {
+            for d in Dataset::ALL {
+                let g = cache.get(d);
+                let u1 = self
+                    .eval_one(m, &g, &self.accel.with_sthreads(1))
+                    .2
+                    .overall_utilization();
+                let u3 = self
+                    .eval_one(m, &g, &self.accel.with_sthreads(3))
+                    .2
+                    .overall_utilization();
+                t.row(vec![
+                    m.name().into(),
+                    d.code().into(),
+                    f(u1, 3),
+                    f(u3, 3),
+                    format!("{:+.1}%", (u3 - u1) * 100.0),
+                ]);
+            }
+        }
+        t
+    }
+
+    /// Fig 11: latency vs sThread count, normalised to 1 sThread.
+    pub fn fig11(&self, cache: &GraphCache, counts: &[u32]) -> Table {
+        let mut headers: Vec<String> = vec!["model".into(), "dataset".into()];
+        headers.extend(counts.iter().map(|c| format!("T={c}")));
+        let mut t = Table::new(
+            "Fig 11 — latency vs sThread count (normalised to T=1, lower is better)",
+            &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        for m in Model::ALL {
+            for d in Dataset::ALL {
+                let g = cache.get(d);
+                let base = self
+                    .eval_one(m, &g, &self.accel.with_sthreads(1))
+                    .2
+                    .cycles;
+                let mut cells = vec![m.name().to_string(), d.code().to_string()];
+                for &c in counts {
+                    let r = self.eval_one(m, &g, &self.accel.with_sthreads(c)).2;
+                    cells.push(f(r.cycles / base, 3));
+                }
+                t.row(cells);
+            }
+        }
+        t
+    }
+
+    /// Fig 12: SEB occupancy, FGGP vs the HyGCN-style baseline.
+    pub fn fig12(&self, cache: &GraphCache) -> Table {
+        let mut t = Table::new(
+            "Fig 12 — buffer occupancy rate (higher is better)",
+            &["dataset", "FGGP", "DSW (HyGCN-style)"],
+        );
+        let prog = compile(&Model::Gcn.build_paper());
+        for d in Dataset::ALL {
+            let g = cache.get(d);
+            let pc = self.accel.partition_config(&prog);
+            let occ_f = pstats::analyze(&partition_fggp(&g, pc)).occupancy_rate;
+            let occ_d = pstats::analyze(&partition_dsw(&g, pc)).occupancy_rate;
+            t.row(vec![d.code().into(), f(occ_f, 3), f(occ_d, 3)]);
+        }
+        t
+    }
+
+    /// Fig 13: traffic reduction and speedup from enlarging the DstBuffer
+    /// (8 MB → 13 MB) under FGGP.
+    pub fn fig13(&self, cache: &GraphCache) -> Table {
+        let mut t = Table::new(
+            "Fig 13 — FGGP with DB 8 MB → 13 MB: traffic ratio and speedup",
+            &["dataset", "traffic 13/8", "speedup"],
+        );
+        for d in Dataset::ALL {
+            let g = cache.get(d);
+            let base = self.eval_one(Model::Gcn, &g, &self.accel).2;
+            let big = self
+                .eval_one(
+                    Model::Gcn,
+                    &g,
+                    &self.accel.with_dst_buffer(13 * 1024 * 1024),
+                )
+                .2;
+            t.row(vec![
+                d.code().into(),
+                f(big.traffic.total() as f64 / base.traffic.total() as f64, 3),
+                speedup(base.cycles / big.cycles),
+            ]);
+        }
+        t
+    }
+
+    /// Tbl V: area/power breakdown.
+    pub fn tbl05(&self) -> Table {
+        let mut t = Table::new(
+            "Tbl V — area & power breakdown (TSMC 28 nm @ 1 GHz)",
+            &["component", "area %", "power %"],
+        );
+        for (name, a, p) in tbl5_rows() {
+            t.row(vec![name.into(), f(a, 2), f(p, 2)]);
+        }
+        t.row(vec![
+            "TOTAL".into(),
+            format!("{} mm2", TBL5.total_area_mm2),
+            format!("{} W", TBL5.total_power_w),
+        ]);
+        t
+    }
+
+    /// Tbl IV: dataset summary (paper vs generated).
+    pub fn tbl04(&self, cache: &GraphCache) -> Table {
+        let mut t = Table::new(
+            "Tbl IV — datasets (synthetic stand-ins at harness scale)",
+            &["dataset", "paper |V|", "paper |E|", "gen |V|", "gen |E|", "deg cv"],
+        );
+        for d in Dataset::ALL {
+            let g = cache.get(d);
+            let (pv, pe) = d.paper_size();
+            t.row(vec![
+                d.full_name().into(),
+                pv.to_string(),
+                pe.to_string(),
+                g.num_vertices().to_string(),
+                g.num_edges().to_string(),
+                f(g.in_degree_cv(), 2),
+            ]);
+        }
+        t
+    }
+}
+
+/// Validation harness used by examples/tests: compare the compiled
+/// executor against the IR reference on a sampled graph.
+pub fn validate_numerics(model: Model, g: &Csr, accel: &AcceleratorConfig) -> f32 {
+    let ir = model.build(2, 16, 16, 16);
+    let prog = compile(&ir);
+    let pc = accel.partition_config(&prog);
+    let parts = partition_fggp(g, pc);
+    let x = crate::exec::weights::init_features(7, g.num_vertices(), 16);
+    let mut deg = Matrix::zeros(g.num_vertices(), 1);
+    for v in 0..g.num_vertices() {
+        deg.set(v, 0, g.in_degree(v as u32) as f32);
+    }
+    let got = crate::exec::Executor::new(&prog, &parts).run(&x, &deg);
+    let want = crate::exec::reference::evaluate(&ir, g, &x);
+    got.max_abs_diff(&want)
+}
+
+fn num_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_one_runs_at_tiny_scale() {
+        let h = Harness {
+            scale: 10,
+            ..Default::default()
+        };
+        let cache = GraphCache::new(h.scale);
+        let g = cache.get(Dataset::Ak);
+        let (prog, parts, sim) = h.eval_one(Model::Gcn, &g, &h.accel);
+        assert!(prog.num_instrs() > 0);
+        parts.validate().unwrap();
+        assert!(sim.cycles > 0.0);
+    }
+
+    #[test]
+    fn validate_numerics_tight() {
+        let cache = GraphCache::new(10);
+        let g = cache.get(Dataset::Ak);
+        for m in Model::ALL {
+            let diff = validate_numerics(m, &g, &AcceleratorConfig::switchblade());
+            assert!(diff < 1e-4, "{}: {diff}", m.name());
+        }
+    }
+
+    #[test]
+    fn tbl05_renders() {
+        let t = Harness::default().tbl05();
+        let s = t.render();
+        assert!(s.contains("RAM"));
+        assert!(s.contains("28.25"));
+    }
+}

@@ -1,0 +1,445 @@
+//! Functional executor: interprets a compiled PLOF program over a
+//! partitioned graph, following the Alg 2 execution order the hardware
+//! uses (per group: per interval — ScatterPhase, shards' GatherPhases,
+//! ApplyPhase). Produces real numbers; the cycle-level simulator mirrors
+//! the same order for time.
+
+use std::collections::HashMap;
+
+use crate::exec::reference::{apply_binary, apply_unary};
+use crate::exec::{weights, Matrix};
+use crate::isa::{DataRef, Dim, Instr, Program, Reduce, ScatterDir, Space, Sym};
+use crate::partition::{Interval, Partitions, Shard};
+
+/// Functional executor over one (program, partitions) pair.
+pub struct Executor<'a> {
+    program: &'a Program,
+    parts: &'a Partitions,
+    /// Off-chip storage, keyed by DataRef: vertex arrays are `[N, cols]`,
+    /// edge arrays `[M, cols]`.
+    dram: HashMap<DataRef, Matrix>,
+    weights: HashMap<Sym, Matrix>,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(program: &'a Program, parts: &'a Partitions) -> Self {
+        let mut w = HashMap::new();
+        for wi in &program.weights {
+            w.insert(wi.sym, weights::init_weight(wi.seed, wi.rows, wi.cols));
+        }
+        Executor {
+            program,
+            parts,
+            dram: HashMap::new(),
+            weights: w,
+        }
+    }
+
+    /// Run the whole program. `x` is `[N, in_dim]`; `degree` the in-degree
+    /// column used by `DataRef::Degree`.
+    pub fn run(&mut self, x: &Matrix, degree: &Matrix) -> Matrix {
+        assert_eq!(x.rows, self.parts.num_vertices);
+        assert_eq!(x.cols as u32, self.program.in_dim);
+        self.dram.insert(DataRef::Input, x.clone());
+        self.dram.insert(DataRef::Degree, degree.clone());
+
+        for group in &self.program.groups {
+            for (ii, iv) in self.parts.intervals.iter().enumerate() {
+                let mut ictx = IntervalCtx::new(iv);
+                // ScatterPhase (iThread).
+                for i in &group.scatter {
+                    self.exec_interval_instr(i, &mut ictx);
+                }
+                // Gather accumulators exist per interval even when the
+                // interval has no shards (isolated destination ranges).
+                for i in &group.gather {
+                    match i {
+                        Instr::Gather { reduce, dst, cols, .. }
+                        | Instr::FusedGather { reduce, dst, cols, .. } => {
+                            let _ = ictx.accumulator(*dst, *reduce, *cols as usize);
+                        }
+                        _ => {}
+                    }
+                }
+                // GatherPhase per shard (sThreads).
+                for shard in self.parts.shards_of(ii) {
+                    let mut sctx = ShardCtx::new(shard);
+                    for i in &group.gather {
+                        self.exec_shard_instr(i, &mut ictx, &mut sctx);
+                    }
+                }
+                // Mean finalisation + empty-row convention.
+                ictx.finalize_gathers();
+                // ApplyPhase (iThread).
+                for i in &group.apply {
+                    self.exec_interval_instr(i, &mut ictx);
+                }
+            }
+        }
+
+        // Assemble the output from DRAM.
+        let out_ref = self.output_ref();
+        self.dram
+            .get(&out_ref)
+            .unwrap_or_else(|| panic!("program never stored its output"))
+            .clone()
+    }
+
+    /// The DataRef holding the final result: the last `ST.D` of the last
+    /// group's ApplyPhase.
+    pub fn output_ref(&self) -> DataRef {
+        self.program
+            .groups
+            .last()
+            .and_then(|g| {
+                g.apply.iter().rev().find_map(|i| match i {
+                    Instr::St { data, .. } => Some(*data),
+                    _ => None,
+                })
+            })
+            .expect("last group must store the result")
+    }
+
+    // ---- interval-phase execution (Scatter / Apply) --------------------------
+
+    fn exec_interval_instr(&mut self, i: &Instr, ictx: &mut IntervalCtx) {
+        let v = ictx.len();
+        match i {
+            Instr::Ld { sym, data, cols, .. } => {
+                let src = &self.dram[data];
+                let mut m = Matrix::zeros(v, *cols as usize);
+                for (r, gv) in (ictx.begin..ictx.end).enumerate() {
+                    m.row_mut(r).copy_from_slice(src.row(gv));
+                }
+                ictx.d.insert(*sym, m);
+            }
+            Instr::St { sym, data, cols, .. } => {
+                let m = &ictx.d[sym];
+                let dst = self
+                    .dram
+                    .entry(*data)
+                    .or_insert_with(|| Matrix::zeros(self.parts.num_vertices, *cols as usize));
+                for (r, gv) in (ictx.begin..ictx.end).enumerate() {
+                    dst.row_mut(gv).copy_from_slice(m.row(r));
+                }
+            }
+            _ => {
+                let out = self.compute(i, Dim::V, v, &ictx.d, None, &ictx.d);
+                ictx.d.insert(i.def().expect("compute defines"), out);
+            }
+        }
+    }
+
+    // ---- shard-phase execution (Gather) ---------------------------------------
+
+    fn exec_shard_instr(&mut self, i: &Instr, ictx: &mut IntervalCtx, sctx: &mut ShardCtx) {
+        let shard = sctx.shard;
+        match i {
+            Instr::Ld { sym, data, cols, .. } => {
+                let src = &self.dram[data];
+                match sym.space {
+                    Space::S => {
+                        let mut m = Matrix::zeros(shard.num_src(), *cols as usize);
+                        for (r, &gv) in shard.sources.iter().enumerate() {
+                            m.row_mut(r).copy_from_slice(src.row(gv as usize));
+                        }
+                        sctx.s.insert(*sym, m);
+                    }
+                    Space::E => {
+                        let mut m = Matrix::zeros(shard.num_edges(), *cols as usize);
+                        for (r, e) in shard.edges.iter().enumerate() {
+                            m.row_mut(r).copy_from_slice(src.row(e.edge_id as usize));
+                        }
+                        sctx.e.insert(*sym, m);
+                    }
+                    _ => panic!("GatherPhase LD of {sym}"),
+                }
+            }
+            Instr::St { sym, data, cols, .. } => {
+                // ST.E — spill edge rows at canonical ids.
+                let m = &sctx.e[sym];
+                let dst = self
+                    .dram
+                    .entry(*data)
+                    .or_insert_with(|| Matrix::zeros(self.parts.num_edges, *cols as usize));
+                for (r, e) in shard.edges.iter().enumerate() {
+                    dst.row_mut(e.edge_id as usize).copy_from_slice(m.row(r));
+                }
+            }
+            Instr::Scatter { dir, dst, src, cols } => {
+                let mut out = Matrix::zeros(shard.num_edges(), *cols as usize);
+                match dir {
+                    ScatterDir::SrcToEdge => {
+                        let sm = &sctx.s[src];
+                        for (r, e) in shard.edges.iter().enumerate() {
+                            out.row_mut(r).copy_from_slice(sm.row(e.src_slot as usize));
+                        }
+                    }
+                    ScatterDir::DstToEdge => {
+                        let dm = &ictx.d[src];
+                        for (r, e) in shard.edges.iter().enumerate() {
+                            let local = (e.dst - ictx.begin as u32) as usize;
+                            out.row_mut(r).copy_from_slice(dm.row(local));
+                        }
+                    }
+                }
+                sctx.e.insert(*dst, out);
+            }
+            Instr::FusedGather {
+                reduce,
+                dst,
+                src,
+                scale,
+                cols,
+            } => {
+                let iv_begin = ictx.begin as u32;
+                let scale_col: Option<Vec<f32>> = scale.map(|sc| {
+                    let m = &sctx.e[&sc];
+                    (0..shard.num_edges()).map(|r| m.get(r, 0)).collect()
+                });
+                let acc = ictx.accumulator(*dst, *reduce, *cols as usize);
+                let sm = &sctx.s[src];
+                for (r, e) in shard.edges.iter().enumerate() {
+                    let local = (e.dst - iv_begin) as usize;
+                    acc.counts[local] += 1;
+                    let row = sm.row(e.src_slot as usize);
+                    let f = scale_col.as_ref().map_or(1.0, |c| c[r]);
+                    let orow = acc.m.row_mut(local);
+                    match reduce {
+                        Reduce::Sum | Reduce::Mean => {
+                            for (o, &x) in orow.iter_mut().zip(row) {
+                                *o += x * f;
+                            }
+                        }
+                        Reduce::Max => {
+                            for (o, &x) in orow.iter_mut().zip(row) {
+                                *o = o.max(x * f);
+                            }
+                        }
+                    }
+                }
+            }
+            Instr::Gather {
+                reduce,
+                dst,
+                src,
+                cols,
+            } => {
+                let iv_begin = ictx.begin as u32;
+                let acc = ictx.accumulator(*dst, *reduce, *cols as usize);
+                let ev = &sctx.e[src];
+                for (r, e) in shard.edges.iter().enumerate() {
+                    let local = (e.dst - iv_begin) as usize;
+                    acc.counts[local] += 1;
+                    let row = ev.row(r);
+                    let orow = acc.m.row_mut(local);
+                    match reduce {
+                        Reduce::Sum | Reduce::Mean => {
+                            for (o, &x) in orow.iter_mut().zip(row) {
+                                *o += x;
+                            }
+                        }
+                        Reduce::Max => {
+                            for (o, &x) in orow.iter_mut().zip(row) {
+                                *o = o.max(x);
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {
+                // Shard-side compute: rows decode against the shard.
+                let rows_dim = instr_rows(i);
+                let rows = rows_dim.decode(ictx.len(), shard.num_src(), shard.num_edges());
+                let out = self.compute(i, rows_dim, rows, &sctx.s, Some(&sctx.e), &ictx.d);
+                match i.def().expect("compute defines").space {
+                    Space::S => sctx.s.insert(i.def().unwrap(), out),
+                    Space::E => sctx.e.insert(i.def().unwrap(), out),
+                    _ => panic!("GatherPhase compute must write S/E"),
+                };
+            }
+        }
+    }
+
+    /// Evaluate a compute instruction. Operand lookup: W from weights, S
+    /// from `s`, E from `e` (if present), D from `d`.
+    fn compute(
+        &self,
+        i: &Instr,
+        _rows_dim: Dim,
+        rows: usize,
+        s: &HashMap<Sym, Matrix>,
+        e: Option<&HashMap<Sym, Matrix>>,
+        d: &HashMap<Sym, Matrix>,
+    ) -> Matrix {
+        let look = |sym: &Sym| -> &Matrix {
+            match sym.space {
+                Space::W => &self.weights[sym],
+                Space::S => s.get(sym).unwrap_or_else(|| panic!("S operand {sym} missing")),
+                Space::E => e
+                    .and_then(|m| m.get(sym))
+                    .unwrap_or_else(|| panic!("E operand {sym} missing")),
+                Space::D => d.get(sym).unwrap_or_else(|| panic!("D operand {sym} missing")),
+            }
+        };
+        match i {
+            Instr::Elw {
+                op,
+                a,
+                b,
+                broadcast_b,
+                cols,
+                ..
+            } => {
+                let am = look(a);
+                let mut out = Matrix::zeros(rows, *cols as usize);
+                match b {
+                    None => {
+                        for r in 0..rows {
+                            for c in 0..*cols as usize {
+                                out.set(r, c, apply_unary(*op, am.get(r, c)));
+                            }
+                        }
+                    }
+                    Some(bs) => {
+                        let bm = look(bs);
+                        for r in 0..rows {
+                            let br = if *broadcast_b { 0 } else { r };
+                            for c in 0..*cols as usize {
+                                out.set(r, c, apply_binary(*op, am.get(r, c), bm.get(br, c)));
+                            }
+                        }
+                    }
+                }
+                out
+            }
+            Instr::RowScale { a, scale, cols, .. } => {
+                let am = look(a);
+                let sm = look(scale);
+                let mut out = Matrix::zeros(rows, *cols as usize);
+                for r in 0..rows {
+                    let f = sm.get(r, 0);
+                    for c in 0..*cols as usize {
+                        out.set(r, c, am.get(r, c) * f);
+                    }
+                }
+                out
+            }
+            Instr::Concat {
+                a, b, cols_a, cols_b, ..
+            } => {
+                let am = look(a);
+                let bm = look(b);
+                let mut out = Matrix::zeros(rows, (*cols_a + *cols_b) as usize);
+                for r in 0..rows {
+                    out.row_mut(r)[..*cols_a as usize].copy_from_slice(am.row(r));
+                    out.row_mut(r)[*cols_a as usize..].copy_from_slice(bm.row(r));
+                }
+                out
+            }
+            Instr::Dmm { a, w, .. } => {
+                let am = look(a);
+                let wm = look(w);
+                am.matmul(wm)
+            }
+            _ => panic!("not a compute instruction: {}", i.render()),
+        }
+    }
+}
+
+fn instr_rows(i: &Instr) -> Dim {
+    match i {
+        Instr::Elw { rows, .. }
+        | Instr::RowScale { rows, .. }
+        | Instr::Concat { rows, .. }
+        | Instr::Dmm { rows, .. } => *rows,
+        Instr::Scatter { .. } | Instr::Gather { .. } | Instr::FusedGather { .. } => Dim::E,
+        Instr::Ld { rows, .. } | Instr::St { rows, .. } => *rows,
+    }
+}
+
+/// Per-interval state: resident D buffers + gather accumulators.
+struct IntervalCtx<'a> {
+    begin: usize,
+    end: usize,
+    d: HashMap<Sym, Matrix>,
+    gathers: Vec<(Sym, Reduce)>,
+    counts: HashMap<Sym, Vec<u32>>,
+    _iv: &'a Interval,
+}
+
+/// A gather accumulator view.
+struct AccView<'m> {
+    m: &'m mut Matrix,
+    counts: &'m mut Vec<u32>,
+}
+
+impl<'a> IntervalCtx<'a> {
+    fn new(iv: &'a Interval) -> Self {
+        IntervalCtx {
+            begin: iv.begin as usize,
+            end: iv.end as usize,
+            d: HashMap::new(),
+            gathers: Vec::new(),
+            counts: HashMap::new(),
+            _iv: iv,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.end - self.begin
+    }
+
+    /// Lazily-initialised gather accumulator (first touch in this
+    /// interval zeroes it — mirrors the hardware's phase-scheduler reset).
+    fn accumulator(&mut self, sym: Sym, reduce: Reduce, cols: usize) -> AccView<'_> {
+        if !self.d.contains_key(&sym) || !self.counts.contains_key(&sym) {
+            let init = match reduce {
+                Reduce::Sum | Reduce::Mean => Matrix::zeros(self.len(), cols),
+                Reduce::Max => Matrix::filled(self.len(), cols, f32::NEG_INFINITY),
+            };
+            self.d.insert(sym, init);
+            self.counts.insert(sym, vec![0; self.len()]);
+            self.gathers.push((sym, reduce));
+        }
+        AccView {
+            m: self.d.get_mut(&sym).unwrap(),
+            counts: self.counts.get_mut(&sym).unwrap(),
+        }
+    }
+
+    /// Post-shard fixups: Mean division and the zero-for-empty convention.
+    fn finalize_gathers(&mut self) {
+        for (sym, reduce) in std::mem::take(&mut self.gathers) {
+            let counts = self.counts.remove(&sym).unwrap();
+            let m = self.d.get_mut(&sym).unwrap();
+            for (r, &cnt) in counts.iter().enumerate() {
+                if cnt == 0 {
+                    m.row_mut(r).fill(0.0);
+                } else if reduce == Reduce::Mean {
+                    let inv = 1.0 / cnt as f32;
+                    for v in m.row_mut(r) {
+                        *v *= inv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-shard state: S and E buffers.
+struct ShardCtx<'a> {
+    shard: &'a Shard,
+    s: HashMap<Sym, Matrix>,
+    e: HashMap<Sym, Matrix>,
+}
+
+impl<'a> ShardCtx<'a> {
+    fn new(shard: &'a Shard) -> Self {
+        ShardCtx {
+            shard,
+            s: HashMap::new(),
+            e: HashMap::new(),
+        }
+    }
+}

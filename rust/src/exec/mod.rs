@@ -1,0 +1,25 @@
+//! Functional execution of compiled programs.
+//!
+//! Two independent evaluation paths:
+//!
+//! * [`Executor`] interprets the *compiled ISA program* over the
+//!   *partitioned* graph with real `f32` data — exercising the compiler,
+//!   the partitioner and the PLOF/DSW execution semantics end to end.
+//! * [`reference`] interprets the *IR directly* over the whole graph with
+//!   dense per-node matrices — a simple oracle that shares no code with
+//!   the compiled path.
+//!
+//! `compile(ir) ∘ partition(g) ∘ Executor == reference(ir, g)` is the
+//! core correctness property of the whole stack (tested here and, against
+//! the JAX/PJRT oracle, in `rust/tests/integration_runtime.rs`).
+
+mod executor;
+mod matrix;
+pub mod reference;
+pub mod weights;
+
+pub use executor::Executor;
+pub use matrix::Matrix;
+
+#[cfg(test)]
+mod tests;

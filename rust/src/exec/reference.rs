@@ -1,0 +1,214 @@
+//! Direct IR interpreter over the whole (unpartitioned) graph — the
+//! in-Rust numerics oracle. Shares only the weight initialiser with the
+//! compiled path.
+
+use crate::exec::{weights, Matrix};
+use crate::graph::Csr;
+use crate::ir::{IrGraph, IrOp, Loc};
+use crate::isa::{ElwOp, Reduce};
+
+/// Evaluate `ir` over `g` with input features `x` (`[N, in_dim]`).
+/// Returns the per-vertex output matrix.
+pub fn evaluate(ir: &IrGraph, g: &Csr, x: &Matrix) -> Matrix {
+    assert_eq!(x.rows, g.num_vertices());
+    let n = g.num_vertices();
+    let m = g.num_edges();
+    let mut values: Vec<Option<Matrix>> = vec![None; ir.nodes.len()];
+
+    // Canonical edge endpoints, indexed by edge id.
+    let mut esrc = vec![0u32; m];
+    let mut edst = vec![0u32; m];
+    for (s, d, id) in g.edges_canonical() {
+        esrc[id as usize] = s;
+        edst[id as usize] = d;
+    }
+
+    for node in &ir.nodes {
+        let rows = match node.loc {
+            Loc::Vertex => n,
+            Loc::Edge => m,
+            Loc::Param => 0,
+        };
+        let val = match &node.op {
+            IrOp::Input => x.clone(),
+            IrOp::Degree => {
+                let mut d = Matrix::zeros(n, 1);
+                for v in 0..n as u32 {
+                    d.set(v as usize, 0, g.in_degree(v) as f32);
+                }
+                d
+            }
+            IrOp::Weight { rows, seed } => weights::init_weight(*seed, *rows, node.cols),
+            IrOp::Bias { seed } => weights::init_weight(*seed, 1, node.cols),
+            IrOp::Dmm => {
+                let a = values[node.inputs[0]].as_ref().unwrap();
+                let w = values[node.inputs[1]].as_ref().unwrap();
+                a.matmul(w)
+            }
+            IrOp::Unary(op) => {
+                let a = values[node.inputs[0]].as_ref().unwrap();
+                let mut out = a.clone();
+                for v in &mut out.data {
+                    *v = apply_unary(*op, *v);
+                }
+                out
+            }
+            IrOp::Binary(op) => {
+                let a = values[node.inputs[0]].as_ref().unwrap();
+                let b = values[node.inputs[1]].as_ref().unwrap();
+                let mut out = a.clone();
+                if b.rows == 1 && a.rows != 1 {
+                    // Bias broadcast.
+                    for r in 0..out.rows {
+                        for c in 0..out.cols {
+                            let v = apply_binary(*op, a.get(r, c), b.get(0, c));
+                            out.set(r, c, v);
+                        }
+                    }
+                } else {
+                    for i in 0..out.data.len() {
+                        out.data[i] = apply_binary(*op, a.data[i], b.data[i]);
+                    }
+                }
+                out
+            }
+            IrOp::RowScale => {
+                let a = values[node.inputs[0]].as_ref().unwrap();
+                let s = values[node.inputs[1]].as_ref().unwrap();
+                let mut out = a.clone();
+                for r in 0..out.rows {
+                    let f = s.get(r, 0);
+                    for v in out.row_mut(r) {
+                        *v *= f;
+                    }
+                }
+                out
+            }
+            IrOp::Concat => {
+                let a = values[node.inputs[0]].as_ref().unwrap();
+                let b = values[node.inputs[1]].as_ref().unwrap();
+                let mut out = Matrix::zeros(rows, node.cols as usize);
+                for r in 0..rows {
+                    out.row_mut(r)[..a.cols].copy_from_slice(a.row(r));
+                    out.row_mut(r)[a.cols..].copy_from_slice(b.row(r));
+                }
+                out
+            }
+            IrOp::ScatterSrc => {
+                let v = values[node.inputs[0]].as_ref().unwrap();
+                let mut out = Matrix::zeros(m, node.cols as usize);
+                for e in 0..m {
+                    out.row_mut(e).copy_from_slice(v.row(esrc[e] as usize));
+                }
+                out
+            }
+            IrOp::ScatterDst => {
+                let v = values[node.inputs[0]].as_ref().unwrap();
+                let mut out = Matrix::zeros(m, node.cols as usize);
+                for e in 0..m {
+                    out.row_mut(e).copy_from_slice(v.row(edst[e] as usize));
+                }
+                out
+            }
+            IrOp::Gather(reduce) => {
+                let ev = values[node.inputs[0]].as_ref().unwrap();
+                gather(*reduce, ev, &edst, n)
+            }
+            IrOp::Output => values[node.inputs[0]].as_ref().unwrap().clone(),
+        };
+        values[node.id] = Some(val);
+    }
+
+    values[ir.output.expect("output set")].take().unwrap()
+}
+
+/// Segment-reduce edge rows by destination. Vertices with no in-edges get
+/// zero rows (the convention shared with the compiled path and the JAX
+/// oracle).
+pub fn gather(reduce: Reduce, edge_vals: &Matrix, edst: &[u32], n: usize) -> Matrix {
+    let cols = edge_vals.cols;
+    let mut out = match reduce {
+        Reduce::Sum | Reduce::Mean => Matrix::zeros(n, cols),
+        Reduce::Max => Matrix::filled(n, cols, f32::NEG_INFINITY),
+    };
+    let mut count = vec![0u32; n];
+    for e in 0..edge_vals.rows {
+        let d = edst[e] as usize;
+        count[d] += 1;
+        let row = edge_vals.row(e);
+        let orow = out.row_mut(d);
+        match reduce {
+            Reduce::Sum | Reduce::Mean => {
+                for (o, &v) in orow.iter_mut().zip(row) {
+                    *o += v;
+                }
+            }
+            Reduce::Max => {
+                for (o, &v) in orow.iter_mut().zip(row) {
+                    *o = o.max(v);
+                }
+            }
+        }
+    }
+    for v in 0..n {
+        if count[v] == 0 {
+            out.row_mut(v).fill(0.0);
+        } else if reduce == Reduce::Mean {
+            let inv = 1.0 / count[v] as f32;
+            for o in out.row_mut(v) {
+                *o *= inv;
+            }
+        }
+    }
+    out
+}
+
+/// Unary op semantics — single source of truth shared with the executor.
+pub fn apply_unary(op: ElwOp, v: f32) -> f32 {
+    match op {
+        ElwOp::Relu => v.max(0.0),
+        ElwOp::LeakyRelu => {
+            if v >= 0.0 {
+                v
+            } else {
+                0.01 * v
+            }
+        }
+        ElwOp::Exp => v.exp(),
+        ElwOp::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+        ElwOp::Tanh => v.tanh(),
+        ElwOp::Rsqrt => {
+            // Degree-normalisation convention: rsqrt(0) := 1 so isolated
+            // vertices pass features through unscaled (DGL's GCN adds
+            // self-loops; we clamp instead and mirror it in the oracle).
+            if v <= 0.0 {
+                1.0
+            } else {
+                1.0 / v.sqrt()
+            }
+        }
+        ElwOp::Recip => {
+            if v == 0.0 {
+                0.0
+            } else {
+                1.0 / v
+            }
+        }
+        ElwOp::Copy => v,
+        ElwOp::AddScalar(bits) => v + f32::from_bits(bits),
+        ElwOp::MulScalar(bits) => v * f32::from_bits(bits),
+        _ => panic!("binary op {op:?} used as unary"),
+    }
+}
+
+/// Binary op semantics.
+pub fn apply_binary(op: ElwOp, a: f32, b: f32) -> f32 {
+    match op {
+        ElwOp::Add => a + b,
+        ElwOp::Sub => a - b,
+        ElwOp::Mul => a * b,
+        ElwOp::Div => a / b,
+        ElwOp::Max => a.max(b),
+        _ => panic!("unary op {op:?} used as binary"),
+    }
+}

@@ -1,0 +1,324 @@
+//! Compressed-sparse-row graph storage.
+//!
+//! The partitioner (DSW-GP / FGGP) iterates edges grouped by *destination*
+//! interval and then by *source* vertex, so the canonical layout here is
+//! **CSC-like**: for each destination we store its in-neighbours. We keep
+//! the conventional name `Csr` and the direction explicit in method names.
+
+use super::VertexId;
+
+/// An edge list in COO form, the interchange format between generators,
+/// the partitioner and the functional executor.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeList {
+    pub num_vertices: usize,
+    /// `(src, dst)` pairs. Parallel edges are allowed (multigraphs appear in
+    /// the Gunrock dataset dumps); self loops are allowed.
+    pub edges: Vec<(VertexId, VertexId)>,
+}
+
+impl EdgeList {
+    pub fn new(num_vertices: usize) -> Self {
+        EdgeList {
+            num_vertices,
+            edges: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, src: VertexId, dst: VertexId) {
+        debug_assert!((src as usize) < self.num_vertices);
+        debug_assert!((dst as usize) < self.num_vertices);
+        self.edges.push((src, dst));
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Deduplicate parallel edges (keeps the graph a simple digraph).
+    pub fn dedup(&mut self) {
+        self.edges.sort_unstable();
+        self.edges.dedup();
+    }
+}
+
+/// Dual-indexed sparse graph: both out-adjacency (CSR) and in-adjacency
+/// (CSC) are materialised because:
+///  * ScatterOp iterates edges by source (CSR),
+///  * GatherOp and the DSW-GP partitioner iterate by destination (CSC).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    num_vertices: usize,
+    num_edges: usize,
+    // CSR: out-edges.
+    out_offsets: Vec<u64>,
+    out_targets: Vec<VertexId>,
+    // CSC: in-edges, plus the originating edge id so edge features follow.
+    in_offsets: Vec<u64>,
+    in_sources: Vec<VertexId>,
+    /// For in-edge k (in CSC order), `in_edge_ids[k]` is the edge's id in
+    /// the canonical (CSR) edge numbering. Edge features are stored in
+    /// canonical order, so GatherPhase uses this indirection.
+    in_edge_ids: Vec<u64>,
+}
+
+impl Csr {
+    /// Build both indices from an edge list. Canonical edge ids are the
+    /// CSR (source-major) positions.
+    pub fn from_edge_list(el: &EdgeList) -> Self {
+        let n = el.num_vertices;
+        let m = el.edges.len();
+
+        // --- CSR (by source) -------------------------------------------------
+        let mut out_deg = vec![0u64; n + 1];
+        for &(s, _) in &el.edges {
+            out_deg[s as usize + 1] += 1;
+        }
+        for i in 0..n {
+            out_deg[i + 1] += out_deg[i];
+        }
+        let out_offsets = out_deg;
+        let mut out_targets = vec![0 as VertexId; m];
+        let mut cursor = out_offsets.clone();
+        // Canonical edge id for (s, d): position in out_targets.
+        let mut canonical_id = vec![0u64; m];
+        for (k, &(s, d)) in el.edges.iter().enumerate() {
+            let pos = cursor[s as usize];
+            out_targets[pos as usize] = d;
+            canonical_id[k] = pos;
+            cursor[s as usize] += 1;
+        }
+
+        // --- CSC (by destination) -------------------------------------------
+        let mut in_deg = vec![0u64; n + 1];
+        for &(_, d) in &el.edges {
+            in_deg[d as usize + 1] += 1;
+        }
+        for i in 0..n {
+            in_deg[i + 1] += in_deg[i];
+        }
+        let in_offsets = in_deg;
+        let mut in_sources = vec![0 as VertexId; m];
+        let mut in_edge_ids = vec![0u64; m];
+        let mut cursor = in_offsets.clone();
+        for (k, &(s, d)) in el.edges.iter().enumerate() {
+            let pos = cursor[d as usize] as usize;
+            in_sources[pos] = s;
+            in_edge_ids[pos] = canonical_id[k];
+            cursor[d as usize] += 1;
+        }
+
+        // Sort each in-neighbour list by source id: FGGP scans sources in
+        // ascending order (Alg 3 `srcPtr` sweep).
+        let mut csr = Csr {
+            num_vertices: n,
+            num_edges: m,
+            out_offsets,
+            out_targets,
+            in_offsets,
+            in_sources,
+            in_edge_ids,
+        };
+        csr.sort_in_lists();
+        csr
+    }
+
+    fn sort_in_lists(&mut self) {
+        // Perf: one reused scratch buffer instead of a fresh Vec per vertex
+        // (a million-vertex graph would otherwise pay a million allocations
+        // — EXPERIMENTS.md §Perf L3 #2).
+        let mut scratch: Vec<(VertexId, u64)> = Vec::new();
+        for v in 0..self.num_vertices {
+            let (lo, hi) = (
+                self.in_offsets[v] as usize,
+                self.in_offsets[v + 1] as usize,
+            );
+            if hi - lo < 2 {
+                continue;
+            }
+            scratch.clear();
+            scratch.extend(
+                self.in_sources[lo..hi]
+                    .iter()
+                    .copied()
+                    .zip(self.in_edge_ids[lo..hi].iter().copied()),
+            );
+            scratch.sort_unstable_by_key(|&(s, _)| s);
+            for (i, &(s, e)) in scratch.iter().enumerate() {
+                self.in_sources[lo + i] = s;
+                self.in_edge_ids[lo + i] = e;
+            }
+        }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    #[inline]
+    pub fn out_neighbors(&self, v: VertexId) -> &[VertexId] {
+        let (lo, hi) = (
+            self.out_offsets[v as usize] as usize,
+            self.out_offsets[v as usize + 1] as usize,
+        );
+        &self.out_targets[lo..hi]
+    }
+
+    #[inline]
+    pub fn in_neighbors(&self, v: VertexId) -> &[VertexId] {
+        let (lo, hi) = (
+            self.in_offsets[v as usize] as usize,
+            self.in_offsets[v as usize + 1] as usize,
+        );
+        &self.in_sources[lo..hi]
+    }
+
+    /// In-edges of `v` as `(source, canonical edge id)` pairs.
+    #[inline]
+    pub fn in_edges(&self, v: VertexId) -> impl Iterator<Item = (VertexId, u64)> + '_ {
+        let (lo, hi) = (
+            self.in_offsets[v as usize] as usize,
+            self.in_offsets[v as usize + 1] as usize,
+        );
+        self.in_sources[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.in_edge_ids[lo..hi].iter().copied())
+    }
+
+    #[inline]
+    pub fn out_degree(&self, v: VertexId) -> usize {
+        (self.out_offsets[v as usize + 1] - self.out_offsets[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn in_degree(&self, v: VertexId) -> usize {
+        (self.in_offsets[v as usize + 1] - self.in_offsets[v as usize]) as usize
+    }
+
+    /// Canonical-order edges `(src, dst, edge_id)`; edge_id == position.
+    pub fn edges_canonical(&self) -> impl Iterator<Item = (VertexId, VertexId, u64)> + '_ {
+        (0..self.num_vertices as u32).flat_map(move |s| {
+            let (lo, hi) = (
+                self.out_offsets[s as usize] as usize,
+                self.out_offsets[s as usize + 1] as usize,
+            );
+            (lo..hi).map(move |k| (s, self.out_targets[k], k as u64))
+        })
+    }
+
+    /// Mean in-degree (used in dataset summaries and the GPU cost model).
+    pub fn avg_degree(&self) -> f64 {
+        self.num_edges as f64 / self.num_vertices.max(1) as f64
+    }
+
+    /// Max in-degree.
+    pub fn max_in_degree(&self) -> usize {
+        (0..self.num_vertices as u32)
+            .map(|v| self.in_degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Coefficient of variation of the in-degree distribution — a cheap
+    /// skew proxy used to sanity-check that the synthetic generators match
+    /// the character of the original dataset (power-law vs mesh).
+    pub fn in_degree_cv(&self) -> f64 {
+        let n = self.num_vertices.max(1) as f64;
+        let mean = self.num_edges as f64 / n;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = (0..self.num_vertices as u32)
+            .map(|v| {
+                let d = self.in_degree(v) as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / n;
+        var.sqrt() / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Csr {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3, 3 -> 0
+        let mut el = EdgeList::new(4);
+        for (s, d) in [(0, 1), (0, 2), (1, 3), (2, 3), (3, 0)] {
+            el.push(s, d);
+        }
+        Csr::from_edge_list(&el)
+    }
+
+    #[test]
+    fn counts() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 5);
+        assert_eq!(g.avg_degree(), 1.25);
+    }
+
+    #[test]
+    fn out_neighbors() {
+        let g = diamond();
+        assert_eq!(g.out_neighbors(0), &[1, 2]);
+        assert_eq!(g.out_neighbors(3), &[0]);
+        assert_eq!(g.out_degree(0), 2);
+    }
+
+    #[test]
+    fn in_neighbors_sorted() {
+        let g = diamond();
+        assert_eq!(g.in_neighbors(3), &[1, 2]);
+        assert_eq!(g.in_neighbors(0), &[3]);
+        assert_eq!(g.in_degree(3), 2);
+    }
+
+    #[test]
+    fn edge_ids_consistent() {
+        let g = diamond();
+        // in_edges of 3 must reference canonical ids whose CSR slot holds dst 3.
+        for (_s, eid) in g.in_edges(3) {
+            assert_eq!(g.out_targets[eid as usize], 3);
+        }
+    }
+
+    #[test]
+    fn canonical_edges_cover_all() {
+        let g = diamond();
+        let edges: Vec<_> = g.edges_canonical().collect();
+        assert_eq!(edges.len(), 5);
+        for (i, &(_, _, id)) in edges.iter().enumerate() {
+            assert_eq!(i as u64, id);
+        }
+    }
+
+    #[test]
+    fn degree_cv_zero_for_regular() {
+        // Ring: every vertex in-degree 1.
+        let mut el = EdgeList::new(8);
+        for i in 0..8u32 {
+            el.push(i, (i + 1) % 8);
+        }
+        let g = Csr::from_edge_list(&el);
+        assert!(g.in_degree_cv() < 1e-12);
+        assert_eq!(g.max_in_degree(), 1);
+    }
+
+    #[test]
+    fn dedup_removes_parallel_edges() {
+        let mut el = EdgeList::new(2);
+        el.push(0, 1);
+        el.push(0, 1);
+        el.push(1, 0);
+        el.dedup();
+        assert_eq!(el.num_edges(), 2);
+    }
+}

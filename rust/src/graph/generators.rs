@@ -1,0 +1,213 @@
+//! Deterministic synthetic graph generators.
+//!
+//! The paper evaluates on five Gunrock dataset dumps (Tbl IV). Those files
+//! are not redistributable inside this offline image, so we generate graphs
+//! with matched vertex/edge counts and degree character (see
+//! `graph::datasets` for the mapping and DESIGN.md §3 for the substitution
+//! argument). All generators are deterministic in `(seed, parameters)`.
+
+use super::{Csr, EdgeList, VertexId};
+use crate::util::rng::Rng;
+
+/// R-MAT (recursive matrix) generator — the standard model for skewed
+/// power-law graphs such as social networks (soc-LiveJournal) and
+/// collaboration networks (hollywood).
+///
+/// `(a, b, c)` are the upper-left / upper-right / lower-left quadrant
+/// probabilities; `d = 1 - a - b - c`.
+pub fn rmat(
+    num_vertices: usize,
+    num_edges: usize,
+    a: f64,
+    b: f64,
+    c: f64,
+    seed: u64,
+) -> EdgeList {
+    assert!(num_vertices.is_power_of_two(), "rmat needs power-of-two n");
+    let scale = num_vertices.trailing_zeros();
+    let mut rng = Rng::new(seed);
+    let mut el = EdgeList::new(num_vertices);
+    el.edges.reserve(num_edges);
+    // Perf: quadrant selection in 16-bit fixed point, four levels per u64
+    // draw — ~4× fewer RNG calls and no f64 conversions than the naive
+    // per-level f64 path (EXPERIMENTS.md §Perf L3 #1).
+    let t_a = (a * 65536.0) as u32;
+    let t_ab = ((a + b) * 65536.0) as u32;
+    let t_abc = ((a + b + c) * 65536.0) as u32;
+    for _ in 0..num_edges {
+        let (mut s, mut d) = (0u64, 0u64);
+        let mut bits = 0u64;
+        let mut left = 0u32;
+        for _ in 0..scale {
+            if left == 0 {
+                bits = rng.next_u64();
+                left = 4;
+            }
+            let r = (bits & 0xFFFF) as u32;
+            bits >>= 16;
+            left -= 1;
+            s <<= 1;
+            d <<= 1;
+            if r < t_a {
+                // upper-left: neither bit set
+            } else if r < t_ab {
+                d |= 1;
+            } else if r < t_abc {
+                s |= 1;
+            } else {
+                s |= 1;
+                d |= 1;
+            }
+        }
+        el.push(s as VertexId, d as VertexId);
+    }
+    el
+}
+
+/// Barabási–Albert preferential attachment — citation-style graphs
+/// (coAuthorsDBLP, cit-Patents). Each new vertex attaches `m` edges to
+/// existing vertices with probability proportional to degree.
+pub fn barabasi_albert(num_vertices: usize, m: usize, seed: u64) -> EdgeList {
+    assert!(num_vertices > m && m >= 1);
+    let mut rng = Rng::new(seed);
+    let mut el = EdgeList::new(num_vertices);
+    // Repeated-vertex list: sampling uniformly from it is degree-
+    // proportional sampling.
+    let mut targets: Vec<VertexId> = Vec::with_capacity(2 * num_vertices * m);
+    // Seed clique over the first m+1 vertices.
+    for i in 0..=m as u32 {
+        for j in 0..=m as u32 {
+            if i != j {
+                el.push(i, j);
+                targets.push(j);
+            }
+        }
+    }
+    for v in (m as u32 + 1)..num_vertices as u32 {
+        let mut chosen: Vec<VertexId> = Vec::with_capacity(m);
+        while chosen.len() < m {
+            let t = targets[rng.usize_in(0, targets.len())];
+            if t != v && !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &t in &chosen {
+            // Citation direction: new work cites (points at) older work.
+            el.push(v, t);
+            targets.push(t);
+            targets.push(v);
+        }
+    }
+    el
+}
+
+/// Erdős–Rényi G(n, m): uniform random edges, low skew.
+pub fn erdos_renyi(num_vertices: usize, num_edges: usize, seed: u64) -> EdgeList {
+    let mut rng = Rng::new(seed);
+    let mut el = EdgeList::new(num_vertices);
+    el.edges.reserve(num_edges);
+    for _ in 0..num_edges {
+        let s = rng.gen_range(num_vertices as u64) as VertexId;
+        let d = rng.gen_range(num_vertices as u64) as VertexId;
+        el.push(s, d);
+    }
+    el
+}
+
+/// 2-D grid/mesh — planar, near-regular graphs such as redistricting
+/// adjacency (ak2010). Both directions of each adjacency are emitted;
+/// `diag` adds the diagonal neighbours (8-neighbourhood).
+pub fn mesh2d(rows: usize, cols: usize, diag: bool) -> EdgeList {
+    let n = rows * cols;
+    let mut el = EdgeList::new(n);
+    let idx = |r: usize, c: usize| (r * cols + c) as VertexId;
+    let offsets: &[(i64, i64)] = if diag {
+        &[(0, 1), (1, 0), (1, 1), (1, -1)]
+    } else {
+        &[(0, 1), (1, 0)]
+    };
+    for r in 0..rows {
+        for c in 0..cols {
+            let v = idx(r, c);
+            for &(dr, dc) in offsets {
+                let (nr, nc) = (r as i64 + dr, c as i64 + dc);
+                if nr >= 0 && nr < rows as i64 && nc >= 0 && nc < cols as i64 {
+                    let u = idx(nr as usize, nc as usize);
+                    el.push(v, u);
+                    el.push(u, v);
+                }
+            }
+        }
+    }
+    el
+}
+
+/// Convenience: generate and index.
+pub fn rmat_csr(n: usize, m: usize, seed: u64) -> Csr {
+    // Graph500 parameters: heavy skew.
+    Csr::from_edge_list(&rmat(n, m, 0.57, 0.19, 0.19, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_counts_and_determinism() {
+        let a = rmat(1 << 10, 8_000, 0.57, 0.19, 0.19, 1);
+        let b = rmat(1 << 10, 8_000, 0.57, 0.19, 0.19, 1);
+        assert_eq!(a.num_edges(), 8_000);
+        assert_eq!(a.edges, b.edges);
+        let c = rmat(1 << 10, 8_000, 0.57, 0.19, 0.19, 2);
+        assert_ne!(a.edges, c.edges);
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = Csr::from_edge_list(&rmat(1 << 12, 40_000, 0.57, 0.19, 0.19, 3));
+        // Power-law-ish: max degree far above mean, high CV.
+        assert!(g.max_in_degree() as f64 > 10.0 * g.avg_degree());
+        assert!(g.in_degree_cv() > 1.0);
+    }
+
+    #[test]
+    fn ba_counts() {
+        let el = barabasi_albert(1_000, 4, 5);
+        // m*(m+1) seed edges + m per subsequent vertex.
+        assert_eq!(el.num_edges(), 4 * 5 + (1_000 - 5) * 4);
+        let g = Csr::from_edge_list(&el);
+        // Preferential attachment produces hubs.
+        assert!(g.max_in_degree() > 20);
+    }
+
+    #[test]
+    fn er_is_uniform() {
+        let g = Csr::from_edge_list(&erdos_renyi(4_096, 32_768, 7));
+        assert_eq!(g.num_edges(), 32_768);
+        assert!(g.in_degree_cv() < 0.6); // Poisson-like, low skew
+    }
+
+    #[test]
+    fn mesh_is_regular() {
+        let g = Csr::from_edge_list(&mesh2d(32, 32, true));
+        assert_eq!(g.num_vertices(), 1_024);
+        // Interior vertices have 8 neighbours each direction.
+        assert_eq!(g.max_in_degree(), 8);
+        assert!(g.in_degree_cv() < 0.3);
+    }
+
+    #[test]
+    fn vertex_ids_in_range() {
+        for el in [
+            rmat(1 << 8, 1_000, 0.57, 0.19, 0.19, 11),
+            barabasi_albert(300, 3, 11),
+            erdos_renyi(256, 1_000, 11),
+            mesh2d(10, 10, false),
+        ] {
+            for &(s, d) in &el.edges {
+                assert!((s as usize) < el.num_vertices);
+                assert!((d as usize) < el.num_vertices);
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Graph substrate: CSR/COO storage, degree statistics, and the synthetic
+//! dataset generators that stand in for the paper's Tbl IV workloads.
+
+mod csr;
+pub mod datasets;
+pub mod generators;
+
+pub use csr::{Csr, EdgeList};
+
+/// Vertex id type used throughout. u32 covers the paper's largest dataset
+/// (soc-LiveJournal, 4.8 M vertices) with room to spare and halves the
+/// memory traffic of the partitioner relative to u64.
+pub type VertexId = u32;

@@ -1,0 +1,360 @@
+//! Unified computational graph (paper §V-C1).
+//!
+//! The compiler front-end of high-level frameworks (DGL `update_all`, PyG
+//! `scatter`) is modelled by this IR: framework-specific graph operators are
+//! replaced by generic GTR operators (`ScatterSrc`, `ScatterDst`,
+//! `Gather(reduce)`), and dense compute by `Dmm` / element-wise nodes.
+//!
+//! Every node carries a *location*: `Vertex` (one row per graph vertex),
+//! `Edge` (one row per edge) or `Param` (model weights). GTR nodes are the
+//! only ops that change location.
+
+pub mod models;
+
+use std::collections::HashMap;
+
+use crate::isa::{ElwOp, Reduce};
+
+/// Data location of an IR value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Loc {
+    Vertex,
+    Edge,
+    Param,
+}
+
+/// IR operator kinds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum IrOp {
+    /// Model input: per-vertex feature matrix `[N, dim]`.
+    Input,
+    /// Per-vertex in-degree as a `[N, 1]` f32 column (GCN normalisation).
+    Degree,
+    /// Weight parameter `[rows, cols]`, deterministic init from `seed`.
+    Weight { rows: u32, seed: u64 },
+    /// Bias row `[1, cols]`, broadcast over rows when consumed.
+    Bias { seed: u64 },
+    /// Dense matmul: `inputs[0] [*, k] × inputs[1] (Weight [k, n])`.
+    Dmm,
+    /// Unary element-wise op.
+    Unary(ElwOp),
+    /// Binary element-wise op. `inputs[1]` may be a `Bias` (broadcast row).
+    Binary(ElwOp),
+    /// Per-row scaling: `inputs[0] [*, d] * inputs[1] [*, 1]`.
+    RowScale,
+    /// Feature concatenation of two same-location values.
+    Concat,
+    /// GTR: copy source-vertex rows onto out-edges (vertex → edge).
+    ScatterSrc,
+    /// GTR: copy destination-vertex rows onto in-edges (vertex → edge).
+    ScatterDst,
+    /// GTR: segment-reduce edge rows by destination (edge → vertex).
+    Gather(Reduce),
+    /// Marks the model output (per-vertex).
+    Output,
+}
+
+pub type NodeId = usize;
+
+/// One node of the unified computational graph.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: IrOp,
+    pub inputs: Vec<NodeId>,
+    pub loc: Loc,
+    /// Feature width (columns) of this value.
+    pub cols: u32,
+    /// Debug name (propagated into the symbol table).
+    pub name: String,
+}
+
+/// The unified computational graph. Nodes are stored in insertion order,
+/// which is a topological order by construction (builders may only
+/// reference already-created nodes).
+#[derive(Clone, Debug, Default)]
+pub struct IrGraph {
+    pub nodes: Vec<Node>,
+    pub output: Option<NodeId>,
+    pub name: String,
+}
+
+impl IrGraph {
+    pub fn new(name: &str) -> Self {
+        IrGraph {
+            nodes: Vec::new(),
+            output: None,
+            name: name.to_string(),
+        }
+    }
+
+    fn push(&mut self, op: IrOp, inputs: Vec<NodeId>, loc: Loc, cols: u32, name: &str) -> NodeId {
+        for &i in &inputs {
+            assert!(i < self.nodes.len(), "forward reference in IR builder");
+        }
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            op,
+            inputs,
+            loc,
+            cols,
+            name: name.to_string(),
+        });
+        id
+    }
+
+    // ----- builder API ------------------------------------------------------
+
+    pub fn input(&mut self, dim: u32) -> NodeId {
+        self.push(IrOp::Input, vec![], Loc::Vertex, dim, "x")
+    }
+
+    pub fn degree(&mut self) -> NodeId {
+        self.push(IrOp::Degree, vec![], Loc::Vertex, 1, "deg")
+    }
+
+    pub fn weight(&mut self, rows: u32, cols: u32, seed: u64, name: &str) -> NodeId {
+        self.push(IrOp::Weight { rows, seed }, vec![], Loc::Param, cols, name)
+    }
+
+    pub fn bias(&mut self, cols: u32, seed: u64, name: &str) -> NodeId {
+        self.push(IrOp::Bias { seed }, vec![], Loc::Param, cols, name)
+    }
+
+    pub fn dmm(&mut self, x: NodeId, w: NodeId, name: &str) -> NodeId {
+        let (loc, k) = (self.nodes[x].loc, self.nodes[x].cols);
+        let wn = &self.nodes[w];
+        let IrOp::Weight { rows, .. } = wn.op else {
+            panic!("dmm second input must be a Weight");
+        };
+        assert_eq!(rows, k, "dmm shape mismatch: [{k}] x [{rows},{}]", wn.cols);
+        assert_ne!(loc, Loc::Param);
+        let cols = wn.cols;
+        self.push(IrOp::Dmm, vec![x, w], loc, cols, name)
+    }
+
+    pub fn unary(&mut self, op: ElwOp, x: NodeId, name: &str) -> NodeId {
+        assert!(!op.is_binary());
+        let (loc, cols) = (self.nodes[x].loc, self.nodes[x].cols);
+        self.push(IrOp::Unary(op), vec![x], loc, cols, name)
+    }
+
+    pub fn binary(&mut self, op: ElwOp, a: NodeId, b: NodeId, name: &str) -> NodeId {
+        assert!(op.is_binary());
+        let (loc, cols) = (self.nodes[a].loc, self.nodes[a].cols);
+        let bn = &self.nodes[b];
+        assert_eq!(bn.cols, cols, "binary width mismatch");
+        assert!(
+            bn.loc == loc || matches!(bn.op, IrOp::Bias { .. }),
+            "binary operands must share location (or b is a Bias)"
+        );
+        self.push(IrOp::Binary(op), vec![a, b], loc, cols, name)
+    }
+
+    pub fn row_scale(&mut self, x: NodeId, s: NodeId, name: &str) -> NodeId {
+        let (loc, cols) = (self.nodes[x].loc, self.nodes[x].cols);
+        assert_eq!(self.nodes[s].cols, 1, "row_scale scale must be [*,1]");
+        assert_eq!(self.nodes[s].loc, loc);
+        self.push(IrOp::RowScale, vec![x, s], loc, cols, name)
+    }
+
+    pub fn concat(&mut self, a: NodeId, b: NodeId, name: &str) -> NodeId {
+        let loc = self.nodes[a].loc;
+        assert_eq!(self.nodes[b].loc, loc);
+        let cols = self.nodes[a].cols + self.nodes[b].cols;
+        self.push(IrOp::Concat, vec![a, b], loc, cols, name)
+    }
+
+    pub fn scatter_src(&mut self, x: NodeId, name: &str) -> NodeId {
+        assert_eq!(self.nodes[x].loc, Loc::Vertex);
+        let cols = self.nodes[x].cols;
+        self.push(IrOp::ScatterSrc, vec![x], Loc::Edge, cols, name)
+    }
+
+    pub fn scatter_dst(&mut self, x: NodeId, name: &str) -> NodeId {
+        assert_eq!(self.nodes[x].loc, Loc::Vertex);
+        let cols = self.nodes[x].cols;
+        self.push(IrOp::ScatterDst, vec![x], Loc::Edge, cols, name)
+    }
+
+    pub fn gather(&mut self, reduce: Reduce, e: NodeId, name: &str) -> NodeId {
+        assert_eq!(self.nodes[e].loc, Loc::Edge);
+        let cols = self.nodes[e].cols;
+        self.push(IrOp::Gather(reduce), vec![e], Loc::Vertex, cols, name)
+    }
+
+    pub fn set_output(&mut self, x: NodeId) {
+        assert_eq!(self.nodes[x].loc, Loc::Vertex, "output must be per-vertex");
+        let id = self.push(IrOp::Output, vec![x], Loc::Vertex, self.nodes[x].cols, "out");
+        self.output = Some(id);
+    }
+
+    // ----- analysis helpers -------------------------------------------------
+
+    /// Gather depth per node: the maximum number of `Gather` ops on any
+    /// path from an input to (and including inputs of) this node. This is
+    /// the PLOF *group index* driver (§V-C2).
+    pub fn gather_depth(&self) -> Vec<u32> {
+        let mut depth = vec![0u32; self.nodes.len()];
+        for n in &self.nodes {
+            let mut d = 0;
+            for &i in &n.inputs {
+                let contrib = depth[i] + u32::from(matches!(self.nodes[i].op, IrOp::Gather(_)));
+                d = d.max(contrib);
+            }
+            depth[n.id] = d;
+        }
+        depth
+    }
+
+    /// Number of PLOF groups = max gather depth of any gather node + 1
+    /// (0 if the model has no GTR at all).
+    pub fn num_groups(&self) -> u32 {
+        let depth = self.gather_depth();
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, IrOp::Gather(_)))
+            .map(|n| depth[n.id] + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Users (consumers) of every node.
+    pub fn users(&self) -> Vec<Vec<NodeId>> {
+        let mut users = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                users[i].push(n.id);
+            }
+        }
+        users
+    }
+
+    /// Count nodes per operator category (used in model-variety reports).
+    pub fn op_census(&self) -> HashMap<&'static str, usize> {
+        let mut m = HashMap::new();
+        for n in &self.nodes {
+            let k = match n.op {
+                IrOp::Input | IrOp::Degree | IrOp::Weight { .. } | IrOp::Bias { .. } => "data",
+                IrOp::Dmm => "dmm",
+                IrOp::Unary(_) | IrOp::Binary(_) | IrOp::RowScale | IrOp::Concat => "elw",
+                IrOp::ScatterSrc | IrOp::ScatterDst | IrOp::Gather(_) => "gtr",
+                IrOp::Output => "data",
+            };
+            *m.entry(k).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Structural validation: topological input order, location typing of
+    /// GTR boundaries, a single output.
+    pub fn validate(&self) -> Result<(), String> {
+        let Some(out) = self.output else {
+            return Err("no output set".into());
+        };
+        if !matches!(self.nodes[out].op, IrOp::Output) {
+            return Err("output node is not IrOp::Output".into());
+        }
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                if i >= n.id {
+                    return Err(format!("node {} references later node {}", n.id, i));
+                }
+            }
+            match n.op {
+                IrOp::ScatterSrc | IrOp::ScatterDst => {
+                    if self.nodes[n.inputs[0]].loc != Loc::Vertex || n.loc != Loc::Edge {
+                        return Err(format!("scatter {} mis-located", n.id));
+                    }
+                }
+                IrOp::Gather(_) => {
+                    if self.nodes[n.inputs[0]].loc != Loc::Edge || n.loc != Loc::Vertex {
+                        return Err(format!("gather {} mis-located", n.id));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> IrGraph {
+        let mut g = IrGraph::new("tiny");
+        let x = g.input(8);
+        let e = g.scatter_src(x, "e");
+        let a = g.gather(Reduce::Sum, e, "a");
+        let w = g.weight(8, 4, 1, "w");
+        let z = g.dmm(a, w, "z");
+        let r = g.unary(ElwOp::Relu, z, "r");
+        g.set_output(r);
+        g
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let g = tiny();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.num_groups(), 1);
+    }
+
+    #[test]
+    fn gather_depth_counts() {
+        let mut g = IrGraph::new("two-round");
+        let x = g.input(4);
+        let e = g.scatter_src(x, "e1");
+        let a = g.gather(Reduce::Sum, e, "a1");
+        let e2 = g.scatter_src(a, "e2");
+        let a2 = g.gather(Reduce::Max, e2, "a2");
+        g.set_output(a2);
+        let d = g.gather_depth();
+        assert_eq!(d[e], 0);
+        assert_eq!(d[a], 0); // gather itself is at the depth of its inputs
+        assert_eq!(d[e2], 1);
+        assert_eq!(d[a2], 1);
+        assert_eq!(g.num_groups(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dmm_shape_mismatch_panics() {
+        let mut g = IrGraph::new("bad");
+        let x = g.input(8);
+        let w = g.weight(16, 4, 1, "w");
+        g.dmm(x, w, "z");
+    }
+
+    #[test]
+    fn concat_widths_add() {
+        let mut g = IrGraph::new("cat");
+        let x = g.input(8);
+        let y = g.unary(ElwOp::Relu, x, "y");
+        let c = g.concat(x, y, "c");
+        assert_eq!(g.nodes[c].cols, 16);
+    }
+
+    #[test]
+    fn census() {
+        let g = tiny();
+        let c = g.op_census();
+        assert_eq!(c["gtr"], 2);
+        assert_eq!(c["dmm"], 1);
+        assert_eq!(c["elw"], 1);
+    }
+
+    #[test]
+    fn users_inverse_of_inputs() {
+        let g = tiny();
+        let users = g.users();
+        for n in &g.nodes {
+            for &i in &n.inputs {
+                assert!(users[i].contains(&n.id));
+            }
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Model zoo: the four evaluation models of Tbl I, built as unified
+//! computational graphs. Each follows the paper's setup: two stacked
+//! identical layers, dimension 128 for input / hidden / output (the dims
+//! are parameters here so tests and the AOT path can use small shapes).
+
+use super::IrGraph;
+use crate::isa::{ElwOp, Reduce};
+
+/// The four evaluation models, paper order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Model {
+    Gcn,
+    Gat,
+    Sage,
+    Ggnn,
+}
+
+impl Model {
+    pub const ALL: [Model; 4] = [Model::Gcn, Model::Gat, Model::Sage, Model::Ggnn];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Model::Gcn => "GCN",
+            Model::Gat => "GAT",
+            Model::Sage => "SAGE",
+            Model::Ggnn => "GGNN",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Model> {
+        match s.to_ascii_uppercase().as_str() {
+            "GCN" => Some(Model::Gcn),
+            "GAT" => Some(Model::Gat),
+            "SAGE" | "SAGE-POOL" | "GRAPHSAGE" => Some(Model::Sage),
+            "GGNN" | "GG-NN" => Some(Model::Ggnn),
+            _ => None,
+        }
+    }
+
+    /// Build the model IR with `layers` stacked layers.
+    pub fn build(&self, layers: u32, in_dim: u32, hid_dim: u32, out_dim: u32) -> IrGraph {
+        match self {
+            Model::Gcn => gcn(layers, in_dim, hid_dim, out_dim),
+            Model::Gat => gat(layers, in_dim, hid_dim, out_dim),
+            Model::Sage => sage(layers, in_dim, hid_dim, out_dim),
+            Model::Ggnn => ggnn(layers, in_dim),
+        }
+    }
+
+    /// Paper configuration: 2 layers, 128-dim everywhere (§VI).
+    pub fn build_paper(&self) -> IrGraph {
+        self.build(2, 128, 128, 128)
+    }
+}
+
+fn layer_dims(layers: u32, in_dim: u32, hid_dim: u32, out_dim: u32) -> Vec<(u32, u32)> {
+    (0..layers)
+        .map(|l| {
+            let di = if l == 0 { in_dim } else { hid_dim };
+            let d_o = if l == layers - 1 { out_dim } else { hid_dim };
+            (di, d_o)
+        })
+        .collect()
+}
+
+fn seed(model: &str, layer: u32, which: u32) -> u64 {
+    // Stable, collision-free within a model: mirrored in python/compile/model.py.
+    let mid = match model {
+        "gcn" => 1u64,
+        "gat" => 2,
+        "sage" => 3,
+        "ggnn" => 4,
+        _ => 9,
+    };
+    mid * 1_000_000 + layer as u64 * 1_000 + which as u64
+}
+
+/// GCN (Kipf & Welling): `a_i = Σ_{j∈N(i)} h_j d_j^{-1/2}`,
+/// `h_i' = ReLU(d_i^{-1/2} · W a_i)` (Tbl I row 1).
+pub fn gcn(layers: u32, in_dim: u32, hid_dim: u32, out_dim: u32) -> IrGraph {
+    let mut g = IrGraph::new("gcn");
+    let deg = g.degree();
+    let dn = g.unary(ElwOp::Rsqrt, deg, "deg_rsqrt");
+    let mut h = g.input(in_dim);
+    for (l, (di, d_o)) in layer_dims(layers, in_dim, hid_dim, out_dim).into_iter().enumerate() {
+        let hs = g.row_scale(h, dn, &format!("l{l}.h_norm"));
+        let e = g.scatter_src(hs, &format!("l{l}.msg"));
+        let a = g.gather(Reduce::Sum, e, &format!("l{l}.agg"));
+        let w = g.weight(di, d_o, seed("gcn", l as u32, 0), &format!("l{l}.W"));
+        let z = g.dmm(a, w, &format!("l{l}.z"));
+        let zn = g.row_scale(z, dn, &format!("l{l}.z_norm"));
+        h = g.unary(ElwOp::Relu, zn, &format!("l{l}.relu"));
+    }
+    g.set_output(h);
+    g
+}
+
+/// GAT (Veličković et al.), single head, numerically-stable edge softmax:
+/// `e_ij = LeakyReLU(a_l·Wh_i + a_r·Wh_j)`,
+/// `α_ij = softmax_j(e_ij)`, `a_i = Σ_j α_ij W h_j`, `h' = ReLU(a_i)`.
+/// The stable softmax makes this a genuinely multi-round model: the edge
+/// scores need a gather(max), a scatter back, then gather(sum) — two PLOF
+/// groups per layer.
+pub fn gat(layers: u32, in_dim: u32, hid_dim: u32, out_dim: u32) -> IrGraph {
+    let mut g = IrGraph::new("gat");
+    let mut h = g.input(in_dim);
+    for (l, (di, d_o)) in layer_dims(layers, in_dim, hid_dim, out_dim).into_iter().enumerate() {
+        let w = g.weight(di, d_o, seed("gat", l as u32, 0), &format!("l{l}.W"));
+        let al = g.weight(d_o, 1, seed("gat", l as u32, 1), &format!("l{l}.a_l"));
+        let ar = g.weight(d_o, 1, seed("gat", l as u32, 2), &format!("l{l}.a_r"));
+        let hw = g.dmm(h, w, &format!("l{l}.hw"));
+        let el = g.dmm(hw, al, &format!("l{l}.att_dst"));
+        let er = g.dmm(hw, ar, &format!("l{l}.att_src"));
+        // Edge score.
+        let se = g.scatter_dst(el, &format!("l{l}.s_dst"));
+        let ss = g.scatter_src(er, &format!("l{l}.s_src"));
+        let sraw = g.binary(ElwOp::Add, se, ss, &format!("l{l}.s_raw"));
+        let s = g.unary(ElwOp::LeakyRelu, sraw, &format!("l{l}.s"));
+        // Stable softmax over in-edges.
+        let m = g.gather(Reduce::Max, s, &format!("l{l}.s_max"));
+        let sm = g.scatter_dst(m, &format!("l{l}.s_max_e"));
+        let s2 = g.binary(ElwOp::Sub, s, sm, &format!("l{l}.s_cent"));
+        let ex = g.unary(ElwOp::Exp, s2, &format!("l{l}.s_exp"));
+        let den = g.gather(Reduce::Sum, ex, &format!("l{l}.den"));
+        // Weighted message aggregation.
+        let msg = g.scatter_src(hw, &format!("l{l}.msg"));
+        let wmsg = g.row_scale(msg, ex, &format!("l{l}.wmsg"));
+        let num = g.gather(Reduce::Sum, wmsg, &format!("l{l}.num"));
+        let rden = g.unary(ElwOp::Recip, den, &format!("l{l}.rden"));
+        let a = g.row_scale(num, rden, &format!("l{l}.alpha_agg"));
+        h = g.unary(ElwOp::Relu, a, &format!("l{l}.relu"));
+    }
+    g.set_output(h);
+    g
+}
+
+/// GraphSAGE with max-pool aggregator (Hamilton et al., Tbl I row 3):
+/// `a_i = max_j(W_pool h_j + b)`, `h' = ReLU(W (h_i || a_i))`.
+pub fn sage(layers: u32, in_dim: u32, hid_dim: u32, out_dim: u32) -> IrGraph {
+    let mut g = IrGraph::new("sage");
+    let mut h = g.input(in_dim);
+    for (l, (di, d_o)) in layer_dims(layers, in_dim, hid_dim, out_dim).into_iter().enumerate() {
+        let wp = g.weight(di, di, seed("sage", l as u32, 0), &format!("l{l}.W_pool"));
+        let b = g.bias(di, seed("sage", l as u32, 1), &format!("l{l}.b"));
+        let t = g.dmm(h, wp, &format!("l{l}.pool_proj"));
+        let tb = g.binary(ElwOp::Add, t, b, &format!("l{l}.pool_biased"));
+        let e = g.scatter_src(tb, &format!("l{l}.msg"));
+        let a = g.gather(Reduce::Max, e, &format!("l{l}.agg"));
+        let cat = g.concat(h, a, &format!("l{l}.cat"));
+        let w = g.weight(2 * di, d_o, seed("sage", l as u32, 2), &format!("l{l}.W"));
+        let z = g.dmm(cat, w, &format!("l{l}.z"));
+        h = g.unary(ElwOp::Relu, z, &format!("l{l}.relu"));
+    }
+    g.set_output(h);
+    g
+}
+
+/// GraphSAGE with *mean* aggregator — not in Tbl I but part of the
+/// original SAGE family; exercises the `Mean` reduction through the whole
+/// stack (compiler GSCTR fusion, executor count-normalisation, oracles).
+pub fn sage_mean(layers: u32, in_dim: u32, hid_dim: u32, out_dim: u32) -> IrGraph {
+    let mut g = IrGraph::new("sage_mean");
+    let mut h = g.input(in_dim);
+    for (l, (di, d_o)) in layer_dims(layers, in_dim, hid_dim, out_dim).into_iter().enumerate() {
+        let e = g.scatter_src(h, &format!("l{l}.msg"));
+        let a = g.gather(Reduce::Mean, e, &format!("l{l}.agg"));
+        let cat = g.concat(h, a, &format!("l{l}.cat"));
+        let w = g.weight(2 * di, d_o, seed("sage", l as u32, 7), &format!("l{l}.W"));
+        let z = g.dmm(cat, w, &format!("l{l}.z"));
+        h = g.unary(ElwOp::Relu, z, &format!("l{l}.relu"));
+    }
+    g.set_output(h);
+    g
+}
+
+/// GG-NN (Li et al., Tbl I row 4): `a_i = Σ_j (W h_j + b)`,
+/// `h' = GRU(h_i, a_i)`. The GRU keeps the hidden size constant, so every
+/// layer of GGNN is `dim → dim`.
+pub fn ggnn(layers: u32, dim: u32) -> IrGraph {
+    let mut g = IrGraph::new("ggnn");
+    let mut h = g.input(dim);
+    for l in 0..layers {
+        let w = g.weight(dim, dim, seed("ggnn", l, 0), &format!("l{l}.W"));
+        let b = g.bias(dim, seed("ggnn", l, 1), &format!("l{l}.b"));
+        let t = g.dmm(h, w, &format!("l{l}.proj"));
+        let tb = g.binary(ElwOp::Add, t, b, &format!("l{l}.proj_b"));
+        let e = g.scatter_src(tb, &format!("l{l}.msg"));
+        let a = g.gather(Reduce::Sum, e, &format!("l{l}.agg"));
+        // GRU cell: z = σ(W_z a + U_z h); r = σ(W_r a + U_r h);
+        // h̃ = tanh(W_h a + U_h (r ⊙ h)); h' = (1-z) ⊙ h + z ⊙ h̃.
+        let wz = g.weight(dim, dim, seed("ggnn", l, 2), &format!("l{l}.W_z"));
+        let uz = g.weight(dim, dim, seed("ggnn", l, 3), &format!("l{l}.U_z"));
+        let wr = g.weight(dim, dim, seed("ggnn", l, 4), &format!("l{l}.W_r"));
+        let ur = g.weight(dim, dim, seed("ggnn", l, 5), &format!("l{l}.U_r"));
+        let wh = g.weight(dim, dim, seed("ggnn", l, 6), &format!("l{l}.W_h"));
+        let uh = g.weight(dim, dim, seed("ggnn", l, 7), &format!("l{l}.U_h"));
+        let za = g.dmm(a, wz, &format!("l{l}.z_a"));
+        let zh = g.dmm(h, uz, &format!("l{l}.z_h"));
+        let zsum = g.binary(ElwOp::Add, za, zh, &format!("l{l}.z_sum"));
+        let z = g.unary(ElwOp::Sigmoid, zsum, &format!("l{l}.z"));
+        let ra = g.dmm(a, wr, &format!("l{l}.r_a"));
+        let rh = g.dmm(h, ur, &format!("l{l}.r_h"));
+        let rsum = g.binary(ElwOp::Add, ra, rh, &format!("l{l}.r_sum"));
+        let r = g.unary(ElwOp::Sigmoid, rsum, &format!("l{l}.r"));
+        let rgate = g.binary(ElwOp::Mul, r, h, &format!("l{l}.r_gate"));
+        let ha = g.dmm(a, wh, &format!("l{l}.h_a"));
+        let hr = g.dmm(rgate, uh, &format!("l{l}.h_r"));
+        let hsum = g.binary(ElwOp::Add, ha, hr, &format!("l{l}.h_sum"));
+        let hcand = g.unary(ElwOp::Tanh, hsum, &format!("l{l}.h_cand"));
+        // (1 - z)
+        let negz = g.unary(ElwOp::MulScalar((-1.0f32).to_bits()), z, &format!("l{l}.neg_z"));
+        let omz = g.unary(ElwOp::AddScalar(1.0f32.to_bits()), negz, &format!("l{l}.one_m_z"));
+        let keep = g.binary(ElwOp::Mul, omz, h, &format!("l{l}.keep"));
+        let update = g.binary(ElwOp::Mul, z, hcand, &format!("l{l}.update"));
+        h = g.binary(ElwOp::Add, keep, update, &format!("l{l}.h_next"));
+    }
+    g.set_output(h);
+    g
+}
+
+/// Helper used throughout benches and examples.
+pub fn build_node(model: Model, layers: u32, dim: u32) -> IrGraph {
+    model.build(layers, dim, dim, dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_validate() {
+        for m in Model::ALL {
+            let g = m.build_paper();
+            g.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name()));
+        }
+    }
+
+    #[test]
+    fn group_counts() {
+        // GCN/SAGE/GGNN: one gather round per layer; GAT: two (softmax).
+        assert_eq!(Model::Gcn.build_paper().num_groups(), 2);
+        assert_eq!(Model::Sage.build_paper().num_groups(), 2);
+        assert_eq!(Model::Ggnn.build_paper().num_groups(), 2);
+        assert_eq!(Model::Gat.build_paper().num_groups(), 4);
+    }
+
+    #[test]
+    fn operator_counts_reflect_model_complexity() {
+        // The paper attributes higher speedups on GAT/SAGE/GGNN to their
+        // larger operator counts (§VII-A). Verify the census ordering.
+        let census = |m: Model| {
+            let c = m.build_paper().op_census();
+            c.get("dmm").copied().unwrap_or(0)
+                + c.get("elw").copied().unwrap_or(0)
+                + c.get("gtr").copied().unwrap_or(0)
+        };
+        let gcn = census(Model::Gcn);
+        for m in [Model::Gat, Model::Sage, Model::Ggnn] {
+            assert!(
+                census(m) > gcn,
+                "{} should have more ops than GCN",
+                m.name()
+            );
+        }
+    }
+
+    #[test]
+    fn ggnn_has_many_dmms() {
+        let c = Model::Ggnn.build_paper().op_census();
+        assert_eq!(c["dmm"], 2 * 7); // 7 matmuls per layer
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Model::ALL {
+            assert_eq!(Model::parse(m.name()), Some(m));
+        }
+        assert_eq!(Model::parse("nope"), None);
+    }
+
+    #[test]
+    fn small_dims_build() {
+        for m in Model::ALL {
+            let g = m.build(2, 8, 8, 8);
+            assert!(g.validate().is_ok());
+            assert_eq!(g.nodes[g.output.unwrap()].cols, 8);
+        }
+    }
+}

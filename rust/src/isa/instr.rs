@@ -1,0 +1,503 @@
+//! Instruction definitions.
+
+use std::fmt;
+
+/// Memory-symbol *space* (paper §V-A): where the operand lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Space {
+    /// Destination-interval vertex data — lives in the DstBuffer.
+    D,
+    /// Source vertex data of the current shard — SrcEdgeBuffer.
+    S,
+    /// Edge data of the current shard — SrcEdgeBuffer.
+    E,
+    /// Model weights — weight buffer, resident for the whole run.
+    W,
+}
+
+impl fmt::Display for Space {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let c = match self {
+            Space::D => 'D',
+            Space::S => 'S',
+            Space::E => 'E',
+            Space::W => 'W',
+        };
+        write!(f, "{c}")
+    }
+}
+
+/// A memory symbol: `%D3`, `%E0`, ... Resolved to buffer addresses by the
+/// hardware controller at runtime (the compiler performs liveness merging
+/// on these, §V-C3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Sym {
+    pub space: Space,
+    pub id: u32,
+}
+
+impl Sym {
+    pub fn new(space: Space, id: u32) -> Self {
+        Sym { space, id }
+    }
+}
+
+impl fmt::Display for Sym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "%{}{}", self.space, self.id)
+    }
+}
+
+/// Row-count dimension. Interval/shard-dependent sizes are macros decoded
+/// at runtime by the controller (paper §V-A: "a set of macros representing
+/// the parameters of intervals and shards").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dim {
+    /// Number of destination vertices in the current interval.
+    V,
+    /// Number of source vertices in the current shard.
+    S,
+    /// Number of edges in the current shard.
+    E,
+    /// Compile-time literal (weight matrices, broadcast rows).
+    Lit(u32),
+}
+
+impl Dim {
+    /// Decode against concrete interval/shard sizes.
+    #[inline]
+    pub fn decode(&self, v: usize, s: usize, e: usize) -> usize {
+        match self {
+            Dim::V => v,
+            Dim::S => s,
+            Dim::E => e,
+            Dim::Lit(n) => *n as usize,
+        }
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dim::V => write!(f, "V"),
+            Dim::S => write!(f, "S"),
+            Dim::E => write!(f, "E"),
+            Dim::Lit(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+/// Element-wise compute ops (VU).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ElwOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Relu,
+    LeakyRelu,
+    Exp,
+    Sigmoid,
+    Tanh,
+    Rsqrt,
+    Recip,
+    Copy,
+    /// Add a compile-time scalar (degree-norm epsilons etc.).
+    AddScalar(u32), // f32 bits, kept hashable
+    /// Multiply by a compile-time scalar.
+    MulScalar(u32),
+}
+
+impl ElwOp {
+    pub fn is_binary(&self) -> bool {
+        matches!(
+            self,
+            ElwOp::Add | ElwOp::Sub | ElwOp::Mul | ElwOp::Div | ElwOp::Max
+        )
+    }
+
+    pub fn mnemonic(&self) -> String {
+        match self {
+            ElwOp::Add => "ADD".into(),
+            ElwOp::Sub => "SUB".into(),
+            ElwOp::Mul => "MUL".into(),
+            ElwOp::Div => "DIV".into(),
+            ElwOp::Max => "MAXE".into(),
+            ElwOp::Relu => "RELU".into(),
+            ElwOp::LeakyRelu => "LRELU".into(),
+            ElwOp::Exp => "EXP".into(),
+            ElwOp::Sigmoid => "SIGM".into(),
+            ElwOp::Tanh => "TANH".into(),
+            ElwOp::Rsqrt => "RSQRT".into(),
+            ElwOp::Recip => "RECIP".into(),
+            ElwOp::Copy => "CPY".into(),
+            ElwOp::AddScalar(b) => format!("ADDI[{}]", f32::from_bits(*b)),
+            ElwOp::MulScalar(b) => format!("MULI[{}]", f32::from_bits(*b)),
+        }
+    }
+}
+
+/// Gather reduction functions (paper §II-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Reduce {
+    Sum,
+    Max,
+    Mean,
+}
+
+impl Reduce {
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Reduce::Sum => "SUM",
+            Reduce::Max => "MAX",
+            Reduce::Mean => "MEAN",
+        }
+    }
+}
+
+/// Scatter direction: which endpoint's embedding is copied onto each edge.
+/// `SCTR.F` (forward: src→edge) / `SCTR.B` (backward: dst→edge) in Tbl II.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScatterDir {
+    SrcToEdge,
+    DstToEdge,
+}
+
+/// What DRAM-backed array a memory instruction refers to. The symbol names
+/// the on-chip buffer slot; `DataRef` names the off-chip storage. (The
+/// hardware controller derives concrete addresses from this at runtime,
+/// §V-A; the functional executor and the simulator's traffic accounting
+/// both key on it.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DataRef {
+    /// The model's input feature matrix `[N, in_dim]`.
+    Input,
+    /// Per-vertex in-degree column `[N, 1]`.
+    Degree,
+    /// The DRAM spill/result array of IR node `id` (vertex-located:
+    /// `[N, cols]`, rows indexed by global vertex id; edge-located:
+    /// `[M, cols]`, rows indexed by canonical edge id).
+    Node(usize),
+}
+
+impl fmt::Display for DataRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DataRef::Input => write!(f, "@input"),
+            DataRef::Degree => write!(f, "@degree"),
+            DataRef::Node(n) => write!(f, "@n{n}"),
+        }
+    }
+}
+
+/// A single SWITCHBLADE instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Instr {
+    /// ELW — element-wise op on the VU. `b` is the second operand for
+    /// binary ops; if `broadcast_b`, `b` is a single row `[1, cols]`
+    /// broadcast across `rows` (bias adds, per-head scalars).
+    Elw {
+        op: ElwOp,
+        dst: Sym,
+        a: Sym,
+        b: Option<Sym>,
+        broadcast_b: bool,
+        rows: Dim,
+        cols: u32,
+    },
+    /// Row-broadcast multiply by a per-row scalar column: `dst[r, c] =
+    /// a[r, c] * s[r, 0]`. Used for degree normalisation and attention
+    /// weighting (kept distinct from `Elw` because the VU reads the scalar
+    /// operand once per row — different energy/bandwidth profile).
+    RowScale {
+        dst: Sym,
+        a: Sym,
+        scale: Sym,
+        rows: Dim,
+        cols: u32,
+    },
+    /// Feature concatenation on the VU: `dst = [a || b]` column-wise.
+    Concat {
+        dst: Sym,
+        a: Sym,
+        b: Sym,
+        rows: Dim,
+        cols_a: u32,
+        cols_b: u32,
+    },
+    /// DMM — dense matmul on the MU: `dst[rows, n] = a[rows, k] × w[k, n]`.
+    Dmm {
+        dst: Sym,
+        a: Sym,
+        w: Sym,
+        rows: Dim,
+        k: u32,
+        n: u32,
+    },
+    /// GTR scatter — copy an endpoint embedding onto each edge of the shard.
+    Scatter {
+        dir: ScatterDir,
+        dst: Sym, // E-space
+        src: Sym, // S-space (SrcToEdge) or D-space (DstToEdge)
+        cols: u32,
+    },
+    /// GTR gather — segment-reduce shard edges into destination rows:
+    /// `dst[d, :] ⊕= src[e, :]` for every edge `e` with destination `d`.
+    /// This is the only GatherPhase op with cross-shard dependencies
+    /// (paper §IV-C), handled by the accumulating semantics.
+    Gather {
+        reduce: Reduce,
+        dst: Sym, // D-space accumulator
+        src: Sym, // E-space
+        cols: u32,
+    },
+    /// PLOF-fused GTR (compiler peephole): scatter source rows onto
+    /// in-edges, optionally scale each edge row by a resident `[E,1]`
+    /// column, and segment-reduce into the destination accumulator — all
+    /// without materialising `[E, cols]` edge data in the SrcEdgeBuffer.
+    /// This is the instruction-level heart of partition-level operator
+    /// fusion: it removes the dominant `num_edge × dim_edge` term from
+    /// Equ. 1 for GCN/SAGE/GGNN-style aggregation.
+    FusedGather {
+        reduce: Reduce,
+        dst: Sym, // D-space accumulator
+        src: Sym, // S-space source rows
+        scale: Option<Sym>, // E-space [E,1] per-edge coefficient
+        cols: u32,
+    },
+    /// Memory — load a symbol's backing data from DRAM into its buffer.
+    /// The rows transferred depend on the symbol space: `S` loads the
+    /// current shard's source-vertex rows, `E` the shard's edge rows, `D`
+    /// the current destination interval's rows.
+    Ld {
+        sym: Sym,
+        data: DataRef,
+        rows: Dim,
+        cols: u32,
+    },
+    /// Memory — store a symbol from its buffer to DRAM.
+    St {
+        sym: Sym,
+        data: DataRef,
+        rows: Dim,
+        cols: u32,
+    },
+}
+
+impl Instr {
+    /// Destination symbol written by this instruction (None for St).
+    pub fn def(&self) -> Option<Sym> {
+        match self {
+            Instr::Elw { dst, .. }
+            | Instr::RowScale { dst, .. }
+            | Instr::Concat { dst, .. }
+            | Instr::Dmm { dst, .. }
+            | Instr::Scatter { dst, .. }
+            | Instr::Gather { dst, .. }
+            | Instr::FusedGather { dst, .. } => Some(*dst),
+            Instr::Ld { sym, .. } => Some(*sym),
+            Instr::St { .. } => None,
+        }
+    }
+
+    /// Symbols read by this instruction.
+    pub fn uses(&self) -> Vec<Sym> {
+        match self {
+            Instr::Elw { a, b, .. } => {
+                let mut v = vec![*a];
+                if let Some(b) = b {
+                    v.push(*b);
+                }
+                v
+            }
+            Instr::RowScale { a, scale, .. } => vec![*a, *scale],
+            Instr::Concat { a, b, .. } => vec![*a, *b],
+            Instr::Dmm { a, w, .. } => vec![*a, *w],
+            Instr::Scatter { src, .. } => vec![*src],
+            Instr::Gather { src, dst, .. } => vec![*src, *dst], // accumulates
+            Instr::FusedGather { src, dst, scale, .. } => {
+                let mut v = vec![*src, *dst];
+                if let Some(s) = scale {
+                    v.push(*s);
+                }
+                v
+            }
+            Instr::Ld { .. } => vec![],
+            Instr::St { sym, .. } => vec![*sym],
+        }
+    }
+
+    /// Which functional unit executes this instruction. Matrix-*vector*
+    /// products (attention projections, `n ≤ 4`) run on the VU's
+    /// dot-product datapath — mapping them onto the 32×128 systolic array
+    /// would light up a single output column.
+    pub fn unit(&self) -> Unit {
+        match self {
+            Instr::Dmm { n, .. } if *n <= 4 => Unit::Vu,
+            Instr::Dmm { .. } => Unit::Mu,
+            Instr::Ld { .. } | Instr::St { .. } => Unit::Lsu,
+            _ => Unit::Vu,
+        }
+    }
+
+    /// Assembly-ish rendering for dumps and tests.
+    pub fn render(&self) -> String {
+        match self {
+            Instr::Elw {
+                op,
+                dst,
+                a,
+                b,
+                broadcast_b,
+                rows,
+                cols,
+            } => {
+                let b_s = b
+                    .map(|b| {
+                        format!(", {}{}", b, if *broadcast_b { "(bc)" } else { "" })
+                    })
+                    .unwrap_or_default();
+                format!("{:9} {dst}, {a}{b_s} [{rows}x{cols}]", op.mnemonic())
+            }
+            Instr::RowScale {
+                dst,
+                a,
+                scale,
+                rows,
+                cols,
+            } => format!("RSCALE    {dst}, {a}, {scale} [{rows}x{cols}]"),
+            Instr::Concat {
+                dst,
+                a,
+                b,
+                rows,
+                cols_a,
+                cols_b,
+            } => format!("CAT       {dst}, {a}, {b} [{rows}x({cols_a}+{cols_b})]"),
+            Instr::Dmm { dst, a, w, rows, k, n } => {
+                format!("GEMM      {dst}, {a}, {w} [{rows}x{k}x{n}]")
+            }
+            Instr::Scatter { dir, dst, src, cols } => {
+                let m = match dir {
+                    ScatterDir::SrcToEdge => "SCTR.F",
+                    ScatterDir::DstToEdge => "SCTR.B",
+                };
+                format!("{m:9} {dst}, {src} [Ex{cols}]")
+            }
+            Instr::Gather {
+                reduce,
+                dst,
+                src,
+                cols,
+            } => format!("GTHR.{:4} {dst}, {src} [Ex{cols}]", reduce.mnemonic()),
+            Instr::FusedGather {
+                reduce,
+                dst,
+                src,
+                scale,
+                cols,
+            } => {
+                let sc = scale.map(|s| format!(", {s}")).unwrap_or_default();
+                format!("GSCTR.{:4} {dst}, {src}{sc} [Ex{cols}]", reduce.mnemonic())
+            }
+            Instr::Ld { sym, data, rows, cols } => {
+                format!("LD.{:6} {sym}, {data} [{rows}x{cols}]", sym.space.to_string())
+            }
+            Instr::St { sym, data, rows, cols } => {
+                format!("ST.{:6} {sym}, {data} [{rows}x{cols}]", sym.space.to_string())
+            }
+        }
+    }
+}
+
+/// Functional units of the accelerator (paper Fig 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Unit {
+    /// Vector unit — 16×SIMD32 cores (ELW + GTR).
+    Vu,
+    /// Matrix unit — 32×128 output-stationary systolic array (DMM).
+    Mu,
+    /// Load-store unit — DRAM transfers.
+    Lsu,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sym_display() {
+        assert_eq!(Sym::new(Space::D, 3).to_string(), "%D3");
+        assert_eq!(Sym::new(Space::E, 0).to_string(), "%E0");
+    }
+
+    #[test]
+    fn dim_decode() {
+        assert_eq!(Dim::V.decode(10, 20, 30), 10);
+        assert_eq!(Dim::S.decode(10, 20, 30), 20);
+        assert_eq!(Dim::E.decode(10, 20, 30), 30);
+        assert_eq!(Dim::Lit(7).decode(10, 20, 30), 7);
+    }
+
+    #[test]
+    fn def_use_chains() {
+        let i = Instr::Dmm {
+            dst: Sym::new(Space::D, 1),
+            a: Sym::new(Space::D, 0),
+            w: Sym::new(Space::W, 0),
+            rows: Dim::V,
+            k: 128,
+            n: 128,
+        };
+        assert_eq!(i.def(), Some(Sym::new(Space::D, 1)));
+        assert_eq!(i.uses(), vec![Sym::new(Space::D, 0), Sym::new(Space::W, 0)]);
+        assert_eq!(i.unit(), Unit::Mu);
+    }
+
+    #[test]
+    fn gather_reads_its_accumulator() {
+        let g = Instr::Gather {
+            reduce: Reduce::Sum,
+            dst: Sym::new(Space::D, 2),
+            src: Sym::new(Space::E, 1),
+            cols: 128,
+        };
+        assert!(g.uses().contains(&Sym::new(Space::D, 2)));
+        assert_eq!(g.unit(), Unit::Vu);
+    }
+
+    #[test]
+    fn units() {
+        let ld = Instr::Ld {
+            sym: Sym::new(Space::S, 0),
+            data: DataRef::Input,
+            rows: Dim::S,
+            cols: 128,
+        };
+        assert_eq!(ld.unit(), Unit::Lsu);
+        assert_eq!(ld.def(), Some(Sym::new(Space::S, 0)));
+        let relu = Instr::Elw {
+            op: ElwOp::Relu,
+            dst: Sym::new(Space::D, 0),
+            a: Sym::new(Space::D, 0),
+            b: None,
+            broadcast_b: false,
+            rows: Dim::V,
+            cols: 64,
+        };
+        assert_eq!(relu.unit(), Unit::Vu);
+    }
+
+    #[test]
+    fn render_smoke() {
+        let i = Instr::Scatter {
+            dir: ScatterDir::SrcToEdge,
+            dst: Sym::new(Space::E, 0),
+            src: Sym::new(Space::S, 0),
+            cols: 128,
+        };
+        assert!(i.render().contains("SCTR.F"));
+        assert!(i.render().contains("%E0"));
+    }
+}

@@ -1,0 +1,21 @@
+//! SWITCHBLADE instruction set architecture (paper §V-A, Tbl II).
+//!
+//! Instructions have three fields:
+//!  * `opname` — the operation (Compute: ELW / DMM / GTR; Memory: LD / ST),
+//!  * `data-dimension` — shape parameters; sizes that depend on the current
+//!    interval/shard are *macros* (`Dim::V`, `Dim::E`, `Dim::S`) decoded by
+//!    the hardware controller at runtime,
+//!  * `memory-symbol` — symbolic operands naming on-chip buffer locations,
+//!    typed `D` (destination interval data), `S` (source vertex data in a
+//!    shard) or `E` (edge data in a shard), plus `W` for resident weights.
+//!
+//! A compiled model is a [`Program`]: three phase instruction sequences
+//! (ScatterPhase / GatherPhase / ApplyPhase) plus the symbol table and the
+//! partitioning parameters (`dim_src`, `dim_edge`) exported to the graph
+//! partitioner.
+
+mod instr;
+mod program;
+
+pub use instr::*;
+pub use program::*;

@@ -1,0 +1,293 @@
+//! Compiled program representation: PLOF phase groups + symbol table +
+//! partitioning parameters.
+
+use std::collections::HashMap;
+
+use super::{Dim, Instr, Space, Sym};
+
+/// Metadata for one memory symbol.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SymInfo {
+    pub sym: Sym,
+    /// Feature width (columns) of the symbol's rows.
+    pub cols: u32,
+    /// Row dimension (macro) the symbol is sized by.
+    pub rows: Dim,
+    /// Human-readable origin (op name in the IR), for dumps/debugging.
+    pub origin: String,
+}
+
+/// Symbol table: per-space symbol metadata, after liveness merging.
+#[derive(Clone, Debug, Default)]
+pub struct SymbolTable {
+    entries: HashMap<Sym, SymInfo>,
+}
+
+impl SymbolTable {
+    pub fn insert(&mut self, info: SymInfo) {
+        self.entries.insert(info.sym, info);
+    }
+
+    pub fn get(&self, sym: Sym) -> Option<&SymInfo> {
+        self.entries.get(&sym)
+    }
+
+    pub fn cols(&self, sym: Sym) -> u32 {
+        self.entries
+            .get(&sym)
+            .unwrap_or_else(|| panic!("unknown symbol {sym}"))
+            .cols
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &SymInfo> {
+        self.entries.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total feature width of all symbols in a space (Σ cols). This is how
+    /// the compiler derives `dim_src` (space S) and `dim_edge` (space E)
+    /// for the graph partitioner (paper §V-C3).
+    pub fn total_cols(&self, space: Space) -> u32 {
+        self.entries
+            .values()
+            .filter(|s| s.sym.space == space)
+            .map(|s| s.cols)
+            .sum()
+    }
+
+    /// Number of distinct symbols in a space.
+    pub fn count(&self, space: Space) -> usize {
+        self.entries.values().filter(|s| s.sym.space == space).count()
+    }
+}
+
+/// One PLOF phase group: the unit of a full dual-sliding-window sweep
+/// (paper Alg 2). A model compiles to one or more groups executed in
+/// sequence; each group's GatherPhase iterates shards, Scatter/ApplyPhase
+/// iterate intervals.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseGroup {
+    /// Executed by the iThread per *source-side* interval before shards
+    /// stream (per-vertex pre-processing feeding Scatter data).
+    pub scatter: Vec<Instr>,
+    /// Executed by sThreads per shard.
+    pub gather: Vec<Instr>,
+    /// Executed by the iThread per destination interval after all its
+    /// shards completed.
+    pub apply: Vec<Instr>,
+}
+
+impl PhaseGroup {
+    pub fn all_instrs(&self) -> impl Iterator<Item = &Instr> {
+        self.scatter
+            .iter()
+            .chain(self.gather.iter())
+            .chain(self.apply.iter())
+    }
+
+    pub fn len(&self) -> usize {
+        self.scatter.len() + self.gather.len() + self.apply.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Weight tensor carried with the program (resident in the weight buffer).
+#[derive(Clone, Debug)]
+pub struct WeightInfo {
+    pub sym: Sym,
+    pub rows: u32,
+    pub cols: u32,
+    /// Deterministic init seed — the functional executor and the JAX oracle
+    /// must generate identical weights.
+    pub seed: u64,
+}
+
+/// A fully compiled GNN model.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub model_name: String,
+    /// True when `groups[0]` is the prologue sweep (per-vertex projection
+    /// precompute; empty GatherPhase).
+    pub has_prologue: bool,
+    pub groups: Vec<PhaseGroup>,
+    pub symbols: SymbolTable,
+    pub weights: Vec<WeightInfo>,
+    /// Σ cols of S-space symbols per GatherPhase — partitioner input.
+    pub dim_src: u32,
+    /// Σ cols of E-space symbols per GatherPhase — partitioner input.
+    pub dim_edge: u32,
+    /// Σ cols of D-space symbols — sizes the destination interval.
+    pub dim_dst: u32,
+    /// Input feature width (per vertex).
+    pub in_dim: u32,
+    /// Output feature width (per vertex).
+    pub out_dim: u32,
+}
+
+impl Program {
+    /// Total instruction count across groups.
+    pub fn num_instrs(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+
+    /// Weight bytes (f32) — resident footprint in the weight buffer.
+    pub fn weight_bytes(&self) -> u64 {
+        self.weights
+            .iter()
+            .map(|w| w.rows as u64 * w.cols as u64 * 4)
+            .sum()
+    }
+
+    /// Assembly dump of the whole program (used by `switchblade compile`).
+    pub fn disassemble(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "; model={} groups={} dim_src={} dim_edge={} dim_dst={}\n",
+            self.model_name,
+            self.groups.len(),
+            self.dim_src,
+            self.dim_edge,
+            self.dim_dst
+        ));
+        for (gi, g) in self.groups.iter().enumerate() {
+            out.push_str(&format!("group {gi}:\n"));
+            for (name, phase) in [
+                ("ScatterPhase", &g.scatter),
+                ("GatherPhase", &g.gather),
+                ("ApplyPhase", &g.apply),
+            ] {
+                out.push_str(&format!("  .{name}:\n"));
+                for i in phase {
+                    out.push_str(&format!("    {}\n", i.render()));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{DataRef, ElwOp, Reduce, ScatterDir};
+
+    fn sample_program() -> Program {
+        let s0 = Sym::new(Space::S, 0);
+        let e0 = Sym::new(Space::E, 0);
+        let d0 = Sym::new(Space::D, 0);
+        let w0 = Sym::new(Space::W, 0);
+        let mut symbols = SymbolTable::default();
+        symbols.insert(SymInfo {
+            sym: s0,
+            cols: 16,
+            rows: Dim::S,
+            origin: "input".into(),
+        });
+        symbols.insert(SymInfo {
+            sym: e0,
+            cols: 16,
+            rows: Dim::E,
+            origin: "scatter".into(),
+        });
+        symbols.insert(SymInfo {
+            sym: d0,
+            cols: 16,
+            rows: Dim::V,
+            origin: "gather".into(),
+        });
+        let group = PhaseGroup {
+            scatter: vec![],
+            gather: vec![
+                Instr::Ld {
+                    sym: s0,
+                    data: DataRef::Input,
+                    rows: Dim::S,
+                    cols: 16,
+                },
+                Instr::Scatter {
+                    dir: ScatterDir::SrcToEdge,
+                    dst: e0,
+                    src: s0,
+                    cols: 16,
+                },
+                Instr::Gather {
+                    reduce: Reduce::Sum,
+                    dst: d0,
+                    src: e0,
+                    cols: 16,
+                },
+            ],
+            apply: vec![
+                Instr::Dmm {
+                    dst: d0,
+                    a: d0,
+                    w: w0,
+                    rows: Dim::V,
+                    k: 16,
+                    n: 16,
+                },
+                Instr::Elw {
+                    op: ElwOp::Relu,
+                    dst: d0,
+                    a: d0,
+                    b: None,
+                    broadcast_b: false,
+                    rows: Dim::V,
+                    cols: 16,
+                },
+                Instr::St {
+                    sym: d0,
+                    data: DataRef::Node(5),
+                    rows: Dim::V,
+                    cols: 16,
+                },
+            ],
+        };
+        Program {
+            model_name: "toy".into(),
+            has_prologue: false,
+            groups: vec![group],
+            symbols,
+            weights: vec![WeightInfo {
+                sym: w0,
+                rows: 16,
+                cols: 16,
+                seed: 1,
+            }],
+            dim_src: 16,
+            dim_edge: 16,
+            dim_dst: 16,
+            in_dim: 16,
+            out_dim: 16,
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let p = sample_program();
+        assert_eq!(p.num_instrs(), 6);
+        assert_eq!(p.weight_bytes(), 16 * 16 * 4);
+        assert_eq!(p.symbols.total_cols(Space::S), 16);
+        assert_eq!(p.symbols.count(Space::D), 1);
+    }
+
+    #[test]
+    fn disassemble_contains_phases() {
+        let d = sample_program().disassemble();
+        assert!(d.contains(".ScatterPhase"));
+        assert!(d.contains(".GatherPhase"));
+        assert!(d.contains(".ApplyPhase"));
+        assert!(d.contains("GTHR.SUM"));
+        assert!(d.contains("GEMM"));
+    }
+}

@@ -1,0 +1,29 @@
+//! SWITCHBLADE — reproduction of "Accelerating Generic Graph Neural Networks
+//! via Architecture, Compiler, Partition Method Co-Design" (CS.AR 2023).
+//!
+//! The crate implements the paper's full stack:
+//!
+//! * [`ir`] — the unified computational graph + the Tbl I model zoo,
+//! * [`compiler`] — PLOF phase construction and ISA code generation (§V-C),
+//! * [`partition`] — DSW-GP (Alg 1) and FGGP (Alg 3) graph partitioners,
+//! * [`isa`] — the accelerator instruction set (§V-A),
+//! * [`sim`] — the cycle-level accelerator model with SLMT (§V-B),
+//! * [`exec`] — a functional executor for compiled programs (numerics),
+//! * [`baseline`] — V100 GPU cost model and the HyGCN reproduction,
+//! * [`energy`] — area/power/energy models (Tbl V),
+//! * [`runtime`] — PJRT loader for the AOT-compiled JAX reference models,
+//! * [`coordinator`] — multi-threaded experiment fan-out + reporting,
+//! * [`graph`] — CSR/COO substrate and Tbl IV dataset stand-ins.
+
+pub mod coordinator;
+pub mod energy;
+pub mod exec;
+pub mod graph;
+pub mod ir;
+pub mod isa;
+pub mod baseline;
+pub mod compiler;
+pub mod partition;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,347 @@
+//! `switchblade` — the leader binary: compile models, partition graphs,
+//! simulate the accelerator, regenerate the paper's figures, and serve
+//! AOT-compiled GNN inference over PJRT.
+//!
+//! (clap is not available in the offline build image; the argument parser
+//! is hand-rolled but follows the same subcommand conventions.)
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use switchblade::compiler::compile;
+use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::exec::weights;
+use switchblade::graph::datasets::{Dataset, DEFAULT_SCALE};
+use switchblade::ir::models::Model;
+use switchblade::partition::{partition_dsw, partition_fggp, stats as pstats};
+use switchblade::runtime::{artifacts_dir, ArtifactShape, Runtime};
+use switchblade::sim::{simulate, AcceleratorConfig};
+use switchblade::util::report::{bytes, f as ff, Table};
+
+const USAGE: &str = "\
+switchblade — generic GNN acceleration via architecture/compiler/partition co-design
+
+USAGE:
+    switchblade <COMMAND> [OPTIONS]
+
+COMMANDS:
+    compile   <model>                      dump the compiled PLOF/ISA program
+    partition <dataset> [--scale N] [--method fggp|dsw] [--model M]
+                                           partition a graph and print stats
+    simulate  <model> <dataset> [--scale N] [--sthreads T] [--method fggp|dsw]
+                                           cycle-level simulation of one workload
+    repro     [--fig 7|8|9|10|11|12|13] [--tbl 4|5] [--all] [--scale N] [--out DIR]
+                                           regenerate the paper's figures/tables
+    serve     [--model M] [--requests R]   PJRT serving demo over AOT artifacts
+    validate                               three-way numerics check (needs artifacts)
+    help                                   this text
+
+MODELS:   GCN GAT SAGE GGNN        DATASETS: AK AD HW CP SL
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &args[..] } else { &args[1..] };
+    let r = match cmd {
+        "compile" => cmd_compile(rest),
+        "partition" => cmd_partition(rest),
+        "simulate" => cmd_simulate(rest),
+        "repro" => cmd_repro(rest),
+        "serve" => cmd_serve(rest),
+        "validate" => cmd_validate(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n\n{USAGE}")),
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+// ---- option helpers ----------------------------------------------------------
+
+fn opt_val<'a>(rest: &'a [String], name: &str) -> Option<&'a str> {
+    rest.iter()
+        .position(|a| a == name)
+        .and_then(|i| rest.get(i + 1))
+        .map(String::as_str)
+}
+
+fn opt_u32(rest: &[String], name: &str, default: u32) -> Result<u32, String> {
+    match opt_val(rest, name) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| format!("bad {name} value '{v}'")),
+    }
+}
+
+fn has_flag(rest: &[String], name: &str) -> bool {
+    rest.iter().any(|a| a == name)
+}
+
+fn parse_model(s: &str) -> Result<Model, String> {
+    Model::parse(s).ok_or_else(|| format!("unknown model '{s}' (GCN|GAT|SAGE|GGNN)"))
+}
+
+fn parse_dataset(s: &str) -> Result<Dataset, String> {
+    Dataset::parse(s).ok_or_else(|| format!("unknown dataset '{s}' (AK|AD|HW|CP|SL)"))
+}
+
+// ---- subcommands ---------------------------------------------------------------
+
+fn cmd_compile(rest: &[String]) -> Result<(), String> {
+    let m = parse_model(rest.first().ok_or("compile needs a model")?)?;
+    let prog = compile(&m.build_paper());
+    print!("{}", prog.disassemble());
+    println!(
+        "; weights: {} tensors, {}",
+        prog.weights.len(),
+        bytes(prog.weight_bytes())
+    );
+    Ok(())
+}
+
+fn cmd_partition(rest: &[String]) -> Result<(), String> {
+    let d = parse_dataset(rest.first().ok_or("partition needs a dataset")?)?;
+    let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
+    let m = parse_model(opt_val(rest, "--model").unwrap_or("GCN"))?;
+    let method = opt_val(rest, "--method").unwrap_or("fggp");
+    let accel = AcceleratorConfig::switchblade();
+    let prog = compile(&m.build_paper());
+    let pc = accel.partition_config(&prog);
+    eprintln!("generating {} at scale {scale}...", d.full_name());
+    let g = d.load(scale);
+    let parts = match method {
+        "fggp" => partition_fggp(&g, pc),
+        "dsw" => partition_dsw(&g, pc),
+        other => return Err(format!("unknown method '{other}'")),
+    };
+    parts
+        .validate()
+        .map_err(|e| format!("invalid partitioning: {e}"))?;
+    let st = pstats::analyze(&parts);
+    let mut t = Table::new(
+        &format!(
+            "{} / {} / {}",
+            d.full_name(),
+            m.name(),
+            method.to_uppercase()
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["vertices".into(), g.num_vertices().to_string()]);
+    t.row(vec!["edges".into(), g.num_edges().to_string()]);
+    t.row(vec!["intervals".into(), st.num_intervals.to_string()]);
+    t.row(vec!["shards".into(), st.num_shards.to_string()]);
+    t.row(vec!["occupancy".into(), ff(st.occupancy_rate, 3)]);
+    t.row(vec!["loaded".into(), bytes(st.loaded_bytes)]);
+    t.row(vec!["useful".into(), bytes(st.useful_bytes)]);
+    t.row(vec!["src redundancy".into(), ff(st.src_load_redundancy, 2)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_simulate(rest: &[String]) -> Result<(), String> {
+    let m = parse_model(rest.first().ok_or("simulate needs a model")?)?;
+    let d = parse_dataset(rest.get(1).ok_or("simulate needs a dataset")?)?;
+    let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
+    let sthreads = opt_u32(rest, "--sthreads", 3)?;
+    let method = opt_val(rest, "--method").unwrap_or("fggp");
+    let accel = AcceleratorConfig::switchblade().with_sthreads(sthreads);
+    let prog = compile(&m.build_paper());
+    let pc = accel.partition_config(&prog);
+    eprintln!("generating {} at scale {scale}...", d.full_name());
+    let g = d.load(scale);
+    let parts = match method {
+        "fggp" => partition_fggp(&g, pc),
+        "dsw" => partition_dsw(&g, pc),
+        other => return Err(format!("unknown method '{other}'")),
+    };
+    let r = simulate(&prog, &parts, &accel);
+    let e = switchblade::energy::switchblade_energy(&r, accel.freq_hz, true);
+    let mut t = Table::new(
+        &format!(
+            "{} on {} (scale {scale}, {sthreads} sThreads, {})",
+            m.name(),
+            d.full_name(),
+            method.to_uppercase()
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["cycles".into(), format!("{:.0}", r.cycles)]);
+    t.row(vec!["latency".into(), format!("{:.3} ms", r.seconds * 1e3)]);
+    t.row(vec!["VU util".into(), ff(r.vu_utilization(), 3)]);
+    t.row(vec!["MU util".into(), ff(r.mu_utilization(), 3)]);
+    t.row(vec!["BW util".into(), ff(r.bw_utilization(), 3)]);
+    t.row(vec!["overall util".into(), ff(r.overall_utilization(), 3)]);
+    t.row(vec!["DRAM traffic".into(), bytes(r.traffic.total())]);
+    t.row(vec!["shards".into(), r.shards_processed.to_string()]);
+    t.row(vec!["instructions".into(), r.instructions.to_string()]);
+    t.row(vec!["energy".into(), format!("{:.3} mJ", e.total_j() * 1e3)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_repro(rest: &[String]) -> Result<(), String> {
+    let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
+    let out_dir = PathBuf::from(opt_val(rest, "--out").unwrap_or("results"));
+    let all = has_flag(rest, "--all")
+        || (opt_val(rest, "--fig").is_none() && opt_val(rest, "--tbl").is_none());
+    let fig = opt_val(rest, "--fig");
+    let tbl = opt_val(rest, "--tbl");
+    let h = Harness {
+        scale,
+        ..Default::default()
+    };
+    let cache = GraphCache::new(scale);
+    eprintln!("harness scale: 1/2^{scale} of paper dataset sizes");
+
+    let want = |x: &str| all || fig == Some(x);
+    let want_t = |x: &str| all || tbl == Some(x);
+
+    let mut tables: Vec<Table> = Vec::new();
+    if want_t("4") {
+        tables.push(h.tbl04(&cache));
+    }
+    if want("7") || want("8") || want("9") {
+        eprintln!("running 4 models x 5 datasets sweep...");
+        let rows = h.eval_all(&cache);
+        if want("7") {
+            tables.push(h.fig07(&rows));
+        }
+        if want("8") {
+            tables.push(h.fig08(&rows));
+        }
+        if want("9") {
+            tables.push(h.fig09(&rows));
+        }
+    }
+    if want("10") {
+        eprintln!("running Fig 10 (utilisation, 1 vs 3 sThreads)...");
+        tables.push(h.fig10(&cache));
+    }
+    if want("11") {
+        eprintln!("running Fig 11 (sThread sweep)...");
+        tables.push(h.fig11(&cache, &[1, 2, 3, 4, 6]));
+    }
+    if want("12") {
+        eprintln!("running Fig 12 (occupancy)...");
+        tables.push(h.fig12(&cache));
+    }
+    if want("13") {
+        eprintln!("running Fig 13 (DB 8->13 MB)...");
+        tables.push(h.fig13(&cache));
+    }
+    if want_t("5") {
+        tables.push(h.tbl05());
+    }
+    for t in &tables {
+        println!();
+        t.print();
+        let slug: String = t
+            .title
+            .chars()
+            .take_while(|c| *c != '—')
+            .collect::<String>()
+            .trim()
+            .to_lowercase()
+            .replace(' ', "_");
+        let file = out_dir.join(format!("{slug}.csv"));
+        t.write_csv(&file).map_err(|e| e.to_string())?;
+    }
+    eprintln!("\nCSV written to {}/", out_dir.display());
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<(), String> {
+    let model = opt_val(rest, "--model").unwrap_or("gcn").to_lowercase();
+    let requests = opt_u32(rest, "--requests", 32)? as usize;
+    let shape = ArtifactShape::default();
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().map_err(|e| format!("{e:#}"))?;
+    eprintln!("PJRT platform: {}", rt.platform());
+    let exe = rt
+        .load_model(&dir, &model, shape)
+        .map_err(|e| format!("{e:#} — run `make artifacts` first"))?;
+
+    // Serve `requests` random graphs at the artifact shape, executing the
+    // AOT-compiled model on the PJRT CPU client. Python is NOT involved.
+    let mut lat = Vec::with_capacity(requests);
+    let t_all = std::time::Instant::now();
+    for r in 0..requests {
+        let el = switchblade::graph::generators::rmat(
+            shape.n,
+            shape.e,
+            0.57,
+            0.19,
+            0.19,
+            1000 + r as u64,
+        );
+        let g = switchblade::graph::Csr::from_edge_list(&el);
+        let mut src = vec![0i32; shape.e];
+        let mut dst = vec![0i32; shape.e];
+        for (s, d, id) in g.edges_canonical() {
+            src[id as usize] = s as i32;
+            dst[id as usize] = d as i32;
+        }
+        let deg: Vec<f32> = (0..shape.n)
+            .map(|v| g.in_degree(v as u32) as f32)
+            .collect();
+        let x = weights::init_features(r as u64, shape.n, shape.d);
+        let t0 = std::time::Instant::now();
+        let out = exe.run(&x, &src, &dst, &deg).map_err(|e| format!("{e:#}"))?;
+        lat.push(t0.elapsed());
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+    let total = t_all.elapsed();
+    lat.sort();
+    let mut t = Table::new(
+        &format!(
+            "serve {model} x{requests} (n={}, e={}, d={})",
+            shape.n, shape.e, shape.d
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["p50 latency".into(), format!("{:?}", lat[requests / 2])]);
+    t.row(vec![
+        "p99 latency".into(),
+        format!("{:?}", lat[(requests * 99 / 100).min(requests - 1)]),
+    ]);
+    t.row(vec![
+        "throughput".into(),
+        format!("{:.1} req/s", requests as f64 / total.as_secs_f64()),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_validate() -> Result<(), String> {
+    let cache = GraphCache::new(9);
+    let g = cache.get(Dataset::Ak);
+    let accel = AcceleratorConfig::switchblade();
+    let mut t = Table::new(
+        "numerics: compiled-ISA executor vs IR reference",
+        &["model", "max |delta|", "status"],
+    );
+    for m in Model::ALL {
+        let diff = switchblade::coordinator::validate_numerics(m, &g, &accel);
+        let ok = diff < 1e-4;
+        t.row(vec![
+            m.name().into(),
+            format!("{diff:.2e}"),
+            if ok { "OK".into() } else { "FAIL".into() },
+        ]);
+        if !ok {
+            return Err(format!("{} numerics diverged: {diff}", m.name()));
+        }
+    }
+    t.print();
+    println!("(run `cargo test --test integration_runtime` for the PJRT three-way check)");
+    Ok(())
+}

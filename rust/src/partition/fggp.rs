@@ -1,0 +1,244 @@
+//! Fine-grained graph partitioning (paper §IV-D / §V-D, Alg 3).
+//!
+//! Shards are packed at the granularity of individual `(source, edges)`
+//! bundles: for each destination interval we sweep sources in ascending
+//! order (`srcPtr`), fetch the source's neighbour list restricted to the
+//! interval (`acquireNeiList`), skip unconnected sources, and append the
+//! bundle to the open shard while Equ. 1 holds (`probeShardSize`). Source
+//! lists therefore become *discontinuous* (Fig 4-b), no unused source is
+//! ever loaded, and shards are packed to ~the memory budget — the ~99%
+//! occupancy of Fig 12.
+
+use super::{Interval, Method, PartitionConfig, Partitions, Shard, ShardEdge};
+use crate::graph::{Csr, VertexId};
+
+/// Partition `g` with FGGP (Alg 3).
+pub fn partition_fggp(g: &Csr, cfg: PartitionConfig) -> Partitions {
+    let n = g.num_vertices();
+    let interval_height = cfg.interval_height();
+
+    let mut intervals = Vec::new();
+    let mut shards: Vec<Shard> = Vec::new();
+
+    let mut iv_begin = 0usize;
+    while iv_begin < n {
+        let iv_end = (iv_begin + interval_height).min(n);
+        let shard_begin = shards.len();
+        let iv_idx = intervals.len() as u32;
+
+        // acquireNeiList for the whole interval at once: gather (src, dst,
+        // edge_id) for every in-edge of the interval, sorted by src. The
+        // per-src slices of this vector are exactly Alg 3's `dstList`s, and
+        // building it once is O(E_interval log) instead of O(V) probes.
+        let mut edges_by_src: Vec<(VertexId, VertexId, u64)> = Vec::new();
+        for dst in iv_begin as VertexId..iv_end as VertexId {
+            for (src, eid) in g.in_edges(dst) {
+                edges_by_src.push((src, dst, eid));
+            }
+        }
+        edges_by_src.sort_unstable();
+
+        // Alg 3 inner loop: sweep sources, pack bundles.
+        let mut cur = Shard {
+            interval: iv_idx,
+            ..Shard::default()
+        };
+        let mut i = 0usize;
+        while i < edges_by_src.len() {
+            let src = edges_by_src[i].0;
+            let mut j = i;
+            while j < edges_by_src.len() && edges_by_src[j].0 == src {
+                j += 1;
+            }
+            let bundle = &edges_by_src[i..j];
+
+            // probeShardSize: would adding (1 src, bundle.len() edges)
+            // overflow Equ. 1?
+            let would_src = cur.sources.len() as u64 + 1;
+            let would_edges = cur.edges.len() as u64 + bundle.len() as u64;
+            if !cfg.fits(would_src, would_edges) && !cur.sources.is_empty() {
+                finalize(&mut shards, std::mem::take(&mut cur), iv_idx);
+            }
+
+            // A single source whose bundle alone overflows the budget must
+            // be split across shards (hub vertices on power-law graphs).
+            let mut k = 0usize;
+            while k < bundle.len() {
+                if cur.sources.last() != Some(&src) {
+                    // Adding the source row itself must fit.
+                    if !cfg.fits(cur.sources.len() as u64 + 1, cur.edges.len() as u64 + 1) {
+                        finalize(&mut shards, std::mem::take(&mut cur), iv_idx);
+                    }
+                    cur.sources.push(src);
+                }
+                let slot = (cur.sources.len() - 1) as u32;
+                // How many of this bundle's edges still fit?
+                let room = edge_room(&cfg, cur.sources.len() as u64, cur.edges.len() as u64);
+                let take = room.min(bundle.len() - k);
+                if take == 0 {
+                    // No room for even one more edge: close the shard and
+                    // retry (a fresh shard always has room). Only drop the
+                    // source row if no edge references it yet (it may carry
+                    // edges from an earlier slice of this same bundle).
+                    let last_slot_used = cur
+                        .edges
+                        .last()
+                        .is_some_and(|e| e.src_slot as usize == cur.sources.len() - 1);
+                    if !last_slot_used {
+                        cur.sources.pop();
+                    }
+                    finalize(&mut shards, std::mem::take(&mut cur), iv_idx);
+                    continue;
+                }
+                for &(_, dst, eid) in &bundle[k..k + take] {
+                    cur.edges.push(ShardEdge {
+                        src_slot: slot,
+                        dst,
+                        edge_id: eid,
+                    });
+                }
+                k += take;
+            }
+            i = j;
+        }
+        if !cur.sources.is_empty() {
+            finalize(&mut shards, cur, iv_idx);
+        }
+
+        intervals.push(Interval {
+            begin: iv_begin as VertexId,
+            end: iv_end as VertexId,
+            shard_begin,
+            shard_end: shards.len(),
+        });
+        iv_begin = iv_end;
+    }
+
+    Partitions {
+        method: Method::Fggp,
+        config: cfg,
+        num_vertices: n,
+        num_edges: g.num_edges(),
+        intervals,
+        shards,
+    }
+}
+
+/// How many more edges fit alongside `num_src` sources (Equ. 1 solved for
+/// `num_edge`). With `dim_edge == 0` edges are metadata-only (held in the
+/// DataBuffer, not the SrcEdgeBuffer) and the answer is unbounded.
+fn edge_room(cfg: &PartitionConfig, num_src: u64, num_edge: u64) -> usize {
+    if cfg.dim_edge == 0 {
+        return usize::MAX;
+    }
+    let used = cfg.shard_footprint(num_src, num_edge);
+    if used >= cfg.shard_bytes {
+        return 0;
+    }
+    ((cfg.shard_bytes - used) / (cfg.dim_edge as u64 * super::F32_BYTES)) as usize
+}
+
+fn finalize(shards: &mut Vec<Shard>, mut s: Shard, interval: u32) {
+    s.interval = interval;
+    s.loaded_sources = s.sources.len() as u32; // FGGP loads only used sources
+    s.win_begin = s.sources.first().copied().unwrap_or(0);
+    s.win_end = s.sources.last().map(|v| v + 1).unwrap_or(0);
+    shards.push(s);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::partition_dsw;
+
+    fn cfg(shard_kb: u64, dst_kb: u64, dim_edge: u32) -> PartitionConfig {
+        PartitionConfig {
+            shard_bytes: shard_kb * 1024,
+            dst_bytes: dst_kb * 1024,
+            dim_src: 128,
+            dim_edge,
+            dim_dst: 128,
+            num_sthreads: 1,
+        }
+    }
+
+    #[test]
+    fn covers_all_edges_and_validates() {
+        let g = Csr::from_edge_list(&generators::rmat(1 << 10, 8_000, 0.57, 0.19, 0.19, 1));
+        let p = partition_fggp(&g, cfg(64, 64, 1));
+        p.validate().expect("valid partitioning");
+    }
+
+    #[test]
+    fn loads_only_used_sources() {
+        let g = Csr::from_edge_list(&generators::rmat(1 << 10, 8_000, 0.57, 0.19, 0.19, 2));
+        let p = partition_fggp(&g, cfg(64, 64, 1));
+        for s in &p.shards {
+            assert_eq!(s.loaded_sources as usize, s.num_src());
+        }
+    }
+
+    #[test]
+    fn denser_than_dsw() {
+        // The headline FGGP property (Fig 12): same budget, fewer shards,
+        // less loaded data.
+        let g = Csr::from_edge_list(&generators::rmat(1 << 11, 16_000, 0.57, 0.19, 0.19, 3));
+        let c = cfg(32, 64, 1);
+        let fg = partition_fggp(&g, c);
+        let ds = partition_dsw(&g, c);
+        let loaded = |p: &Partitions| -> u64 {
+            p.shards.iter().map(|s| s.loaded_bytes(&p.config)).sum()
+        };
+        assert!(fg.shards.len() <= ds.shards.len());
+        assert!(
+            loaded(&fg) < loaded(&ds),
+            "FGGP loaded {} !< DSW loaded {}",
+            loaded(&fg),
+            loaded(&ds)
+        );
+    }
+
+    #[test]
+    fn hub_vertex_splits_across_shards() {
+        // A star graph: vertex 0 points at everyone; every other vertex
+        // points at vertex 1. In-degree of 1 is huge => bundles overflow.
+        let mut el = crate::graph::EdgeList::new(4_000);
+        for v in 2..4_000u32 {
+            el.push(v, 1);
+            el.push(0, v);
+        }
+        let g = Csr::from_edge_list(&el);
+        // Tiny budget: force splitting.
+        let c = PartitionConfig {
+            shard_bytes: 4 * 1024,
+            dst_bytes: 1024 * 1024,
+            dim_src: 16,
+            dim_edge: 16,
+            dim_dst: 16,
+            num_sthreads: 1,
+        };
+        let p = partition_fggp(&g, c);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn discontinuous_sources_exist_on_sparse_graphs() {
+        let g = Csr::from_edge_list(&generators::rmat(1 << 12, 8_000, 0.57, 0.19, 0.19, 4));
+        let p = partition_fggp(&g, cfg(64, 256, 1));
+        let any_gap = p.shards.iter().any(|s| {
+            s.sources
+                .windows(2)
+                .any(|w| w[1] - w[0] > 1)
+        });
+        assert!(any_gap, "expected discontinuous source lists (Fig 4-b)");
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edge_list(&crate::graph::EdgeList::new(64));
+        let p = partition_fggp(&g, cfg(64, 64, 1));
+        p.validate().unwrap();
+        assert!(p.shards.is_empty());
+    }
+}

@@ -1,0 +1,237 @@
+//! Graph partitioning: dual-sliding-window (DSW-GP, paper Alg 1, with the
+//! HyGCN-style sparsity elimination of Fig 4-a) and the paper's fine-grained
+//! graph partitioning (FGGP, Alg 3 / Fig 4-b).
+//!
+//! Both partitioners produce the same [`Partitions`] structure consumed by
+//! the simulator and the functional executor, so every downstream component
+//! can run with either method — that is exactly the ablation axis of
+//! Fig 12 / Fig 13.
+
+mod dsw;
+mod fggp;
+pub mod stats;
+
+pub use dsw::partition_dsw;
+pub use fggp::partition_fggp;
+
+use crate::graph::VertexId;
+
+/// Partitioning method selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Baseline: contiguous source windows with sparsity elimination
+    /// (empty-shard skipping + window trimming), as in HyGCN.
+    Dsw,
+    /// Fine-grained graph partitioning (the paper's contribution).
+    Fggp,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Dsw => "DSW",
+            Method::Fggp => "FGGP",
+        }
+    }
+}
+
+/// Partitioning parameters. Data dimensions come from the compiler
+/// (`Program::dim_src` / `dim_edge` / `dim_dst`, §V-C3); memory budgets
+/// from the accelerator config (Tbl III).
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionConfig {
+    /// Per-sThread SrcEdgeBuffer budget in bytes — the RHS of Equ. 1
+    /// (`mem_capacity / num_sThread`).
+    pub shard_bytes: u64,
+    /// DstBuffer budget in bytes; bounds the destination interval size.
+    pub dst_bytes: u64,
+    /// Σ feature elements per source vertex resident in a shard.
+    pub dim_src: u32,
+    /// Σ feature elements per edge resident in a shard.
+    pub dim_edge: u32,
+    /// Σ feature elements per destination vertex resident in an interval.
+    pub dim_dst: u32,
+    /// Number of sThreads the shard budget was divided by (Equ. 1 RHS is
+    /// `mem_capacity / num_sThread`); carried for the simulator.
+    pub num_sthreads: u32,
+}
+
+pub const F32_BYTES: u64 = 4;
+
+impl PartitionConfig {
+    /// Destination-interval height: how many dst vertices fit in DstBuffer.
+    pub fn interval_height(&self) -> usize {
+        let per_vertex = self.dim_dst.max(1) as u64 * F32_BYTES;
+        (self.dst_bytes / per_vertex).max(1) as usize
+    }
+
+    /// Shard footprint in bytes for `num_src` sources and `num_edge` edges
+    /// (LHS of Equ. 1, in bytes).
+    pub fn shard_footprint(&self, num_src: u64, num_edge: u64) -> u64 {
+        (num_src * self.dim_src as u64 + num_edge * self.dim_edge as u64) * F32_BYTES
+    }
+
+    /// Equ. 1: does a shard of this size fit the per-thread budget?
+    pub fn fits(&self, num_src: u64, num_edge: u64) -> bool {
+        self.shard_footprint(num_src, num_edge) <= self.shard_bytes
+    }
+}
+
+/// One edge inside a shard, in shard-local COO form (this is what the
+/// accelerator's DataBuffer holds, §V-B4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardEdge {
+    /// Index into the shard's `sources` list.
+    pub src_slot: u32,
+    /// Destination vertex (global id; dst-interval-relative slot is
+    /// `dst - interval.begin`).
+    pub dst: VertexId,
+    /// Canonical edge id (indexes edge-feature storage in DRAM).
+    pub edge_id: u64,
+}
+
+/// A shard: the unit of sThread work.
+#[derive(Clone, Debug, Default)]
+pub struct Shard {
+    /// Interval this shard belongs to.
+    pub interval: u32,
+    /// Source vertices resident in the SrcEdgeBuffer for this shard
+    /// (ascending; contiguous for DSW, possibly discontinuous for FGGP).
+    pub sources: Vec<VertexId>,
+    /// Shard-local COO edges, ordered by (src_slot, dst).
+    pub edges: Vec<ShardEdge>,
+    /// For DSW: the contiguous source window `[win_begin, win_end)` that is
+    /// *loaded* (may include unused sources). For FGGP this equals the used
+    /// source set, so `loaded_sources == sources.len()`.
+    pub win_begin: VertexId,
+    pub win_end: VertexId,
+    /// Number of source rows actually transferred from DRAM for this shard.
+    pub loaded_sources: u32,
+}
+
+impl Shard {
+    pub fn num_src(&self) -> usize {
+        self.sources.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Bytes of *useful* data (used sources + edges) at the given dims.
+    pub fn useful_bytes(&self, cfg: &PartitionConfig) -> u64 {
+        cfg.shard_footprint(self.sources.len() as u64, self.edges.len() as u64)
+    }
+
+    /// Bytes actually loaded from DRAM (window sources + edges).
+    pub fn loaded_bytes(&self, cfg: &PartitionConfig) -> u64 {
+        cfg.shard_footprint(self.loaded_sources as u64, self.edges.len() as u64)
+    }
+}
+
+/// A destination interval and the index range of its shards.
+#[derive(Clone, Debug)]
+pub struct Interval {
+    pub begin: VertexId,
+    pub end: VertexId,
+    /// Indices into `Partitions::shards`.
+    pub shard_begin: usize,
+    pub shard_end: usize,
+}
+
+impl Interval {
+    pub fn len(&self) -> usize {
+        (self.end - self.begin) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.begin == self.end
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shard_end - self.shard_begin
+    }
+}
+
+/// The full partitioning of a graph for one compiled model.
+#[derive(Clone, Debug)]
+pub struct Partitions {
+    pub method: Method,
+    pub config: PartitionConfig,
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub intervals: Vec<Interval>,
+    pub shards: Vec<Shard>,
+}
+
+impl Partitions {
+    pub fn shards_of(&self, interval: usize) -> &[Shard] {
+        let iv = &self.intervals[interval];
+        &self.shards[iv.shard_begin..iv.shard_end]
+    }
+
+    /// Structural invariants shared by both methods; used by integration
+    /// and property tests.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut edge_seen = vec![false; self.num_edges];
+        let mut covered_edges = 0usize;
+        for (ii, iv) in self.intervals.iter().enumerate() {
+            if iv.shard_begin > iv.shard_end || iv.shard_end > self.shards.len() {
+                return Err(format!("interval {ii} bad shard range"));
+            }
+            for s in &self.shards[iv.shard_begin..iv.shard_end] {
+                if s.interval as usize != ii {
+                    return Err(format!("shard belongs to {} not {}", s.interval, ii));
+                }
+                if !self
+                    .config
+                    .fits(s.num_src() as u64, s.num_edges() as u64)
+                {
+                    return Err(format!(
+                        "shard exceeds Equ.1 budget: {} > {}",
+                        s.useful_bytes(&self.config),
+                        self.config.shard_bytes
+                    ));
+                }
+                if s.sources.windows(2).any(|w| w[0] >= w[1]) {
+                    return Err("shard sources not strictly ascending".into());
+                }
+                for e in &s.edges {
+                    if e.src_slot as usize >= s.sources.len() {
+                        return Err("edge src_slot out of range".into());
+                    }
+                    if e.dst < iv.begin || e.dst >= iv.end {
+                        return Err(format!(
+                            "edge dst {} outside interval [{}, {})",
+                            e.dst, iv.begin, iv.end
+                        ));
+                    }
+                    let eid = e.edge_id as usize;
+                    if eid >= self.num_edges || edge_seen[eid] {
+                        return Err(format!("edge id {eid} duplicated or out of range"));
+                    }
+                    edge_seen[eid] = true;
+                    covered_edges += 1;
+                }
+            }
+        }
+        if covered_edges != self.num_edges {
+            return Err(format!(
+                "edge coverage {covered_edges} != {}",
+                self.num_edges
+            ));
+        }
+        // Intervals must tile [0, num_vertices).
+        let mut expect = 0 as VertexId;
+        for iv in &self.intervals {
+            if iv.begin != expect {
+                return Err("interval gap".into());
+            }
+            expect = iv.end;
+        }
+        if expect as usize != self.num_vertices {
+            return Err("intervals do not cover all vertices".into());
+        }
+        Ok(())
+    }
+}

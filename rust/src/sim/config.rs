@@ -1,0 +1,138 @@
+//! Accelerator configuration (paper Tbl III).
+
+/// Off-chip memory parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DramConfig {
+    /// Sustained bandwidth in bytes/second.
+    pub bandwidth_bytes_per_s: f64,
+    /// Access latency in nanoseconds (first-word; the queue model adds
+    /// serialisation on top).
+    pub latency_ns: f64,
+    /// Access energy in pJ/bit (paper §VI: 7 pJ/bit for HBM).
+    pub energy_pj_per_bit: f64,
+}
+
+/// 256 GB/s HBM-1 (SWITCHBLADE and HyGCN in Tbl III).
+pub const HBM1: DramConfig = DramConfig {
+    bandwidth_bytes_per_s: 256.0e9,
+    latency_ns: 100.0,
+    energy_pj_per_bit: 7.0,
+};
+
+/// 900 GB/s HBM-2 (the V100 baseline; kept for custom configs).
+#[allow(dead_code)]
+pub const HBM2: DramConfig = DramConfig {
+    bandwidth_bytes_per_s: 900.0e9,
+    latency_ns: 100.0,
+    energy_pj_per_bit: 7.0,
+};
+
+/// Full accelerator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AcceleratorConfig {
+    /// Clock frequency in Hz (1 GHz in Tbl III).
+    pub freq_hz: f64,
+    /// VU: number of SIMD cores × lanes per core (16 × 32).
+    pub vu_cores: u32,
+    pub vu_lanes: u32,
+    /// MU: output-stationary systolic array rows × cols (32 × 128).
+    pub mu_rows: u32,
+    pub mu_cols: u32,
+    /// DstBuffer bytes (8 MB "DB" in Tbl III).
+    pub dst_buffer: u64,
+    /// SrcEdgeBuffer bytes (1 MB "SEB").
+    pub src_edge_buffer: u64,
+    /// Weight buffer bytes (2 MB).
+    pub weight_buffer: u64,
+    /// Graph buffer bytes (128 KB "GB": Meta + Data + LSU staging).
+    pub graph_buffer: u64,
+    /// Number of concurrent sThreads (3 in the paper's default: one per
+    /// hardware resource class — VU, MU, bandwidth).
+    pub num_sthreads: u32,
+    pub dram: DramConfig,
+}
+
+impl AcceleratorConfig {
+    /// Tbl III SWITCHBLADE row.
+    pub fn switchblade() -> Self {
+        AcceleratorConfig {
+            freq_hz: 1.0e9,
+            vu_cores: 16,
+            vu_lanes: 32,
+            mu_rows: 32,
+            mu_cols: 128,
+            dst_buffer: 8 * 1024 * 1024,
+            src_edge_buffer: 1024 * 1024,
+            weight_buffer: 2 * 1024 * 1024,
+            graph_buffer: 128 * 1024,
+            num_sthreads: 3,
+            dram: HBM1,
+        }
+    }
+
+    /// Variant with a different sThread count (Fig 11 sweep).
+    pub fn with_sthreads(mut self, n: u32) -> Self {
+        self.num_sthreads = n.max(1);
+        self
+    }
+
+    /// Variant with a different DstBuffer size (Fig 13: 8 MB → 13 MB).
+    pub fn with_dst_buffer(mut self, bytes: u64) -> Self {
+        self.dst_buffer = bytes;
+        self
+    }
+
+    /// VU element throughput per cycle.
+    pub fn vu_throughput(&self) -> u64 {
+        self.vu_cores as u64 * self.vu_lanes as u64
+    }
+
+    /// Per-sThread SrcEdgeBuffer budget — RHS of Equ. 1.
+    pub fn shard_bytes(&self) -> u64 {
+        self.src_edge_buffer / self.num_sthreads as u64
+    }
+
+    /// Partitioner configuration for a compiled program on this hardware.
+    pub fn partition_config(&self, p: &crate::isa::Program) -> crate::partition::PartitionConfig {
+        crate::partition::PartitionConfig {
+            shard_bytes: self.shard_bytes(),
+            dst_bytes: self.dst_buffer,
+            dim_src: p.dim_src.max(1),
+            dim_edge: p.dim_edge.max(1),
+            dim_dst: p.dim_dst.max(1),
+            num_sthreads: self.num_sthreads,
+        }
+    }
+
+    /// DRAM bytes transferable per cycle.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram.bandwidth_bytes_per_s / self.freq_hz
+    }
+
+    /// DRAM latency in cycles.
+    pub fn dram_latency_cycles(&self) -> f64 {
+        self.dram.latency_ns * 1e-9 * self.freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tbl3_defaults() {
+        let c = AcceleratorConfig::switchblade();
+        assert_eq!(c.vu_throughput(), 512);
+        assert_eq!(c.shard_bytes(), 1024 * 1024 / 3);
+        assert!((c.dram_bytes_per_cycle() - 256.0).abs() < 1e-9);
+        assert!((c.dram_latency_cycles() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn variants() {
+        let c = AcceleratorConfig::switchblade().with_sthreads(5);
+        assert_eq!(c.num_sthreads, 5);
+        let c = c.with_dst_buffer(13 * 1024 * 1024);
+        assert_eq!(c.dst_buffer, 13 * 1024 * 1024);
+    }
+}

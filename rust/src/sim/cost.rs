@@ -1,0 +1,158 @@
+//! Per-instruction timing costs, derived from the synthesis-calibrated
+//! unit parameters of Tbl III (the paper's Verilog/DC step is replaced by
+//! these closed forms — DESIGN.md §3).
+
+use crate::isa::{ElwOp, Instr};
+
+use super::config::AcceleratorConfig;
+
+/// Fixed decode/issue overhead per instruction (controller pipeline).
+pub const ISSUE_OVERHEAD: f64 = 4.0;
+
+/// Phase-scheduler switch cost (PC swap + metadata probe), per phase/shard
+/// transition (§V-B2).
+pub const PHASE_SWITCH: f64 = 12.0;
+
+/// Cost model over one accelerator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    vu_rate_simple: f64,
+    vu_rate_special: f64,
+    vu_rate_gtr: f64,
+    mu_rows: f64,
+    mu_cols: f64,
+}
+
+impl CostModel {
+    pub fn new(cfg: &AcceleratorConfig) -> Self {
+        let t = cfg.vu_throughput() as f64;
+        CostModel {
+            // Full-rate: one elem per lane per cycle.
+            vu_rate_simple: t,
+            // Transcendentals microcode to ~4 cycles per elem.
+            vu_rate_special: t / 4.0,
+            // GTR: indirection halves sustained throughput (bank
+            // conflicts in the crossbar between buffer and cores).
+            vu_rate_gtr: t / 2.0,
+            mu_rows: cfg.mu_rows as f64,
+            mu_cols: cfg.mu_cols as f64,
+        }
+    }
+
+    /// VU cycles for an element-wise op over `work` elements.
+    fn vu(&self, op_rate: f64, work: u64) -> f64 {
+        ISSUE_OVERHEAD + (work as f64 / op_rate).ceil()
+    }
+
+    /// MU cycles for `rows×k×n`: output-stationary tiling — each
+    /// `mu_rows × mu_cols` output tile streams `k` partial sums, plus the
+    /// array fill/drain once per instruction.
+    pub fn mu(&self, rows: u64, k: u64, n: u64) -> f64 {
+        let tiles = (rows as f64 / self.mu_rows).ceil() * (n as f64 / self.mu_cols).ceil();
+        ISSUE_OVERHEAD + tiles * k as f64 + (self.mu_rows + self.mu_cols)
+    }
+
+    /// Compute-instruction duration (LD/ST are priced by the DRAM model).
+    /// `rows` is the decoded row count for the current interval/shard.
+    pub fn compute_cycles(&self, i: &Instr, rows: u64) -> f64 {
+        match i {
+            Instr::Elw { op, cols, .. } => {
+                let work = rows * *cols as u64;
+                let rate = match op {
+                    ElwOp::Exp
+                    | ElwOp::Sigmoid
+                    | ElwOp::Tanh
+                    | ElwOp::Rsqrt
+                    | ElwOp::Recip
+                    | ElwOp::Div => self.vu_rate_special,
+                    _ => self.vu_rate_simple,
+                };
+                self.vu(rate, work)
+            }
+            Instr::RowScale { cols, .. } => self.vu(self.vu_rate_simple, rows * *cols as u64),
+            Instr::Concat { cols_a, cols_b, .. } => {
+                self.vu(self.vu_rate_simple, rows * (*cols_a + *cols_b) as u64)
+            }
+            Instr::Dmm { k, n, .. } if *n <= 4 => {
+                // Matrix-vector on the VU: one fused multiply-add per
+                // element of the input matrix.
+                self.vu(self.vu_rate_simple, rows * *k as u64 * *n as u64)
+            }
+            Instr::Dmm { k, n, .. } => self.mu(rows, *k as u64, *n as u64),
+            Instr::Scatter { cols, .. } | Instr::Gather { cols, .. } => {
+                self.vu(self.vu_rate_gtr, rows * *cols as u64)
+            }
+            Instr::FusedGather { cols, .. } => {
+                // One read + one RMW per edge element, same crossbar rate.
+                self.vu(self.vu_rate_gtr, rows * *cols as u64)
+            }
+            Instr::Ld { .. } | Instr::St { .. } => {
+                unreachable!("memory instructions are priced by the DRAM model")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Dim, Space, Sym};
+
+    fn cm() -> CostModel {
+        CostModel::new(&AcceleratorConfig::switchblade())
+    }
+
+    #[test]
+    fn elw_throughput() {
+        let i = Instr::Elw {
+            op: ElwOp::Add,
+            dst: Sym::new(Space::D, 0),
+            a: Sym::new(Space::D, 0),
+            b: None,
+            broadcast_b: false,
+            rows: Dim::V,
+            cols: 128,
+        };
+        // 512 rows × 128 cols = 65536 elems at 512/cycle = 128 cycles.
+        assert!((cm().compute_cycles(&i, 512) - (ISSUE_OVERHEAD + 128.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transcendental_slower() {
+        let mk = |op| Instr::Elw {
+            op,
+            dst: Sym::new(Space::D, 0),
+            a: Sym::new(Space::D, 0),
+            b: None,
+            broadcast_b: false,
+            rows: Dim::V,
+            cols: 128,
+        };
+        let fast = cm().compute_cycles(&mk(ElwOp::Add), 128);
+        let slow = cm().compute_cycles(&mk(ElwOp::Exp), 128);
+        assert!(slow > 3.0 * fast);
+    }
+
+    #[test]
+    fn mu_scales_with_tiles() {
+        let c = cm();
+        let one_tile = c.mu(32, 128, 128);
+        let four_tiles = c.mu(64, 128, 256);
+        assert!((one_tile - (ISSUE_OVERHEAD + 128.0 + 160.0)).abs() < 1e-9);
+        // Fill/drain amortises across tiles: 4 tiles cost < 4x one tile
+        // but still scale super-linearly past 2x.
+        assert!(four_tiles > 2.0 * one_tile && four_tiles < 4.0 * one_tile);
+    }
+
+    #[test]
+    fn gather_half_rate() {
+        let g = Instr::Gather {
+            reduce: crate::isa::Reduce::Sum,
+            dst: Sym::new(Space::D, 0),
+            src: Sym::new(Space::E, 0),
+            cols: 128,
+        };
+        // 256 edges × 128 cols at 256/cycle = 128 cycles.
+        assert!((cm().compute_cycles(&g, 256) - (ISSUE_OVERHEAD + 128.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,436 @@
+//! The discrete-event SLMT engine (see module docs in `sim/mod.rs`).
+
+use std::collections::HashMap;
+
+use crate::isa::{Dim, Instr, Program, Space, Sym, Unit};
+use crate::partition::{Partitions, Shard};
+
+use super::config::AcceleratorConfig;
+use super::cost::{CostModel, ISSUE_OVERHEAD, PHASE_SWITCH};
+use super::dram::DramModel;
+use super::stats::{SimResult, TrafficTag};
+
+/// Simulate one compiled program over one partitioning.
+pub fn simulate(program: &Program, parts: &Partitions, cfg: &AcceleratorConfig) -> SimResult {
+    let mut e = Engine::new(cfg);
+    e.run(program, parts);
+    e.finish(cfg)
+}
+
+struct Engine {
+    cm: CostModel,
+    dram: DramModel,
+    vu_free: f64,
+    mu_free: f64,
+    vu_busy: f64,
+    mu_busy: f64,
+    now_max: f64,
+    instructions: u64,
+    shards: u64,
+    intervals: u64,
+}
+
+impl Engine {
+    fn new(cfg: &AcceleratorConfig) -> Self {
+        Engine {
+            cm: CostModel::new(cfg),
+            dram: DramModel::new(cfg),
+            vu_free: 0.0,
+            mu_free: 0.0,
+            vu_busy: 0.0,
+            mu_busy: 0.0,
+            now_max: 0.0,
+            instructions: 0,
+            shards: 0,
+            intervals: 0,
+        }
+    }
+
+    fn run(&mut self, program: &Program, parts: &Partitions) {
+        // Weights load once and stay resident in the weight buffer.
+        let mut t = self
+            .dram
+            .transfer(0.0, program.weight_bytes(), TrafficTag::Weights);
+
+        let nthreads = thread_count(parts);
+        for group in &program.groups {
+            // Intervals *pipeline* within a group (paper Fig 3): while the
+            // iThread applies interval i, the sThreads already stream
+            // interval i+1's shards (the DstBuffer double-buffers interval
+            // state). The iThread itself is serial: scatter(i+1) waits for
+            // apply(i). Groups are barriers (apply stores feed the next
+            // group's loads through DRAM).
+            let group_start = t;
+            let mut ithread_free = group_start;
+            let mut compute_free = vec![group_start; nthreads];
+            let mut load_free = vec![group_start; nthreads];
+            let mut group_end = group_start;
+            for (ii, iv) in parts.intervals.iter().enumerate() {
+                self.intervals += 1;
+                let v = iv.len() as u64;
+
+                // ---- ScatterPhase (iThread) --------------------------------
+                let mut d_ready: HashMap<Sym, f64> = HashMap::new();
+                let scatter_done = self.run_ithread_phase(
+                    &group.scatter,
+                    ithread_free + PHASE_SWITCH,
+                    v,
+                    &mut d_ready,
+                );
+                if !group.scatter.is_empty() {
+                    ithread_free = scatter_done;
+                }
+                // Shards gate on this interval's ScatterPhase only when it
+                // produced data they read.
+                let shard_gate = if group.scatter.is_empty() {
+                    group_start
+                } else {
+                    scatter_done
+                };
+
+                // ---- GatherPhase (sThreads over shards) --------------------
+                let mut gather_done = shard_gate;
+                for shard in parts.shards_of(ii) {
+                    self.shards += 1;
+                    // Dynamic assignment: next shard goes to the thread
+                    // that frees first (phase scheduler, §V-B2).
+                    let k = (0..nthreads)
+                        .min_by(|&a, &b| compute_free[a].total_cmp(&compute_free[b]))
+                        .unwrap();
+                    let done = self.run_shard(
+                        &group.gather,
+                        shard,
+                        v,
+                        shard_gate,
+                        &mut load_free[k],
+                        &mut compute_free[k],
+                        &mut d_ready,
+                    );
+                    gather_done = gather_done.max(done);
+                }
+
+                // ---- ApplyPhase (iThread) ----------------------------------
+                let apply_done = self.run_ithread_phase(
+                    &group.apply,
+                    gather_done.max(ithread_free) + PHASE_SWITCH,
+                    v,
+                    &mut d_ready,
+                );
+                ithread_free = apply_done;
+                group_end = group_end.max(apply_done).max(gather_done);
+                self.now_max = self.now_max.max(group_end);
+            }
+            t = group_end;
+        }
+    }
+
+    /// Run an interval-side (iThread) phase sequentially; returns finish time.
+    fn run_ithread_phase(
+        &mut self,
+        instrs: &[Instr],
+        start: f64,
+        v: u64,
+        d_ready: &mut HashMap<Sym, f64>,
+    ) -> f64 {
+        let mut prev_issue = start;
+        let mut finish = start;
+        for i in instrs {
+            self.instructions += 1;
+            match i {
+                Instr::Ld { sym, cols, .. } => {
+                    let bytes = v * *cols as u64 * 4;
+                    let t0 = prev_issue;
+                    let done = self.dram.transfer(t0, bytes, TrafficTag::DstLoad);
+                    d_ready.insert(*sym, done);
+                    prev_issue = t0 + ISSUE_OVERHEAD;
+                    finish = finish.max(done);
+                }
+                Instr::St { sym, cols, .. } => {
+                    let bytes = v * *cols as u64 * 4;
+                    let ready = d_ready.get(sym).copied().unwrap_or(prev_issue);
+                    let t0 = prev_issue.max(ready);
+                    let done = self.dram.transfer(t0, bytes, TrafficTag::DstStore);
+                    prev_issue = t0 + ISSUE_OVERHEAD;
+                    finish = finish.max(done);
+                }
+                _ => {
+                    let dur = self.cm.compute_cycles(i, rows_of(i, v, 0, 0));
+                    let oper_ready = i
+                        .uses()
+                        .iter()
+                        .filter_map(|s| d_ready.get(s))
+                        .fold(0.0f64, |a, &b| a.max(b));
+                    let (unit_free, busy) = self.unit_mut(i.unit());
+                    let t0 = prev_issue.max(oper_ready).max(*unit_free);
+                    *unit_free = t0 + dur;
+                    *busy += dur;
+                    if let Some(d) = i.def() {
+                        d_ready.insert(d, t0 + dur);
+                    }
+                    prev_issue = t0 + ISSUE_OVERHEAD;
+                    finish = finish.max(t0 + dur);
+                }
+            }
+        }
+        self.now_max = self.now_max.max(finish);
+        finish
+    }
+
+    /// Run one shard's GatherPhase on an sThread; returns finish time.
+    #[allow(clippy::too_many_arguments)]
+    fn run_shard(
+        &mut self,
+        instrs: &[Instr],
+        shard: &Shard,
+        v: u64,
+        scatter_done: f64,
+        load_free: &mut f64,
+        compute_free: &mut f64,
+        d_ready: &mut HashMap<Sym, f64>,
+    ) -> f64 {
+        let s_loaded = shard.loaded_sources as u64;
+        let s_used = shard.num_src() as u64;
+        let e = shard.num_edges() as u64;
+        let _ = s_used;
+
+        // Shard descriptor + COO metadata into the Graph Buffer. The SEB is
+        // divided into `num_sthreads` slots (§V-B3): this thread's slot
+        // frees when its *previous* shard's compute finishes, so loads
+        // (the prefetch flag, §V-B4) may start then — with one sThread the
+        // load→compute pipeline is fully serial (SLMT off), with more
+        // threads loads overlap other threads' compute. That is the whole
+        // Fig 10/11 mechanism.
+        let meta_bytes = 4 * s_loaded + 8 * e + 16;
+        let mut load_cursor = load_free.max(*compute_free);
+        let meta_done = self
+            .dram
+            .transfer(load_cursor, meta_bytes, TrafficTag::Meta);
+        let mut local_ready: HashMap<Sym, f64> = HashMap::new();
+
+        // Compute may not start before the thread's previous shard compute
+        // finished (SEB double-buffer swap) nor before the interval's
+        // ScatterPhase produced the D data.
+        let mut prev_issue = compute_free.max(scatter_done);
+        let mut finish = meta_done;
+
+        for i in instrs {
+            self.instructions += 1;
+            match i {
+                Instr::Ld { sym, cols, .. } => {
+                    let rows = match sym.space {
+                        Space::S => s_loaded,
+                        Space::E => e,
+                        _ => unreachable!("gather LD of {sym}"),
+                    };
+                    let tag = if sym.space == Space::S {
+                        TrafficTag::SrcVertex
+                    } else {
+                        TrafficTag::EdgeData
+                    };
+                    let bytes = rows * *cols as u64 * 4;
+                    let t0 = load_cursor;
+                    let done = self.dram.transfer(t0, bytes, tag);
+                    local_ready.insert(*sym, done);
+                    load_cursor = t0 + ISSUE_OVERHEAD;
+                    *load_free = load_cursor;
+                    finish = finish.max(done);
+                }
+                Instr::St { sym, cols, .. } => {
+                    let bytes = e * *cols as u64 * 4;
+                    let ready = local_ready.get(sym).copied().unwrap_or(prev_issue);
+                    let t0 = prev_issue.max(ready);
+                    let done = self.dram.transfer(t0, bytes, TrafficTag::EdgeData);
+                    prev_issue = t0 + ISSUE_OVERHEAD;
+                    finish = finish.max(done);
+                }
+                _ => {
+                    let rows = rows_of(i, v, s_loaded, e);
+                    let dur = self.cm.compute_cycles(i, rows);
+                    let oper_ready = i
+                        .uses()
+                        .iter()
+                        .filter_map(|s| match s.space {
+                            Space::D => d_ready.get(s),
+                            Space::W => None,
+                            _ => local_ready.get(s),
+                        })
+                        .fold(0.0f64, |a, &b| a.max(b));
+                    let (unit_free, busy) = self.unit_mut(i.unit());
+                    let t0 = prev_issue.max(oper_ready).max(*unit_free);
+                    *unit_free = t0 + dur;
+                    *busy += dur;
+                    let done = t0 + dur;
+                    if let Some(d) = i.def() {
+                        if d.space == Space::D {
+                            // Gather accumulator: cross-shard RMW.
+                            let ent = d_ready.entry(d).or_insert(done);
+                            *ent = ent.max(done);
+                        } else {
+                            local_ready.insert(d, done);
+                        }
+                    }
+                    prev_issue = t0 + ISSUE_OVERHEAD;
+                    finish = finish.max(done);
+                }
+            }
+        }
+        *compute_free = finish + PHASE_SWITCH;
+        self.now_max = self.now_max.max(finish);
+        finish
+    }
+
+    fn unit_mut(&mut self, u: Unit) -> (&mut f64, &mut f64) {
+        match u {
+            Unit::Vu => (&mut self.vu_free, &mut self.vu_busy),
+            Unit::Mu => (&mut self.mu_free, &mut self.mu_busy),
+            Unit::Lsu => unreachable!("LSU instrs are priced by the DRAM model"),
+        }
+    }
+
+    fn finish(self, cfg: &AcceleratorConfig) -> SimResult {
+        let cycles = self
+            .now_max
+            .max(self.dram.busy_until())
+            .max(self.vu_free)
+            .max(self.mu_free);
+        SimResult {
+            cycles,
+            seconds: cycles / cfg.freq_hz,
+            vu_busy: self.vu_busy,
+            mu_busy: self.mu_busy,
+            dram_busy: self.dram.busy_cycles,
+            traffic: self.dram.traffic,
+            shards_processed: self.shards,
+            intervals_processed: self.intervals,
+            instructions: self.instructions,
+        }
+    }
+}
+
+/// Decode an instruction's row count against the current context.
+fn rows_of(i: &Instr, v: u64, s: u64, e: u64) -> u64 {
+    let dim = match i {
+        Instr::Elw { rows, .. }
+        | Instr::RowScale { rows, .. }
+        | Instr::Concat { rows, .. }
+        | Instr::Dmm { rows, .. } => *rows,
+        Instr::Scatter { .. } | Instr::Gather { .. } | Instr::FusedGather { .. } => Dim::E,
+        Instr::Ld { rows, .. } | Instr::St { rows, .. } => *rows,
+    };
+    dim.decode(v as usize, s as usize, e as usize) as u64
+}
+
+/// sThread count is a property of the partitioning run (Equ. 1 divides the
+/// SEB by it); the engine re-derives it from the configured budget.
+fn thread_count(parts: &Partitions) -> usize {
+    // The harness partitions with shard_bytes = SEB / num_sthreads, so the
+    // count is carried alongside in the config; default to 3 when absent.
+    parts.config.num_sthreads.max(1) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::graph::{generators, Csr};
+    use crate::ir::models::Model;
+    use crate::partition::{partition_dsw, partition_fggp};
+    use crate::sim::AcceleratorConfig;
+
+    fn sim_model(
+        model: Model,
+        cfg: &AcceleratorConfig,
+        fggp: bool,
+        seed: u64,
+    ) -> SimResult {
+        let ir = model.build(2, 128, 128, 128);
+        let p = compile(&ir);
+        let g = Csr::from_edge_list(&generators::rmat(1 << 11, 16_000, 0.57, 0.19, 0.19, seed));
+        let mut pc = cfg.partition_config(&p);
+        pc.num_sthreads = cfg.num_sthreads;
+        let parts = if fggp {
+            partition_fggp(&g, pc)
+        } else {
+            partition_dsw(&g, pc)
+        };
+        simulate(&p, &parts, cfg)
+    }
+
+    #[test]
+    fn produces_sane_timing() {
+        let cfg = AcceleratorConfig::switchblade();
+        let r = sim_model(Model::Gcn, &cfg, true, 1);
+        assert!(r.cycles > 0.0);
+        assert!(r.vu_busy > 0.0 && r.mu_busy > 0.0 && r.dram_busy > 0.0);
+        assert!(r.vu_busy <= r.cycles + 1.0);
+        assert!(r.traffic.total() > 0);
+        assert!(r.shards_processed > 0);
+    }
+
+    #[test]
+    fn utilizations_bounded() {
+        let cfg = AcceleratorConfig::switchblade();
+        for m in Model::ALL {
+            let r = sim_model(m, &cfg, true, 2);
+            for u in [
+                r.vu_utilization(),
+                r.mu_utilization(),
+                r.bw_utilization(),
+                r.overall_utilization(),
+            ] {
+                assert!((0.0..=1.0).contains(&u), "{}: {u}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn slmt_improves_latency_and_utilization() {
+        // Fig 10/11's first-order claim: 3 sThreads beat 1.
+        let base = AcceleratorConfig::switchblade();
+        let r1 = sim_model(Model::Gat, &base.with_sthreads(1), true, 3);
+        let r3 = sim_model(Model::Gat, &base.with_sthreads(3), true, 3);
+        assert!(
+            r3.cycles < r1.cycles,
+            "3 sThreads {} !< 1 sThread {}",
+            r3.cycles,
+            r1.cycles
+        );
+        assert!(r3.overall_utilization() > r1.overall_utilization());
+    }
+
+    #[test]
+    fn fggp_moves_less_data_than_dsw() {
+        let cfg = AcceleratorConfig::switchblade();
+        let rf = sim_model(Model::Gcn, &cfg, true, 4);
+        let rd = sim_model(Model::Gcn, &cfg, false, 4);
+        assert!(rf.traffic.total() < rd.traffic.total());
+        assert!(rf.cycles <= rd.cycles * 1.05);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = AcceleratorConfig::switchblade();
+        let a = sim_model(Model::Sage, &cfg, true, 5);
+        let b = sim_model(Model::Sage, &cfg, true, 5);
+        assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+        assert_eq!(a.traffic.total(), b.traffic.total());
+    }
+
+    #[test]
+    fn empty_program_costs_only_weights() {
+        let mut ir = crate::ir::IrGraph::new("empty");
+        let x = ir.input(4);
+        let w = ir.weight(4, 4, 1, "w");
+        let z = ir.dmm(x, w, "z");
+        ir.set_output(z);
+        let p = compile(&ir);
+        let g = Csr::from_edge_list(&generators::mesh2d(4, 4, false));
+        let cfg = AcceleratorConfig::switchblade();
+        let mut pc = cfg.partition_config(&p);
+        pc.num_sthreads = cfg.num_sthreads;
+        let parts = partition_fggp(&g, pc);
+        let r = simulate(&p, &parts, &cfg);
+        assert!(r.cycles > 0.0);
+        assert!(r.traffic.get(TrafficTag::Weights) > 0);
+    }
+}

@@ -1,0 +1,38 @@
+//! Cycle-level model of the SWITCHBLADE GNN accelerator (paper §V-B,
+//! Fig 5): an instruction-driven platform with
+//!
+//! * a **VU** (16×SIMD32 cores) executing ELW + GTR instructions,
+//! * an **MU** (32×128 output-stationary systolic array) executing DMM,
+//! * an **LSU** + HBM channel model moving shards/intervals,
+//! * a **controller** with one iThread and `num_sthreads` sThreads
+//!   (shard-level multi-threading, §IV-C) driven by a phase scheduler
+//!   implementing Alg 2.
+//!
+//! Timing style: discrete-event list scheduling at cycle resolution. Every
+//! instruction reserves its functional unit for a modelled duration;
+//! per-thread issue is in order; operands synchronise through
+//! symbol-completion times; sThreads overlap through shared-unit
+//! contention exactly as SMT hardware would (greedy arbitration). Shard
+//! loads are prefetched (the paper's 1-bit flag): a shard's `LD`s may
+//! overlap the previous shard's compute on the same thread.
+//!
+//! The simulator consumes the *same* compiled programs and partitions as
+//! the functional executor, so its timing cannot diverge structurally
+//! from the validated semantics.
+
+mod config;
+mod cost;
+mod dram;
+mod engine;
+mod stats;
+
+pub use config::{AcceleratorConfig, HBM1};
+pub use cost::CostModel;
+pub use dram::DramModel;
+pub use engine::simulate;
+pub use stats::{SimResult, Traffic, TrafficTag};
+
+/// Test helper: a stable tag for cross-module unit tests.
+pub fn stats_tag_for_tests() -> TrafficTag {
+    TrafficTag::SrcVertex
+}

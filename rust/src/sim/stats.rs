@@ -1,0 +1,136 @@
+//! Simulation statistics: traffic breakdown, utilisation, and the final
+//! result record every figure harness consumes.
+
+/// Off-chip traffic categories (Fig 9 / Fig 13 accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TrafficTag {
+    /// Model weights (loaded once, resident).
+    Weights,
+    /// Source-vertex rows streamed into SrcEdgeBuffers.
+    SrcVertex,
+    /// Edge-feature rows (LD.E / ST.E spills).
+    EdgeData,
+    /// Destination-interval rows loaded (LD.D).
+    DstLoad,
+    /// Destination-interval rows stored (ST.D).
+    DstStore,
+    /// Graph-structure metadata (COO lists, shard descriptors).
+    Meta,
+}
+
+impl TrafficTag {
+    pub const ALL: [TrafficTag; 6] = [
+        TrafficTag::Weights,
+        TrafficTag::SrcVertex,
+        TrafficTag::EdgeData,
+        TrafficTag::DstLoad,
+        TrafficTag::DstStore,
+        TrafficTag::Meta,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficTag::Weights => "weights",
+            TrafficTag::SrcVertex => "src",
+            TrafficTag::EdgeData => "edge",
+            TrafficTag::DstLoad => "dst_ld",
+            TrafficTag::DstStore => "dst_st",
+            TrafficTag::Meta => "meta",
+        }
+    }
+}
+
+/// Byte counters per category.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Traffic {
+    counts: [u64; 6],
+}
+
+impl Traffic {
+    fn idx(tag: TrafficTag) -> usize {
+        TrafficTag::ALL.iter().position(|&t| t == tag).unwrap()
+    }
+
+    pub fn add(&mut self, tag: TrafficTag, bytes: u64) {
+        self.counts[Self::idx(tag)] += bytes;
+    }
+
+    pub fn get(&self, tag: TrafficTag) -> u64 {
+        self.counts[Self::idx(tag)]
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+/// One simulation outcome.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// Total execution time in cycles (and seconds at the configured clock).
+    pub cycles: f64,
+    pub seconds: f64,
+    /// Busy cycles per functional unit.
+    pub vu_busy: f64,
+    pub mu_busy: f64,
+    pub dram_busy: f64,
+    /// Off-chip traffic breakdown.
+    pub traffic: Traffic,
+    /// Shards processed (across all groups).
+    pub shards_processed: u64,
+    /// Intervals processed (across all groups).
+    pub intervals_processed: u64,
+    /// Instructions issued.
+    pub instructions: u64,
+}
+
+impl SimResult {
+    pub fn vu_utilization(&self) -> f64 {
+        (self.vu_busy / self.cycles.max(1.0)).min(1.0)
+    }
+
+    pub fn mu_utilization(&self) -> f64 {
+        (self.mu_busy / self.cycles.max(1.0)).min(1.0)
+    }
+
+    pub fn bw_utilization(&self) -> f64 {
+        (self.dram_busy / self.cycles.max(1.0)).min(1.0)
+    }
+
+    /// Paper Fig 10 metric: mean of DRAM-bandwidth, VU and MU utilisation.
+    pub fn overall_utilization(&self) -> f64 {
+        (self.vu_utilization() + self.mu_utilization() + self.bw_utilization()) / 3.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_accumulates() {
+        let mut t = Traffic::default();
+        t.add(TrafficTag::SrcVertex, 100);
+        t.add(TrafficTag::SrcVertex, 50);
+        t.add(TrafficTag::Meta, 8);
+        assert_eq!(t.get(TrafficTag::SrcVertex), 150);
+        assert_eq!(t.total(), 158);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let r = SimResult {
+            cycles: 100.0,
+            seconds: 1e-7,
+            vu_busy: 50.0,
+            mu_busy: 100.0,
+            dram_busy: 25.0,
+            traffic: Traffic::default(),
+            shards_processed: 1,
+            intervals_processed: 1,
+            instructions: 10,
+        };
+        assert!((r.vu_utilization() - 0.5).abs() < 1e-12);
+        assert!((r.overall_utilization() - (0.5 + 1.0 + 0.25) / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,70 @@
+//! Minimal benchmark harness (criterion is not available in the offline
+//! image). Provides warm-up, repeated timed runs, and robust summary
+//! statistics; bench binaries (`rust/benches/*.rs`, `harness = false`)
+//! use it to time harness execution *and* to print the paper-figure series.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over timed iterations.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+}
+
+/// Time `f` with `warmup` unrecorded runs followed by `iters` recorded runs.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    Stats {
+        iters,
+        mean: total / iters as u32,
+        median: samples[iters / 2],
+        min: samples[0],
+        max: samples[iters - 1],
+    }
+}
+
+/// Print a one-line bench report in a stable grep-able format.
+pub fn report(name: &str, stats: &Stats) {
+    println!(
+        "bench {name:40} mean {:>12?} median {:>12?} min {:>12?} max {:>12?} (n={})",
+        stats.mean, stats.median, stats.min, stats.max, stats.iters
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_exact_iters() {
+        let mut count = 0usize;
+        let s = bench(2, 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+}

@@ -1,0 +1,104 @@
+//! Full-harness integration: the figure pipelines run end to end at a tiny
+//! scale and reproduce the paper's qualitative claims.
+
+use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::graph::datasets::Dataset;
+use switchblade::ir::models::Model;
+use switchblade::sim::AcceleratorConfig;
+
+fn harness() -> (Harness, GraphCache) {
+    let h = Harness {
+        scale: 9,
+        ..Default::default()
+    };
+    let cache = GraphCache::new(h.scale);
+    (h, cache)
+}
+
+#[test]
+fn sweep_produces_full_grid() {
+    let (h, cache) = harness();
+    let rows = h.eval_all(&cache);
+    assert_eq!(rows.len(), Model::ALL.len() * Dataset::ALL.len());
+    for r in &rows {
+        assert!(r.sim.cycles > 0.0);
+        assert!(r.gpu.seconds > 0.0);
+        assert!(r.energy.total_j() > 0.0);
+        assert_eq!(r.hygcn.is_some(), r.model == Model::Gcn);
+    }
+}
+
+#[test]
+fn headline_claims_hold_qualitatively() {
+    let (h, cache) = harness();
+    let rows = h.eval_all(&cache);
+    // Fig 7: SWITCHBLADE beats the GPU on average.
+    let speedups: Vec<f64> = rows.iter().map(|r| r.speedup_vs_gpu()).collect();
+    let geo = switchblade::util::geomean(&speedups);
+    assert!(geo > 1.2, "avg speedup {geo:.2} should exceed 1.2x");
+    // Fig 8: energy savings are an order of magnitude.
+    let savings: Vec<f64> = rows.iter().map(|r| r.energy_saving_vs_gpu()).collect();
+    assert!(switchblade::util::geomean(&savings) > 5.0);
+    // Fig 9: PLOF moves less data than the op-by-op paradigm everywhere.
+    for r in &rows {
+        assert!(
+            (r.sim.traffic.total() as f64) < r.gpu.dram_bytes as f64,
+            "{} on {}: accel traffic must undercut GPU",
+            r.model.name(),
+            r.dataset.code()
+        );
+    }
+}
+
+#[test]
+fn fig12_occupancy_gap() {
+    let (h, cache) = harness();
+    let t = h.fig12(&cache);
+    // FGGP is never worse, is near-full everywhere, and on the skewed
+    // graphs (HW, SL) opens a clear gap over the window-sliding baseline.
+    for row in &t.rows {
+        let fggp: f64 = row[1].parse().unwrap();
+        let dsw: f64 = row[2].parse().unwrap();
+        assert!(fggp + 1e-9 >= dsw, "{}: FGGP {fggp} < DSW {dsw}", row[0]);
+        assert!(fggp > 0.8, "{}: FGGP occupancy {fggp}", row[0]);
+        if row[0] == "HW" || row[0] == "SL" {
+            assert!(fggp > dsw + 0.1, "{}: FGGP {fggp} vs DSW {dsw}", row[0]);
+        }
+    }
+}
+
+#[test]
+fn fig11_u_curve_bottom_not_at_extremes() {
+    // At least on the skewed datasets the best thread count should be an
+    // interior point (2-4), matching the paper's U-curve.
+    let h = Harness {
+        scale: 8,
+        ..Default::default()
+    };
+    let cache = GraphCache::new(h.scale);
+    let g = cache.get(Dataset::Sl);
+    let counts = [1u32, 2, 3, 4, 6];
+    let cycles: Vec<f64> = counts
+        .iter()
+        .map(|&c| {
+            h.eval_one(Model::Gat, &g, &h.accel.with_sthreads(c)).2.cycles
+        })
+        .collect();
+    let best = cycles
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.total_cmp(b.1))
+        .unwrap()
+        .0;
+    assert!(
+        (1..=3).contains(&best),
+        "best sThread index {best} (counts {counts:?}, cycles {cycles:?})"
+    );
+}
+
+#[test]
+fn serving_config_presets_consistent() {
+    let accel = AcceleratorConfig::switchblade();
+    assert_eq!(accel.num_sthreads, 3); // matched to VU/MU/bandwidth (§VI)
+    assert_eq!(accel.shard_bytes(), accel.src_edge_buffer / 3);
+}

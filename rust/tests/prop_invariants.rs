@@ -1,0 +1,153 @@
+//! Property-based invariants over random graphs, models and budgets
+//! (hand-rolled Cases runner; proptest is unavailable offline).
+
+use switchblade::compiler::compile;
+use switchblade::exec::{reference, weights, Executor, Matrix};
+use switchblade::graph::{generators, Csr, EdgeList};
+use switchblade::ir::models::Model;
+use switchblade::isa::Space;
+use switchblade::partition::{partition_dsw, partition_fggp, PartitionConfig};
+use switchblade::util::prop::Cases;
+use switchblade::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng) -> Csr {
+    match rng.gen_range(4) {
+        0 => {
+            let n = 1usize << rng.usize_in(4, 9);
+            let e = rng.usize_in(n, 6 * n);
+            Csr::from_edge_list(&generators::rmat(n, e, 0.57, 0.19, 0.19, rng.next_u64()))
+        }
+        1 => {
+            let n = rng.usize_in(20, 400);
+            let e = rng.usize_in(n / 2, 4 * n);
+            Csr::from_edge_list(&generators::erdos_renyi(n, e, rng.next_u64()))
+        }
+        2 => {
+            let r = rng.usize_in(3, 20);
+            Csr::from_edge_list(&generators::mesh2d(r, rng.usize_in(3, 20), rng.bool(0.5)))
+        }
+        _ => {
+            let n = rng.usize_in(10, 300);
+            let m = rng.usize_in(1, 4.min(n - 1));
+            Csr::from_edge_list(&generators::barabasi_albert(n, m, rng.next_u64()))
+        }
+    }
+}
+
+fn random_cfg(rng: &mut Rng, prog: &switchblade::isa::Program) -> PartitionConfig {
+    PartitionConfig {
+        shard_bytes: rng.gen_range(63 * 1024) + 1024,
+        dst_bytes: rng.gen_range(255 * 1024) + 1024,
+        dim_src: prog.dim_src.max(1),
+        dim_edge: prog.dim_edge.max(1),
+        dim_dst: prog.dim_dst.max(1),
+        num_sthreads: rng.gen_range(4) as u32 + 1,
+    }
+}
+
+#[test]
+fn prop_partitions_valid_and_cover_all_edges() {
+    Cases::new(40).run("partition-validity", |rng| {
+        let g = random_graph(rng);
+        let prog = compile(&Model::Gcn.build(1, 8, 8, 8));
+        let cfg = random_cfg(rng, &prog);
+        let p = if rng.bool(0.5) {
+            partition_fggp(&g, cfg)
+        } else {
+            partition_dsw(&g, cfg)
+        };
+        p.validate().expect("partition invariants");
+    });
+}
+
+#[test]
+fn prop_fggp_never_loads_more_than_dsw() {
+    Cases::new(25).run("fggp-traffic-dominance", |rng| {
+        let g = random_graph(rng);
+        let prog = compile(&Model::Gcn.build(1, 8, 8, 8));
+        let cfg = random_cfg(rng, &prog);
+        let loaded = |p: &switchblade::partition::Partitions| -> u64 {
+            p.shards.iter().map(|s| s.loaded_bytes(&p.config)).sum()
+        };
+        let f = loaded(&partition_fggp(&g, cfg));
+        let d = loaded(&partition_dsw(&g, cfg));
+        assert!(f <= d, "FGGP loaded {f} > DSW loaded {d}");
+    });
+}
+
+#[test]
+fn prop_compiled_equals_reference() {
+    Cases::new(16).run("compile-exec-vs-oracle", |rng| {
+        let g = random_graph(rng);
+        let model = Model::ALL[rng.usize_in(0, 4)];
+        let dim = [1u32, 2, 4, 8][rng.usize_in(0, 4)];
+        let layers = rng.gen_range(2) as u32 + 1;
+        let ir = model.build(layers, dim, dim, dim);
+        let prog = compile(&ir);
+        let cfg = random_cfg(rng, &prog);
+        let p = if rng.bool(0.5) {
+            partition_fggp(&g, cfg)
+        } else {
+            partition_dsw(&g, cfg)
+        };
+        let x = weights::init_features(rng.next_u64(), g.num_vertices(), dim as usize);
+        let mut deg = Matrix::zeros(g.num_vertices(), 1);
+        for v in 0..g.num_vertices() {
+            deg.set(v, 0, g.in_degree(v as u32) as f32);
+        }
+        let got = Executor::new(&prog, &p).run(&x, &deg);
+        let want = reference::evaluate(&ir, &g, &x);
+        assert!(
+            got.allclose(&want, 1e-3, 1e-4),
+            "{} x{layers} d{dim} on {} vertices ({:?}): {}",
+            model.name(),
+            g.num_vertices(),
+            p.method,
+            got.max_abs_diff(&want)
+        );
+    });
+}
+
+#[test]
+fn prop_simulation_deterministic_and_bounded() {
+    Cases::new(12).run("sim-sanity", |rng| {
+        use switchblade::sim::{simulate, AcceleratorConfig};
+        let g = random_graph(rng);
+        let model = Model::ALL[rng.usize_in(0, 4)];
+        let prog = compile(&model.build(2, 16, 16, 16));
+        let accel = AcceleratorConfig::switchblade()
+            .with_sthreads(rng.gen_range(5) as u32 + 1);
+        let parts = partition_fggp(&g, accel.partition_config(&prog));
+        let a = simulate(&prog, &parts, &accel);
+        let b = simulate(&prog, &parts, &accel);
+        assert_eq!(a.cycles.to_bits(), b.cycles.to_bits(), "determinism");
+        assert!(a.vu_busy <= a.cycles + 1.0);
+        assert!(a.mu_busy <= a.cycles + 1.0);
+        assert!(a.dram_busy <= a.cycles + 1.0);
+        assert!(a.traffic.total() > 0);
+    });
+}
+
+#[test]
+fn prop_liveness_merging_preserves_budgets() {
+    // dim_src/dim_edge after merging never exceed the naive sum of all
+    // S/E symbol widths, and every instruction references table entries.
+    Cases::new(20).run("liveness-consistency", |rng| {
+        let model = Model::ALL[rng.usize_in(0, 4)];
+        let dim = [4u32, 8, 16][rng.usize_in(0, 3)];
+        let prog = compile(&model.build(2, dim, dim, dim));
+        for g in &prog.groups {
+            for i in g.all_instrs() {
+                for s in i.def().into_iter().chain(i.uses()) {
+                    assert!(
+                        prog.symbols.get(s).is_some(),
+                        "{}: instr references unknown symbol {s}",
+                        prog.model_name
+                    );
+                }
+            }
+        }
+        assert!(prog.dim_src <= prog.symbols.total_cols(Space::S));
+        assert!(prog.dim_edge <= prog.symbols.total_cols(Space::E));
+    });
+}
