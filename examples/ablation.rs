@@ -8,7 +8,7 @@
 //!   cargo run --release --example ablation
 
 use switchblade::compiler::{compile, compile_with, CompilerOptions};
-use switchblade::coordinator::GraphCache;
+use switchblade::coordinator::Caches;
 use switchblade::graph::datasets::Dataset;
 use switchblade::ir::models::Model;
 use switchblade::partition::{partition_dsw, partition_fggp};
@@ -16,8 +16,8 @@ use switchblade::sim::{simulate, AcceleratorConfig};
 use switchblade::util::report::{f, Table};
 
 fn main() {
-    let cache = GraphCache::new(7);
-    let g = cache.get(Dataset::Sl);
+    let cache = Caches::new(7);
+    let g = cache.graph(Dataset::Sl);
     let prog = compile(&Model::Gcn.build_paper());
     let mut t = Table::new(
         "GCN on soc-LiveJournal: method ablation",

@@ -11,7 +11,7 @@
 //!   make artifacts && cargo run --release --example end_to_end
 
 use switchblade::compiler::compile;
-use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::coordinator::{Caches, Harness};
 use switchblade::exec::{reference, weights, Executor, Matrix};
 use switchblade::graph::Csr;
 use switchblade::ir::models::Model;
@@ -23,8 +23,15 @@ fn main() {
     // ---- Part 1: numerics through the real PJRT runtime -------------------
     let shape = ArtifactShape::default();
     let dir = artifacts_dir();
-    if dir.join(shape.file_name("gcn")).exists() {
-        let rt = Runtime::cpu().expect("PJRT CPU client");
+    let rt = if dir.join(shape.file_name("gcn")).exists() {
+        Runtime::cpu()
+            .map_err(|e| println!("(skipping PJRT check: {e:#})\n"))
+            .ok()
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT check)\n");
+        None
+    };
+    if let Some(rt) = rt {
         println!("PJRT platform: {}", rt.platform());
         let el = switchblade::graph::generators::rmat(shape.n, shape.e, 0.57, 0.19, 0.19, 99);
         let g = Csr::from_edge_list(&el);
@@ -57,13 +64,11 @@ fn main() {
             assert!(isa_out.allclose(&got, 1e-3, 1e-4));
         }
         println!("three-way numerics agreement: OK\n");
-    } else {
-        println!("(artifacts missing — run `make artifacts` for the PJRT check)\n");
     }
 
     // ---- Part 2: the paper's headline metric -------------------------------
     let h = Harness { scale: 7, ..Default::default() };
-    let cache = GraphCache::new(h.scale);
+    let cache = Caches::new(h.scale);
     println!("running the 4x5 evaluation sweep (scale 1/2^7)...");
     let rows = h.eval_all(&cache);
     h.fig07(&rows).print();

@@ -5,7 +5,7 @@
 //!   cargo run --release --example model_zoo
 
 use switchblade::compiler::compile;
-use switchblade::coordinator::GraphCache;
+use switchblade::coordinator::Caches;
 use switchblade::graph::datasets::Dataset;
 use switchblade::ir::models::Model;
 use switchblade::partition::partition_fggp;
@@ -13,8 +13,8 @@ use switchblade::sim::{simulate, AcceleratorConfig};
 use switchblade::util::report::{f, Table};
 
 fn main() {
-    let cache = GraphCache::new(4);
-    let g = cache.get(Dataset::Ad);
+    let cache = Caches::new(4);
+    let g = cache.graph(Dataset::Ad);
     let accel = AcceleratorConfig::switchblade();
     let mut t = Table::new(
         "model zoo on coAuthorsDBLP",

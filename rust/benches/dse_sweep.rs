@@ -1,0 +1,25 @@
+//! DSE smoke bench — a budgeted `tune` sweep on GCN/ak2010, then the same
+//! sweep again on warm caches (the second run should be dominated by
+//! simulation only: every graph/program/partition lookup hits).
+
+use switchblade::dse::{tune, Caches, TuneOptions};
+use switchblade::graph::datasets::Dataset;
+use switchblade::ir::models::Model;
+use switchblade::util::bench;
+
+fn main() {
+    let scale = 8;
+    let caches = Caches::new(scale);
+    let opts = TuneOptions {
+        budget: 24,
+        ..Default::default()
+    };
+    let cold = bench::bench(0, 1, || tune(Model::Gcn, Dataset::Ak, &caches, &opts));
+    bench::report("dse/tune(GCN,AK,24pts) cold", &cold);
+    let warm = bench::bench(0, 1, || tune(Model::Gcn, Dataset::Ak, &caches, &opts));
+    bench::report("dse/tune(GCN,AK,24pts) warm", &warm);
+
+    let r = tune(Model::Gcn, Dataset::Ak, &caches, &opts);
+    r.frontier_table().print();
+    print!("{}", r.summary());
+}

@@ -2,13 +2,13 @@
 //! Regenerates the figure series and times the harness (hand-rolled
 //! harness; criterion is unavailable offline).
 
-use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::coordinator::{Caches, Harness};
 use switchblade::util::bench;
 
 fn main() {
     let scale = 8; // bench scale: fast but non-trivial
     let h = Harness { scale, ..Default::default() };
-    let cache = GraphCache::new(scale);
+    let cache = Caches::new(scale);
     let stats = bench::bench(1, 3, || h.eval_all(&cache));
     bench::report("fig07/eval_all(4x5)", &stats);
     let rows = h.eval_all(&cache);

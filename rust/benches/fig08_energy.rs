@@ -1,12 +1,12 @@
 //! Fig 8 — energy saving over the V100 GPU.
 
-use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::coordinator::{Caches, Harness};
 use switchblade::util::bench;
 
 fn main() {
     let scale = 8;
     let h = Harness { scale, ..Default::default() };
-    let cache = GraphCache::new(scale);
+    let cache = Caches::new(scale);
     let rows = h.eval_all(&cache);
     let stats = bench::bench(1, 5, || h.fig08(&rows));
     bench::report("fig08/render", &stats);

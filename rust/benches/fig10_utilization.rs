@@ -1,12 +1,12 @@
 //! Fig 10 — overall hardware utilisation with SLMT on (3 sThreads) vs off (1).
 
-use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::coordinator::{Caches, Harness};
 use switchblade::util::bench;
 
 fn main() {
     let scale = 8;
     let h = Harness { scale, ..Default::default() };
-    let cache = GraphCache::new(scale);
+    let cache = Caches::new(scale);
     let stats = bench::bench(0, 1, || h.fig10(&cache));
     bench::report("fig10/sweep(1v3 sThreads)", &stats);
     h.fig10(&cache).print();

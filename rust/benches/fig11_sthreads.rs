@@ -1,12 +1,12 @@
 //! Fig 11 — execution latency vs sThread count (the U-curve).
 
-use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::coordinator::{Caches, Harness};
 use switchblade::util::bench;
 
 fn main() {
     let scale = 8;
     let h = Harness { scale, ..Default::default() };
-    let cache = GraphCache::new(scale);
+    let cache = Caches::new(scale);
     let counts = [1u32, 2, 3, 4, 6];
     let stats = bench::bench(0, 1, || h.fig11(&cache, &counts));
     bench::report("fig11/sweep(T=1..6)", &stats);

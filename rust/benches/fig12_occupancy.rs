@@ -1,12 +1,12 @@
 //! Fig 12 — SEB occupancy: FGGP vs HyGCN-style window sliding.
 
-use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::coordinator::{Caches, Harness};
 use switchblade::util::bench;
 
 fn main() {
     let scale = 8;
     let h = Harness { scale, ..Default::default() };
-    let cache = GraphCache::new(scale);
+    let cache = Caches::new(scale);
     let stats = bench::bench(1, 3, || h.fig12(&cache));
     bench::report("fig12/partition(FGGP+DSW x5)", &stats);
     h.fig12(&cache).print();

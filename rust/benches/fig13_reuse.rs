@@ -1,12 +1,12 @@
 //! Fig 13 — data reuse from enlarging the DstBuffer (8 MB → 13 MB).
 
-use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::coordinator::{Caches, Harness};
 use switchblade::util::bench;
 
 fn main() {
     let scale = 8;
     let h = Harness { scale, ..Default::default() };
-    let cache = GraphCache::new(scale);
+    let cache = Caches::new(scale);
     let stats = bench::bench(0, 1, || h.fig13(&cache));
     bench::report("fig13/db_sweep", &stats);
     h.fig13(&cache).print();

@@ -1,9 +1,11 @@
 //! Experiment coordinator: fans the (model × dataset × config) sweeps out
-//! over OS threads, caches graphs/programs, and renders every table and
-//! figure of the paper's evaluation (§VII). This is the L3 driver the
-//! `switchblade repro` subcommand and all bench targets call into.
+//! over OS threads and renders every table and figure of the paper's
+//! evaluation (§VII). This is the L3 driver the `switchblade repro`
+//! subcommand and all bench targets call into. Graphs, compiled programs
+//! and partitionings are memoised through the generalized
+//! [`dse::cache`](crate::dse::cache) layer ([`Caches`]), shared with the
+//! `switchblade tune` design-space explorer.
 
-use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::baseline::{gpu_run, hygcn_run, GpuConfig, GpuResult, HygcnConfig, HygcnResult};
@@ -14,10 +16,12 @@ use crate::graph::datasets::Dataset;
 use crate::graph::Csr;
 use crate::ir::models::Model;
 use crate::isa::Program;
-use crate::partition::{partition_dsw, partition_fggp, stats as pstats, Partitions};
+use crate::partition::{partition_fggp, stats as pstats, Method, Partitions};
 use crate::sim::{simulate, AcceleratorConfig, SimResult};
 use crate::util::report::{f, speedup, Table};
 use crate::util::{geomean, mean};
+
+pub use crate::dse::cache::{Caches, GraphCache};
 
 /// Harness parameters.
 #[derive(Clone, Copy, Debug)]
@@ -62,36 +66,9 @@ impl EvalRow {
     }
 }
 
-/// Graph cache shared across the sweep (generation dominates runtime).
-pub struct GraphCache {
-    scale: u32,
-    graphs: Mutex<HashMap<Dataset, std::sync::Arc<Csr>>>,
-}
-
-impl GraphCache {
-    pub fn new(scale: u32) -> Self {
-        GraphCache {
-            scale,
-            graphs: Mutex::new(HashMap::new()),
-        }
-    }
-
-    pub fn get(&self, d: Dataset) -> std::sync::Arc<Csr> {
-        if let Some(g) = self.graphs.lock().unwrap().get(&d) {
-            return g.clone();
-        }
-        let g = std::sync::Arc::new(d.load(self.scale));
-        self.graphs
-            .lock()
-            .unwrap()
-            .entry(d)
-            .or_insert(g)
-            .clone()
-    }
-}
-
 impl Harness {
-    /// Compile + partition + simulate one combination.
+    /// Compile + partition + simulate one combination (uncached; the
+    /// cached path is [`Harness::eval_point`]).
     pub fn eval_one(&self, model: Model, g: &Csr, accel: &AcceleratorConfig) -> (Program, Partitions, SimResult) {
         let ir = model.build_paper();
         let prog = compile(&ir);
@@ -101,8 +78,24 @@ impl Harness {
         (prog, parts, sim)
     }
 
+    /// Simulate one (model, dataset, method, accel) point with program /
+    /// graph / partition reuse through the cache bundle.
+    pub fn eval_point(
+        &self,
+        model: Model,
+        dataset: Dataset,
+        method: Method,
+        accel: &AcceleratorConfig,
+        caches: &Caches,
+    ) -> SimResult {
+        let prog = caches.program(model);
+        let pc = accel.partition_config(&prog);
+        let parts = caches.partitions(dataset, method, pc);
+        simulate(&prog, &parts, accel)
+    }
+
     /// Full 4×5 sweep (Fig 7/8/9/10 input), fanned out over OS threads.
-    pub fn eval_all(&self, cache: &GraphCache) -> Vec<EvalRow> {
+    pub fn eval_all(&self, caches: &Caches) -> Vec<EvalRow> {
         let combos: Vec<(Model, Dataset)> = Model::ALL
             .iter()
             .flat_map(|&m| Dataset::ALL.iter().map(move |&d| (m, d)))
@@ -113,8 +106,8 @@ impl Harness {
             for chunk in combos.chunks(combos.len().div_ceil(num_workers())) {
                 s.spawn(move || {
                     for &(m, d) in chunk {
-                        let g = cache.get(d);
-                        let (_, _, sim) = self.eval_one(m, &g, &self.accel);
+                        let g = caches.graph(d);
+                        let sim = self.eval_point(m, d, Method::Fggp, &self.accel, caches);
                         let energy = switchblade_energy(&sim, self.accel.freq_hz, true);
                         let gpu = gpu_run(&m.build_paper(), &g, &self.gpu);
                         let hygcn = (m == Model::Gcn)
@@ -247,21 +240,18 @@ impl Harness {
     }
 
     /// Fig 10: overall HW utilisation, SLMT (3 sThreads) vs off (1).
-    pub fn fig10(&self, cache: &GraphCache) -> Table {
+    pub fn fig10(&self, caches: &Caches) -> Table {
         let mut t = Table::new(
             "Fig 10 — overall utilisation (mean of BW/VU/MU), 1 vs 3 sThreads",
             &["model", "dataset", "util@1", "util@3", "gain"],
         );
         for m in Model::ALL {
             for d in Dataset::ALL {
-                let g = cache.get(d);
                 let u1 = self
-                    .eval_one(m, &g, &self.accel.with_sthreads(1))
-                    .2
+                    .eval_point(m, d, Method::Fggp, &self.accel.with_sthreads(1), caches)
                     .overall_utilization();
                 let u3 = self
-                    .eval_one(m, &g, &self.accel.with_sthreads(3))
-                    .2
+                    .eval_point(m, d, Method::Fggp, &self.accel.with_sthreads(3), caches)
                     .overall_utilization();
                 t.row(vec![
                     m.name().into(),
@@ -276,7 +266,7 @@ impl Harness {
     }
 
     /// Fig 11: latency vs sThread count, normalised to 1 sThread.
-    pub fn fig11(&self, cache: &GraphCache, counts: &[u32]) -> Table {
+    pub fn fig11(&self, caches: &Caches, counts: &[u32]) -> Table {
         let mut headers: Vec<String> = vec!["model".into(), "dataset".into()];
         headers.extend(counts.iter().map(|c| format!("T={c}")));
         let mut t = Table::new(
@@ -285,14 +275,13 @@ impl Harness {
         );
         for m in Model::ALL {
             for d in Dataset::ALL {
-                let g = cache.get(d);
                 let base = self
-                    .eval_one(m, &g, &self.accel.with_sthreads(1))
-                    .2
+                    .eval_point(m, d, Method::Fggp, &self.accel.with_sthreads(1), caches)
                     .cycles;
                 let mut cells = vec![m.name().to_string(), d.code().to_string()];
                 for &c in counts {
-                    let r = self.eval_one(m, &g, &self.accel.with_sthreads(c)).2;
+                    let r =
+                        self.eval_point(m, d, Method::Fggp, &self.accel.with_sthreads(c), caches);
                     cells.push(f(r.cycles / base, 3));
                 }
                 t.row(cells);
@@ -302,17 +291,16 @@ impl Harness {
     }
 
     /// Fig 12: SEB occupancy, FGGP vs the HyGCN-style baseline.
-    pub fn fig12(&self, cache: &GraphCache) -> Table {
+    pub fn fig12(&self, caches: &Caches) -> Table {
         let mut t = Table::new(
             "Fig 12 — buffer occupancy rate (higher is better)",
             &["dataset", "FGGP", "DSW (HyGCN-style)"],
         );
-        let prog = compile(&Model::Gcn.build_paper());
+        let prog = caches.program(Model::Gcn);
         for d in Dataset::ALL {
-            let g = cache.get(d);
             let pc = self.accel.partition_config(&prog);
-            let occ_f = pstats::analyze(&partition_fggp(&g, pc)).occupancy_rate;
-            let occ_d = pstats::analyze(&partition_dsw(&g, pc)).occupancy_rate;
+            let occ_f = pstats::analyze(&caches.partitions(d, Method::Fggp, pc)).occupancy_rate;
+            let occ_d = pstats::analyze(&caches.partitions(d, Method::Dsw, pc)).occupancy_rate;
             t.row(vec![d.code().into(), f(occ_f, 3), f(occ_d, 3)]);
         }
         t
@@ -320,21 +308,20 @@ impl Harness {
 
     /// Fig 13: traffic reduction and speedup from enlarging the DstBuffer
     /// (8 MB → 13 MB) under FGGP.
-    pub fn fig13(&self, cache: &GraphCache) -> Table {
+    pub fn fig13(&self, caches: &Caches) -> Table {
         let mut t = Table::new(
             "Fig 13 — FGGP with DB 8 MB → 13 MB: traffic ratio and speedup",
             &["dataset", "traffic 13/8", "speedup"],
         );
         for d in Dataset::ALL {
-            let g = cache.get(d);
-            let base = self.eval_one(Model::Gcn, &g, &self.accel).2;
-            let big = self
-                .eval_one(
-                    Model::Gcn,
-                    &g,
-                    &self.accel.with_dst_buffer(13 * 1024 * 1024),
-                )
-                .2;
+            let base = self.eval_point(Model::Gcn, d, Method::Fggp, &self.accel, caches);
+            let big = self.eval_point(
+                Model::Gcn,
+                d,
+                Method::Fggp,
+                &self.accel.with_dst_buffer(13 * 1024 * 1024),
+                caches,
+            );
             t.row(vec![
                 d.code().into(),
                 f(big.traffic.total() as f64 / base.traffic.total() as f64, 3),
@@ -362,13 +349,13 @@ impl Harness {
     }
 
     /// Tbl IV: dataset summary (paper vs generated).
-    pub fn tbl04(&self, cache: &GraphCache) -> Table {
+    pub fn tbl04(&self, caches: &Caches) -> Table {
         let mut t = Table::new(
             "Tbl IV — datasets (synthetic stand-ins at harness scale)",
             &["dataset", "paper |V|", "paper |E|", "gen |V|", "gen |E|", "deg cv"],
         );
         for d in Dataset::ALL {
-            let g = cache.get(d);
+            let g = caches.graph(d);
             let (pv, pe) = d.paper_size();
             t.row(vec![
                 d.full_name().into(),
@@ -400,7 +387,7 @@ pub fn validate_numerics(model: Model, g: &Csr, accel: &AcceleratorConfig) -> f3
     got.max_abs_diff(&want)
 }
 
-fn num_workers() -> usize {
+pub(crate) fn num_workers() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)

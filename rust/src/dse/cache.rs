@@ -1,0 +1,304 @@
+//! Generalized memoization layer for the explore/evaluate pipeline.
+//!
+//! Design-space exploration revisits the same expensive intermediates
+//! thousands of times: the compiled program depends only on the model, a
+//! partitioning only on `(dataset, scale, method, PartitionConfig)`, and a
+//! generated graph only on `(dataset, scale)`. Each gets its own
+//! thread-safe cache with hit/miss accounting, and [`Caches`] bundles the
+//! three behind the derived-key lookups every caller actually wants.
+//!
+//! This subsumes the coordinator's original one-off `GraphCache`: the
+//! type of the same name here is a drop-in replacement (`new(scale)` /
+//! `get(dataset)`), and `coordinator` re-exports it for compatibility.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::compiler::compile;
+use crate::graph::datasets::Dataset;
+use crate::graph::Csr;
+use crate::ir::models::Model;
+use crate::isa::Program;
+use crate::partition::{Method, PartitionConfig, Partitions};
+
+/// Hit/miss counters for one cache (a miss is counted per `get` that had
+/// to build, so `hits + misses` equals the number of lookups).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// A keyed, thread-safe memo table. Lookups that race on the same fresh
+/// key may build twice (the map lock is not held across the build, so
+/// parallel sweeps never serialise on unrelated keys); the first insert
+/// wins and both callers see the same `Arc`.
+struct Memo<K, V> {
+    map: Mutex<HashMap<K, Arc<V>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<K: Eq + Hash, V> Memo<K, V> {
+    fn new() -> Self {
+        Memo {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn get_or_build(&self, key: K, build: impl FnOnce() -> V) -> Arc<V> {
+        if let Some(v) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return v.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let v = Arc::new(build());
+        self.map.lock().unwrap().entry(key).or_insert(v).clone()
+    }
+
+    fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Compiled programs keyed by model (the paper build is config-independent,
+/// so every design point of a sweep shares one compile).
+pub struct ProgramCache {
+    memo: Memo<Model, Program>,
+}
+
+impl Default for ProgramCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ProgramCache {
+    pub fn new() -> Self {
+        ProgramCache { memo: Memo::new() }
+    }
+
+    pub fn get(&self, m: Model) -> Arc<Program> {
+        self.memo.get_or_build(m, || compile(&m.build_paper()))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.memo.stats()
+    }
+}
+
+/// Generated graphs keyed by dataset at a fixed scale (generation
+/// dominates harness runtime).
+pub struct GraphCache {
+    scale: u32,
+    memo: Memo<Dataset, Csr>,
+}
+
+impl GraphCache {
+    pub fn new(scale: u32) -> Self {
+        GraphCache {
+            scale,
+            memo: Memo::new(),
+        }
+    }
+
+    pub fn scale(&self) -> u32 {
+        self.scale
+    }
+
+    pub fn get(&self, d: Dataset) -> Arc<Csr> {
+        let scale = self.scale;
+        self.memo.get_or_build(d, || d.load(scale))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.memo.stats()
+    }
+}
+
+/// Full partition-cache key: the graph identity plus everything the
+/// partitioners read. Two design points with different VU/MU geometry or
+/// DRAM map to the same key — those lookups are the near-free hits that
+/// make dense sweeps cheap.
+pub type PartitionKey = (Dataset, u32, Method, PartitionConfig);
+
+/// Partitionings keyed by [`PartitionKey`].
+pub struct PartitionCache {
+    memo: Memo<PartitionKey, Partitions>,
+}
+
+impl Default for PartitionCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PartitionCache {
+    pub fn new() -> Self {
+        PartitionCache { memo: Memo::new() }
+    }
+
+    pub fn get(
+        &self,
+        dataset: Dataset,
+        scale: u32,
+        method: Method,
+        pc: PartitionConfig,
+        g: &Csr,
+    ) -> Arc<Partitions> {
+        self.memo
+            .get_or_build((dataset, scale, method, pc), || method.run(g, pc))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.memo.stats()
+    }
+}
+
+/// Point-in-time view of all three caches (what `tune` reports).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheSnapshot {
+    pub graphs: CacheStats,
+    pub programs: CacheStats,
+    pub partitions: CacheStats,
+}
+
+impl CacheSnapshot {
+    /// One-line human summary for CLI/bench output.
+    pub fn summary(&self) -> String {
+        let one = |name: &str, s: &CacheStats| {
+            format!(
+                "{name} {}/{} hits ({:.0}%)",
+                s.hits,
+                s.lookups(),
+                100.0 * s.hit_rate()
+            )
+        };
+        format!(
+            "cache: {}, {}, {}",
+            one("programs", &self.programs),
+            one("partitions", &self.partitions),
+            one("graphs", &self.graphs)
+        )
+    }
+}
+
+/// The cache bundle threaded through the coordinator and the DSE
+/// evaluator: graph, program and partition lookups with one shared scale.
+pub struct Caches {
+    graphs: GraphCache,
+    programs: ProgramCache,
+    partitions: PartitionCache,
+}
+
+impl Caches {
+    pub fn new(scale: u32) -> Self {
+        Caches {
+            graphs: GraphCache::new(scale),
+            programs: ProgramCache::new(),
+            partitions: PartitionCache::new(),
+        }
+    }
+
+    pub fn scale(&self) -> u32 {
+        self.graphs.scale()
+    }
+
+    pub fn graph(&self, d: Dataset) -> Arc<Csr> {
+        self.graphs.get(d)
+    }
+
+    pub fn program(&self, m: Model) -> Arc<Program> {
+        self.programs.get(m)
+    }
+
+    /// Partitioning of `d` (at the bundle's scale) for `method` under `pc`,
+    /// generating the graph on demand.
+    pub fn partitions(&self, d: Dataset, method: Method, pc: PartitionConfig) -> Arc<Partitions> {
+        let g = self.graph(d);
+        self.partitions.get(d, self.scale(), method, pc, &g)
+    }
+
+    pub fn snapshot(&self) -> CacheSnapshot {
+        CacheSnapshot {
+            graphs: self.graphs.stats(),
+            programs: self.programs.stats(),
+            partitions: self.partitions.stats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::AcceleratorConfig;
+
+    #[test]
+    fn program_cache_counts_hits_and_misses() {
+        let c = ProgramCache::new();
+        let a = c.get(Model::Gcn);
+        let b = c.get(Model::Gcn);
+        assert!(Arc::ptr_eq(&a, &b));
+        let _ = c.get(Model::Gat);
+        let s = c.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 2);
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn graph_cache_reuses_generation() {
+        let c = GraphCache::new(10);
+        let a = c.get(Dataset::Ak);
+        let b = c.get(Dataset::Ak);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn partition_cache_key_distinguishes_method_and_config() {
+        let caches = Caches::new(10);
+        let prog = caches.program(Model::Gcn);
+        let accel = AcceleratorConfig::switchblade();
+        let pc = accel.partition_config(&prog);
+        let pc2 = accel.with_sthreads(1).partition_config(&prog);
+
+        let a = caches.partitions(Dataset::Ak, Method::Fggp, pc);
+        let b = caches.partitions(Dataset::Ak, Method::Fggp, pc); // hit
+        let c = caches.partitions(Dataset::Ak, Method::Dsw, pc); // miss: method
+        let d = caches.partitions(Dataset::Ak, Method::Fggp, pc2); // miss: config
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert!(!Arc::ptr_eq(&a, &d));
+
+        let s = caches.snapshot();
+        assert_eq!(s.partitions.hits, 1);
+        assert_eq!(s.partitions.misses, 3);
+        // The four partition lookups shared one generated graph.
+        assert_eq!(s.graphs.misses, 1);
+        assert_eq!(s.graphs.hits, 3);
+        assert!(s.summary().contains("partitions 1/4"));
+    }
+}

@@ -1,0 +1,144 @@
+//! Pareto analysis over evaluated design points: dominated-point
+//! elimination on (latency, energy, SRAM area proxy) and per-objective
+//! champions.
+
+use super::evaluate::EvalPoint;
+
+/// True iff `a` dominates `b`: no worse on every objective and strictly
+/// better on at least one (all objectives minimised). Exact ties dominate
+/// in neither direction, so duplicated points are both kept.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Indices of the non-dominated members of `objs` (each row one point), in
+/// input order.
+pub fn pareto_indices(objs: &[Vec<f64>]) -> Vec<usize> {
+    (0..objs.len())
+        .filter(|&i| !objs.iter().any(|other| dominates(other, &objs[i])))
+        .collect()
+}
+
+/// Non-dominated subset of evaluated points over
+/// `(latency, energy, sram)`, as indices into `points`.
+pub fn frontier(points: &[EvalPoint]) -> Vec<usize> {
+    let objs: Vec<Vec<f64>> = points.iter().map(|p| p.objectives().to_vec()).collect();
+    pareto_indices(&objs)
+}
+
+/// Scalar objective for champion selection and `tune --objective`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    Latency,
+    Energy,
+    Edp,
+}
+
+impl Objective {
+    pub const ALL: [Objective; 3] = [Objective::Latency, Objective::Energy, Objective::Edp];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Edp => "edp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s.to_ascii_lowercase().as_str() {
+            "latency" | "lat" | "time" => Some(Objective::Latency),
+            "energy" => Some(Objective::Energy),
+            "edp" => Some(Objective::Edp),
+            _ => None,
+        }
+    }
+
+    pub fn value(&self, p: &EvalPoint) -> f64 {
+        match self {
+            Objective::Latency => p.latency_s,
+            Objective::Energy => p.energy_j,
+            Objective::Edp => p.edp(),
+        }
+    }
+}
+
+/// Index of the point minimising `o` (ties broken by input order).
+pub fn champion(points: &[EvalPoint], o: Objective) -> Option<usize> {
+    points
+        .iter()
+        .enumerate()
+        .min_by(|a, b| o.value(a.1).total_cmp(&o.value(b.1)))
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::space::DesignPoint;
+
+    fn pt(latency_ms: f64, energy_mj: f64, sram_mb: u64) -> EvalPoint {
+        EvalPoint {
+            point: DesignPoint::paper_default(),
+            cycles: latency_ms * 1e6,
+            latency_s: latency_ms * 1e-3,
+            energy_j: energy_mj * 1e-3,
+            sram_bytes: sram_mb * 1024 * 1024,
+            utilization: 0.5,
+            traffic_bytes: 1,
+            shards: 1,
+        }
+    }
+
+    #[test]
+    fn dominance_requires_strict_improvement() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 1.0]));
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "ties dominate neither way");
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 1.0]), "trade-offs do not dominate");
+        assert!(!dominates(&[2.0, 1.0], &[1.0, 1.0]));
+    }
+
+    #[test]
+    fn frontier_drops_dominated_keeps_ties() {
+        let points = vec![
+            pt(1.0, 9.0, 8),  // fastest
+            pt(9.0, 1.0, 8),  // most efficient
+            pt(5.0, 5.0, 4),  // smallest
+            pt(6.0, 6.0, 8),  // dominated by (5.0, 5.0, 4)
+            pt(5.0, 5.0, 4),  // exact duplicate of the smallest: kept
+        ];
+        let f = frontier(&points);
+        assert_eq!(f, vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn champions_per_objective() {
+        let points = vec![pt(1.0, 9.0, 8), pt(9.0, 1.0, 8), pt(3.0, 2.0, 4)];
+        assert_eq!(champion(&points, Objective::Latency), Some(0));
+        assert_eq!(champion(&points, Objective::Energy), Some(1));
+        // EDP: 9, 9, 6 (in 1e-6 J·s units) → the balanced point wins.
+        assert_eq!(champion(&points, Objective::Edp), Some(2));
+        assert_eq!(champion(&[], Objective::Latency), None);
+    }
+
+    #[test]
+    fn objective_parsing() {
+        assert_eq!(Objective::parse("latency"), Some(Objective::Latency));
+        assert_eq!(Objective::parse("EDP"), Some(Objective::Edp));
+        assert_eq!(Objective::parse("power"), None);
+        for o in Objective::ALL {
+            assert_eq!(Objective::parse(o.name()), Some(o));
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Declarative design space: which architecture/partition knobs the
+//! explorer may turn, and how a concrete [`DesignPoint`] maps back onto an
+//! [`AcceleratorConfig`] + partition method.
+//!
+//! Axes follow the co-design thesis: sThread count (SLMT, §IV-C), the two
+//! streaming buffers (DB/SEB, Tbl III + Fig 13), VU/MU geometry, off-chip
+//! memory generation (HBM1 vs HBM2), and the partition method (FGGP vs
+//! DSW). The space is a plain cartesian grid; budgeted sampling draws a
+//! fixed-seed random subset so even tiny budgets cover every axis without
+//! stride-aliasing artefacts.
+
+use crate::partition::Method;
+use crate::sim::{AcceleratorConfig, DramConfig, HBM1, HBM2};
+
+/// Off-chip memory generation — a named, hashable stand-in for the
+/// float-valued [`DramConfig`] presets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemoryKind {
+    Hbm1,
+    Hbm2,
+}
+
+impl MemoryKind {
+    pub const ALL: [MemoryKind; 2] = [MemoryKind::Hbm1, MemoryKind::Hbm2];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemoryKind::Hbm1 => "HBM1",
+            MemoryKind::Hbm2 => "HBM2",
+        }
+    }
+
+    pub fn config(&self) -> DramConfig {
+        match self {
+            MemoryKind::Hbm1 => HBM1,
+            MemoryKind::Hbm2 => HBM2,
+        }
+    }
+}
+
+/// One candidate configuration: everything the evaluate stage needs to
+/// build the hardware model and the partitioning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DesignPoint {
+    pub num_sthreads: u32,
+    pub dst_buffer: u64,
+    pub src_edge_buffer: u64,
+    /// VU geometry: (SIMD cores, lanes per core).
+    pub vu: (u32, u32),
+    /// MU geometry: (systolic rows, cols).
+    pub mu: (u32, u32),
+    pub memory: MemoryKind,
+    pub method: Method,
+}
+
+impl DesignPoint {
+    /// The Tbl III SWITCHBLADE row with FGGP — the paper's shipped design,
+    /// always evaluated as the sweep baseline.
+    pub fn paper_default() -> Self {
+        DesignPoint {
+            num_sthreads: 3,
+            dst_buffer: 8 * 1024 * 1024,
+            src_edge_buffer: 1024 * 1024,
+            vu: (16, 32),
+            mu: (32, 128),
+            memory: MemoryKind::Hbm1,
+            method: Method::Fggp,
+        }
+    }
+
+    /// Materialise the accelerator model for this point. Clock, weight
+    /// and graph buffers stay at their Tbl III values — they are not
+    /// search axes. Zero-valued axes are clamped to 1 (same rule as the
+    /// `with_*` builders) so a degenerate user-built space cannot divide
+    /// by zero deep inside the sweep.
+    pub fn accel(&self) -> AcceleratorConfig {
+        AcceleratorConfig {
+            vu_cores: self.vu.0.max(1),
+            vu_lanes: self.vu.1.max(1),
+            mu_rows: self.mu.0.max(1),
+            mu_cols: self.mu.1.max(1),
+            dst_buffer: self.dst_buffer.max(1),
+            src_edge_buffer: self.src_edge_buffer.max(1),
+            num_sthreads: self.num_sthreads.max(1),
+            dram: self.memory.config(),
+            ..AcceleratorConfig::switchblade()
+        }
+    }
+
+    /// Compact one-cell label for tables/CSV.
+    pub fn label(&self) -> String {
+        format!(
+            "{} T{} DB{}M SEB{}K MU{}x{} VU{}x{} {}",
+            self.method.name(),
+            self.num_sthreads,
+            self.dst_buffer / (1024 * 1024),
+            self.src_edge_buffer / 1024,
+            self.mu.0,
+            self.mu.1,
+            self.vu.0,
+            self.vu.1,
+            self.memory.name(),
+        )
+    }
+}
+
+/// The declarative search space: one `Vec` of options per axis. The grid
+/// is the cartesian product of all axes.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub sthreads: Vec<u32>,
+    pub dst_buffer_bytes: Vec<u64>,
+    pub src_edge_buffer_bytes: Vec<u64>,
+    pub vu: Vec<(u32, u32)>,
+    pub mu: Vec<(u32, u32)>,
+    pub memories: Vec<MemoryKind>,
+    pub methods: Vec<Method>,
+}
+
+impl Default for SearchSpace {
+    /// The neighbourhood of the paper's design the evaluation chapters
+    /// actually probe: the Fig 11 sThread sweep, the Fig 13 DstBuffer
+    /// enlargement, halving/doubling the SEB, a half-height MU, both HBM
+    /// generations, and both partition methods (240 points).
+    fn default() -> Self {
+        SearchSpace {
+            sthreads: vec![1, 2, 3, 4, 6],
+            dst_buffer_bytes: vec![8 * 1024 * 1024, 13 * 1024 * 1024],
+            src_edge_buffer_bytes: vec![512 * 1024, 1024 * 1024, 2 * 1024 * 1024],
+            vu: vec![(16, 32)],
+            mu: vec![(32, 128), (16, 128)],
+            memories: vec![MemoryKind::Hbm1, MemoryKind::Hbm2],
+            methods: vec![Method::Fggp, Method::Dsw],
+        }
+    }
+}
+
+impl SearchSpace {
+    /// Number of points in the full grid.
+    pub fn len(&self) -> usize {
+        self.sthreads.len()
+            * self.dst_buffer_bytes.len()
+            * self.src_edge_buffer_bytes.len()
+            * self.vu.len()
+            * self.mu.len()
+            * self.memories.len()
+            * self.methods.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enumerate the full grid in row-major order (`sthreads` innermost).
+    pub fn enumerate(&self) -> Vec<DesignPoint> {
+        let mut out = Vec::with_capacity(self.len());
+        for &method in &self.methods {
+            for &memory in &self.memories {
+                for &mu in &self.mu {
+                    for &vu in &self.vu {
+                        for &src_edge_buffer in &self.src_edge_buffer_bytes {
+                            for &dst_buffer in &self.dst_buffer_bytes {
+                                for &num_sthreads in &self.sthreads {
+                                    out.push(DesignPoint {
+                                        num_sthreads,
+                                        dst_buffer,
+                                        src_edge_buffer,
+                                        vu,
+                                        mu,
+                                        memory,
+                                        method,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Deterministic subset of at most `budget` points (`budget == 0`
+    /// means exhaustive): a seeded shuffle of the grid, so every axis is
+    /// sampled without the aliasing a fixed stride would suffer when the
+    /// stride divides an axis length. The picked points are returned in
+    /// grid order.
+    pub fn sample(&self, budget: usize) -> Vec<DesignPoint> {
+        let all = self.enumerate();
+        if budget == 0 || all.len() <= budget {
+            return all;
+        }
+        let mut idx: Vec<usize> = (0..all.len()).collect();
+        crate::util::rng::Rng::new(0xD5E).shuffle(&mut idx);
+        idx.truncate(budget);
+        idx.sort_unstable();
+        idx.into_iter().map(|i| all[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_size_is_axis_product() {
+        let s = SearchSpace::default();
+        assert_eq!(s.len(), 5 * 2 * 3 * 1 * 2 * 2 * 2);
+        assert_eq!(s.enumerate().len(), s.len());
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn default_space_contains_paper_default() {
+        assert!(
+            SearchSpace::default()
+                .enumerate()
+                .contains(&DesignPoint::paper_default()),
+            "the Tbl III design must be a grid point of the default space"
+        );
+    }
+
+    #[test]
+    fn sample_respects_budget_and_spans_sthreads() {
+        let s = SearchSpace::default();
+        let picked = s.sample(16);
+        assert_eq!(picked.len(), 16);
+        let mut threads: Vec<u32> = picked.iter().map(|p| p.num_sthreads).collect();
+        threads.sort_unstable();
+        threads.dedup();
+        assert!(
+            threads.len() >= 2,
+            "budgeted sample must span several sThread counts, got {threads:?}"
+        );
+        // Exhaustive when the budget covers the grid (or is 0).
+        assert_eq!(s.sample(0).len(), s.len());
+        assert_eq!(s.sample(s.len() + 5).len(), s.len());
+    }
+
+    #[test]
+    fn paper_default_matches_tbl3() {
+        let a = DesignPoint::paper_default().accel();
+        let want = AcceleratorConfig::switchblade();
+        assert_eq!(a.num_sthreads, want.num_sthreads);
+        assert_eq!(a.dst_buffer, want.dst_buffer);
+        assert_eq!(a.src_edge_buffer, want.src_edge_buffer);
+        assert_eq!(a.sram_bytes(), want.sram_bytes());
+        assert_eq!(a.vu_throughput(), want.vu_throughput());
+        assert!((a.dram.bandwidth_bytes_per_s - want.dram.bandwidth_bytes_per_s).abs() < 1e-3);
+    }
+
+    #[test]
+    fn hbm2_point_gets_the_faster_memory() {
+        let p = DesignPoint {
+            memory: MemoryKind::Hbm2,
+            ..DesignPoint::paper_default()
+        };
+        assert!((p.accel().dram.bandwidth_bytes_per_s - 900.0e9).abs() < 1e-3);
+        assert!(p.label().contains("HBM2"));
+    }
+}

@@ -13,9 +13,14 @@
 //! * [`energy`] — area/power/energy models (Tbl V),
 //! * [`runtime`] — PJRT loader for the AOT-compiled JAX reference models,
 //! * [`coordinator`] — multi-threaded experiment fan-out + reporting,
-//! * [`graph`] — CSR/COO substrate and Tbl IV dataset stand-ins.
+//! * [`graph`] — CSR/COO substrate and Tbl IV dataset stand-ins,
+//! * [`dse`] — parallel design-space exploration & auto-tuning: budgeted
+//!   sweeps over (architecture × partition method) through a generalized
+//!   program/graph/partition cache layer, with Pareto reporting over
+//!   (latency, energy, SRAM area) — the `switchblade tune` subcommand.
 
 pub mod coordinator;
+pub mod dse;
 pub mod energy;
 pub mod exec;
 pub mod graph;

@@ -9,11 +9,12 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use switchblade::compiler::compile;
-use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::coordinator::{Caches, Harness};
+use switchblade::dse::{self, Objective, TuneOptions};
 use switchblade::exec::weights;
 use switchblade::graph::datasets::{Dataset, DEFAULT_SCALE};
 use switchblade::ir::models::Model;
-use switchblade::partition::{partition_dsw, partition_fggp, stats as pstats};
+use switchblade::partition::{stats as pstats, Method};
 use switchblade::runtime::{artifacts_dir, ArtifactShape, Runtime};
 use switchblade::sim::{simulate, AcceleratorConfig};
 use switchblade::util::report::{bytes, f as ff, Table};
@@ -30,6 +31,10 @@ COMMANDS:
                                            partition a graph and print stats
     simulate  <model> <dataset> [--scale N] [--sthreads T] [--method fggp|dsw]
                                            cycle-level simulation of one workload
+    tune      <model> <dataset> [--scale N] [--budget N] [--objective latency|energy|edp]
+              [--out DIR]                  design-space exploration: sweep accelerator
+                                           + partition configs, report Pareto frontier
+                                           (budget 0 = exhaustive; default 64)
     repro     [--fig 7|8|9|10|11|12|13] [--tbl 4|5] [--all] [--scale N] [--out DIR]
                                            regenerate the paper's figures/tables
     serve     [--model M] [--requests R]   PJRT serving demo over AOT artifacts
@@ -47,6 +52,7 @@ fn main() -> ExitCode {
         "compile" => cmd_compile(rest),
         "partition" => cmd_partition(rest),
         "simulate" => cmd_simulate(rest),
+        "tune" => cmd_tune(rest),
         "repro" => cmd_repro(rest),
         "serve" => cmd_serve(rest),
         "validate" => cmd_validate(),
@@ -93,6 +99,19 @@ fn parse_dataset(s: &str) -> Result<Dataset, String> {
     Dataset::parse(s).ok_or_else(|| format!("unknown dataset '{s}' (AK|AD|HW|CP|SL)"))
 }
 
+fn parse_method(s: &str) -> Result<Method, String> {
+    Method::parse(s).ok_or_else(|| format!("unknown method '{s}' (fggp|dsw)"))
+}
+
+/// Shared `<model> <dataset> [--scale N]` parsing for the workload-taking
+/// subcommands (simulate / tune).
+fn parse_workload(rest: &[String], cmd: &str) -> Result<(Model, Dataset, u32), String> {
+    let m = parse_model(rest.first().ok_or_else(|| format!("{cmd} needs a model"))?)?;
+    let d = parse_dataset(rest.get(1).ok_or_else(|| format!("{cmd} needs a dataset"))?)?;
+    let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
+    Ok((m, d, scale))
+}
+
 // ---- subcommands ---------------------------------------------------------------
 
 fn cmd_compile(rest: &[String]) -> Result<(), String> {
@@ -111,28 +130,19 @@ fn cmd_partition(rest: &[String]) -> Result<(), String> {
     let d = parse_dataset(rest.first().ok_or("partition needs a dataset")?)?;
     let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
     let m = parse_model(opt_val(rest, "--model").unwrap_or("GCN"))?;
-    let method = opt_val(rest, "--method").unwrap_or("fggp");
+    let method = parse_method(opt_val(rest, "--method").unwrap_or("fggp"))?;
     let accel = AcceleratorConfig::switchblade();
     let prog = compile(&m.build_paper());
     let pc = accel.partition_config(&prog);
     eprintln!("generating {} at scale {scale}...", d.full_name());
     let g = d.load(scale);
-    let parts = match method {
-        "fggp" => partition_fggp(&g, pc),
-        "dsw" => partition_dsw(&g, pc),
-        other => return Err(format!("unknown method '{other}'")),
-    };
+    let parts = method.run(&g, pc);
     parts
         .validate()
         .map_err(|e| format!("invalid partitioning: {e}"))?;
     let st = pstats::analyze(&parts);
     let mut t = Table::new(
-        &format!(
-            "{} / {} / {}",
-            d.full_name(),
-            m.name(),
-            method.to_uppercase()
-        ),
+        &format!("{} / {} / {}", d.full_name(), m.name(), method.name()),
         &["metric", "value"],
     );
     t.row(vec!["vertices".into(), g.num_vertices().to_string()]);
@@ -148,21 +158,15 @@ fn cmd_partition(rest: &[String]) -> Result<(), String> {
 }
 
 fn cmd_simulate(rest: &[String]) -> Result<(), String> {
-    let m = parse_model(rest.first().ok_or("simulate needs a model")?)?;
-    let d = parse_dataset(rest.get(1).ok_or("simulate needs a dataset")?)?;
-    let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
+    let (m, d, scale) = parse_workload(rest, "simulate")?;
     let sthreads = opt_u32(rest, "--sthreads", 3)?;
-    let method = opt_val(rest, "--method").unwrap_or("fggp");
+    let method = parse_method(opt_val(rest, "--method").unwrap_or("fggp"))?;
     let accel = AcceleratorConfig::switchblade().with_sthreads(sthreads);
     let prog = compile(&m.build_paper());
     let pc = accel.partition_config(&prog);
     eprintln!("generating {} at scale {scale}...", d.full_name());
     let g = d.load(scale);
-    let parts = match method {
-        "fggp" => partition_fggp(&g, pc),
-        "dsw" => partition_dsw(&g, pc),
-        other => return Err(format!("unknown method '{other}'")),
-    };
+    let parts = method.run(&g, pc);
     let r = simulate(&prog, &parts, &accel);
     let e = switchblade::energy::switchblade_energy(&r, accel.freq_hz, true);
     let mut t = Table::new(
@@ -170,7 +174,7 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
             "{} on {} (scale {scale}, {sthreads} sThreads, {})",
             m.name(),
             d.full_name(),
-            method.to_uppercase()
+            method.name()
         ),
         &["metric", "value"],
     );
@@ -188,6 +192,54 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `tune`: budgeted design-space exploration for one workload.
+fn cmd_tune(rest: &[String]) -> Result<(), String> {
+    let (m, d, scale) = parse_workload(rest, "tune")?;
+    let budget = opt_u32(rest, "--budget", 64)? as usize;
+    let obj_s = opt_val(rest, "--objective").unwrap_or("latency");
+    let objective = Objective::parse(obj_s)
+        .ok_or_else(|| format!("unknown objective '{obj_s}' (latency|energy|edp)"))?;
+    let out_dir = PathBuf::from(opt_val(rest, "--out").unwrap_or("results"));
+
+    let opts = TuneOptions {
+        budget,
+        objective,
+        ..Default::default()
+    };
+    let caches = Caches::new(scale);
+    eprintln!(
+        "tuning {} on {} (scale 1/2^{scale}): evaluating {} of {} grid points...",
+        m.name(),
+        d.full_name(),
+        if budget == 0 {
+            opts.space.len()
+        } else {
+            budget.min(opts.space.len())
+        },
+        opts.space.len()
+    );
+    let t0 = std::time::Instant::now();
+    let r = dse::tune(m, d, &caches, &opts);
+    eprintln!("swept {} points in {:?}", r.evaluated.len(), t0.elapsed());
+
+    println!();
+    r.frontier_table().print();
+    println!();
+    print!("{}", r.summary());
+    println!();
+
+    let slug = format!("{}_{}", m.name().to_lowercase(), d.code().to_lowercase());
+    let sweep = r.sweep_table();
+    let csv = out_dir.join(format!("dse_{slug}_sweep.csv"));
+    sweep.write_csv(&csv).map_err(|e| e.to_string())?;
+    let json = out_dir.join(format!("dse_{slug}_sweep.json"));
+    sweep.write_json(&json).map_err(|e| e.to_string())?;
+    let fcsv = out_dir.join(format!("dse_{slug}_frontier.csv"));
+    r.frontier_table().write_csv(&fcsv).map_err(|e| e.to_string())?;
+    eprintln!("wrote {}, {}, {}", csv.display(), json.display(), fcsv.display());
+    Ok(())
+}
+
 fn cmd_repro(rest: &[String]) -> Result<(), String> {
     let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
     let out_dir = PathBuf::from(opt_val(rest, "--out").unwrap_or("results"));
@@ -199,7 +251,7 @@ fn cmd_repro(rest: &[String]) -> Result<(), String> {
         scale,
         ..Default::default()
     };
-    let cache = GraphCache::new(scale);
+    let cache = Caches::new(scale);
     eprintln!("harness scale: 1/2^{scale} of paper dataset sizes");
 
     let want = |x: &str| all || fig == Some(x);
@@ -322,8 +374,8 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
 }
 
 fn cmd_validate() -> Result<(), String> {
-    let cache = GraphCache::new(9);
-    let g = cache.get(Dataset::Ak);
+    let cache = Caches::new(9);
+    let g = cache.graph(Dataset::Ak);
     let accel = AcceleratorConfig::switchblade();
     let mut t = Table::new(
         "numerics: compiled-ISA executor vs IR reference",
@@ -342,6 +394,9 @@ fn cmd_validate() -> Result<(), String> {
         }
     }
     t.print();
-    println!("(run `cargo test --test integration_runtime` for the PJRT three-way check)");
+    println!(
+        "(for the PJRT three-way check, add the `anyhow`/`xla` deps per rust/Cargo.toml's \
+         note, then run `cargo test --features pjrt --test integration_runtime`)"
+    );
     Ok(())
 }

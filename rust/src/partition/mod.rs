@@ -14,7 +14,7 @@ pub mod stats;
 pub use dsw::partition_dsw;
 pub use fggp::partition_fggp;
 
-use crate::graph::VertexId;
+use crate::graph::{Csr, VertexId};
 
 /// Partitioning method selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -27,18 +27,39 @@ pub enum Method {
 }
 
 impl Method {
+    /// Paper order: the contribution first, the baseline second.
+    pub const ALL: [Method; 2] = [Method::Fggp, Method::Dsw];
+
     pub fn name(&self) -> &'static str {
         match self {
             Method::Dsw => "DSW",
             Method::Fggp => "FGGP",
         }
     }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "fggp" => Some(Method::Fggp),
+            "dsw" | "dsw-gp" | "hygcn" => Some(Method::Dsw),
+            _ => None,
+        }
+    }
+
+    /// Run the selected partitioner — the single dispatch point shared by
+    /// the CLI, the experiment harness and the DSE sweep.
+    pub fn run(&self, g: &Csr, pc: PartitionConfig) -> Partitions {
+        match self {
+            Method::Fggp => partition_fggp(g, pc),
+            Method::Dsw => partition_dsw(g, pc),
+        }
+    }
 }
 
 /// Partitioning parameters. Data dimensions come from the compiler
 /// (`Program::dim_src` / `dim_edge` / `dim_dst`, §V-C3); memory budgets
-/// from the accelerator config (Tbl III).
-#[derive(Clone, Copy, Debug)]
+/// from the accelerator config (Tbl III). All-integer and hashable, so it
+/// doubles as the `dse::cache::PartitionCache` key component.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PartitionConfig {
     /// Per-sThread SrcEdgeBuffer budget in bytes — the RHS of Equ. 1
     /// (`mem_capacity / num_sThread`).

@@ -1,0 +1,212 @@
+//! The real PJRT runtime (compiled only with `--features pjrt`): load AOT
+//! HLO text produced by `python/compile/aot.py` and execute it on the CPU
+//! PJRT client via the `xla` crate. This is the only place Rust touches
+//! XLA; Python never runs on the request path.
+//!
+//! Interchange is HLO **text** (see aot.py): jax ≥ 0.5 emits protos with
+//! 64-bit ids that xla_extension 0.5.1 rejects; the text parser reassigns
+//! ids.
+//!
+//! Enabling the `pjrt` feature requires the `xla` and `anyhow` crates to
+//! be resolvable (they are not vendored in the offline image) — add them
+//! to `[dependencies]` in `rust/Cargo.toml` when building online.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::ArtifactShape;
+use crate::exec::Matrix;
+
+/// A compiled GNN executable on the PJRT CPU client.
+pub struct GnnExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub shape: ArtifactShape,
+    pub model: String,
+    pub path: PathBuf,
+}
+
+/// The PJRT runtime: one client, many loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Load a GNN model artifact produced by `make artifacts`.
+    pub fn load_model(
+        &self,
+        artifacts_dir: &Path,
+        model: &str,
+        shape: ArtifactShape,
+    ) -> Result<GnnExecutable> {
+        let path = artifacts_dir.join(shape.file_name(model));
+        let exe = self.load_hlo(&path)?;
+        Ok(GnnExecutable {
+            exe,
+            shape,
+            model: model.to_string(),
+            path,
+        })
+    }
+}
+
+impl GnnExecutable {
+    /// Execute on `(x [N,D], src [E], dst [E], deg [N,1])`; returns the
+    /// `[N, D]` output embeddings.
+    ///
+    /// Weights are runtime inputs (not HLO constants — the HLO text writer
+    /// elides large literals, see aot.py); they are regenerated from the
+    /// shared deterministic init in the same order as the compiler's
+    /// `Program::weights` / Python's `build_params`.
+    pub fn run(&self, x: &Matrix, src: &[i32], dst: &[i32], deg: &[f32]) -> Result<Matrix> {
+        let s = &self.shape;
+        anyhow::ensure!(x.rows == s.n && x.cols == s.d, "x shape {}x{}", x.rows, x.cols);
+        anyhow::ensure!(src.len() == s.e && dst.len() == s.e, "edge count");
+        anyhow::ensure!(deg.len() == s.n, "degree length");
+
+        let xl = xla::Literal::vec1(&x.data).reshape(&[s.n as i64, s.d as i64])?;
+        let sl = xla::Literal::vec1(src).reshape(&[s.e as i64])?;
+        let dl = xla::Literal::vec1(dst).reshape(&[s.e as i64])?;
+        let gl = xla::Literal::vec1(deg).reshape(&[s.n as i64, 1])?;
+
+        let mut args = vec![xl, sl, dl, gl];
+        for w in self.model_weights()? {
+            let lit =
+                xla::Literal::vec1(&w.data).reshape(&[w.rows as i64, w.cols as i64])?;
+            args.push(lit);
+        }
+
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        Ok(Matrix::from_vec(s.n, s.d, values))
+    }
+
+    /// The model's weight matrices, regenerated deterministically in the
+    /// same order the compiler allocates them (IR builder order).
+    fn model_weights(&self) -> Result<Vec<Matrix>> {
+        init_model_weights(&self.model, self.shape)
+    }
+}
+
+/// Regenerate a model's weight/bias matrices from the shared deterministic
+/// init, in IR builder order — the single source of the ordering contract
+/// between inference (`GnnExecutable`), training (`Trainer`) and the
+/// compiler's `Program::weights` / Python's `build_params`.
+fn init_model_weights(model: &str, shape: ArtifactShape) -> Result<Vec<Matrix>> {
+    let m = crate::ir::models::Model::parse(model)
+        .with_context(|| format!("unknown model {model}"))?;
+    let d = shape.d as u32;
+    let ir = m.build(2, d, d, d);
+    let mut out = Vec::new();
+    for node in &ir.nodes {
+        match node.op {
+            crate::ir::IrOp::Weight { rows, seed } => {
+                out.push(crate::exec::weights::init_weight(seed, rows, node.cols));
+            }
+            crate::ir::IrOp::Bias { seed } => {
+                out.push(crate::exec::weights::init_weight(seed, 1, node.cols));
+            }
+            _ => {}
+        }
+    }
+    Ok(out)
+}
+
+/// A training-step executable: one PJRT call returns `[loss, ∂W...]`,
+/// and the Rust side owns the SGD loop — full training with Python only
+/// at compile time.
+pub struct Trainer {
+    exe: xla::PjRtLoadedExecutable,
+    pub shape: ArtifactShape,
+    /// Current weights, in `build_params` order.
+    pub weights: Vec<Matrix>,
+    pub lr: f32,
+}
+
+impl Runtime {
+    /// Load the `<model>_train_*` artifact and initialise weights from
+    /// the shared deterministic scheme.
+    pub fn load_trainer(
+        &self,
+        artifacts_dir: &Path,
+        model: &str,
+        shape: ArtifactShape,
+        lr: f32,
+    ) -> Result<Trainer> {
+        let path = artifacts_dir.join(format!(
+            "{}_train_n{}_e{}_d{}.hlo.txt",
+            model, shape.n, shape.e, shape.d
+        ));
+        let exe = self.load_hlo(&path)?;
+        let weights = init_model_weights(model, shape)?;
+        Ok(Trainer {
+            exe,
+            shape,
+            weights,
+            lr,
+        })
+    }
+}
+
+impl Trainer {
+    /// One SGD step on `(x, src, dst, deg, target)`; returns the loss.
+    pub fn step(
+        &mut self,
+        x: &Matrix,
+        src: &[i32],
+        dst: &[i32],
+        deg: &[f32],
+        target: &Matrix,
+    ) -> Result<f32> {
+        let s = &self.shape;
+        let xl = xla::Literal::vec1(&x.data).reshape(&[s.n as i64, s.d as i64])?;
+        let sl = xla::Literal::vec1(src).reshape(&[s.e as i64])?;
+        let dl = xla::Literal::vec1(dst).reshape(&[s.e as i64])?;
+        let gl = xla::Literal::vec1(deg).reshape(&[s.n as i64, 1])?;
+        let tl = xla::Literal::vec1(&target.data).reshape(&[s.n as i64, s.d as i64])?;
+        let mut args = vec![xl, sl, dl, gl, tl];
+        for w in &self.weights {
+            args.push(
+                xla::Literal::vec1(&w.data).reshape(&[w.rows as i64, w.cols as i64])?,
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let packed = result.to_tuple1()?.to_vec::<f32>()?;
+        let loss = packed[0];
+        // Unpack gradients in weight order and apply SGD.
+        let mut off = 1usize;
+        for w in &mut self.weights {
+            let len = w.rows * w.cols;
+            for (wi, gi) in w.data.iter_mut().zip(&packed[off..off + len]) {
+                *wi -= self.lr * gi;
+            }
+            off += len;
+        }
+        anyhow::ensure!(off == packed.len(), "gradient size mismatch");
+        Ok(loss)
+    }
+}

@@ -1,0 +1,105 @@
+//! API-compatible stand-in for the PJRT runtime, compiled when the `pjrt`
+//! feature is off (the default — the offline image has neither the `xla`
+//! nor the `anyhow` crate). Every entry point fails fast with
+//! [`PjrtUnavailable`] so binaries, examples and the serving demo still
+//! build and degrade with a clear message instead of a link error.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use super::ArtifactShape;
+use crate::exec::Matrix;
+
+/// Error returned by every stub entry point.
+#[derive(Clone, Copy, Debug)]
+pub struct PjrtUnavailable;
+
+impl fmt::Display for PjrtUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "PJRT runtime not compiled in (rebuild with `--features pjrt` \
+             and the `xla`/`anyhow` crates available)"
+        )
+    }
+}
+
+impl std::error::Error for PjrtUnavailable {}
+
+pub type Result<T> = std::result::Result<T, PjrtUnavailable>;
+
+/// Stub PJRT runtime — construction always fails.
+pub struct Runtime {}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Err(PjrtUnavailable)
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-unavailable".into()
+    }
+
+    pub fn load_model(
+        &self,
+        _artifacts_dir: &Path,
+        _model: &str,
+        _shape: ArtifactShape,
+    ) -> Result<GnnExecutable> {
+        Err(PjrtUnavailable)
+    }
+
+    pub fn load_trainer(
+        &self,
+        _artifacts_dir: &Path,
+        _model: &str,
+        _shape: ArtifactShape,
+        _lr: f32,
+    ) -> Result<Trainer> {
+        Err(PjrtUnavailable)
+    }
+}
+
+/// Stub executable — never constructed (loading always fails).
+pub struct GnnExecutable {
+    pub shape: ArtifactShape,
+    pub model: String,
+    pub path: PathBuf,
+}
+
+impl GnnExecutable {
+    pub fn run(&self, _x: &Matrix, _src: &[i32], _dst: &[i32], _deg: &[f32]) -> Result<Matrix> {
+        Err(PjrtUnavailable)
+    }
+}
+
+/// Stub trainer — never constructed (loading always fails).
+pub struct Trainer {
+    pub shape: ArtifactShape,
+    pub weights: Vec<Matrix>,
+    pub lr: f32,
+}
+
+impl Trainer {
+    pub fn step(
+        &mut self,
+        _x: &Matrix,
+        _src: &[i32],
+        _dst: &[i32],
+        _deg: &[f32],
+        _target: &Matrix,
+    ) -> Result<f32> {
+        Err(PjrtUnavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_with_clear_message() {
+        let e = Runtime::cpu().err().expect("stub must not construct");
+        assert!(e.to_string().contains("--features pjrt"));
+    }
+}

@@ -19,8 +19,8 @@ pub const HBM1: DramConfig = DramConfig {
     energy_pj_per_bit: 7.0,
 };
 
-/// 900 GB/s HBM-2 (the V100 baseline; kept for custom configs).
-#[allow(dead_code)]
+/// 900 GB/s HBM-2 (the V100 baseline; a memory-axis option in the DSE
+/// search space — see `dse::space::MemoryKind`).
 pub const HBM2: DramConfig = DramConfig {
     bandwidth_bytes_per_s: 900.0e9,
     latency_ns: 100.0,
@@ -82,6 +82,25 @@ impl AcceleratorConfig {
         self
     }
 
+    /// Variant with a different SrcEdgeBuffer size (DSE memory axis).
+    pub fn with_src_edge_buffer(mut self, bytes: u64) -> Self {
+        self.src_edge_buffer = bytes.max(1);
+        self
+    }
+
+    /// Variant with a different off-chip memory (HBM1 vs HBM2).
+    pub fn with_dram(mut self, dram: DramConfig) -> Self {
+        self.dram = dram;
+        self
+    }
+
+    /// Total on-chip SRAM capacity (DstBuffer + SrcEdgeBuffer + weight +
+    /// graph buffers). RAM dominates Tbl V area (76%), so this is the
+    /// area proxy the DSE Pareto frontier minimises.
+    pub fn sram_bytes(&self) -> u64 {
+        self.dst_buffer + self.src_edge_buffer + self.weight_buffer + self.graph_buffer
+    }
+
     /// VU element throughput per cycle.
     pub fn vu_throughput(&self) -> u64 {
         self.vu_cores as u64 * self.vu_lanes as u64
@@ -134,5 +153,19 @@ mod tests {
         assert_eq!(c.num_sthreads, 5);
         let c = c.with_dst_buffer(13 * 1024 * 1024);
         assert_eq!(c.dst_buffer, 13 * 1024 * 1024);
+        let c = c.with_src_edge_buffer(2 * 1024 * 1024);
+        assert_eq!(c.src_edge_buffer, 2 * 1024 * 1024);
+        let c = c.with_dram(HBM2);
+        assert!((c.dram.bandwidth_bytes_per_s - 900.0e9).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sram_proxy_sums_all_buffers() {
+        let c = AcceleratorConfig::switchblade();
+        assert_eq!(
+            c.sram_bytes(),
+            (8 + 2) * 1024 * 1024 + 1024 * 1024 + 128 * 1024
+        );
+        assert!(c.with_dst_buffer(13 * 1024 * 1024).sram_bytes() > c.sram_bytes());
     }
 }

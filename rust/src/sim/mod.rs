@@ -26,7 +26,7 @@ mod dram;
 mod engine;
 mod stats;
 
-pub use config::{AcceleratorConfig, HBM1};
+pub use config::{AcceleratorConfig, DramConfig, HBM1, HBM2};
 pub use cost::CostModel;
 pub use dram::DramModel;
 pub use engine::simulate;

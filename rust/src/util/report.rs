@@ -58,6 +58,51 @@ impl Table {
         print!("{}", self.render());
     }
 
+    /// Write the table as JSON: `{"title": ..., "rows": [...]}` with one
+    /// object per row keyed by the headers (all values emitted as JSON
+    /// strings — cells are already formatted).
+    pub fn write_json(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let esc = |c: &str| {
+            let mut s = String::with_capacity(c.len() + 2);
+            s.push('"');
+            for ch in c.chars() {
+                match ch {
+                    '"' => s.push_str("\\\""),
+                    '\\' => s.push_str("\\\\"),
+                    '\n' => s.push_str("\\n"),
+                    '\r' => s.push_str("\\r"),
+                    '\t' => s.push_str("\\t"),
+                    c if (c as u32) < 0x20 => {
+                        let _ = write!(s, "\\u{:04x}", c as u32);
+                    }
+                    c => s.push(c),
+                }
+            }
+            s.push('"');
+            s
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{{");
+        let _ = writeln!(out, "  \"title\": {},", esc(&self.title));
+        let _ = writeln!(out, "  \"rows\": [");
+        for (ri, r) in self.rows.iter().enumerate() {
+            let fields: Vec<String> = self
+                .headers
+                .iter()
+                .zip(r)
+                .map(|(h, c)| format!("{}: {}", esc(h), esc(c)))
+                .collect();
+            let comma = if ri + 1 < self.rows.len() { "," } else { "" };
+            let _ = writeln!(out, "    {{{}}}{comma}", fields.join(", "));
+        }
+        let _ = writeln!(out, "  ]");
+        let _ = writeln!(out, "}}");
+        fs::write(path, out)
+    }
+
     /// Write the table as CSV (for EXPERIMENTS.md provenance).
     pub fn write_csv(&self, path: &Path) -> io::Result<()> {
         if let Some(dir) = path.parent() {
@@ -136,6 +181,20 @@ mod tests {
         assert_eq!(bytes(512), "512 B");
         assert_eq!(bytes(2048), "2.00 KB");
         assert_eq!(bytes(8 * 1024 * 1024), "8.00 MB");
+    }
+
+    #[test]
+    fn json_escapes_and_structures() {
+        let mut t = Table::new("j\"son", &["a", "b"]);
+        t.row(vec!["x\ny".into(), "1.5".into()]);
+        t.row(vec!["plain".into(), "2".into()]);
+        let p = std::env::temp_dir().join("switchblade_test_json.json");
+        t.write_json(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("\"title\": \"j\\\"son\""));
+        assert!(s.contains("{\"a\": \"x\\ny\", \"b\": \"1.5\"},"));
+        assert!(s.contains("{\"a\": \"plain\", \"b\": \"2\"}\n"));
+        let _ = std::fs::remove_file(p);
     }
 
     #[test]

@@ -1,0 +1,107 @@
+//! End-to-end design-space exploration: a tiny budgeted `tune` sweep at
+//! small scale, exercising the full search-space → parallel-evaluate →
+//! Pareto → report pipeline plus the CSV/JSON emission the CLI uses.
+
+use switchblade::dse::{
+    tune, Caches, DesignPoint, MemoryKind, Objective, SearchSpace, TuneOptions,
+};
+use switchblade::graph::datasets::Dataset;
+use switchblade::ir::models::Model;
+use switchblade::partition::Method;
+
+fn tiny_space() -> SearchSpace {
+    SearchSpace {
+        sthreads: vec![1, 3, 4],
+        dst_buffer_bytes: vec![8 * 1024 * 1024, 13 * 1024 * 1024],
+        src_edge_buffer_bytes: vec![1024 * 1024],
+        vu: vec![(16, 32)],
+        mu: vec![(32, 128), (16, 128)],
+        memories: vec![MemoryKind::Hbm1, MemoryKind::Hbm2],
+        methods: vec![Method::Fggp, Method::Dsw],
+    }
+}
+
+/// The `switchblade tune GCN AK --scale 9` acceptance scenario: default
+/// search space, default budget.
+#[test]
+fn tune_gcn_ak_default_space_end_to_end() {
+    let caches = Caches::new(9);
+    let opts = TuneOptions::default();
+    let r = tune(Model::Gcn, Dataset::Ak, &caches, &opts);
+
+    // Budget respected (+1 possible for the appended Tbl III baseline).
+    assert!(
+        r.evaluated.len() >= opts.budget && r.evaluated.len() <= opts.budget + 1,
+        "{}",
+        r.evaluated.len()
+    );
+    assert_eq!(r.baseline.point, DesignPoint::paper_default());
+    for e in &r.evaluated {
+        assert!(e.cycles > 0.0 && e.latency_s > 0.0);
+        assert!(e.energy_j > 0.0 && e.sram_bytes > 0);
+    }
+
+    // A non-trivial frontier spanning several sThread counts (the SEB
+    // tiers alone guarantee distinct SRAM champions).
+    assert!(r.frontier.len() >= 3, "frontier: {:?}", r.frontier);
+    let mut threads: Vec<u32> = r
+        .frontier_points()
+        .iter()
+        .map(|e| e.point.num_sthreads)
+        .collect();
+    threads.sort_unstable();
+    threads.dedup();
+    assert!(threads.len() >= 2, "frontier sThreads: {threads:?}");
+
+    // The tuner can never report a best-latency point slower than the
+    // paper default it always evaluates.
+    assert!(r.best(Objective::Latency).latency_s <= r.baseline.latency_s);
+    assert!(r.best(Objective::Energy).energy_j <= r.baseline.energy_j);
+
+    // Points differing only in MU geometry / memory share partitionings.
+    assert!(r.caches.partitions.hits > 0, "{}", r.caches.summary());
+
+    // Report artifacts render and write.
+    let rendered = r.frontier_table().render();
+    assert!(rendered.contains("Pareto frontier"));
+    let dir = std::env::temp_dir().join("switchblade_dse_test");
+    let csv = dir.join("sweep.csv");
+    let json = dir.join("sweep.json");
+    r.sweep_table().write_csv(&csv).unwrap();
+    r.sweep_table().write_json(&json).unwrap();
+    let csv_s = std::fs::read_to_string(&csv).unwrap();
+    assert_eq!(csv_s.lines().count(), r.evaluated.len() + 1, "header + one line per point");
+    let json_s = std::fs::read_to_string(&json).unwrap();
+    assert!(json_s.contains("\"latency ms\""));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_caches_make_repeat_sweeps_free() {
+    let caches = Caches::new(10);
+    let opts = TuneOptions {
+        space: tiny_space(),
+        budget: 8,
+        objective: Objective::Edp,
+    };
+    let first = tune(Model::Gcn, Dataset::Ak, &caches, &opts);
+    let after_first = first.caches;
+    let second = tune(Model::Gcn, Dataset::Ak, &caches, &opts);
+    let after_second = second.caches;
+
+    // The repeat sweep must not rebuild anything: misses stay flat while
+    // lookups grow.
+    assert_eq!(after_first.partitions.misses, after_second.partitions.misses);
+    assert_eq!(after_first.graphs.misses, after_second.graphs.misses);
+    assert_eq!(after_first.programs.misses, after_second.programs.misses);
+    assert!(after_second.partitions.hits > after_first.partitions.hits);
+
+    // Determinism: identical sweep → identical results.
+    assert_eq!(first.evaluated.len(), second.evaluated.len());
+    for (a, b) in first.evaluated.iter().zip(&second.evaluated) {
+        assert_eq!(a.point, b.point);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy_j, b.energy_j);
+    }
+    assert_eq!(first.frontier, second.frontier);
+}

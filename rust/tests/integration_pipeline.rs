@@ -1,17 +1,17 @@
 //! Full-harness integration: the figure pipelines run end to end at a tiny
 //! scale and reproduce the paper's qualitative claims.
 
-use switchblade::coordinator::{GraphCache, Harness};
+use switchblade::coordinator::{Caches, Harness};
 use switchblade::graph::datasets::Dataset;
 use switchblade::ir::models::Model;
 use switchblade::sim::AcceleratorConfig;
 
-fn harness() -> (Harness, GraphCache) {
+fn harness() -> (Harness, Caches) {
     let h = Harness {
         scale: 9,
         ..Default::default()
     };
-    let cache = GraphCache::new(h.scale);
+    let cache = Caches::new(h.scale);
     (h, cache)
 }
 
@@ -75,8 +75,8 @@ fn fig11_u_curve_bottom_not_at_extremes() {
         scale: 8,
         ..Default::default()
     };
-    let cache = GraphCache::new(h.scale);
-    let g = cache.get(Dataset::Sl);
+    let cache = Caches::new(h.scale);
+    let g = cache.graph(Dataset::Sl);
     let counts = [1u32, 2, 3, 4, 6];
     let cycles: Vec<f64> = counts
         .iter()

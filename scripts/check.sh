@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Repo-wide check: format, lints, release build, and the tier-1 test
+# suite. Run from anywhere; requires the rust toolchain on PATH.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy (all targets, warnings are errors) =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+cargo build --release
+cargo test -q
+
+echo "all checks passed"
