@@ -370,6 +370,94 @@ impl Harness {
     }
 }
 
+/// One functional-executor timing probe: the `switchblade bench`
+/// subcommand (and `scripts/bench.sh`, which seeds `BENCH_exec.json`)
+/// reports these numbers.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecBench {
+    /// Worker-pool width of the parallel run.
+    pub workers: usize,
+    /// Mean seconds per run, forced single worker.
+    pub secs_single: f64,
+    /// Mean seconds per run at `workers`.
+    pub secs_parallel: f64,
+    pub vertices: usize,
+    pub iters: usize,
+    /// Whether the two runs agreed bit-for-bit (they must).
+    pub bit_identical: bool,
+}
+
+impl ExecBench {
+    pub fn speedup(&self) -> f64 {
+        self.secs_single / self.secs_parallel
+    }
+
+    /// Executor throughput at the parallel width.
+    pub fn vertices_per_sec(&self) -> f64 {
+        self.vertices as f64 / self.secs_parallel
+    }
+}
+
+/// Time the shard-parallel executor against a forced single-worker run on
+/// one (model, graph) workload. `workers == 0` means "the partitioning's
+/// simulated sThread count".
+pub fn bench_executor(
+    model: Model,
+    g: &Csr,
+    accel: &AcceleratorConfig,
+    workers: usize,
+    iters: usize,
+) -> ExecBench {
+    fn timed(
+        prog: &Program,
+        parts: &Partitions,
+        x: &Matrix,
+        deg: &Matrix,
+        workers: usize,
+        iters: usize,
+    ) -> (f64, Matrix) {
+        let mut ex = crate::exec::Executor::new(prog, parts).with_workers(workers);
+        let t0 = std::time::Instant::now();
+        let mut out = ex.run(x, deg);
+        for _ in 1..iters {
+            out = ex.run(x, deg);
+        }
+        (t0.elapsed().as_secs_f64() / iters as f64, out)
+    }
+
+    let iters = iters.max(1);
+    let ir = model.build(2, 32, 32, 32);
+    let prog = compile(&ir);
+    let pc = accel.partition_config(&prog);
+    let parts = partition_fggp(g, pc);
+    let workers = if workers == 0 {
+        parts.config.num_sthreads.max(1) as usize
+    } else {
+        workers
+    };
+    let x = crate::exec::weights::init_features(11, g.num_vertices(), 32);
+    let mut deg = Matrix::zeros(g.num_vertices(), 1);
+    for v in 0..g.num_vertices() {
+        deg.set(v, 0, g.in_degree(v as u32) as f32);
+    }
+    let (secs_single, out_single) = timed(&prog, &parts, &x, &deg, 1, iters);
+    let (secs_parallel, out_parallel) = timed(&prog, &parts, &x, &deg, workers, iters);
+    let bit_identical = out_single.data.len() == out_parallel.data.len()
+        && out_single
+            .data
+            .iter()
+            .zip(&out_parallel.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    ExecBench {
+        workers,
+        secs_single,
+        secs_parallel,
+        vertices: g.num_vertices(),
+        iters,
+        bit_identical,
+    }
+}
+
 /// Validation harness used by examples/tests: compare the compiled
 /// executor against the IR reference on a sampled graph.
 pub fn validate_numerics(model: Model, g: &Csr, accel: &AcceleratorConfig) -> f32 {
@@ -420,6 +508,18 @@ mod tests {
             let diff = validate_numerics(m, &g, &AcceleratorConfig::switchblade());
             assert!(diff < 1e-4, "{}: {diff}", m.name());
         }
+    }
+
+    #[test]
+    fn bench_executor_reports_bit_identity() {
+        let cache = GraphCache::new(10);
+        let g = cache.get(Dataset::Ak);
+        let b = bench_executor(Model::Gcn, &g, &AcceleratorConfig::switchblade(), 2, 1);
+        assert!(b.bit_identical, "parallel executor diverged bitwise");
+        assert!(b.secs_single > 0.0 && b.secs_parallel > 0.0);
+        assert_eq!(b.workers, 2);
+        assert!(b.vertices_per_sec() > 0.0);
+        assert!(b.speedup() > 0.0);
     }
 
     #[test]

@@ -30,9 +30,78 @@ pub use evaluate::{evaluate_all, evaluate_one, EvalPoint, Workload};
 pub use pareto::{champion, dominates, frontier, pareto_indices, Objective};
 pub use space::{DesignPoint, MemoryKind, SearchSpace};
 
+use std::path::Path;
+
 use crate::graph::datasets::Dataset;
 use crate::ir::models::Model;
 use crate::util::report::{bytes, f as ff, speedup, Table};
+
+/// Load a tuned [`DesignPoint`] from a `switchblade tune` artifact —
+/// `dse_*_frontier.{json,csv}` or the (unsorted) `dse_*_sweep` twins.
+/// Picks the row with the lowest `latency ms` (the latency champion); if
+/// no row carries a parseable latency, falls back to the first row. This
+/// is what `repro --config` / `serve --config` call instead of
+/// hard-coding the Tbl III default.
+pub fn load_design(path: &Path) -> Result<DesignPoint, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let is_json = path
+        .extension()
+        .map(|x| x.eq_ignore_ascii_case("json"))
+        .unwrap_or(false);
+    // (config label, latency) per row; a missing/unparseable latency
+    // becomes +inf so such rows lose every comparison, while index order
+    // breaks ties (first row wins when no latencies exist at all).
+    let rows: Vec<(String, f64)> = if is_json {
+        // Table::write_json layout: one `{...}` object per row line, all
+        // values JSON strings, labels contain no escapes.
+        fn field(line: &str, key: &str) -> Option<String> {
+            let pat = format!("\"{key}\": \"");
+            let start = line.find(&pat)? + pat.len();
+            let rest = &line[start..];
+            Some(rest[..rest.find('"')?].to_string())
+        }
+        text.lines()
+            .filter_map(|line| {
+                let label = field(line, "config")?;
+                let lat = field(line, "latency ms")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(f64::INFINITY);
+                Some((label, lat))
+            })
+            .collect()
+    } else {
+        // CSV: locate the `config` / `latency ms` columns in the header.
+        // Cells are comma-free (labels use spaces), so a naive split works.
+        let mut lines = text.lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| format!("{}: empty file", path.display()))?;
+        let col = header
+            .split(',')
+            .position(|h| h.trim() == "config")
+            .unwrap_or(0);
+        let lat_col = header.split(',').position(|h| h.trim() == "latency ms");
+        lines
+            .filter_map(|row| {
+                let cells: Vec<&str> = row.split(',').collect();
+                let label = cells.get(col)?.trim().to_string();
+                let lat = lat_col
+                    .and_then(|c| cells.get(c))
+                    .and_then(|v| v.trim().parse().ok())
+                    .unwrap_or(f64::INFINITY);
+                Some((label, lat))
+            })
+            .collect()
+    };
+    let best = rows
+        .iter()
+        .enumerate()
+        .min_by(|(ai, a), (bi, b)| a.1.total_cmp(&b.1).then(ai.cmp(bi)))
+        .map(|(_, r)| &r.0)
+        .ok_or_else(|| format!("{}: no data rows", path.display()))?;
+    DesignPoint::parse_label(best)
+        .ok_or_else(|| format!("{}: unparseable design label '{best}'", path.display()))
+}
 
 /// Tuning run parameters.
 #[derive(Clone, Debug)]
@@ -223,6 +292,25 @@ mod tests {
             budget: 0,
             objective: Objective::Latency,
         }
+    }
+
+    #[test]
+    fn load_design_reads_frontier_artifacts() {
+        let caches = Caches::new(10);
+        let r = tune(Model::Gcn, Dataset::Ak, &caches, &tiny_options());
+        let dir = std::env::temp_dir();
+        let json = dir.join("switchblade_test_frontier.json");
+        let csv = dir.join("switchblade_test_frontier.csv");
+        r.frontier_table().write_json(&json).unwrap();
+        r.frontier_table().write_csv(&csv).unwrap();
+        let from_json = load_design(&json).unwrap();
+        let from_csv = load_design(&csv).unwrap();
+        assert_eq!(from_json, from_csv);
+        // Row 1 of a latency-sorted frontier is the latency champion.
+        assert_eq!(from_json, r.frontier_points()[0].point);
+        let _ = std::fs::remove_file(json);
+        let _ = std::fs::remove_file(csv);
+        assert!(load_design(Path::new("/nonexistent/x.json")).is_err());
     }
 
     #[test]

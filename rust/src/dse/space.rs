@@ -87,6 +87,55 @@ impl DesignPoint {
         }
     }
 
+    /// Parse a point back out of its [`DesignPoint::label`] form, e.g.
+    /// `"FGGP T3 DB8M SEB1024K MU32x128 VU16x32 HBM1"`. This is how
+    /// `repro`/`serve --config` consume `dse_*_frontier.{json,csv}`
+    /// artifacts without a serde dependency. Token order is free; every
+    /// axis must appear exactly as `label` writes it.
+    pub fn parse_label(s: &str) -> Option<DesignPoint> {
+        fn geometry(tok: &str) -> Option<(u32, u32)> {
+            let (a, b) = tok.split_once('x')?;
+            Some((a.parse().ok()?, b.parse().ok()?))
+        }
+        let mut method = None;
+        let mut sthreads = None;
+        let mut db = None;
+        let mut seb = None;
+        let mut vu = None;
+        let mut mu = None;
+        let mut memory = None;
+        for tok in s.split_whitespace() {
+            if let Some(m) = Method::parse(tok) {
+                method = Some(m);
+            } else if tok.eq_ignore_ascii_case("HBM1") {
+                memory = Some(MemoryKind::Hbm1);
+            } else if tok.eq_ignore_ascii_case("HBM2") {
+                memory = Some(MemoryKind::Hbm2);
+            } else if let Some(r) = tok.strip_prefix("DB").and_then(|r| r.strip_suffix('M')) {
+                db = Some(r.parse::<u64>().ok()? * 1024 * 1024);
+            } else if let Some(r) = tok.strip_prefix("SEB").and_then(|r| r.strip_suffix('K')) {
+                seb = Some(r.parse::<u64>().ok()? * 1024);
+            } else if let Some(r) = tok.strip_prefix("MU") {
+                mu = Some(geometry(r)?);
+            } else if let Some(r) = tok.strip_prefix("VU") {
+                vu = Some(geometry(r)?);
+            } else if let Some(r) = tok.strip_prefix('T') {
+                sthreads = Some(r.parse::<u32>().ok()?);
+            } else {
+                return None;
+            }
+        }
+        Some(DesignPoint {
+            num_sthreads: sthreads?,
+            dst_buffer: db?,
+            src_edge_buffer: seb?,
+            vu: vu?,
+            mu: mu?,
+            memory: memory?,
+            method: method?,
+        })
+    }
+
     /// Compact one-cell label for tables/CSV.
     pub fn label(&self) -> String {
         format!(
@@ -247,6 +296,20 @@ mod tests {
         assert_eq!(a.sram_bytes(), want.sram_bytes());
         assert_eq!(a.vu_throughput(), want.vu_throughput());
         assert!((a.dram.bandwidth_bytes_per_s - want.dram.bandwidth_bytes_per_s).abs() < 1e-3);
+    }
+
+    #[test]
+    fn labels_roundtrip_through_parse() {
+        for p in SearchSpace::default().enumerate() {
+            assert_eq!(
+                DesignPoint::parse_label(&p.label()),
+                Some(p),
+                "label '{}' did not roundtrip",
+                p.label()
+            );
+        }
+        assert_eq!(DesignPoint::parse_label("not a label"), None);
+        assert_eq!(DesignPoint::parse_label("FGGP T3"), None, "missing axes");
     }
 
     #[test]

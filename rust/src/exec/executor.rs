@@ -1,88 +1,115 @@
 //! Functional executor: interprets a compiled PLOF program over a
-//! partitioned graph, following the Alg 2 execution order the hardware
-//! uses (per group: per interval — ScatterPhase, shards' GatherPhases,
-//! ApplyPhase). Produces real numbers; the cycle-level simulator mirrors
-//! the same order for time.
+//! partitioned graph. The execution order is not defined here — the
+//! executor is a [`PhaseVisitor`] over [`sched::PartitionWalk`], the
+//! same canonical Alg 2 traversal the cycle simulator drives through.
+//!
+//! Two performance properties mirror the hardware:
+//!
+//! * **Partition-level multi-threading in software**: shards within an
+//!   interval are independent (paper §IV-C), so their GatherPhases run
+//!   across a scoped-thread worker pool (default width = the
+//!   partitioning's simulated sThread count). Each shard produces
+//!   *partial* gather accumulators that are merged in canonical shard
+//!   order after the pool drains, so the output is bit-identical for
+//!   every worker count — including the forced single-worker mode the
+//!   differential tests pin.
+//! * **Dense slot arenas**: symbols and DRAM arrays are addressed by
+//!   `Vec` index (`Program::slot_layout`), not by hashing `Sym`/`DataRef`
+//!   per instruction.
 
-use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::exec::reference::{apply_binary, apply_unary};
 use crate::exec::{weights, Matrix};
-use crate::isa::{DataRef, Dim, Instr, Program, Reduce, ScatterDir, Space, Sym};
+use crate::isa::{
+    DataRef, Dim, Instr, PhaseGroup, Program, Reduce, ScatterDir, SlotLayout, Space, Sym,
+};
 use crate::partition::{Interval, Partitions, Shard};
+use crate::sched::{PartitionWalk, PhaseVisitor, StepCtx, Traced, WalkStep};
 
 /// Functional executor over one (program, partitions) pair.
 pub struct Executor<'a> {
     program: &'a Program,
     parts: &'a Partitions,
-    /// Off-chip storage, keyed by DataRef: vertex arrays are `[N, cols]`,
-    /// edge arrays `[M, cols]`.
-    dram: HashMap<DataRef, Matrix>,
-    weights: HashMap<Sym, Matrix>,
+    layout: SlotLayout,
+    /// Off-chip storage arena indexed by [`DataRef::slot`]: vertex arrays
+    /// are `[N, cols]`, edge arrays `[M, cols]`.
+    dram: Vec<Option<Matrix>>,
+    /// Weight arena indexed by W-symbol id.
+    weights: Vec<Option<Matrix>>,
+    /// GatherPhase worker-pool width (the software sThread count).
+    workers: usize,
+    /// Live state of the interval currently being walked.
+    iv: Option<IntervalState>,
+    /// Shard indices queued by `gather_shard`, drained at `end_gather`.
+    pending: Vec<usize>,
 }
 
 impl<'a> Executor<'a> {
     pub fn new(program: &'a Program, parts: &'a Partitions) -> Self {
-        let mut w = HashMap::new();
+        let layout = program.slot_layout();
+        let mut w = vec![None; layout.w];
         for wi in &program.weights {
-            w.insert(wi.sym, weights::init_weight(wi.seed, wi.rows, wi.cols));
+            w[wi.sym.id as usize] = Some(weights::init_weight(wi.seed, wi.rows, wi.cols));
         }
         Executor {
             program,
             parts,
-            dram: HashMap::new(),
+            layout,
+            dram: vec![None; layout.dram],
             weights: w,
+            workers: parts.config.num_sthreads.max(1) as usize,
+            iv: None,
+            pending: Vec::new(),
         }
+    }
+
+    /// Override the GatherPhase worker-pool width. Defaults to the
+    /// partitioning's simulated sThread count; `1` forces the serial
+    /// path. Outputs are bit-identical across widths.
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// The effective worker-pool width.
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     /// Run the whole program. `x` is `[N, in_dim]`; `degree` the in-degree
     /// column used by `DataRef::Degree`.
     pub fn run(&mut self, x: &Matrix, degree: &Matrix) -> Matrix {
+        self.seed_inputs(x, degree);
+        PartitionWalk::new(self.program, self.parts).drive(&mut *self);
+        self.take_output()
+    }
+
+    /// Like [`Executor::run`], additionally recording the walker's
+    /// `(group, interval, shard, phase)` trace — the order-equivalence
+    /// witness the scheduler tests compare against the simulator's.
+    pub fn run_traced(&mut self, x: &Matrix, degree: &Matrix) -> (Matrix, Vec<WalkStep>) {
+        self.seed_inputs(x, degree);
+        let walk = PartitionWalk::new(self.program, self.parts);
+        let mut traced = Traced::new(&mut *self);
+        walk.drive(&mut traced);
+        let steps = traced.into_steps();
+        (self.take_output(), steps)
+    }
+
+    fn seed_inputs(&mut self, x: &Matrix, degree: &Matrix) {
         assert_eq!(x.rows, self.parts.num_vertices);
         assert_eq!(x.cols as u32, self.program.in_dim);
-        self.dram.insert(DataRef::Input, x.clone());
-        self.dram.insert(DataRef::Degree, degree.clone());
+        self.dram = vec![None; self.layout.dram];
+        self.dram[DataRef::Input.slot()] = Some(x.clone());
+        self.dram[DataRef::Degree.slot()] = Some(degree.clone());
+    }
 
-        for group in &self.program.groups {
-            for (ii, iv) in self.parts.intervals.iter().enumerate() {
-                let mut ictx = IntervalCtx::new(iv);
-                // ScatterPhase (iThread).
-                for i in &group.scatter {
-                    self.exec_interval_instr(i, &mut ictx);
-                }
-                // Gather accumulators exist per interval even when the
-                // interval has no shards (isolated destination ranges).
-                for i in &group.gather {
-                    match i {
-                        Instr::Gather { reduce, dst, cols, .. }
-                        | Instr::FusedGather { reduce, dst, cols, .. } => {
-                            let _ = ictx.accumulator(*dst, *reduce, *cols as usize);
-                        }
-                        _ => {}
-                    }
-                }
-                // GatherPhase per shard (sThreads).
-                for shard in self.parts.shards_of(ii) {
-                    let mut sctx = ShardCtx::new(shard);
-                    for i in &group.gather {
-                        self.exec_shard_instr(i, &mut ictx, &mut sctx);
-                    }
-                }
-                // Mean finalisation + empty-row convention.
-                ictx.finalize_gathers();
-                // ApplyPhase (iThread).
-                for i in &group.apply {
-                    self.exec_interval_instr(i, &mut ictx);
-                }
-            }
-        }
-
-        // Assemble the output from DRAM.
-        let out_ref = self.output_ref();
-        self.dram
-            .get(&out_ref)
-            .unwrap_or_else(|| panic!("program never stored its output"))
+    fn take_output(&mut self) -> Matrix {
+        self.dram[self.output_ref().slot()]
             .clone()
+            .unwrap_or_else(|| panic!("program never stored its output"))
     }
 
     /// The DataRef holding the final result: the last `ST.D` of the last
@@ -102,88 +129,413 @@ impl<'a> Executor<'a> {
 
     // ---- interval-phase execution (Scatter / Apply) --------------------------
 
-    fn exec_interval_instr(&mut self, i: &Instr, ictx: &mut IntervalCtx) {
-        let v = ictx.len();
+    fn exec_interval_instr(&mut self, i: &Instr, iv: &mut IntervalState) {
+        let v = iv.len();
         match i {
             Instr::Ld { sym, data, cols, .. } => {
-                let src = &self.dram[data];
+                let src = self.dram[data.slot()]
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("LD of unwritten {data}"));
                 let mut m = Matrix::zeros(v, *cols as usize);
-                for (r, gv) in (ictx.begin..ictx.end).enumerate() {
+                for (r, gv) in (iv.begin..iv.end).enumerate() {
                     m.row_mut(r).copy_from_slice(src.row(gv));
                 }
-                ictx.d.insert(*sym, m);
+                iv.d[sym.id as usize] = Some(m);
             }
             Instr::St { sym, data, cols, .. } => {
-                let m = &ictx.d[sym];
-                let dst = self
-                    .dram
-                    .entry(*data)
-                    .or_insert_with(|| Matrix::zeros(self.parts.num_vertices, *cols as usize));
-                for (r, gv) in (ictx.begin..ictx.end).enumerate() {
+                let slot = data.slot();
+                if self.dram[slot].is_none() {
+                    self.dram[slot] =
+                        Some(Matrix::zeros(self.parts.num_vertices, *cols as usize));
+                }
+                let m = iv.d[sym.id as usize]
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("ST of undefined {sym}"));
+                let dst = self.dram[slot].as_mut().unwrap();
+                for (r, gv) in (iv.begin..iv.end).enumerate() {
                     dst.row_mut(gv).copy_from_slice(m.row(r));
                 }
             }
             _ => {
-                let out = self.compute(i, Dim::V, v, &ictx.d, None, &ictx.d);
-                ictx.d.insert(i.def().expect("compute defines"), out);
+                let out = compute_instr(i, v, &self.weights, None, None, &iv.d);
+                iv.d[i.def().expect("compute defines").id as usize] = Some(out);
             }
         }
     }
 
     // ---- shard-phase execution (Gather) ---------------------------------------
 
-    fn exec_shard_instr(&mut self, i: &Instr, ictx: &mut IntervalCtx, sctx: &mut ShardCtx) {
-        let shard = sctx.shard;
+    /// Drain the interval's queued shards through the worker pool, then
+    /// merge their partial results in canonical shard order. However the
+    /// workers raced, the merge sees the same partials in the same order,
+    /// so any pool width is bit-identical to a single worker.
+    fn run_pending_shards(&mut self, group: &PhaseGroup) {
+        let pending = std::mem::take(&mut self.pending);
+        if pending.is_empty() {
+            return;
+        }
+        let mut iv = self.iv.take().expect("interval state");
+        let outs: Vec<ShardOut> = {
+            let env = ShardEnv {
+                layout: &self.layout,
+                weights: &self.weights,
+                dram: &self.dram,
+                iv: &iv,
+                parts: self.parts,
+                gather: &group.gather[..],
+            };
+            let workers = self.workers.min(pending.len());
+            if workers <= 1 {
+                pending.iter().map(|&si| env.run_shard(si)).collect()
+            } else {
+                let cells: Vec<Mutex<Option<ShardOut>>> =
+                    pending.iter().map(|_| Mutex::new(None)).collect();
+                let next = AtomicUsize::new(0);
+                std::thread::scope(|scope| {
+                    for _ in 0..workers {
+                        scope.spawn(|| loop {
+                            // Dynamic assignment: the next shard goes to
+                            // whichever worker frees first (the software
+                            // analogue of the phase scheduler, §V-B2).
+                            let k = next.fetch_add(1, Ordering::Relaxed);
+                            if k >= pending.len() {
+                                break;
+                            }
+                            let out = env.run_shard(pending[k]);
+                            *cells[k].lock().unwrap() = Some(out);
+                        });
+                    }
+                });
+                cells
+                    .into_iter()
+                    .map(|c| c.into_inner().unwrap().expect("worker filled its slot"))
+                    .collect()
+            }
+        };
+        for (&si, out) in pending.iter().zip(outs) {
+            self.merge_shard(&mut iv, si, out);
+        }
+        self.iv = Some(iv);
+    }
+
+    /// Fold one shard's partial accumulators and spills into the interval
+    /// state. Called in canonical shard order only.
+    fn merge_shard(&mut self, iv: &mut IntervalState, shard_idx: usize, out: ShardOut) {
+        let shard = &self.parts.shards[shard_idx];
+        for (slot, p) in out.partials {
+            let acc = iv.accs[slot]
+                .as_mut()
+                .expect("gather accumulator pre-created by scatter_phase");
+            // The partial covers only the shard's dst window, and rows it
+            // never touched (count 0) merge as identity — so the merge is
+            // O(touched rows), not O(interval height).
+            for (r, &cnt) in p.acc.counts.iter().enumerate() {
+                if cnt == 0 {
+                    continue;
+                }
+                let ar = p.base + r;
+                let orow = acc.m.row_mut(ar);
+                let prow = p.acc.m.row(r);
+                match acc.reduce {
+                    Reduce::Sum | Reduce::Mean => {
+                        for (o, &x) in orow.iter_mut().zip(prow) {
+                            *o += x;
+                        }
+                    }
+                    Reduce::Max => {
+                        for (o, &x) in orow.iter_mut().zip(prow) {
+                            *o = o.max(x);
+                        }
+                    }
+                }
+                acc.counts[ar] += cnt;
+            }
+        }
+        for (slot, m) in out.spills {
+            // ST.E rows land at canonical edge ids; shards own disjoint
+            // edge sets, so the order is immaterial for the values.
+            if self.dram[slot].is_none() {
+                self.dram[slot] = Some(Matrix::zeros(self.parts.num_edges, m.cols));
+            }
+            let dst = self.dram[slot].as_mut().unwrap();
+            for (r, e) in shard.edges.iter().enumerate() {
+                dst.row_mut(e.edge_id as usize).copy_from_slice(m.row(r));
+            }
+        }
+    }
+}
+
+impl PhaseVisitor for Executor<'_> {
+    fn begin_interval(&mut self, cx: &StepCtx) {
+        self.iv = Some(IntervalState::new(cx.interval, &self.layout));
+        self.pending.clear();
+    }
+
+    fn scatter_phase(&mut self, cx: &StepCtx) {
+        let mut iv = self.iv.take().expect("interval state");
+        for i in &cx.group.scatter {
+            self.exec_interval_instr(i, &mut iv);
+        }
+        // Gather accumulators exist per interval even when the interval
+        // has no shards (isolated destination ranges).
+        for i in &cx.group.gather {
+            match i {
+                Instr::Gather { reduce, dst, cols, .. }
+                | Instr::FusedGather { reduce, dst, cols, .. } => {
+                    iv.ensure_acc(*dst, *reduce, *cols as usize);
+                }
+                _ => {}
+            }
+        }
+        self.iv = Some(iv);
+    }
+
+    fn gather_shard(&mut self, _cx: &StepCtx, shard_idx: usize, _shard: &Shard) {
+        // Schedule point only — the pool drains at `end_gather` so shards
+        // overlap while the merge order stays canonical.
+        self.pending.push(shard_idx);
+    }
+
+    fn end_gather(&mut self, cx: &StepCtx) {
+        self.run_pending_shards(cx.group);
+    }
+
+    fn apply_phase(&mut self, cx: &StepCtx) {
+        let mut iv = self.iv.take().expect("interval state");
+        // Mean finalisation + empty-row convention.
+        iv.finalize_gathers();
+        for i in &cx.group.apply {
+            self.exec_interval_instr(i, &mut iv);
+        }
+        self.iv = Some(iv);
+    }
+
+    fn end_interval(&mut self, _cx: &StepCtx) {
+        self.iv = None;
+    }
+}
+
+/// Per-interval state: resident D slots + gather accumulators.
+struct IntervalState {
+    begin: usize,
+    end: usize,
+    /// DstBuffer arena, indexed by D-symbol id.
+    d: Vec<Option<Matrix>>,
+    /// Gather accumulators, indexed by D-symbol id; moved into `d` by
+    /// `finalize_gathers` once every shard's partials merged.
+    accs: Vec<Option<Acc>>,
+}
+
+impl IntervalState {
+    fn new(iv: &Interval, layout: &SlotLayout) -> Self {
+        IntervalState {
+            begin: iv.begin as usize,
+            end: iv.end as usize,
+            d: vec![None; layout.d],
+            accs: vec![None; layout.d],
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.end - self.begin
+    }
+
+    /// Pre-create a gather accumulator (first touch in this interval
+    /// zeroes it — mirrors the hardware's phase-scheduler reset).
+    fn ensure_acc(&mut self, dst: Sym, reduce: Reduce, cols: usize) {
+        let slot = dst.id as usize;
+        if self.accs[slot].is_none() {
+            self.accs[slot] = Some(Acc::new(reduce, self.len(), cols));
+        }
+    }
+
+    /// Post-merge fixups: Mean division and the zero-for-empty convention.
+    fn finalize_gathers(&mut self) {
+        for (acc_slot, d_slot) in self.accs.iter_mut().zip(self.d.iter_mut()) {
+            if let Some(mut acc) = acc_slot.take() {
+                for (r, &cnt) in acc.counts.iter().enumerate() {
+                    if cnt == 0 {
+                        acc.m.row_mut(r).fill(0.0);
+                    } else if acc.reduce == Reduce::Mean {
+                        let inv = 1.0 / cnt as f32;
+                        for v in acc.m.row_mut(r) {
+                            *v *= inv;
+                        }
+                    }
+                }
+                *d_slot = Some(acc.m);
+            }
+        }
+    }
+}
+
+/// A gather accumulator (interval-level or per-shard partial).
+struct Acc {
+    reduce: Reduce,
+    m: Matrix,
+    counts: Vec<u32>,
+}
+
+impl Acc {
+    fn new(reduce: Reduce, rows: usize, cols: usize) -> Self {
+        let m = match reduce {
+            Reduce::Sum | Reduce::Mean => Matrix::zeros(rows, cols),
+            Reduce::Max => Matrix::filled(rows, cols, f32::NEG_INFINITY),
+        };
+        Acc {
+            reduce,
+            m,
+            counts: vec![0; rows],
+        }
+    }
+}
+
+/// A shard's partial gather accumulator: an [`Acc`] covering only the
+/// shard's destination window, placed at interval-local row `base`.
+struct Partial {
+    base: usize,
+    acc: Acc,
+}
+
+/// What one shard's GatherPhase produced: partial gather accumulators
+/// (merged in shard order) and queued ST.E spills.
+struct ShardOut {
+    /// `(D slot, windowed partial)` in first-touch order.
+    partials: Vec<(usize, Partial)>,
+    /// `(DRAM slot, [shard_edges, cols] rows)` to write at canonical ids.
+    spills: Vec<(usize, Matrix)>,
+}
+
+impl ShardOut {
+    fn partial(
+        &mut self,
+        slot: usize,
+        reduce: Reduce,
+        base: usize,
+        rows: usize,
+        cols: usize,
+    ) -> &mut Acc {
+        if let Some(pos) = self.partials.iter().position(|(s, _)| *s == slot) {
+            &mut self.partials[pos].1.acc
+        } else {
+            self.partials.push((
+                slot,
+                Partial {
+                    base,
+                    acc: Acc::new(reduce, rows, cols),
+                },
+            ));
+            &mut self.partials.last_mut().unwrap().1.acc
+        }
+    }
+}
+
+/// Read-only view shared by the GatherPhase workers.
+struct ShardEnv<'x> {
+    layout: &'x SlotLayout,
+    weights: &'x [Option<Matrix>],
+    dram: &'x [Option<Matrix>],
+    iv: &'x IntervalState,
+    parts: &'x Partitions,
+    gather: &'x [Instr],
+}
+
+impl ShardEnv<'_> {
+    fn run_shard(&self, shard_idx: usize) -> ShardOut {
+        let shard = &self.parts.shards[shard_idx];
+        let span = shard.dst_span();
+        let mut s: Vec<Option<Matrix>> = vec![None; self.layout.s];
+        let mut e: Vec<Option<Matrix>> = vec![None; self.layout.e];
+        let mut out = ShardOut {
+            partials: Vec::new(),
+            spills: Vec::new(),
+        };
+        for i in self.gather {
+            self.exec_shard_instr(i, shard, span, &mut s, &mut e, &mut out);
+        }
+        out
+    }
+
+    /// Get-or-create the shard's partial accumulator for `dst`, sized to
+    /// the shard's destination window within the interval.
+    fn windowed_partial<'o>(
+        &self,
+        out: &'o mut ShardOut,
+        dst: Sym,
+        reduce: Reduce,
+        span: Option<(u32, u32)>,
+        cols: usize,
+    ) -> &'o mut Acc {
+        let (lo, hi) = span.expect("edgeless shards return before accumulating");
+        let base = lo as usize - self.iv.begin;
+        let rows = (hi - lo + 1) as usize;
+        out.partial(dst.id as usize, reduce, base, rows, cols)
+    }
+
+    fn exec_shard_instr(
+        &self,
+        i: &Instr,
+        shard: &Shard,
+        span: Option<(u32, u32)>,
+        s: &mut [Option<Matrix>],
+        e: &mut [Option<Matrix>],
+        out: &mut ShardOut,
+    ) {
+        let iv = self.iv;
         match i {
             Instr::Ld { sym, data, cols, .. } => {
-                let src = &self.dram[data];
+                let src = self.dram[data.slot()]
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("LD of unwritten {data}"));
                 match sym.space {
                     Space::S => {
                         let mut m = Matrix::zeros(shard.num_src(), *cols as usize);
                         for (r, &gv) in shard.sources.iter().enumerate() {
                             m.row_mut(r).copy_from_slice(src.row(gv as usize));
                         }
-                        sctx.s.insert(*sym, m);
+                        s[sym.id as usize] = Some(m);
                     }
                     Space::E => {
                         let mut m = Matrix::zeros(shard.num_edges(), *cols as usize);
-                        for (r, e) in shard.edges.iter().enumerate() {
-                            m.row_mut(r).copy_from_slice(src.row(e.edge_id as usize));
+                        for (r, ed) in shard.edges.iter().enumerate() {
+                            m.row_mut(r).copy_from_slice(src.row(ed.edge_id as usize));
                         }
-                        sctx.e.insert(*sym, m);
+                        e[sym.id as usize] = Some(m);
                     }
                     _ => panic!("GatherPhase LD of {sym}"),
                 }
             }
-            Instr::St { sym, data, cols, .. } => {
-                // ST.E — spill edge rows at canonical ids.
-                let m = &sctx.e[sym];
-                let dst = self
-                    .dram
-                    .entry(*data)
-                    .or_insert_with(|| Matrix::zeros(self.parts.num_edges, *cols as usize));
-                for (r, e) in shard.edges.iter().enumerate() {
-                    dst.row_mut(e.edge_id as usize).copy_from_slice(m.row(r));
-                }
+            Instr::St { sym, data, .. } => {
+                // ST.E — spill edge rows; the writes are queued and land
+                // at canonical edge ids during the deterministic merge.
+                let m = e[sym.id as usize]
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("ST of undefined {sym}"))
+                    .clone();
+                out.spills.push((data.slot(), m));
             }
             Instr::Scatter { dir, dst, src, cols } => {
-                let mut out = Matrix::zeros(shard.num_edges(), *cols as usize);
+                let mut m = Matrix::zeros(shard.num_edges(), *cols as usize);
                 match dir {
                     ScatterDir::SrcToEdge => {
-                        let sm = &sctx.s[src];
-                        for (r, e) in shard.edges.iter().enumerate() {
-                            out.row_mut(r).copy_from_slice(sm.row(e.src_slot as usize));
+                        let sm = s[src.id as usize]
+                            .as_ref()
+                            .unwrap_or_else(|| panic!("S operand {src} missing"));
+                        for (r, ed) in shard.edges.iter().enumerate() {
+                            m.row_mut(r).copy_from_slice(sm.row(ed.src_slot as usize));
                         }
                     }
                     ScatterDir::DstToEdge => {
-                        let dm = &ictx.d[src];
-                        for (r, e) in shard.edges.iter().enumerate() {
-                            let local = (e.dst - ictx.begin as u32) as usize;
-                            out.row_mut(r).copy_from_slice(dm.row(local));
+                        let dm = iv.d[src.id as usize]
+                            .as_ref()
+                            .unwrap_or_else(|| panic!("D operand {src} missing"));
+                        for (r, ed) in shard.edges.iter().enumerate() {
+                            let local = (ed.dst - iv.begin as u32) as usize;
+                            m.row_mut(r).copy_from_slice(dm.row(local));
                         }
                     }
                 }
-                sctx.e.insert(*dst, out);
+                e[dst.id as usize] = Some(m);
             }
             Instr::FusedGather {
                 reduce,
@@ -192,17 +544,23 @@ impl<'a> Executor<'a> {
                 scale,
                 cols,
             } => {
-                let iv_begin = ictx.begin as u32;
+                // An edgeless shard contributes nothing (the interval-level
+                // accumulator was pre-created by `scatter_phase`).
+                let Some((lo, _)) = span else { return };
                 let scale_col: Option<Vec<f32>> = scale.map(|sc| {
-                    let m = &sctx.e[&sc];
+                    let m = e[sc.id as usize]
+                        .as_ref()
+                        .unwrap_or_else(|| panic!("E operand {sc} missing"));
                     (0..shard.num_edges()).map(|r| m.get(r, 0)).collect()
                 });
-                let acc = ictx.accumulator(*dst, *reduce, *cols as usize);
-                let sm = &sctx.s[src];
-                for (r, e) in shard.edges.iter().enumerate() {
-                    let local = (e.dst - iv_begin) as usize;
+                let sm = s[src.id as usize]
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("S operand {src} missing"));
+                let acc = self.windowed_partial(out, *dst, *reduce, span, *cols as usize);
+                for (r, ed) in shard.edges.iter().enumerate() {
+                    let local = (ed.dst - lo) as usize;
                     acc.counts[local] += 1;
-                    let row = sm.row(e.src_slot as usize);
+                    let row = sm.row(ed.src_slot as usize);
                     let f = scale_col.as_ref().map_or(1.0, |c| c[r]);
                     let orow = acc.m.row_mut(local);
                     match reduce {
@@ -225,11 +583,13 @@ impl<'a> Executor<'a> {
                 src,
                 cols,
             } => {
-                let iv_begin = ictx.begin as u32;
-                let acc = ictx.accumulator(*dst, *reduce, *cols as usize);
-                let ev = &sctx.e[src];
-                for (r, e) in shard.edges.iter().enumerate() {
-                    let local = (e.dst - iv_begin) as usize;
+                let Some((lo, _)) = span else { return };
+                let ev = e[src.id as usize]
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("E operand {src} missing"));
+                let acc = self.windowed_partial(out, *dst, *reduce, span, *cols as usize);
+                for (r, ed) in shard.edges.iter().enumerate() {
+                    let local = (ed.dst - lo) as usize;
                     acc.counts[local] += 1;
                     let row = ev.row(r);
                     let orow = acc.m.row_mut(local);
@@ -250,100 +610,102 @@ impl<'a> Executor<'a> {
             _ => {
                 // Shard-side compute: rows decode against the shard.
                 let rows_dim = instr_rows(i);
-                let rows = rows_dim.decode(ictx.len(), shard.num_src(), shard.num_edges());
-                let out = self.compute(i, rows_dim, rows, &sctx.s, Some(&sctx.e), &ictx.d);
-                match i.def().expect("compute defines").space {
-                    Space::S => sctx.s.insert(i.def().unwrap(), out),
-                    Space::E => sctx.e.insert(i.def().unwrap(), out),
+                let rows = rows_dim.decode(iv.len(), shard.num_src(), shard.num_edges());
+                let m = compute_instr(i, rows, self.weights, Some(&*s), Some(&*e), &iv.d);
+                let def = i.def().expect("compute defines");
+                match def.space {
+                    Space::S => s[def.id as usize] = Some(m),
+                    Space::E => e[def.id as usize] = Some(m),
                     _ => panic!("GatherPhase compute must write S/E"),
-                };
+                }
             }
         }
     }
+}
 
-    /// Evaluate a compute instruction. Operand lookup: W from weights, S
-    /// from `s`, E from `e` (if present), D from `d`.
-    fn compute(
-        &self,
-        i: &Instr,
-        _rows_dim: Dim,
-        rows: usize,
-        s: &HashMap<Sym, Matrix>,
-        e: Option<&HashMap<Sym, Matrix>>,
-        d: &HashMap<Sym, Matrix>,
-    ) -> Matrix {
-        let look = |sym: &Sym| -> &Matrix {
-            match sym.space {
-                Space::W => &self.weights[sym],
-                Space::S => s.get(sym).unwrap_or_else(|| panic!("S operand {sym} missing")),
-                Space::E => e
-                    .and_then(|m| m.get(sym))
-                    .unwrap_or_else(|| panic!("E operand {sym} missing")),
-                Space::D => d.get(sym).unwrap_or_else(|| panic!("D operand {sym} missing")),
-            }
+/// Evaluate a compute instruction against slot-arena operand sources:
+/// W from `weights`, S/E from the shard arenas (GatherPhase only), D
+/// from the interval arena.
+fn compute_instr(
+    i: &Instr,
+    rows: usize,
+    weights: &[Option<Matrix>],
+    s: Option<&[Option<Matrix>]>,
+    e: Option<&[Option<Matrix>]>,
+    d: &[Option<Matrix>],
+) -> Matrix {
+    let look = |sym: &Sym| -> &Matrix {
+        let arena: &[Option<Matrix>] = match sym.space {
+            Space::W => weights,
+            Space::S => s.unwrap_or_else(|| panic!("S operand {sym} outside GatherPhase")),
+            Space::E => e.unwrap_or_else(|| panic!("E operand {sym} outside GatherPhase")),
+            Space::D => d,
         };
-        match i {
-            Instr::Elw {
-                op,
-                a,
-                b,
-                broadcast_b,
-                cols,
-                ..
-            } => {
-                let am = look(a);
-                let mut out = Matrix::zeros(rows, *cols as usize);
-                match b {
-                    None => {
-                        for r in 0..rows {
-                            for c in 0..*cols as usize {
-                                out.set(r, c, apply_unary(*op, am.get(r, c)));
-                            }
-                        }
-                    }
-                    Some(bs) => {
-                        let bm = look(bs);
-                        for r in 0..rows {
-                            let br = if *broadcast_b { 0 } else { r };
-                            for c in 0..*cols as usize {
-                                out.set(r, c, apply_binary(*op, am.get(r, c), bm.get(br, c)));
-                            }
+        arena[sym.id as usize]
+            .as_ref()
+            .unwrap_or_else(|| panic!("operand {sym} missing"))
+    };
+    match i {
+        Instr::Elw {
+            op,
+            a,
+            b,
+            broadcast_b,
+            cols,
+            ..
+        } => {
+            let am = look(a);
+            let mut out = Matrix::zeros(rows, *cols as usize);
+            match b {
+                None => {
+                    for r in 0..rows {
+                        for c in 0..*cols as usize {
+                            out.set(r, c, apply_unary(*op, am.get(r, c)));
                         }
                     }
                 }
-                out
-            }
-            Instr::RowScale { a, scale, cols, .. } => {
-                let am = look(a);
-                let sm = look(scale);
-                let mut out = Matrix::zeros(rows, *cols as usize);
-                for r in 0..rows {
-                    let f = sm.get(r, 0);
-                    for c in 0..*cols as usize {
-                        out.set(r, c, am.get(r, c) * f);
+                Some(bs) => {
+                    let bm = look(bs);
+                    for r in 0..rows {
+                        let br = if *broadcast_b { 0 } else { r };
+                        for c in 0..*cols as usize {
+                            out.set(r, c, apply_binary(*op, am.get(r, c), bm.get(br, c)));
+                        }
                     }
                 }
-                out
             }
-            Instr::Concat {
-                a, b, cols_a, cols_b, ..
-            } => {
-                let am = look(a);
-                let bm = look(b);
-                let mut out = Matrix::zeros(rows, (*cols_a + *cols_b) as usize);
-                for r in 0..rows {
-                    out.row_mut(r)[..*cols_a as usize].copy_from_slice(am.row(r));
-                    out.row_mut(r)[*cols_a as usize..].copy_from_slice(bm.row(r));
-                }
-                out
-            }
-            Instr::Dmm { a, w, .. } => {
-                let am = look(a);
-                let wm = look(w);
-                am.matmul(wm)
-            }
-            _ => panic!("not a compute instruction: {}", i.render()),
+            out
         }
+        Instr::RowScale { a, scale, cols, .. } => {
+            let am = look(a);
+            let sm = look(scale);
+            let mut out = Matrix::zeros(rows, *cols as usize);
+            for r in 0..rows {
+                let f = sm.get(r, 0);
+                for c in 0..*cols as usize {
+                    out.set(r, c, am.get(r, c) * f);
+                }
+            }
+            out
+        }
+        Instr::Concat {
+            a, b, cols_a, cols_b, ..
+        } => {
+            let am = look(a);
+            let bm = look(b);
+            let mut out = Matrix::zeros(rows, (*cols_a + *cols_b) as usize);
+            for r in 0..rows {
+                out.row_mut(r)[..*cols_a as usize].copy_from_slice(am.row(r));
+                out.row_mut(r)[*cols_a as usize..].copy_from_slice(bm.row(r));
+            }
+            out
+        }
+        Instr::Dmm { a, w, .. } => {
+            let am = look(a);
+            let wm = look(w);
+            am.matmul(wm)
+        }
+        _ => panic!("not a compute instruction: {}", i.render()),
     }
 }
 
@@ -355,91 +717,5 @@ fn instr_rows(i: &Instr) -> Dim {
         | Instr::Dmm { rows, .. } => *rows,
         Instr::Scatter { .. } | Instr::Gather { .. } | Instr::FusedGather { .. } => Dim::E,
         Instr::Ld { rows, .. } | Instr::St { rows, .. } => *rows,
-    }
-}
-
-/// Per-interval state: resident D buffers + gather accumulators.
-struct IntervalCtx<'a> {
-    begin: usize,
-    end: usize,
-    d: HashMap<Sym, Matrix>,
-    gathers: Vec<(Sym, Reduce)>,
-    counts: HashMap<Sym, Vec<u32>>,
-    _iv: &'a Interval,
-}
-
-/// A gather accumulator view.
-struct AccView<'m> {
-    m: &'m mut Matrix,
-    counts: &'m mut Vec<u32>,
-}
-
-impl<'a> IntervalCtx<'a> {
-    fn new(iv: &'a Interval) -> Self {
-        IntervalCtx {
-            begin: iv.begin as usize,
-            end: iv.end as usize,
-            d: HashMap::new(),
-            gathers: Vec::new(),
-            counts: HashMap::new(),
-            _iv: iv,
-        }
-    }
-
-    fn len(&self) -> usize {
-        self.end - self.begin
-    }
-
-    /// Lazily-initialised gather accumulator (first touch in this
-    /// interval zeroes it — mirrors the hardware's phase-scheduler reset).
-    fn accumulator(&mut self, sym: Sym, reduce: Reduce, cols: usize) -> AccView<'_> {
-        if !self.d.contains_key(&sym) || !self.counts.contains_key(&sym) {
-            let init = match reduce {
-                Reduce::Sum | Reduce::Mean => Matrix::zeros(self.len(), cols),
-                Reduce::Max => Matrix::filled(self.len(), cols, f32::NEG_INFINITY),
-            };
-            self.d.insert(sym, init);
-            self.counts.insert(sym, vec![0; self.len()]);
-            self.gathers.push((sym, reduce));
-        }
-        AccView {
-            m: self.d.get_mut(&sym).unwrap(),
-            counts: self.counts.get_mut(&sym).unwrap(),
-        }
-    }
-
-    /// Post-shard fixups: Mean division and the zero-for-empty convention.
-    fn finalize_gathers(&mut self) {
-        for (sym, reduce) in std::mem::take(&mut self.gathers) {
-            let counts = self.counts.remove(&sym).unwrap();
-            let m = self.d.get_mut(&sym).unwrap();
-            for (r, &cnt) in counts.iter().enumerate() {
-                if cnt == 0 {
-                    m.row_mut(r).fill(0.0);
-                } else if reduce == Reduce::Mean {
-                    let inv = 1.0 / cnt as f32;
-                    for v in m.row_mut(r) {
-                        *v *= inv;
-                    }
-                }
-            }
-        }
-    }
-}
-
-/// Per-shard state: S and E buffers.
-struct ShardCtx<'a> {
-    shard: &'a Shard,
-    s: HashMap<Sym, Matrix>,
-    e: HashMap<Sym, Matrix>,
-}
-
-impl<'a> ShardCtx<'a> {
-    fn new(shard: &'a Shard) -> Self {
-        ShardCtx {
-            shard,
-            s: HashMap::new(),
-            e: HashMap::new(),
-        }
     }
 }

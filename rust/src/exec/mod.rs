@@ -4,7 +4,11 @@
 //!
 //! * [`Executor`] interprets the *compiled ISA program* over the
 //!   *partitioned* graph with real `f32` data — exercising the compiler,
-//!   the partitioner and the PLOF/DSW execution semantics end to end.
+//!   the partitioner and the PLOF/DSW execution semantics end to end. It
+//!   drives the canonical [`sched::PartitionWalk`](crate::sched) order
+//!   and runs each interval's shards across a worker pool (software
+//!   partition-level multi-threading) with a deterministic merge, so the
+//!   output is bit-identical at any worker count.
 //! * [`reference`] interprets the *IR directly* over the whole graph with
 //!   dense per-node matrices — a simple oracle that shares no code with
 //!   the compiled path.

@@ -150,6 +150,48 @@ fn single_vertex_graph() {
 }
 
 #[test]
+fn shard_parallel_bit_identical_to_single_worker() {
+    // The differential property of the worker pool: for every model, a
+    // forced single-worker run and a multi-worker run produce the same
+    // bits, because partial gather accumulators merge in canonical shard
+    // order regardless of how the workers raced.
+    let g = Csr::from_edge_list(&generators::rmat(1 << 8, 3_000, 0.57, 0.19, 0.19, 17));
+    for model in Model::ALL {
+        let ir = model.build(2, 8, 8, 8);
+        let prog = compile(&ir);
+        // Small budgets force many shards per interval; 4 sThreads make
+        // the pool genuinely concurrent.
+        let mut cfg = cfg_for(&prog, 2 * 1024, 4 * 1024);
+        cfg.num_sthreads = 4;
+        let parts = partition_fggp(&g, cfg);
+        let x = weights::init_features(7, g.num_vertices(), 8);
+        let deg = degree_col(&g);
+        let serial = Executor::new(&prog, &parts).with_workers(1).run(&x, &deg);
+        let parallel = Executor::new(&prog, &parts).with_workers(4).run(&x, &deg);
+        assert_eq!(serial.rows, parallel.rows);
+        assert_eq!(serial.cols, parallel.cols);
+        let identical = serial
+            .data
+            .iter()
+            .zip(&parallel.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(identical, "{}: parallel run diverged bitwise", model.name());
+    }
+}
+
+#[test]
+fn default_worker_count_follows_partition_sthreads() {
+    let ir = Model::Gcn.build(2, 8, 8, 8);
+    let prog = compile(&ir);
+    let g = Csr::from_edge_list(&generators::mesh2d(4, 4, false));
+    let mut cfg = cfg_for(&prog, 4 * 1024, 4 * 1024);
+    cfg.num_sthreads = 3;
+    let parts = partition_fggp(&g, cfg);
+    assert_eq!(Executor::new(&prog, &parts).workers(), 3);
+    assert_eq!(Executor::new(&prog, &parts).with_workers(8).workers(), 8);
+}
+
+#[test]
 fn executor_output_ref_points_at_result() {
     let ir = Model::Gcn.build(2, 8, 8, 8);
     let prog = compile(&ir);

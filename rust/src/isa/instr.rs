@@ -181,6 +181,20 @@ pub enum DataRef {
     Node(usize),
 }
 
+impl DataRef {
+    /// Dense arena index for DRAM-backed arrays: `Input` and `Degree`
+    /// first, then one slot per IR node id. Both functional backends
+    /// address off-chip storage through this instead of hashing the enum
+    /// (see `Program::slot_layout`).
+    pub fn slot(&self) -> usize {
+        match self {
+            DataRef::Input => 0,
+            DataRef::Degree => 1,
+            DataRef::Node(n) => 2 + n,
+        }
+    }
+}
+
 impl fmt::Display for DataRef {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {

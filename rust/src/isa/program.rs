@@ -68,6 +68,38 @@ impl SymbolTable {
     }
 }
 
+/// Dense slot counts per symbol space plus the width of the DRAM arena,
+/// computed once per program from the symbol table and the instruction
+/// stream. The functional executor and the cycle simulator allocate flat
+/// `Vec`-indexed arenas of these sizes instead of hashing `Sym`s on every
+/// instruction — symbol ids are small and dense after liveness merging,
+/// so a slot lookup is one bounds-checked index.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SlotLayout {
+    /// Slots for D-space symbols (destination-interval data).
+    pub d: usize,
+    /// Slots for S-space symbols (shard source-vertex data).
+    pub s: usize,
+    /// Slots for E-space symbols (shard edge data).
+    pub e: usize,
+    /// Slots for W-space symbols (resident weights).
+    pub w: usize,
+    /// Slots for `DataRef` arrays (`DataRef::slot()` indexes).
+    pub dram: usize,
+}
+
+impl SlotLayout {
+    fn grow_sym(&mut self, sym: Sym) {
+        let c = match sym.space {
+            Space::D => &mut self.d,
+            Space::S => &mut self.s,
+            Space::E => &mut self.e,
+            Space::W => &mut self.w,
+        };
+        *c = (*c).max(sym.id as usize + 1);
+    }
+}
+
 /// One PLOF phase group: the unit of a full dual-sliding-window sweep
 /// (paper Alg 2). A model compiles to one or more groups executed in
 /// sequence; each group's GatherPhase iterates shards, Scatter/ApplyPhase
@@ -146,6 +178,36 @@ impl Program {
             .iter()
             .map(|w| w.rows as u64 * w.cols as u64 * 4)
             .sum()
+    }
+
+    /// Compute the dense arena sizes for this program: the union of the
+    /// symbol table, the weight list, and every symbol / `DataRef`
+    /// mentioned by an instruction (defensive — liveness merging keeps
+    /// the table authoritative, but a hand-built test program may skip it).
+    pub fn slot_layout(&self) -> SlotLayout {
+        let mut l = SlotLayout::default();
+        for info in self.symbols.iter() {
+            l.grow_sym(info.sym);
+        }
+        for w in &self.weights {
+            l.grow_sym(w.sym);
+        }
+        for g in &self.groups {
+            for i in g.all_instrs() {
+                if let Some(d) = i.def() {
+                    l.grow_sym(d);
+                }
+                for u in i.uses() {
+                    l.grow_sym(u);
+                }
+                if let Instr::Ld { data, .. } | Instr::St { data, .. } = i {
+                    l.dram = l.dram.max(data.slot() + 1);
+                }
+            }
+        }
+        // Input and Degree are always addressable (the host seeds them).
+        l.dram = l.dram.max(2);
+        l
     }
 
     /// Assembly dump of the whole program (used by `switchblade compile`).
@@ -279,6 +341,16 @@ mod tests {
         assert_eq!(p.weight_bytes(), 16 * 16 * 4);
         assert_eq!(p.symbols.total_cols(Space::S), 16);
         assert_eq!(p.symbols.count(Space::D), 1);
+    }
+
+    #[test]
+    fn slot_layout_covers_symbols_weights_and_dram() {
+        let l = sample_program().slot_layout();
+        assert_eq!((l.d, l.s, l.e, l.w), (1, 1, 1, 1));
+        // DataRef::Node(5) → slot 7, so the arena must hold 8 slots.
+        assert_eq!(l.dram, 8);
+        // An empty program still addresses Input and Degree.
+        assert_eq!(Program::default().slot_layout().dram, 2);
     }
 
     #[test]

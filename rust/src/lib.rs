@@ -7,8 +7,12 @@
 //! * [`compiler`] — PLOF phase construction and ISA code generation (§V-C),
 //! * [`partition`] — DSW-GP (Alg 1) and FGGP (Alg 3) graph partitioners,
 //! * [`isa`] — the accelerator instruction set (§V-A),
+//! * [`sched`] — the shared partition-walk scheduler: the single
+//!   definition of the Alg 2 group→interval→shard order, driven through
+//!   phase-hook visitors by both `sim` and `exec`,
 //! * [`sim`] — the cycle-level accelerator model with SLMT (§V-B),
-//! * [`exec`] — a functional executor for compiled programs (numerics),
+//! * [`exec`] — a functional executor for compiled programs (numerics;
+//!   shard-parallel across a worker pool, bit-identical at any width),
 //! * [`baseline`] — V100 GPU cost model and the HyGCN reproduction,
 //! * [`energy`] — area/power/energy models (Tbl V),
 //! * [`runtime`] — PJRT loader for the AOT-compiled JAX reference models,
@@ -30,5 +34,6 @@ pub mod baseline;
 pub mod compiler;
 pub mod partition;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod util;

@@ -9,7 +9,7 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use switchblade::compiler::compile;
-use switchblade::coordinator::{Caches, Harness};
+use switchblade::coordinator::{bench_executor, Caches, Harness};
 use switchblade::dse::{self, Objective, TuneOptions};
 use switchblade::exec::weights;
 use switchblade::graph::datasets::{Dataset, DEFAULT_SCALE};
@@ -36,12 +36,26 @@ COMMANDS:
                                            + partition configs, report Pareto frontier
                                            (budget 0 = exhaustive; default 64)
     repro     [--fig 7|8|9|10|11|12|13] [--tbl 4|5] [--all] [--scale N] [--out DIR]
-                                           regenerate the paper's figures/tables
-    serve     [--model M] [--requests R]   PJRT serving demo over AOT artifacts
-    validate                               three-way numerics check (needs artifacts)
+              [--config FILE]              regenerate the paper's figures/tables
+    serve     [--model M] [--requests R] [--config FILE]
+                                           PJRT serving demo over AOT artifacts
+                                           (requests must be >= 1)
+    validate  [--scale N]                  three-way numerics check (needs artifacts)
+    bench     [--model M] [--dataset D] [--scale N] [--iters N] [--workers W]
+                                           functional-executor throughput probe
+                                           (single vs shard-parallel; bench.sh
+                                           folds this into BENCH_exec.json)
     help                                   this text
 
 MODELS:   GCN GAT SAGE GGNN        DATASETS: AK AD HW CP SL
+
+TUNED CONFIGS (--config):
+    `repro` and `serve` accept a `dse_*_frontier.json|csv` (or sweep)
+    artifact written by `switchblade tune`; its latency-champion row
+    replaces the hard-coded Tbl III accelerator. `repro --config`
+    re-renders every figure on the tuned hardware; `serve --config`
+    additionally prints the predicted accelerator latency for the
+    serving shape.
 ";
 
 fn main() -> ExitCode {
@@ -55,7 +69,8 @@ fn main() -> ExitCode {
         "tune" => cmd_tune(rest),
         "repro" => cmd_repro(rest),
         "serve" => cmd_serve(rest),
-        "validate" => cmd_validate(),
+        "validate" => cmd_validate(rest),
+        "bench" => cmd_bench(rest),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -110,6 +125,15 @@ fn parse_workload(rest: &[String], cmd: &str) -> Result<(Model, Dataset, u32), S
     let d = parse_dataset(rest.get(1).ok_or_else(|| format!("{cmd} needs a dataset"))?)?;
     let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
     Ok((m, d, scale))
+}
+
+/// `--config FILE`: load a tuned design point from a `switchblade tune`
+/// artifact (see USAGE); `None` means the Tbl III default.
+fn opt_design(rest: &[String]) -> Result<Option<dse::DesignPoint>, String> {
+    match opt_val(rest, "--config") {
+        None => Ok(None),
+        Some(p) => dse::load_design(std::path::Path::new(p)).map(Some),
+    }
 }
 
 // ---- subcommands ---------------------------------------------------------------
@@ -247,10 +271,14 @@ fn cmd_repro(rest: &[String]) -> Result<(), String> {
         || (opt_val(rest, "--fig").is_none() && opt_val(rest, "--tbl").is_none());
     let fig = opt_val(rest, "--fig");
     let tbl = opt_val(rest, "--tbl");
-    let h = Harness {
+    let mut h = Harness {
         scale,
         ..Default::default()
     };
+    if let Some(dp) = opt_design(rest)? {
+        eprintln!("tuned accelerator config: {}", dp.label());
+        h.accel = dp.accel();
+    }
     let cache = Caches::new(scale);
     eprintln!("harness scale: 1/2^{scale} of paper dataset sizes");
 
@@ -311,10 +339,84 @@ fn cmd_repro(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `bench`: functional-executor throughput, single vs shard-parallel.
+/// Prints a table plus stable `key=value` lines `scripts/bench.sh` greps
+/// into `BENCH_exec.json`.
+fn cmd_bench(rest: &[String]) -> Result<(), String> {
+    let m = parse_model(opt_val(rest, "--model").unwrap_or("GCN"))?;
+    let d = parse_dataset(opt_val(rest, "--dataset").unwrap_or("AK"))?;
+    let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
+    let iters = opt_u32(rest, "--iters", 3)?.max(1) as usize;
+    let workers = opt_u32(rest, "--workers", 0)? as usize; // 0 = sThread count
+    let accel = AcceleratorConfig::switchblade();
+    eprintln!("generating {} at scale {scale}...", d.full_name());
+    let g = d.load(scale);
+    let b = bench_executor(m, &g, &accel, workers, iters);
+    if !b.bit_identical {
+        return Err("shard-parallel executor diverged bitwise from single-worker run".into());
+    }
+    let mut t = Table::new(
+        &format!(
+            "executor throughput — {} on {} (scale {scale}, {} iters)",
+            m.name(),
+            d.full_name(),
+            b.iters
+        ),
+        &["metric", "value"],
+    );
+    t.row(vec!["vertices".into(), b.vertices.to_string()]);
+    t.row(vec!["workers".into(), b.workers.to_string()]);
+    t.row(vec![
+        "single-worker".into(),
+        format!("{:.3} ms/run", b.secs_single * 1e3),
+    ]);
+    t.row(vec![
+        "shard-parallel".into(),
+        format!("{:.3} ms/run", b.secs_parallel * 1e3),
+    ]);
+    t.row(vec![
+        "throughput".into(),
+        format!("{:.0} vertices/s", b.vertices_per_sec()),
+    ]);
+    t.row(vec!["speedup".into(), format!("{:.2}x", b.speedup())]);
+    t.print();
+    // Machine-readable trailer for scripts/bench.sh.
+    println!("exec_ms_single={:.3}", b.secs_single * 1e3);
+    println!("exec_ms_parallel={:.3}", b.secs_parallel * 1e3);
+    println!("exec_workers={}", b.workers);
+    println!("exec_speedup={:.3}", b.speedup());
+    println!("exec_bitmatch={}", b.bit_identical);
+    Ok(())
+}
+
 fn cmd_serve(rest: &[String]) -> Result<(), String> {
     let model = opt_val(rest, "--model").unwrap_or("gcn").to_lowercase();
     let requests = opt_u32(rest, "--requests", 32)? as usize;
+    if requests == 0 {
+        return Err("serve needs --requests >= 1 (latency percentiles are undefined \
+                    over an empty run)"
+            .into());
+    }
     let shape = ArtifactShape::default();
+    if let Some(dp) = opt_design(rest)? {
+        // Predicted accelerator latency for the serving shape under the
+        // tuned (config, partition method) point.
+        let m = parse_model(&model)?;
+        let prog = compile(&m.build_paper());
+        let accel = dp.accel();
+        let el = switchblade::graph::generators::rmat(shape.n, shape.e, 0.57, 0.19, 0.19, 1000);
+        let g = switchblade::graph::Csr::from_edge_list(&el);
+        let parts = dp.method.run(&g, accel.partition_config(&prog));
+        let r = simulate(&prog, &parts, &accel);
+        eprintln!(
+            "tuned accelerator config: {} — predicted {:.3} ms/request at the \
+             serving shape (n={}, e={})",
+            dp.label(),
+            r.seconds * 1e3,
+            shape.n,
+            shape.e
+        );
+    }
     let dir = artifacts_dir();
     let rt = Runtime::cpu().map_err(|e| format!("{e:#}"))?;
     eprintln!("PJRT platform: {}", rt.platform());
@@ -373,8 +475,11 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_validate() -> Result<(), String> {
-    let cache = Caches::new(9);
+fn cmd_validate(rest: &[String]) -> Result<(), String> {
+    // Historical default: validation runs at a smaller scale (1/2^9) than
+    // repro so the dense IR reference stays fast.
+    let scale = opt_u32(rest, "--scale", 9)?;
+    let cache = Caches::new(scale);
     let g = cache.graph(Dataset::Ak);
     let accel = AcceleratorConfig::switchblade();
     let mut t = Table::new(

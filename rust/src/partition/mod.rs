@@ -148,6 +148,21 @@ impl Shard {
     pub fn loaded_bytes(&self, cfg: &PartitionConfig) -> u64 {
         cfg.shard_footprint(self.loaded_sources as u64, self.edges.len() as u64)
     }
+
+    /// Inclusive `(min, max)` destination-vertex range this shard's edges
+    /// touch; `None` for an edgeless shard. The executor sizes per-shard
+    /// partial gather accumulators to this window instead of the whole
+    /// interval.
+    pub fn dst_span(&self) -> Option<(VertexId, VertexId)> {
+        let mut it = self.edges.iter();
+        let first = it.next()?;
+        let (mut lo, mut hi) = (first.dst, first.dst);
+        for e in it {
+            lo = lo.min(e.dst);
+            hi = hi.max(e.dst);
+        }
+        Some((lo, hi))
+    }
 }
 
 /// A destination interval and the index range of its shards.
@@ -189,6 +204,23 @@ impl Partitions {
     pub fn shards_of(&self, interval: usize) -> &[Shard] {
         let iv = &self.intervals[interval];
         &self.shards[iv.shard_begin..iv.shard_end]
+    }
+
+    /// Global shard-index range of one interval — the unit the walk
+    /// scheduler iterates (`sched::PartitionWalk`).
+    pub fn shard_range(&self, interval: usize) -> std::ops::Range<usize> {
+        let iv = &self.intervals[interval];
+        iv.shard_begin..iv.shard_end
+    }
+
+    /// `(global shard index, shard)` pairs of one interval, in canonical
+    /// (ascending) order. The global index is what walk traces and the
+    /// executor's deterministic gather-merge key on.
+    pub fn shards_of_indexed(
+        &self,
+        interval: usize,
+    ) -> impl Iterator<Item = (usize, &Shard)> + '_ {
+        self.shard_range(interval).zip(self.shards_of(interval))
     }
 
     /// Structural invariants shared by both methods; used by integration

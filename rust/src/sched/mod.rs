@@ -1,0 +1,371 @@
+//! The shared partition-walk scheduler: ONE definition of the Alg 2
+//! execution order, driven through phase-hook visitors.
+//!
+//! The paper's PLOF execution order (Alg 2, Fig 3) is: for every phase
+//! group, for every destination interval — run the ScatterPhase on the
+//! iThread, stream the interval's shards through the sThreads
+//! (GatherPhase), then run the ApplyPhase on the iThread. Both functional
+//! backends of this crate follow that order: the [`exec::Executor`]
+//! (real numbers) and the [`sim::Engine`] (cycle timing). Before this
+//! module existed each hand-rolled its own group→interval→shard loop
+//! nest, and the two could silently drift apart.
+//!
+//! [`PartitionWalk`] is now the only place the loop nest exists. A
+//! backend implements [`PhaseVisitor`] and receives the traversal as a
+//! sequence of hook calls; it cannot reorder, skip, or duplicate steps.
+//!
+//! # The phase-hook contract
+//!
+//! For one `(program, partitions)` pair, [`PartitionWalk::drive`] calls
+//! the visitor exactly as follows (canonical order):
+//!
+//! ```text
+//! for group g (program order):
+//!     begin_group(g)
+//!     for interval i (ascending vertex ranges):
+//!         begin_interval(g, i)
+//!         scatter_phase(g, i)              # iThread: group.scatter instrs
+//!         for shard s of interval i (ascending global shard index):
+//!             gather_shard(g, i, s)        # sThreads: group.gather instrs
+//!         end_gather(g, i)                 # barrier: all shards of i done
+//!         apply_phase(g, i)                # iThread: group.apply instrs
+//!         end_interval(g, i)
+//!     end_group(g)
+//! ```
+//!
+//! Hooks the backend does not need have empty default bodies. The
+//! `scatter_phase` / `apply_phase` hooks are invoked even when the
+//! corresponding instruction list is empty — whether "empty phase" has a
+//! cost (e.g. a phase-switch bubble) is the backend's decision, not the
+//! walker's.
+//!
+//! Two contract points matter for parallel backends:
+//!
+//! * `gather_shard` is a *schedule point*, not a completion point: the
+//!   executor queues the shard for its worker pool there and drains the
+//!   queue at `end_gather`, so shards run concurrently while the *walk
+//!   order* (and therefore the deterministic merge order of gather
+//!   accumulators) stays canonical.
+//! * `end_gather` is the only place an interval's gather results may be
+//!   reduced — it is the software analogue of the hardware phase
+//!   scheduler waiting for all sThreads before switching to ApplyPhase.
+//!
+//! # Traces
+//!
+//! [`Traced`] wraps any visitor and records the `(group, interval,
+//! shard, phase)` sequence as [`WalkStep`]s; [`canonical_trace`] records
+//! the walk with a no-op visitor. The scheduler tests assert that the
+//! executor's and the simulator's recorded traces are identical to the
+//! canonical one — the order-equivalence property that previously had to
+//! be taken on faith.
+
+use crate::isa::{PhaseGroup, Program};
+use crate::partition::{Interval, Partitions, Shard};
+
+/// Which of the three Alg 2 phases a [`WalkStep`] belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// iThread pre-processing per interval.
+    Scatter,
+    /// sThread work for one shard.
+    Gather,
+    /// iThread post-processing per interval.
+    Apply,
+}
+
+/// One step of the canonical traversal, as recorded by [`Traced`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WalkStep {
+    pub group: u32,
+    pub interval: u32,
+    /// Global shard index (into `Partitions::shards`) for
+    /// [`Phase::Gather`] steps; `None` for the interval-side phases.
+    pub shard: Option<u32>,
+    pub phase: Phase,
+}
+
+/// Group-scope context handed to `begin_group` / `end_group`.
+pub struct GroupCtx<'a> {
+    pub index: usize,
+    pub group: &'a PhaseGroup,
+}
+
+/// Interval-scope context handed to every per-interval hook.
+pub struct StepCtx<'a> {
+    pub group_idx: usize,
+    pub group: &'a PhaseGroup,
+    pub interval_idx: usize,
+    pub interval: &'a Interval,
+}
+
+/// Backend hooks for the canonical walk. All methods default to no-ops;
+/// a backend overrides the ones it gives semantics to. See the module
+/// docs for the exact call sequence (the phase-hook contract).
+pub trait PhaseVisitor {
+    fn begin_group(&mut self, _cx: &GroupCtx) {}
+    fn end_group(&mut self, _cx: &GroupCtx) {}
+    fn begin_interval(&mut self, _cx: &StepCtx) {}
+    /// The interval's ScatterPhase (iThread).
+    fn scatter_phase(&mut self, _cx: &StepCtx) {}
+    /// One shard's GatherPhase (sThreads). `shard_idx` is the global
+    /// index into `Partitions::shards`.
+    fn gather_shard(&mut self, _cx: &StepCtx, _shard_idx: usize, _shard: &Shard) {}
+    /// All shards of the interval have been offered; gather results may
+    /// now be reduced.
+    fn end_gather(&mut self, _cx: &StepCtx) {}
+    /// The interval's ApplyPhase (iThread).
+    fn apply_phase(&mut self, _cx: &StepCtx) {}
+    fn end_interval(&mut self, _cx: &StepCtx) {}
+}
+
+/// The canonical Alg 2 traversal over one `(program, partitions)` pair.
+pub struct PartitionWalk<'a> {
+    program: &'a Program,
+    parts: &'a Partitions,
+}
+
+impl<'a> PartitionWalk<'a> {
+    pub fn new(program: &'a Program, parts: &'a Partitions) -> Self {
+        PartitionWalk { program, parts }
+    }
+
+    /// Drive a visitor through the canonical order. This loop nest is the
+    /// single source of truth for PLOF execution order — backends must
+    /// not reimplement it.
+    pub fn drive<V: PhaseVisitor>(&self, v: &mut V) {
+        for (gi, group) in self.program.groups.iter().enumerate() {
+            let gcx = GroupCtx { index: gi, group };
+            v.begin_group(&gcx);
+            for (ii, iv) in self.parts.intervals.iter().enumerate() {
+                let cx = StepCtx {
+                    group_idx: gi,
+                    group,
+                    interval_idx: ii,
+                    interval: iv,
+                };
+                v.begin_interval(&cx);
+                v.scatter_phase(&cx);
+                for (si, shard) in self.parts.shards_of_indexed(ii) {
+                    v.gather_shard(&cx, si, shard);
+                }
+                v.end_gather(&cx);
+                v.apply_phase(&cx);
+                v.end_interval(&cx);
+            }
+            v.end_group(&gcx);
+        }
+    }
+}
+
+/// Visitor wrapper recording the `(group, interval, shard, phase)` step
+/// sequence while delegating every hook to the wrapped visitor.
+pub struct Traced<'v, V> {
+    pub inner: &'v mut V,
+    steps: Vec<WalkStep>,
+}
+
+impl<'v, V> Traced<'v, V> {
+    pub fn new(inner: &'v mut V) -> Self {
+        Traced {
+            inner,
+            steps: Vec::new(),
+        }
+    }
+
+    pub fn steps(&self) -> &[WalkStep] {
+        &self.steps
+    }
+
+    pub fn into_steps(self) -> Vec<WalkStep> {
+        self.steps
+    }
+}
+
+impl<V: PhaseVisitor> PhaseVisitor for Traced<'_, V> {
+    fn begin_group(&mut self, cx: &GroupCtx) {
+        self.inner.begin_group(cx);
+    }
+
+    fn end_group(&mut self, cx: &GroupCtx) {
+        self.inner.end_group(cx);
+    }
+
+    fn begin_interval(&mut self, cx: &StepCtx) {
+        self.inner.begin_interval(cx);
+    }
+
+    fn scatter_phase(&mut self, cx: &StepCtx) {
+        self.steps.push(WalkStep {
+            group: cx.group_idx as u32,
+            interval: cx.interval_idx as u32,
+            shard: None,
+            phase: Phase::Scatter,
+        });
+        self.inner.scatter_phase(cx);
+    }
+
+    fn gather_shard(&mut self, cx: &StepCtx, shard_idx: usize, shard: &Shard) {
+        self.steps.push(WalkStep {
+            group: cx.group_idx as u32,
+            interval: cx.interval_idx as u32,
+            shard: Some(shard_idx as u32),
+            phase: Phase::Gather,
+        });
+        self.inner.gather_shard(cx, shard_idx, shard);
+    }
+
+    fn end_gather(&mut self, cx: &StepCtx) {
+        self.inner.end_gather(cx);
+    }
+
+    fn apply_phase(&mut self, cx: &StepCtx) {
+        self.steps.push(WalkStep {
+            group: cx.group_idx as u32,
+            interval: cx.interval_idx as u32,
+            shard: None,
+            phase: Phase::Apply,
+        });
+        self.inner.apply_phase(cx);
+    }
+
+    fn end_interval(&mut self, cx: &StepCtx) {
+        self.inner.end_interval(cx);
+    }
+}
+
+/// The canonical `(group, interval, shard, phase)` order for one
+/// `(program, partitions)` pair — what any conforming backend must emit.
+pub fn canonical_trace(program: &Program, parts: &Partitions) -> Vec<WalkStep> {
+    struct Null;
+    impl PhaseVisitor for Null {}
+    let mut null = Null;
+    let mut tr = Traced::new(&mut null);
+    PartitionWalk::new(program, parts).drive(&mut tr);
+    tr.into_steps()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::{Method, PartitionConfig, Shard};
+
+    fn toy_parts() -> Partitions {
+        // Two intervals: the first with two shards, the second with none
+        // (an isolated destination range).
+        let cfg = PartitionConfig {
+            shard_bytes: 1024,
+            dst_bytes: 1024,
+            dim_src: 1,
+            dim_edge: 1,
+            dim_dst: 1,
+            num_sthreads: 2,
+        };
+        let shard = |iv: u32| Shard {
+            interval: iv,
+            ..Shard::default()
+        };
+        Partitions {
+            method: Method::Dsw,
+            config: cfg,
+            num_vertices: 8,
+            num_edges: 0,
+            intervals: vec![
+                Interval {
+                    begin: 0,
+                    end: 4,
+                    shard_begin: 0,
+                    shard_end: 2,
+                },
+                Interval {
+                    begin: 4,
+                    end: 8,
+                    shard_begin: 2,
+                    shard_end: 2,
+                },
+            ],
+            shards: vec![shard(0), shard(0)],
+        }
+    }
+
+    fn toy_program(groups: usize) -> Program {
+        Program {
+            model_name: "toy".into(),
+            groups: vec![PhaseGroup::default(); groups],
+            ..Program::default()
+        }
+    }
+
+    #[test]
+    fn canonical_order_is_scatter_shards_apply() {
+        let p = toy_program(1);
+        let parts = toy_parts();
+        let t = canonical_trace(&p, &parts);
+        let s = |interval, shard, phase| WalkStep {
+            group: 0,
+            interval,
+            shard,
+            phase,
+        };
+        assert_eq!(
+            t,
+            vec![
+                s(0, None, Phase::Scatter),
+                s(0, Some(0), Phase::Gather),
+                s(0, Some(1), Phase::Gather),
+                s(0, None, Phase::Apply),
+                s(1, None, Phase::Scatter),
+                s(1, None, Phase::Apply),
+            ]
+        );
+    }
+
+    #[test]
+    fn groups_are_outermost() {
+        let p = toy_program(2);
+        let parts = toy_parts();
+        let t = canonical_trace(&p, &parts);
+        assert_eq!(t.len(), 12);
+        // Every group-0 step precedes every group-1 step.
+        let split = t.iter().position(|s| s.group == 1).unwrap();
+        assert!(t[..split].iter().all(|s| s.group == 0));
+        assert!(t[split..].iter().all(|s| s.group == 1));
+    }
+
+    #[test]
+    fn hooks_fire_in_contract_order() {
+        #[derive(Default)]
+        struct Log(Vec<&'static str>);
+        impl PhaseVisitor for Log {
+            fn begin_group(&mut self, _: &GroupCtx) {
+                self.0.push("bg");
+            }
+            fn end_group(&mut self, _: &GroupCtx) {
+                self.0.push("eg");
+            }
+            fn begin_interval(&mut self, _: &StepCtx) {
+                self.0.push("bi");
+            }
+            fn scatter_phase(&mut self, _: &StepCtx) {
+                self.0.push("s");
+            }
+            fn gather_shard(&mut self, _: &StepCtx, _: usize, _: &Shard) {
+                self.0.push("g");
+            }
+            fn end_gather(&mut self, _: &StepCtx) {
+                self.0.push("G");
+            }
+            fn apply_phase(&mut self, _: &StepCtx) {
+                self.0.push("a");
+            }
+            fn end_interval(&mut self, _: &StepCtx) {
+                self.0.push("ei");
+            }
+        }
+        let mut log = Log::default();
+        PartitionWalk::new(&toy_program(1), &toy_parts()).drive(&mut log);
+        assert_eq!(
+            log.0,
+            vec!["bg", "bi", "s", "g", "g", "G", "a", "ei", "bi", "s", "G", "a", "ei", "eg"]
+        );
+    }
+}

@@ -1,20 +1,45 @@
 //! The discrete-event SLMT engine (see module docs in `sim/mod.rs`).
+//!
+//! The engine is a [`PhaseVisitor`] over [`sched::PartitionWalk`] — the
+//! same canonical Alg 2 traversal the functional executor drives through,
+//! so the simulated order cannot drift from the executed one (the
+//! scheduler tests pin this with walk-trace equivalence). Symbol
+//! readiness times live in dense slot vectors (`Program::slot_layout`),
+//! not per-instruction hash maps.
 
-use std::collections::HashMap;
-
-use crate::isa::{Dim, Instr, Program, Space, Sym, Unit};
+use crate::isa::{Dim, Instr, Program, SlotLayout, Space, Sym, Unit};
 use crate::partition::{Partitions, Shard};
+use crate::sched::{GroupCtx, PartitionWalk, PhaseVisitor, StepCtx, Traced, WalkStep};
 
 use super::config::AcceleratorConfig;
 use super::cost::{CostModel, ISSUE_OVERHEAD, PHASE_SWITCH};
 use super::dram::DramModel;
 use super::stats::{SimResult, TrafficTag};
 
+/// "Not produced yet" marker in the readiness vectors: `max` with any
+/// real timestamp erases it, matching the old hash-map-absent semantics.
+const ABSENT: f64 = f64::NEG_INFINITY;
+
 /// Simulate one compiled program over one partitioning.
 pub fn simulate(program: &Program, parts: &Partitions, cfg: &AcceleratorConfig) -> SimResult {
-    let mut e = Engine::new(cfg);
-    e.run(program, parts);
+    let mut e = Engine::new(cfg, program, parts);
+    PartitionWalk::new(program, parts).drive(&mut e);
     e.finish(cfg)
+}
+
+/// Like [`simulate`], additionally recording the walker's `(group,
+/// interval, shard, phase)` trace — compared against the executor's by
+/// the scheduler order-equivalence tests.
+pub fn simulate_traced(
+    program: &Program,
+    parts: &Partitions,
+    cfg: &AcceleratorConfig,
+) -> (SimResult, Vec<WalkStep>) {
+    let mut e = Engine::new(cfg, program, parts);
+    let mut tr = Traced::new(&mut e);
+    PartitionWalk::new(program, parts).drive(&mut tr);
+    let steps = tr.into_steps();
+    (e.finish(cfg), steps)
 }
 
 struct Engine {
@@ -28,11 +53,37 @@ struct Engine {
     instructions: u64,
     shards: u64,
     intervals: u64,
+    // ---- walk state (valid while a drive is in flight) ---------------------
+    nthreads: usize,
+    /// Group start time: the previous group's end (groups are barriers —
+    /// apply stores feed the next group's loads through DRAM).
+    t: f64,
+    group_start: f64,
+    /// The iThread is serial: scatter(i+1) waits for apply(i).
+    ithread_free: f64,
+    /// Per-sThread compute / load pipeline cursors. Intervals *pipeline*
+    /// within a group (paper Fig 3): while the iThread applies interval
+    /// i, the sThreads already stream interval i+1's shards (the
+    /// DstBuffer double-buffers interval state).
+    compute_free: Vec<f64>,
+    load_free: Vec<f64>,
+    group_end: f64,
+    /// Earliest time this interval's shards may start computing.
+    shard_gate: f64,
+    /// Latest shard finish of the current interval.
+    gather_done: f64,
+    /// Per-interval D-symbol readiness, slot-indexed.
+    d_ready: Vec<f64>,
+    /// Per-shard S/E-symbol readiness, slot-indexed (reset per shard).
+    s_ready: Vec<f64>,
+    e_ready: Vec<f64>,
 }
 
 impl Engine {
-    fn new(cfg: &AcceleratorConfig) -> Self {
-        Engine {
+    fn new(cfg: &AcceleratorConfig, program: &Program, parts: &Partitions) -> Self {
+        let layout: SlotLayout = program.slot_layout();
+        let nthreads = thread_count(parts);
+        let mut e = Engine {
             cm: CostModel::new(cfg),
             dram: DramModel::new(cfg),
             vu_free: 0.0,
@@ -43,95 +94,28 @@ impl Engine {
             instructions: 0,
             shards: 0,
             intervals: 0,
-        }
-    }
-
-    fn run(&mut self, program: &Program, parts: &Partitions) {
+            nthreads,
+            t: 0.0,
+            group_start: 0.0,
+            ithread_free: 0.0,
+            compute_free: vec![0.0; nthreads],
+            load_free: vec![0.0; nthreads],
+            group_end: 0.0,
+            shard_gate: 0.0,
+            gather_done: 0.0,
+            d_ready: vec![ABSENT; layout.d],
+            s_ready: vec![ABSENT; layout.s],
+            e_ready: vec![ABSENT; layout.e],
+        };
         // Weights load once and stay resident in the weight buffer.
-        let mut t = self
+        e.t = e
             .dram
             .transfer(0.0, program.weight_bytes(), TrafficTag::Weights);
-
-        let nthreads = thread_count(parts);
-        for group in &program.groups {
-            // Intervals *pipeline* within a group (paper Fig 3): while the
-            // iThread applies interval i, the sThreads already stream
-            // interval i+1's shards (the DstBuffer double-buffers interval
-            // state). The iThread itself is serial: scatter(i+1) waits for
-            // apply(i). Groups are barriers (apply stores feed the next
-            // group's loads through DRAM).
-            let group_start = t;
-            let mut ithread_free = group_start;
-            let mut compute_free = vec![group_start; nthreads];
-            let mut load_free = vec![group_start; nthreads];
-            let mut group_end = group_start;
-            for (ii, iv) in parts.intervals.iter().enumerate() {
-                self.intervals += 1;
-                let v = iv.len() as u64;
-
-                // ---- ScatterPhase (iThread) --------------------------------
-                let mut d_ready: HashMap<Sym, f64> = HashMap::new();
-                let scatter_done = self.run_ithread_phase(
-                    &group.scatter,
-                    ithread_free + PHASE_SWITCH,
-                    v,
-                    &mut d_ready,
-                );
-                if !group.scatter.is_empty() {
-                    ithread_free = scatter_done;
-                }
-                // Shards gate on this interval's ScatterPhase only when it
-                // produced data they read.
-                let shard_gate = if group.scatter.is_empty() {
-                    group_start
-                } else {
-                    scatter_done
-                };
-
-                // ---- GatherPhase (sThreads over shards) --------------------
-                let mut gather_done = shard_gate;
-                for shard in parts.shards_of(ii) {
-                    self.shards += 1;
-                    // Dynamic assignment: next shard goes to the thread
-                    // that frees first (phase scheduler, §V-B2).
-                    let k = (0..nthreads)
-                        .min_by(|&a, &b| compute_free[a].total_cmp(&compute_free[b]))
-                        .unwrap();
-                    let done = self.run_shard(
-                        &group.gather,
-                        shard,
-                        v,
-                        shard_gate,
-                        &mut load_free[k],
-                        &mut compute_free[k],
-                        &mut d_ready,
-                    );
-                    gather_done = gather_done.max(done);
-                }
-
-                // ---- ApplyPhase (iThread) ----------------------------------
-                let apply_done = self.run_ithread_phase(
-                    &group.apply,
-                    gather_done.max(ithread_free) + PHASE_SWITCH,
-                    v,
-                    &mut d_ready,
-                );
-                ithread_free = apply_done;
-                group_end = group_end.max(apply_done).max(gather_done);
-                self.now_max = self.now_max.max(group_end);
-            }
-            t = group_end;
-        }
+        e
     }
 
     /// Run an interval-side (iThread) phase sequentially; returns finish time.
-    fn run_ithread_phase(
-        &mut self,
-        instrs: &[Instr],
-        start: f64,
-        v: u64,
-        d_ready: &mut HashMap<Sym, f64>,
-    ) -> f64 {
+    fn run_ithread_phase(&mut self, instrs: &[Instr], start: f64, v: u64) -> f64 {
         let mut prev_issue = start;
         let mut finish = start;
         for i in instrs {
@@ -141,14 +125,14 @@ impl Engine {
                     let bytes = v * *cols as u64 * 4;
                     let t0 = prev_issue;
                     let done = self.dram.transfer(t0, bytes, TrafficTag::DstLoad);
-                    d_ready.insert(*sym, done);
+                    self.d_ready[sym.id as usize] = done;
                     prev_issue = t0 + ISSUE_OVERHEAD;
                     finish = finish.max(done);
                 }
                 Instr::St { sym, cols, .. } => {
                     let bytes = v * *cols as u64 * 4;
-                    let ready = d_ready.get(sym).copied().unwrap_or(prev_issue);
-                    let t0 = prev_issue.max(ready);
+                    // ABSENT folds away under max.
+                    let t0 = prev_issue.max(self.d_ready[sym.id as usize]);
                     let done = self.dram.transfer(t0, bytes, TrafficTag::DstStore);
                     prev_issue = t0 + ISSUE_OVERHEAD;
                     finish = finish.max(done);
@@ -158,14 +142,13 @@ impl Engine {
                     let oper_ready = i
                         .uses()
                         .iter()
-                        .filter_map(|s| d_ready.get(s))
-                        .fold(0.0f64, |a, &b| a.max(b));
+                        .fold(0.0f64, |a, s| a.max(self.interval_ready(*s)));
                     let (unit_free, busy) = self.unit_mut(i.unit());
                     let t0 = prev_issue.max(oper_ready).max(*unit_free);
                     *unit_free = t0 + dur;
                     *busy += dur;
                     if let Some(d) = i.def() {
-                        d_ready.insert(d, t0 + dur);
+                        self.d_ready[d.id as usize] = t0 + dur;
                     }
                     prev_issue = t0 + ISSUE_OVERHEAD;
                     finish = finish.max(t0 + dur);
@@ -176,22 +159,10 @@ impl Engine {
         finish
     }
 
-    /// Run one shard's GatherPhase on an sThread; returns finish time.
-    #[allow(clippy::too_many_arguments)]
-    fn run_shard(
-        &mut self,
-        instrs: &[Instr],
-        shard: &Shard,
-        v: u64,
-        scatter_done: f64,
-        load_free: &mut f64,
-        compute_free: &mut f64,
-        d_ready: &mut HashMap<Sym, f64>,
-    ) -> f64 {
+    /// Run one shard's GatherPhase on sThread `k`; returns finish time.
+    fn run_shard(&mut self, instrs: &[Instr], shard: &Shard, v: u64, k: usize) -> f64 {
         let s_loaded = shard.loaded_sources as u64;
-        let s_used = shard.num_src() as u64;
-        let e = shard.num_edges() as u64;
-        let _ = s_used;
+        let e_cnt = shard.num_edges() as u64;
 
         // Shard descriptor + COO metadata into the Graph Buffer. The SEB is
         // divided into `num_sthreads` slots (§V-B3): this thread's slot
@@ -200,17 +171,16 @@ impl Engine {
         // load→compute pipeline is fully serial (SLMT off), with more
         // threads loads overlap other threads' compute. That is the whole
         // Fig 10/11 mechanism.
-        let meta_bytes = 4 * s_loaded + 8 * e + 16;
-        let mut load_cursor = load_free.max(*compute_free);
-        let meta_done = self
-            .dram
-            .transfer(load_cursor, meta_bytes, TrafficTag::Meta);
-        let mut local_ready: HashMap<Sym, f64> = HashMap::new();
+        let meta_bytes = 4 * s_loaded + 8 * e_cnt + 16;
+        let mut load_cursor = self.load_free[k].max(self.compute_free[k]);
+        let meta_done = self.dram.transfer(load_cursor, meta_bytes, TrafficTag::Meta);
+        self.s_ready.fill(ABSENT);
+        self.e_ready.fill(ABSENT);
 
         // Compute may not start before the thread's previous shard compute
         // finished (SEB double-buffer swap) nor before the interval's
         // ScatterPhase produced the D data.
-        let mut prev_issue = compute_free.max(scatter_done);
+        let mut prev_issue = self.compute_free[k].max(self.shard_gate);
         let mut finish = meta_done;
 
         for i in instrs {
@@ -219,7 +189,7 @@ impl Engine {
                 Instr::Ld { sym, cols, .. } => {
                     let rows = match sym.space {
                         Space::S => s_loaded,
-                        Space::E => e,
+                        Space::E => e_cnt,
                         _ => unreachable!("gather LD of {sym}"),
                     };
                     let tag = if sym.space == Space::S {
@@ -230,31 +200,29 @@ impl Engine {
                     let bytes = rows * *cols as u64 * 4;
                     let t0 = load_cursor;
                     let done = self.dram.transfer(t0, bytes, tag);
-                    local_ready.insert(*sym, done);
+                    self.set_shard_ready(*sym, done);
                     load_cursor = t0 + ISSUE_OVERHEAD;
-                    *load_free = load_cursor;
+                    self.load_free[k] = load_cursor;
                     finish = finish.max(done);
                 }
                 Instr::St { sym, cols, .. } => {
-                    let bytes = e * *cols as u64 * 4;
-                    let ready = local_ready.get(sym).copied().unwrap_or(prev_issue);
-                    let t0 = prev_issue.max(ready);
+                    let bytes = e_cnt * *cols as u64 * 4;
+                    // ABSENT folds away under max.
+                    let t0 = prev_issue.max(self.shard_ready(*sym));
                     let done = self.dram.transfer(t0, bytes, TrafficTag::EdgeData);
                     prev_issue = t0 + ISSUE_OVERHEAD;
                     finish = finish.max(done);
                 }
                 _ => {
-                    let rows = rows_of(i, v, s_loaded, e);
+                    let rows = rows_of(i, v, s_loaded, e_cnt);
                     let dur = self.cm.compute_cycles(i, rows);
-                    let oper_ready = i
-                        .uses()
-                        .iter()
-                        .filter_map(|s| match s.space {
-                            Space::D => d_ready.get(s),
-                            Space::W => None,
-                            _ => local_ready.get(s),
+                    let oper_ready = i.uses().iter().fold(0.0f64, |a, s| {
+                        a.max(match s.space {
+                            Space::D => self.d_ready[s.id as usize],
+                            Space::W => ABSENT,
+                            _ => self.shard_ready(*s),
                         })
-                        .fold(0.0f64, |a, &b| a.max(b));
+                    });
                     let (unit_free, busy) = self.unit_mut(i.unit());
                     let t0 = prev_issue.max(oper_ready).max(*unit_free);
                     *unit_free = t0 + dur;
@@ -263,10 +231,10 @@ impl Engine {
                     if let Some(d) = i.def() {
                         if d.space == Space::D {
                             // Gather accumulator: cross-shard RMW.
-                            let ent = d_ready.entry(d).or_insert(done);
+                            let ent = &mut self.d_ready[d.id as usize];
                             *ent = ent.max(done);
                         } else {
-                            local_ready.insert(d, done);
+                            self.set_shard_ready(d, done);
                         }
                     }
                     prev_issue = t0 + ISSUE_OVERHEAD;
@@ -274,9 +242,34 @@ impl Engine {
                 }
             }
         }
-        *compute_free = finish + PHASE_SWITCH;
+        self.compute_free[k] = finish + PHASE_SWITCH;
         self.now_max = self.now_max.max(finish);
         finish
+    }
+
+    /// Operand readiness in an iThread phase (D data; W is resident,
+    /// S/E never appear interval-side — ABSENT folds away under max).
+    fn interval_ready(&self, s: Sym) -> f64 {
+        match s.space {
+            Space::D => self.d_ready[s.id as usize],
+            _ => ABSENT,
+        }
+    }
+
+    fn shard_ready(&self, s: Sym) -> f64 {
+        match s.space {
+            Space::S => self.s_ready[s.id as usize],
+            Space::E => self.e_ready[s.id as usize],
+            _ => ABSENT,
+        }
+    }
+
+    fn set_shard_ready(&mut self, s: Sym, done: f64) {
+        match s.space {
+            Space::S => self.s_ready[s.id as usize] = done,
+            Space::E => self.e_ready[s.id as usize] = done,
+            _ => unreachable!("shard-local ready for {s}"),
+        }
     }
 
     fn unit_mut(&mut self, u: Unit) -> (&mut f64, &mut f64) {
@@ -304,6 +297,63 @@ impl Engine {
             intervals_processed: self.intervals,
             instructions: self.instructions,
         }
+    }
+}
+
+impl PhaseVisitor for Engine {
+    fn begin_group(&mut self, _cx: &GroupCtx) {
+        self.group_start = self.t;
+        self.ithread_free = self.group_start;
+        self.compute_free.fill(self.group_start);
+        self.load_free.fill(self.group_start);
+        self.group_end = self.group_start;
+    }
+
+    fn begin_interval(&mut self, _cx: &StepCtx) {
+        self.intervals += 1;
+        self.d_ready.fill(ABSENT);
+    }
+
+    fn scatter_phase(&mut self, cx: &StepCtx) {
+        let v = cx.interval.len() as u64;
+        let scatter_done =
+            self.run_ithread_phase(&cx.group.scatter, self.ithread_free + PHASE_SWITCH, v);
+        if !cx.group.scatter.is_empty() {
+            self.ithread_free = scatter_done;
+        }
+        // Shards gate on this interval's ScatterPhase only when it
+        // produced data they read.
+        self.shard_gate = if cx.group.scatter.is_empty() {
+            self.group_start
+        } else {
+            scatter_done
+        };
+        self.gather_done = self.shard_gate;
+    }
+
+    fn gather_shard(&mut self, cx: &StepCtx, _shard_idx: usize, shard: &Shard) {
+        self.shards += 1;
+        // Dynamic assignment: next shard goes to the thread that frees
+        // first (phase scheduler, §V-B2).
+        let k = (0..self.nthreads)
+            .min_by(|&a, &b| self.compute_free[a].total_cmp(&self.compute_free[b]))
+            .unwrap();
+        let v = cx.interval.len() as u64;
+        let done = self.run_shard(&cx.group.gather, shard, v, k);
+        self.gather_done = self.gather_done.max(done);
+    }
+
+    fn apply_phase(&mut self, cx: &StepCtx) {
+        let v = cx.interval.len() as u64;
+        let start = self.gather_done.max(self.ithread_free) + PHASE_SWITCH;
+        let apply_done = self.run_ithread_phase(&cx.group.apply, start, v);
+        self.ithread_free = apply_done;
+        self.group_end = self.group_end.max(apply_done).max(self.gather_done);
+        self.now_max = self.now_max.max(self.group_end);
+    }
+
+    fn end_group(&mut self, _cx: &GroupCtx) {
+        self.t = self.group_end;
     }
 }
 
@@ -414,6 +464,21 @@ mod tests {
         let b = sim_model(Model::Sage, &cfg, true, 5);
         assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
         assert_eq!(a.traffic.total(), b.traffic.total());
+    }
+
+    #[test]
+    fn traced_run_matches_untraced() {
+        let cfg = AcceleratorConfig::switchblade();
+        let ir = Model::Gcn.build(2, 32, 32, 32);
+        let p = compile(&ir);
+        let g = Csr::from_edge_list(&generators::rmat(1 << 9, 3_000, 0.57, 0.19, 0.19, 6));
+        let mut pc = cfg.partition_config(&p);
+        pc.num_sthreads = cfg.num_sthreads;
+        let parts = partition_fggp(&g, pc);
+        let plain = simulate(&p, &parts, &cfg);
+        let (traced, steps) = simulate_traced(&p, &parts, &cfg);
+        assert_eq!(plain.cycles.to_bits(), traced.cycles.to_bits());
+        assert_eq!(steps, crate::sched::canonical_trace(&p, &parts));
     }
 
     #[test]

@@ -17,8 +17,10 @@
 //! overlap the previous shard's compute on the same thread.
 //!
 //! The simulator consumes the *same* compiled programs and partitions as
-//! the functional executor, so its timing cannot diverge structurally
-//! from the validated semantics.
+//! the functional executor — and, since both are visitors over
+//! [`sched::PartitionWalk`](crate::sched), the *same* canonical Alg 2
+//! traversal — so its timing cannot diverge structurally from the
+//! validated semantics.
 
 mod config;
 mod cost;
@@ -29,7 +31,7 @@ mod stats;
 pub use config::{AcceleratorConfig, DramConfig, HBM1, HBM2};
 pub use cost::CostModel;
 pub use dram::DramModel;
-pub use engine::simulate;
+pub use engine::{simulate, simulate_traced};
 pub use stats::{SimResult, Traffic, TrafficTag};
 
 /// Test helper: a stable tag for cross-module unit tests.

@@ -1,0 +1,115 @@
+//! Scheduler order-equivalence: the functional executor and the cycle
+//! simulator both drive `sched::PartitionWalk`, so their `(group,
+//! interval, shard, phase)` traces must be identical — to each other and
+//! to the canonical trace. This is the property that kills silent drift
+//! between the two backends' execution orders.
+
+use switchblade::compiler::compile;
+use switchblade::exec::{weights, Executor, Matrix};
+use switchblade::graph::{generators, Csr};
+use switchblade::ir::models::Model;
+use switchblade::partition::Method;
+use switchblade::sched::{canonical_trace, Phase, WalkStep};
+use switchblade::sim::{simulate_traced, AcceleratorConfig};
+
+fn degree_col(g: &Csr) -> Matrix {
+    let mut d = Matrix::zeros(g.num_vertices(), 1);
+    for v in 0..g.num_vertices() {
+        d.set(v, 0, g.in_degree(v as u32) as f32);
+    }
+    d
+}
+
+/// Structural checks on a canonical trace: per (group, interval) the
+/// phases run Scatter → Gathers (ascending shard index) → Apply, with
+/// groups outermost and intervals ascending.
+fn assert_well_formed(trace: &[WalkStep]) {
+    let mut prev: Option<&WalkStep> = None;
+    for s in trace {
+        if let Some(p) = prev {
+            assert!(
+                (s.group, s.interval) >= (p.group, p.interval),
+                "walk went backwards: {p:?} -> {s:?}"
+            );
+            if (s.group, s.interval) == (p.group, p.interval) {
+                let rank = |st: &WalkStep| match st.phase {
+                    Phase::Scatter => 0,
+                    Phase::Gather => 1,
+                    Phase::Apply => 2,
+                };
+                assert!(rank(p) <= rank(s), "phase order violated: {p:?} -> {s:?}");
+                if p.phase == Phase::Gather && s.phase == Phase::Gather {
+                    assert!(p.shard < s.shard, "shard order violated: {p:?} -> {s:?}");
+                }
+            }
+        }
+        prev = Some(s);
+    }
+}
+
+#[test]
+fn executor_and_simulator_walk_identically() {
+    let g = Csr::from_edge_list(&generators::rmat(1 << 8, 2_000, 0.57, 0.19, 0.19, 42));
+    // Small buffers so every interval has several shards and there are
+    // several intervals — a trivial 1×1 walk would prove nothing.
+    let cfg = AcceleratorConfig::switchblade()
+        .with_src_edge_buffer(48 * 1024)
+        .with_dst_buffer(16 * 1024);
+    for m in Model::ALL {
+        let ir = m.build(2, 8, 8, 8);
+        let prog = compile(&ir);
+        let pc = cfg.partition_config(&prog);
+        for method in Method::ALL {
+            let parts = method.run(&g, pc);
+            let want = canonical_trace(&prog, &parts);
+            assert_well_formed(&want);
+            assert!(
+                want.iter().any(|s| s.phase == Phase::Gather),
+                "{} / {}: degenerate walk without shards",
+                m.name(),
+                method.name()
+            );
+
+            let x = weights::init_features(3, g.num_vertices(), 8);
+            let deg = degree_col(&g);
+            let (_, exec_trace) = Executor::new(&prog, &parts).run_traced(&x, &deg);
+            let (_, sim_trace) = simulate_traced(&prog, &parts, &cfg);
+            assert_eq!(
+                exec_trace,
+                want,
+                "{} / {}: executor left the canonical walk",
+                m.name(),
+                method.name()
+            );
+            assert_eq!(
+                sim_trace,
+                want,
+                "{} / {}: simulator left the canonical walk",
+                m.name(),
+                method.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_covers_every_shard_once_per_group() {
+    let g = Csr::from_edge_list(&generators::rmat(1 << 7, 900, 0.57, 0.19, 0.19, 7));
+    let cfg = AcceleratorConfig::switchblade()
+        .with_src_edge_buffer(32 * 1024)
+        .with_dst_buffer(8 * 1024);
+    let prog = compile(&Model::Gcn.build(2, 8, 8, 8));
+    let parts = Method::Fggp.run(&g, cfg.partition_config(&prog));
+    let trace = canonical_trace(&prog, &parts);
+    let groups = prog.groups.len() as u32;
+    for gi in 0..groups {
+        let mut seen: Vec<u32> = trace
+            .iter()
+            .filter(|s| s.group == gi && s.phase == Phase::Gather)
+            .map(|s| s.shard.unwrap())
+            .collect();
+        let expect: Vec<u32> = (0..parts.shards.len() as u32).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, expect, "group {gi} gather coverage");
+    }
+}

@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Perf trajectory seeder: times `repro --fig 7` end-to-end and the
+# functional executor (single-worker vs shard-parallel) and writes the
+# results to BENCH_exec.json at the repo root. Re-run before and after a
+# perf-relevant change and diff the two files.
+#
+# Env knobs: SCALE (default 6, the harness default), ITERS (default 3),
+# OUT (default BENCH_exec.json), BENCH_MODEL / BENCH_DATASET (GCN / AK).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SCALE="${SCALE:-6}"
+ITERS="${ITERS:-3}"
+OUT="${OUT:-BENCH_exec.json}"
+MODEL="${BENCH_MODEL:-GCN}"
+DATASET="${BENCH_DATASET:-AK}"
+BIN=rust/target/release/switchblade
+
+if [[ ! -x "$BIN" ]]; then
+  echo "building release binary..." >&2
+  (cd rust && cargo build --release)
+fi
+
+echo "timing repro --fig 7 (scale $SCALE)..." >&2
+t0=$(date +%s.%N)
+"$BIN" repro --fig 7 --scale "$SCALE" --out results >/dev/null
+t1=$(date +%s.%N)
+repro_s=$(awk -v a="$t0" -v b="$t1" 'BEGIN { printf "%.3f", b - a }')
+
+echo "timing executor ($MODEL on $DATASET, $ITERS iters)..." >&2
+bench_out=$("$BIN" bench --model "$MODEL" --dataset "$DATASET" --scale "$SCALE" --iters "$ITERS")
+
+get() { printf '%s\n' "$bench_out" | sed -n "s/^$1=//p" | head -1; }
+
+cat > "$OUT" <<EOF
+{
+  "scale": $SCALE,
+  "repro_fig7_s": $repro_s,
+  "bench_model": "$MODEL",
+  "bench_dataset": "$DATASET",
+  "exec_ms_single": $(get exec_ms_single),
+  "exec_ms_parallel": $(get exec_ms_parallel),
+  "exec_workers": $(get exec_workers),
+  "exec_speedup": $(get exec_speedup),
+  "exec_bitmatch": $(get exec_bitmatch)
+}
+EOF
+echo "wrote $OUT:" >&2
+cat "$OUT"

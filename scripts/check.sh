@@ -2,7 +2,8 @@
 # Repo-wide check: format, lints, release build, and the tier-1 test
 # suite. Run from anywhere; requires the rust toolchain on PATH.
 set -euo pipefail
-cd "$(dirname "$0")/../rust"
+SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
+cd "$SCRIPT_DIR/../rust"
 
 echo "== cargo fmt --check =="
 cargo fmt --check
@@ -13,5 +14,12 @@ cargo clippy --all-targets -- -D warnings
 echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
+
+# Optional perf step: BENCH=1 ./scripts/check.sh also records the wall
+# clock of `repro --fig 7` + executor throughput into BENCH_exec.json.
+if [[ "${BENCH:-0}" != "0" ]]; then
+  echo "== bench (BENCH=1) =="
+  "$SCRIPT_DIR/bench.sh"
+fi
 
 echo "all checks passed"
