@@ -11,13 +11,15 @@
 use switchblade::compiler::compile;
 use switchblade::coordinator::validate_numerics;
 use switchblade::graph::datasets::Dataset;
-use switchblade::ir::models::Model;
+use switchblade::ir::spec::ModelDims;
+use switchblade::ir::zoo::ModelZoo;
 use switchblade::partition::{partition_fggp, stats};
 use switchblade::sim::{simulate, AcceleratorConfig};
 
 fn main() {
-    // 1. Compile.
-    let ir = Model::Gcn.build_paper();
+    // 1. Compile (the zoo's GCN spec at its default paper shape).
+    let gcn = ModelZoo::builtin().get("gcn").expect("builtin gcn");
+    let ir = gcn.graph();
     let prog = compile(&ir);
     println!("compiled {}: {} groups, {} instructions, dim_src={}, dim_edge={}",
         prog.model_name, prog.groups.len(), prog.num_instrs(), prog.dim_src, prog.dim_edge);
@@ -38,8 +40,9 @@ fn main() {
         r.cycles, r.seconds * 1e3, 100.0 * r.overall_utilization(),
         r.traffic.total() as f64 / 1e6);
 
-    // 4. Validate numerics.
-    let diff = validate_numerics(Model::Gcn, &g, &accel);
+    // 4. Validate numerics (small shape keeps the dense oracle fast).
+    let small = gcn.build(ModelDims::uniform(2, 16)).expect("gcn at 16-dim");
+    let diff = validate_numerics(&small, &g, &accel);
     println!("numerics vs oracle: max |delta| = {diff:.2e}");
     assert!(diff < 1e-4);
     println!("quickstart OK");

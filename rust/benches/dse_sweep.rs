@@ -4,7 +4,7 @@
 
 use switchblade::dse::{tune, Caches, TuneOptions};
 use switchblade::graph::datasets::Dataset;
-use switchblade::ir::models::Model;
+use switchblade::ir::zoo::ModelZoo;
 use switchblade::util::bench;
 
 fn main() {
@@ -14,12 +14,13 @@ fn main() {
         budget: 24,
         ..Default::default()
     };
-    let cold = bench::bench(0, 1, || tune(Model::Gcn, Dataset::Ak, &caches, &opts));
+    let gcn = ModelZoo::builtin().get("gcn").expect("builtin gcn");
+    let cold = bench::bench(0, 1, || tune(&gcn, Dataset::Ak, &caches, &opts));
     bench::report("dse/tune(GCN,AK,24pts) cold", &cold);
-    let warm = bench::bench(0, 1, || tune(Model::Gcn, Dataset::Ak, &caches, &opts));
+    let warm = bench::bench(0, 1, || tune(&gcn, Dataset::Ak, &caches, &opts));
     bench::report("dse/tune(GCN,AK,24pts) warm", &warm);
 
-    let r = tune(Model::Gcn, Dataset::Ak, &caches, &opts);
+    let r = tune(&gcn, Dataset::Ak, &caches, &opts);
     r.frontier_table().print();
     print!("{}", r.summary());
 }

@@ -6,7 +6,7 @@
 //! [`dse::cache`](crate::dse::cache) layer ([`Caches`]), shared with the
 //! `switchblade tune` design-space explorer.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::baseline::{gpu_run, hygcn_run, GpuConfig, GpuResult, HygcnConfig, HygcnResult};
 use crate::compiler::compile;
@@ -14,7 +14,9 @@ use crate::energy::{switchblade_energy, tbl5_rows, EnergyResult, TBL5};
 use crate::exec::Matrix;
 use crate::graph::datasets::Dataset;
 use crate::graph::Csr;
-use crate::ir::models::Model;
+use crate::ir::spec::ModelSpec;
+use crate::ir::zoo::ModelZoo;
+use crate::ir::IrGraph;
 use crate::isa::Program;
 use crate::partition::{partition_fggp, stats as pstats, Method, Partitions};
 use crate::sim::{simulate, AcceleratorConfig, SimResult};
@@ -48,7 +50,7 @@ impl Default for Harness {
 /// One (model, dataset) evaluation under a given accelerator config.
 #[derive(Clone, Debug)]
 pub struct EvalRow {
-    pub model: Model,
+    pub model: Arc<ModelSpec>,
     pub dataset: Dataset,
     pub sim: SimResult,
     pub energy: EnergyResult,
@@ -68,27 +70,32 @@ impl EvalRow {
 
 impl Harness {
     /// Compile + partition + simulate one combination (uncached; the
-    /// cached path is [`Harness::eval_point`]).
-    pub fn eval_one(&self, model: Model, g: &Csr, accel: &AcceleratorConfig) -> (Program, Partitions, SimResult) {
-        let ir = model.build_paper();
-        let prog = compile(&ir);
+    /// cached path is [`Harness::eval_point`]). The spec builds at its
+    /// own default dims (paper shape for the built-in zoo).
+    pub fn eval_one(
+        &self,
+        spec: &ModelSpec,
+        g: &Csr,
+        accel: &AcceleratorConfig,
+    ) -> (Program, Partitions, SimResult) {
+        let prog = compile(&spec.graph());
         let pc = accel.partition_config(&prog);
         let parts = partition_fggp(g, pc);
         let sim = simulate(&prog, &parts, accel);
         (prog, parts, sim)
     }
 
-    /// Simulate one (model, dataset, method, accel) point with program /
-    /// graph / partition reuse through the cache bundle.
+    /// Simulate one (model spec, dataset, method, accel) point with
+    /// program / graph / partition reuse through the cache bundle.
     pub fn eval_point(
         &self,
-        model: Model,
+        spec: &ModelSpec,
         dataset: Dataset,
         method: Method,
         accel: &AcceleratorConfig,
         caches: &Caches,
     ) -> SimResult {
-        let prog = caches.program(model);
+        let prog = caches.program(spec);
         let pc = accel.partition_config(&prog);
         let parts = caches.partitions(dataset, method, pc);
         simulate(&prog, &parts, accel)
@@ -96,25 +103,26 @@ impl Harness {
 
     /// Full 4×5 sweep (Fig 7/8/9/10 input), fanned out over OS threads.
     pub fn eval_all(&self, caches: &Caches) -> Vec<EvalRow> {
-        let combos: Vec<(Model, Dataset)> = Model::ALL
+        let models = ModelZoo::builtin().paper_models();
+        let combos: Vec<(Arc<ModelSpec>, Dataset)> = models
             .iter()
-            .flat_map(|&m| Dataset::ALL.iter().map(move |&d| (m, d)))
+            .flat_map(|m| Dataset::ALL.iter().map(move |&d| (m.clone(), d)))
             .collect();
         let results: Mutex<Vec<EvalRow>> = Mutex::new(Vec::new());
         let results_ref = &results;
         std::thread::scope(|s| {
             for chunk in combos.chunks(combos.len().div_ceil(num_workers())) {
                 s.spawn(move || {
-                    for &(m, d) in chunk {
-                        let g = caches.graph(d);
-                        let sim = self.eval_point(m, d, Method::Fggp, &self.accel, caches);
+                    for (m, d) in chunk {
+                        let g = caches.graph(*d);
+                        let sim = self.eval_point(m, *d, Method::Fggp, &self.accel, caches);
                         let energy = switchblade_energy(&sim, self.accel.freq_hz, true);
-                        let gpu = gpu_run(&m.build_paper(), &g, &self.gpu);
-                        let hygcn = (m == Model::Gcn)
+                        let gpu = gpu_run(&m.graph(), &g, &self.gpu);
+                        let hygcn = (m.name() == "gcn")
                             .then(|| hygcn_run(&g, 2, 128, &self.hygcn));
                         results_ref.lock().unwrap().push(EvalRow {
-                            model: m,
-                            dataset: d,
+                            model: m.clone(),
+                            dataset: *d,
                             sim,
                             energy,
                             gpu,
@@ -127,7 +135,7 @@ impl Harness {
         let mut rows = results.into_inner().unwrap();
         rows.sort_by_key(|r| {
             (
-                Model::ALL.iter().position(|&m| m == r.model),
+                models.iter().position(|m| m.name() == r.model.name()),
                 Dataset::ALL.iter().position(|&d| d == r.dataset),
             )
         });
@@ -143,14 +151,14 @@ impl Harness {
             &["model", "AK", "AD", "HW", "CP", "SL", "geomean", "vs HyGCN (GCN)"],
         );
         let mut all = Vec::new();
-        for m in Model::ALL {
-            let mut cells = vec![m.name().to_string()];
+        for m in ModelZoo::builtin().paper_models() {
+            let mut cells = vec![m.display()];
             let mut sp = Vec::new();
             let mut hyg = Vec::new();
             for d in Dataset::ALL {
                 let r = rows
                     .iter()
-                    .find(|r| r.model == m && r.dataset == d)
+                    .find(|r| r.model.name() == m.name() && r.dataset == d)
                     .expect("row");
                 sp.push(r.speedup_vs_gpu());
                 cells.push(speedup(r.speedup_vs_gpu()));
@@ -187,13 +195,13 @@ impl Harness {
             &["model", "AK", "AD", "HW", "CP", "SL", "geomean"],
         );
         let mut all = Vec::new();
-        for m in Model::ALL {
-            let mut cells = vec![m.name().to_string()];
+        for m in ModelZoo::builtin().paper_models() {
+            let mut cells = vec![m.display()];
             let mut sv = Vec::new();
             for d in Dataset::ALL {
                 let r = rows
                     .iter()
-                    .find(|r| r.model == m && r.dataset == d)
+                    .find(|r| r.model.name() == m.name() && r.dataset == d)
                     .expect("row");
                 sv.push(r.energy_saving_vs_gpu());
                 cells.push(speedup(r.energy_saving_vs_gpu()));
@@ -221,13 +229,13 @@ impl Harness {
             "Fig 9 — off-chip data transfer normalised to GPU op-by-op (lower is better)",
             &["model", "AK", "AD", "HW", "CP", "SL", "mean"],
         );
-        for m in Model::ALL {
-            let mut cells = vec![m.name().to_string()];
+        for m in ModelZoo::builtin().paper_models() {
+            let mut cells = vec![m.display()];
             let mut vals = Vec::new();
             for d in Dataset::ALL {
                 let r = rows
                     .iter()
-                    .find(|r| r.model == m && r.dataset == d)
+                    .find(|r| r.model.name() == m.name() && r.dataset == d)
                     .expect("row");
                 let ratio = r.sim.traffic.total() as f64 / r.gpu.dram_bytes as f64;
                 vals.push(ratio);
@@ -245,16 +253,16 @@ impl Harness {
             "Fig 10 — overall utilisation (mean of BW/VU/MU), 1 vs 3 sThreads",
             &["model", "dataset", "util@1", "util@3", "gain"],
         );
-        for m in Model::ALL {
+        for m in ModelZoo::builtin().paper_models() {
             for d in Dataset::ALL {
                 let u1 = self
-                    .eval_point(m, d, Method::Fggp, &self.accel.with_sthreads(1), caches)
+                    .eval_point(&m, d, Method::Fggp, &self.accel.with_sthreads(1), caches)
                     .overall_utilization();
                 let u3 = self
-                    .eval_point(m, d, Method::Fggp, &self.accel.with_sthreads(3), caches)
+                    .eval_point(&m, d, Method::Fggp, &self.accel.with_sthreads(3), caches)
                     .overall_utilization();
                 t.row(vec![
-                    m.name().into(),
+                    m.display(),
                     d.code().into(),
                     f(u1, 3),
                     f(u3, 3),
@@ -273,15 +281,15 @@ impl Harness {
             "Fig 11 — latency vs sThread count (normalised to T=1, lower is better)",
             &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
         );
-        for m in Model::ALL {
+        for m in ModelZoo::builtin().paper_models() {
             for d in Dataset::ALL {
                 let base = self
-                    .eval_point(m, d, Method::Fggp, &self.accel.with_sthreads(1), caches)
+                    .eval_point(&m, d, Method::Fggp, &self.accel.with_sthreads(1), caches)
                     .cycles;
-                let mut cells = vec![m.name().to_string(), d.code().to_string()];
+                let mut cells = vec![m.display(), d.code().to_string()];
                 for &c in counts {
                     let r =
-                        self.eval_point(m, d, Method::Fggp, &self.accel.with_sthreads(c), caches);
+                        self.eval_point(&m, d, Method::Fggp, &self.accel.with_sthreads(c), caches);
                     cells.push(f(r.cycles / base, 3));
                 }
                 t.row(cells);
@@ -296,7 +304,8 @@ impl Harness {
             "Fig 12 — buffer occupancy rate (higher is better)",
             &["dataset", "FGGP", "DSW (HyGCN-style)"],
         );
-        let prog = caches.program(Model::Gcn);
+        let gcn = ModelZoo::builtin().get("gcn").expect("builtin gcn");
+        let prog = caches.program(&gcn);
         for d in Dataset::ALL {
             let pc = self.accel.partition_config(&prog);
             let occ_f = pstats::analyze(&caches.partitions(d, Method::Fggp, pc)).occupancy_rate;
@@ -313,10 +322,11 @@ impl Harness {
             "Fig 13 — FGGP with DB 8 MB → 13 MB: traffic ratio and speedup",
             &["dataset", "traffic 13/8", "speedup"],
         );
+        let gcn = ModelZoo::builtin().get("gcn").expect("builtin gcn");
         for d in Dataset::ALL {
-            let base = self.eval_point(Model::Gcn, d, Method::Fggp, &self.accel, caches);
+            let base = self.eval_point(&gcn, d, Method::Fggp, &self.accel, caches);
             let big = self.eval_point(
-                Model::Gcn,
+                &gcn,
                 d,
                 Method::Fggp,
                 &self.accel.with_dst_buffer(13 * 1024 * 1024),
@@ -399,10 +409,11 @@ impl ExecBench {
 }
 
 /// Time the shard-parallel executor against a forced single-worker run on
-/// one (model, graph) workload. `workers == 0` means "the partitioning's
-/// simulated sThread count".
+/// one (model IR, graph) workload. Works for any validated `IrGraph` —
+/// zoo entry or user `.gnn` spec — sized from the IR's own input width.
+/// `workers == 0` means "the partitioning's simulated sThread count".
 pub fn bench_executor(
-    model: Model,
+    ir: &IrGraph,
     g: &Csr,
     accel: &AcceleratorConfig,
     workers: usize,
@@ -426,8 +437,7 @@ pub fn bench_executor(
     }
 
     let iters = iters.max(1);
-    let ir = model.build(2, 32, 32, 32);
-    let prog = compile(&ir);
+    let prog = compile(ir);
     let pc = accel.partition_config(&prog);
     let parts = partition_fggp(g, pc);
     let workers = if workers == 0 {
@@ -435,7 +445,7 @@ pub fn bench_executor(
     } else {
         workers
     };
-    let x = crate::exec::weights::init_features(11, g.num_vertices(), 32);
+    let x = crate::exec::weights::init_features(11, g.num_vertices(), ir.input_dim() as usize);
     let mut deg = Matrix::zeros(g.num_vertices(), 1);
     for v in 0..g.num_vertices() {
         deg.set(v, 0, g.in_degree(v as u32) as f32);
@@ -458,20 +468,22 @@ pub fn bench_executor(
     }
 }
 
-/// Validation harness used by examples/tests: compare the compiled
-/// executor against the IR reference on a sampled graph.
-pub fn validate_numerics(model: Model, g: &Csr, accel: &AcceleratorConfig) -> f32 {
-    let ir = model.build(2, 16, 16, 16);
-    let prog = compile(&ir);
+/// Validation harness used by the CLI/examples/tests: compare the
+/// compiled executor against the IR reference on a sampled graph. Works
+/// for any validated `IrGraph`, sized from the IR's own input width —
+/// this is the differential check a user-supplied `.gnn` spec runs
+/// through `switchblade validate --model-file`.
+pub fn validate_numerics(ir: &IrGraph, g: &Csr, accel: &AcceleratorConfig) -> f32 {
+    let prog = compile(ir);
     let pc = accel.partition_config(&prog);
     let parts = partition_fggp(g, pc);
-    let x = crate::exec::weights::init_features(7, g.num_vertices(), 16);
+    let x = crate::exec::weights::init_features(7, g.num_vertices(), ir.input_dim() as usize);
     let mut deg = Matrix::zeros(g.num_vertices(), 1);
     for v in 0..g.num_vertices() {
         deg.set(v, 0, g.in_degree(v as u32) as f32);
     }
     let got = crate::exec::Executor::new(&prog, &parts).run(&x, &deg);
-    let want = crate::exec::reference::evaluate(&ir, g, &x);
+    let want = crate::exec::reference::evaluate(ir, g, &x);
     got.max_abs_diff(&want)
 }
 
@@ -485,6 +497,7 @@ pub(crate) fn num_workers() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::spec::ModelDims;
 
     #[test]
     fn eval_one_runs_at_tiny_scale() {
@@ -494,7 +507,8 @@ mod tests {
         };
         let cache = GraphCache::new(h.scale);
         let g = cache.get(Dataset::Ak);
-        let (prog, parts, sim) = h.eval_one(Model::Gcn, &g, &h.accel);
+        let gcn = ModelZoo::builtin().get("gcn").unwrap();
+        let (prog, parts, sim) = h.eval_one(&gcn, &g, &h.accel);
         assert!(prog.num_instrs() > 0);
         parts.validate().unwrap();
         assert!(sim.cycles > 0.0);
@@ -504,8 +518,11 @@ mod tests {
     fn validate_numerics_tight() {
         let cache = GraphCache::new(10);
         let g = cache.get(Dataset::Ak);
-        for m in Model::ALL {
-            let diff = validate_numerics(m, &g, &AcceleratorConfig::switchblade());
+        // All five zoo entries — including sage_mean, whose Reduce::Mean
+        // exercises the executor's count-normalisation path.
+        for m in ModelZoo::builtin().entries() {
+            let ir = m.build(ModelDims::uniform(2, 16)).unwrap();
+            let diff = validate_numerics(&ir, &g, &AcceleratorConfig::switchblade());
             assert!(diff < 1e-4, "{}: {diff}", m.name());
         }
     }
@@ -514,7 +531,12 @@ mod tests {
     fn bench_executor_reports_bit_identity() {
         let cache = GraphCache::new(10);
         let g = cache.get(Dataset::Ak);
-        let b = bench_executor(Model::Gcn, &g, &AcceleratorConfig::switchblade(), 2, 1);
+        let ir = ModelZoo::builtin()
+            .get("gcn")
+            .unwrap()
+            .build(ModelDims::uniform(2, 32))
+            .unwrap();
+        let b = bench_executor(&ir, &g, &AcceleratorConfig::switchblade(), 2, 1);
         assert!(b.bit_identical, "parallel executor diverged bitwise");
         assert!(b.secs_single > 0.0 && b.secs_parallel > 0.0);
         assert_eq!(b.workers, 2);

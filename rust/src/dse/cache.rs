@@ -1,7 +1,9 @@
 //! Generalized memoization layer for the explore/evaluate pipeline.
 //!
 //! Design-space exploration revisits the same expensive intermediates
-//! thousands of times: the compiled program depends only on the model, a
+//! thousands of times: the compiled program depends only on the model
+//! spec (keyed by its content fingerprint, which covers source *and*
+//! layers/dims — the old enum key silently collided distinct shapes), a
 //! partitioning only on `(dataset, scale, method, PartitionConfig)`, and a
 //! generated graph only on `(dataset, scale)`. Each gets its own
 //! thread-safe cache with hit/miss accounting, and [`Caches`] bundles the
@@ -19,7 +21,7 @@ use std::sync::{Arc, Mutex};
 use crate::compiler::compile;
 use crate::graph::datasets::Dataset;
 use crate::graph::Csr;
-use crate::ir::models::Model;
+use crate::ir::spec::ModelSpec;
 use crate::isa::Program;
 use crate::partition::{Method, PartitionConfig, Partitions};
 
@@ -82,10 +84,12 @@ impl<K: Eq + Hash, V> Memo<K, V> {
     }
 }
 
-/// Compiled programs keyed by model (the paper build is config-independent,
-/// so every design point of a sweep shares one compile).
+/// Compiled programs keyed by [`ModelSpec::fingerprint`] — stable over
+/// (name, source, layers/dims). Compilation is config-independent, so
+/// every design point of a sweep shares one compile; two shapes of the
+/// same model no longer collide the way the old `Memo<Model, _>` key did.
 pub struct ProgramCache {
-    memo: Memo<Model, Program>,
+    memo: Memo<u64, Program>,
 }
 
 impl Default for ProgramCache {
@@ -99,8 +103,9 @@ impl ProgramCache {
         ProgramCache { memo: Memo::new() }
     }
 
-    pub fn get(&self, m: Model) -> Arc<Program> {
-        self.memo.get_or_build(m, || compile(&m.build_paper()))
+    pub fn get(&self, spec: &ModelSpec) -> Arc<Program> {
+        self.memo
+            .get_or_build(spec.fingerprint(), || compile(&spec.graph()))
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -229,8 +234,8 @@ impl Caches {
         self.graphs.get(d)
     }
 
-    pub fn program(&self, m: Model) -> Arc<Program> {
-        self.programs.get(m)
+    pub fn program(&self, spec: &ModelSpec) -> Arc<Program> {
+        self.programs.get(spec)
     }
 
     /// Partitioning of `d` (at the bundle's scale) for `method` under `pc`,
@@ -252,19 +257,37 @@ impl Caches {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::spec::ModelDims;
+    use crate::ir::zoo::ModelZoo;
     use crate::sim::AcceleratorConfig;
 
     #[test]
     fn program_cache_counts_hits_and_misses() {
+        let zoo = ModelZoo::builtin();
+        let (gcn, gat) = (zoo.get("gcn").unwrap(), zoo.get("gat").unwrap());
         let c = ProgramCache::new();
-        let a = c.get(Model::Gcn);
-        let b = c.get(Model::Gcn);
+        let a = c.get(&gcn);
+        let b = c.get(&gcn);
         assert!(Arc::ptr_eq(&a, &b));
-        let _ = c.get(Model::Gat);
+        let _ = c.get(&gat);
         let s = c.stats();
         assert_eq!(s.hits, 1);
         assert_eq!(s.misses, 2);
         assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn program_cache_distinguishes_dims_of_one_model() {
+        // The old enum key collided every shape of a model; the spec
+        // fingerprint must not.
+        let gcn = ModelZoo::builtin().get("gcn").unwrap();
+        let small = gcn.with_dims(ModelDims::uniform(1, 8)).unwrap();
+        let c = ProgramCache::new();
+        let a = c.get(&gcn);
+        let b = c.get(&small);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(c.stats().misses, 2);
+        assert_eq!(c.stats().hits, 0);
     }
 
     #[test]
@@ -280,7 +303,7 @@ mod tests {
     #[test]
     fn partition_cache_key_distinguishes_method_and_config() {
         let caches = Caches::new(10);
-        let prog = caches.program(Model::Gcn);
+        let prog = caches.program(&ModelZoo::builtin().get("gcn").unwrap());
         let accel = AcceleratorConfig::switchblade();
         let pc = accel.partition_config(&prog);
         let pc2 = accel.with_sthreads(1).partition_config(&prog);

@@ -2,26 +2,28 @@
 //! `compile → partition → simulate → energy` pipeline for every design
 //! point, fanned out over OS threads and memoised through [`Caches`].
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::energy::switchblade_energy;
 use crate::graph::datasets::Dataset;
-use crate::ir::models::Model;
+use crate::ir::spec::ModelSpec;
 use crate::sim::simulate;
 
 use super::cache::Caches;
 use super::space::DesignPoint;
 
-/// The (model, dataset) pair a sweep optimises for.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// The (model spec, dataset) pair a sweep optimises for. The model is any
+/// zoo entry or user-loaded `.gnn` spec — sweeps are no longer restricted
+/// to the four paper models.
+#[derive(Clone, Debug)]
 pub struct Workload {
-    pub model: Model,
+    pub model: Arc<ModelSpec>,
     pub dataset: Dataset,
 }
 
 impl Workload {
     pub fn name(&self) -> String {
-        format!("{} on {}", self.model.name(), self.dataset.full_name())
+        format!("{} on {}", self.model.display(), self.dataset.full_name())
     }
 }
 
@@ -54,8 +56,8 @@ impl EvalPoint {
 }
 
 /// Evaluate one design point for `w`, reusing whatever the caches hold.
-pub fn evaluate_one(w: Workload, p: DesignPoint, caches: &Caches) -> EvalPoint {
-    let prog = caches.program(w.model);
+pub fn evaluate_one(w: &Workload, p: DesignPoint, caches: &Caches) -> EvalPoint {
+    let prog = caches.program(&w.model);
     let accel = p.accel();
     let pc = accel.partition_config(&prog);
     let parts = caches.partitions(w.dataset, p.method, pc);
@@ -75,11 +77,11 @@ pub fn evaluate_one(w: Workload, p: DesignPoint, caches: &Caches) -> EvalPoint {
 
 /// Evaluate all points in parallel over OS threads. Results come back in
 /// input order regardless of completion order.
-pub fn evaluate_all(w: Workload, points: &[DesignPoint], caches: &Caches) -> Vec<EvalPoint> {
+pub fn evaluate_all(w: &Workload, points: &[DesignPoint], caches: &Caches) -> Vec<EvalPoint> {
     // Warm the per-workload singletons up front so the workers do not all
     // rebuild them in a first-lookup stampede.
     let _ = caches.graph(w.dataset);
-    let _ = caches.program(w.model);
+    let _ = caches.program(&w.model);
 
     let indexed: Vec<(usize, DesignPoint)> = points.iter().copied().enumerate().collect();
     let results: Mutex<Vec<(usize, EvalPoint)>> = Mutex::new(Vec::with_capacity(points.len()));
@@ -103,12 +105,13 @@ pub fn evaluate_all(w: Workload, points: &[DesignPoint], caches: &Caches) -> Vec
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::zoo::ModelZoo;
 
     #[test]
     fn parallel_matches_serial_and_preserves_order() {
         let caches = Caches::new(10);
         let w = Workload {
-            model: Model::Gcn,
+            model: ModelZoo::builtin().get("gcn").unwrap(),
             dataset: Dataset::Ak,
         };
         let points = [
@@ -119,7 +122,7 @@ mod tests {
             },
             DesignPoint::paper_default(), // duplicate: pure cache hit
         ];
-        let par = evaluate_all(w, &points, &caches);
+        let par = evaluate_all(&w, &points, &caches);
         assert_eq!(par.len(), points.len());
         for (e, p) in par.iter().zip(points.iter()) {
             assert_eq!(e.point, *p);
@@ -130,8 +133,9 @@ mod tests {
         assert_eq!(par[0].cycles, par[2].cycles);
         assert_eq!(par[0].energy_j, par[2].energy_j);
         // And serial re-evaluation agrees.
-        let serial = evaluate_one(w, points[1], &caches);
+        let serial = evaluate_one(&w, points[1], &caches);
         assert_eq!(serial.cycles, par[1].cycles);
         assert!(caches.snapshot().partitions.hits > 0);
+        assert_eq!(w.name(), "GCN on ak2010");
     }
 }

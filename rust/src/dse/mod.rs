@@ -11,11 +11,13 @@
 //! champions.
 //!
 //! Repeated points are near-free: the [`cache`] layer memoises compiled
-//! programs by model, generated graphs by `(dataset, scale)`, and
-//! partitionings by `(dataset, scale, method, PartitionConfig)` — design
-//! points that differ only in compute geometry or memory generation share
-//! one partitioning. The same layer now also backs the `coordinator`
-//! figure harness.
+//! programs by model-spec fingerprint (source + layers/dims), generated
+//! graphs by `(dataset, scale)`, and partitionings by `(dataset, scale,
+//! method, PartitionConfig)` — design points that differ only in compute
+//! geometry or memory generation share one partitioning. The same layer
+//! now also backs the `coordinator` figure harness. Workloads carry an
+//! open [`ModelSpec`](crate::ir::spec::ModelSpec), so any `.gnn`-defined
+//! model can be tuned, not just the four paper networks.
 //!
 //! Entry points: [`tune`] (drives `switchblade tune <model> <dataset>`),
 //! or [`evaluate_all`] + [`frontier`] for custom loops.
@@ -31,9 +33,10 @@ pub use pareto::{champion, dominates, frontier, pareto_indices, Objective};
 pub use space::{DesignPoint, MemoryKind, SearchSpace};
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::graph::datasets::Dataset;
-use crate::ir::models::Model;
+use crate::ir::spec::ModelSpec;
 use crate::util::report::{bytes, f as ff, speedup, Table};
 
 /// Load a tuned [`DesignPoint`] from a `switchblade tune` artifact —
@@ -138,17 +141,25 @@ pub struct TuneReport {
     pub caches: CacheSnapshot,
 }
 
-/// Run a budgeted design-space sweep for `(model, dataset)` and fold the
-/// results into a [`TuneReport`]. The paper-default point is always
+/// Run a budgeted design-space sweep for `(model spec, dataset)` and fold
+/// the results into a [`TuneReport`]. The paper-default point is always
 /// appended (if not already sampled) so "best vs Tbl III" is well-defined.
-pub fn tune(model: Model, dataset: Dataset, caches: &Caches, opts: &TuneOptions) -> TuneReport {
-    let workload = Workload { model, dataset };
+pub fn tune(
+    model: &Arc<ModelSpec>,
+    dataset: Dataset,
+    caches: &Caches,
+    opts: &TuneOptions,
+) -> TuneReport {
+    let workload = Workload {
+        model: Arc::clone(model),
+        dataset,
+    };
     let mut points = opts.space.sample(opts.budget);
     let default_pt = DesignPoint::paper_default();
     if !points.contains(&default_pt) {
         points.push(default_pt);
     }
-    let evaluated = evaluate_all(workload, &points, caches);
+    let evaluated = evaluate_all(&workload, &points, caches);
     let mut frontier = pareto::frontier(&evaluated);
     frontier.sort_by(|&a, &b| evaluated[a].latency_s.total_cmp(&evaluated[b].latency_s));
     let baseline = *evaluated
@@ -276,7 +287,12 @@ impl TuneReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::zoo::ModelZoo;
     use crate::partition::Method;
+
+    fn gcn() -> Arc<ModelSpec> {
+        ModelZoo::builtin().get("gcn").unwrap()
+    }
 
     fn tiny_options() -> TuneOptions {
         TuneOptions {
@@ -297,7 +313,7 @@ mod tests {
     #[test]
     fn load_design_reads_frontier_artifacts() {
         let caches = Caches::new(10);
-        let r = tune(Model::Gcn, Dataset::Ak, &caches, &tiny_options());
+        let r = tune(&gcn(), Dataset::Ak, &caches, &tiny_options());
         let dir = std::env::temp_dir();
         let json = dir.join("switchblade_test_frontier.json");
         let csv = dir.join("switchblade_test_frontier.csv");
@@ -316,7 +332,7 @@ mod tests {
     #[test]
     fn tune_reports_baseline_and_frontier() {
         let caches = Caches::new(10);
-        let r = tune(Model::Gcn, Dataset::Ak, &caches, &tiny_options());
+        let r = tune(&gcn(), Dataset::Ak, &caches, &tiny_options());
         // 2 sthreads × 2 memories = 4 grid points; baseline is one of them.
         assert_eq!(r.evaluated.len(), 4);
         assert!(!r.frontier.is_empty());

@@ -8,12 +8,63 @@
 //! Every node carries a *location*: `Vertex` (one row per graph vertex),
 //! `Edge` (one row per edge) or `Param` (model weights). GTR nodes are the
 //! only ops that change location.
+//!
+//! Models enter the IR through two doors: the legacy Rust builders in
+//! [`models`] (the four Tbl I networks, kept as ground truth) and the
+//! open, spec-driven path — [`spec`] parses declarative `.gnn` model
+//! definitions into validated graphs, and [`zoo`] registers the built-in
+//! entries plus anything user-provided. Because specs arrive from user
+//! files, every typing rule the builder enforces is available as a
+//! `try_*` method returning a typed [`IrError`] (the panicking builder
+//! verbs are thin wrappers over those).
 
 pub mod models;
+pub mod spec;
+pub mod zoo;
 
 use std::collections::HashMap;
+use std::fmt;
 
 use crate::isa::{ElwOp, Reduce};
+
+/// A typed IR construction/validation error. `line` is the 1-based source
+/// line of the `.gnn` spec statement that failed, when the error came from
+/// the spec front-end ([`spec::ModelSpec`]); builder-level misuse from
+/// Rust carries no line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IrError {
+    pub line: Option<u32>,
+    pub message: String,
+}
+
+impl IrError {
+    pub fn new(message: impl Into<String>) -> Self {
+        IrError {
+            line: None,
+            message: message.into(),
+        }
+    }
+
+    /// Attach a source line (keeps the innermost line if one is already
+    /// set, so builder errors surface the statement that triggered them).
+    pub fn at(mut self, line: u32) -> Self {
+        if self.line.is_none() {
+            self.line = Some(line);
+        }
+        self
+    }
+}
+
+impl fmt::Display for IrError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.line {
+            Some(l) => write!(f, "line {l}: {}", self.message),
+            None => write!(f, "{}", self.message),
+        }
+    }
+}
+
+impl std::error::Error for IrError {}
 
 /// Data location of an IR value.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -57,7 +108,7 @@ pub enum IrOp {
 pub type NodeId = usize;
 
 /// One node of the unified computational graph.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Node {
     pub id: NodeId,
     pub op: IrOp,
@@ -71,8 +122,10 @@ pub struct Node {
 
 /// The unified computational graph. Nodes are stored in insertion order,
 /// which is a topological order by construction (builders may only
-/// reference already-created nodes).
-#[derive(Clone, Debug, Default)]
+/// reference already-created nodes). `PartialEq` compares node for node
+/// (op, inputs, location, width, debug name) — the equivalence the zoo
+/// roundtrip tests assert between spec-built and legacy-built models.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct IrGraph {
     pub nodes: Vec<Node>,
     pub output: Option<NodeId>,
@@ -105,6 +158,10 @@ impl IrGraph {
     }
 
     // ----- builder API ------------------------------------------------------
+    //
+    // Every typing rule lives in a `try_*` method returning `IrError` (the
+    // spec front-end feeds user files through these); the un-prefixed verbs
+    // are panicking wrappers for in-crate builders and tests.
 
     pub fn input(&mut self, dim: u32) -> NodeId {
         self.push(IrOp::Input, vec![], Loc::Vertex, dim, "x")
@@ -122,75 +179,194 @@ impl IrGraph {
         self.push(IrOp::Bias { seed }, vec![], Loc::Param, cols, name)
     }
 
-    pub fn dmm(&mut self, x: NodeId, w: NodeId, name: &str) -> NodeId {
+    pub fn try_dmm(&mut self, x: NodeId, w: NodeId, name: &str) -> Result<NodeId, IrError> {
         let (loc, k) = (self.nodes[x].loc, self.nodes[x].cols);
         let wn = &self.nodes[w];
         let IrOp::Weight { rows, .. } = wn.op else {
-            panic!("dmm second input must be a Weight");
+            return Err(IrError::new(format!(
+                "dmm second input '{}' must be a Weight",
+                wn.name
+            )));
         };
-        assert_eq!(rows, k, "dmm shape mismatch: [{k}] x [{rows},{}]", wn.cols);
-        assert_ne!(loc, Loc::Param);
+        if rows != k {
+            return Err(IrError::new(format!(
+                "dmm shape mismatch: [{k}] x [{rows},{}]",
+                wn.cols
+            )));
+        }
+        if loc == Loc::Param {
+            return Err(IrError::new(format!(
+                "dmm first input '{}' must be Vertex- or Edge-located",
+                self.nodes[x].name
+            )));
+        }
         let cols = wn.cols;
-        self.push(IrOp::Dmm, vec![x, w], loc, cols, name)
+        Ok(self.push(IrOp::Dmm, vec![x, w], loc, cols, name))
+    }
+
+    pub fn dmm(&mut self, x: NodeId, w: NodeId, name: &str) -> NodeId {
+        self.try_dmm(x, w, name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn try_unary(&mut self, op: ElwOp, x: NodeId, name: &str) -> Result<NodeId, IrError> {
+        if op.is_binary() {
+            return Err(IrError::new(format!("{op:?} is a binary op, not unary")));
+        }
+        let (loc, cols) = (self.nodes[x].loc, self.nodes[x].cols);
+        Ok(self.push(IrOp::Unary(op), vec![x], loc, cols, name))
     }
 
     pub fn unary(&mut self, op: ElwOp, x: NodeId, name: &str) -> NodeId {
-        assert!(!op.is_binary());
-        let (loc, cols) = (self.nodes[x].loc, self.nodes[x].cols);
-        self.push(IrOp::Unary(op), vec![x], loc, cols, name)
+        self.try_unary(op, x, name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn try_binary(
+        &mut self,
+        op: ElwOp,
+        a: NodeId,
+        b: NodeId,
+        name: &str,
+    ) -> Result<NodeId, IrError> {
+        if !op.is_binary() {
+            return Err(IrError::new(format!("{op:?} is a unary op, not binary")));
+        }
+        let (loc, cols) = (self.nodes[a].loc, self.nodes[a].cols);
+        let bn = &self.nodes[b];
+        if bn.cols != cols {
+            return Err(IrError::new(format!(
+                "binary width mismatch: '{}' is [*,{cols}] but '{}' is [*,{}]",
+                self.nodes[a].name, bn.name, bn.cols
+            )));
+        }
+        if bn.loc != loc && !matches!(bn.op, IrOp::Bias { .. }) {
+            return Err(IrError::new(format!(
+                "binary operands '{}' and '{}' must share a location (or the \
+                 second must be a bias row)",
+                self.nodes[a].name, bn.name
+            )));
+        }
+        Ok(self.push(IrOp::Binary(op), vec![a, b], loc, cols, name))
     }
 
     pub fn binary(&mut self, op: ElwOp, a: NodeId, b: NodeId, name: &str) -> NodeId {
-        assert!(op.is_binary());
-        let (loc, cols) = (self.nodes[a].loc, self.nodes[a].cols);
-        let bn = &self.nodes[b];
-        assert_eq!(bn.cols, cols, "binary width mismatch");
-        assert!(
-            bn.loc == loc || matches!(bn.op, IrOp::Bias { .. }),
-            "binary operands must share location (or b is a Bias)"
-        );
-        self.push(IrOp::Binary(op), vec![a, b], loc, cols, name)
+        self.try_binary(op, a, b, name)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn try_row_scale(&mut self, x: NodeId, s: NodeId, name: &str) -> Result<NodeId, IrError> {
+        let (loc, cols) = (self.nodes[x].loc, self.nodes[x].cols);
+        if self.nodes[s].cols != 1 {
+            return Err(IrError::new(format!(
+                "row_scale scale '{}' must be [*,1], got [*,{}]",
+                self.nodes[s].name, self.nodes[s].cols
+            )));
+        }
+        if self.nodes[s].loc != loc {
+            return Err(IrError::new(format!(
+                "row_scale operands '{}' and '{}' must share a location",
+                self.nodes[x].name, self.nodes[s].name
+            )));
+        }
+        Ok(self.push(IrOp::RowScale, vec![x, s], loc, cols, name))
     }
 
     pub fn row_scale(&mut self, x: NodeId, s: NodeId, name: &str) -> NodeId {
-        let (loc, cols) = (self.nodes[x].loc, self.nodes[x].cols);
-        assert_eq!(self.nodes[s].cols, 1, "row_scale scale must be [*,1]");
-        assert_eq!(self.nodes[s].loc, loc);
-        self.push(IrOp::RowScale, vec![x, s], loc, cols, name)
+        self.try_row_scale(x, s, name)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn try_concat(&mut self, a: NodeId, b: NodeId, name: &str) -> Result<NodeId, IrError> {
+        let loc = self.nodes[a].loc;
+        if self.nodes[b].loc != loc {
+            return Err(IrError::new(format!(
+                "concat operands '{}' and '{}' must share a location",
+                self.nodes[a].name, self.nodes[b].name
+            )));
+        }
+        let cols = self.nodes[a].cols + self.nodes[b].cols;
+        Ok(self.push(IrOp::Concat, vec![a, b], loc, cols, name))
     }
 
     pub fn concat(&mut self, a: NodeId, b: NodeId, name: &str) -> NodeId {
-        let loc = self.nodes[a].loc;
-        assert_eq!(self.nodes[b].loc, loc);
-        let cols = self.nodes[a].cols + self.nodes[b].cols;
-        self.push(IrOp::Concat, vec![a, b], loc, cols, name)
+        self.try_concat(a, b, name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn try_scatter_src(&mut self, x: NodeId, name: &str) -> Result<NodeId, IrError> {
+        if self.nodes[x].loc != Loc::Vertex {
+            return Err(IrError::new(format!(
+                "scatter_src input '{}' must be Vertex-located",
+                self.nodes[x].name
+            )));
+        }
+        let cols = self.nodes[x].cols;
+        Ok(self.push(IrOp::ScatterSrc, vec![x], Loc::Edge, cols, name))
     }
 
     pub fn scatter_src(&mut self, x: NodeId, name: &str) -> NodeId {
-        assert_eq!(self.nodes[x].loc, Loc::Vertex);
+        self.try_scatter_src(x, name)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn try_scatter_dst(&mut self, x: NodeId, name: &str) -> Result<NodeId, IrError> {
+        if self.nodes[x].loc != Loc::Vertex {
+            return Err(IrError::new(format!(
+                "scatter_dst input '{}' must be Vertex-located",
+                self.nodes[x].name
+            )));
+        }
         let cols = self.nodes[x].cols;
-        self.push(IrOp::ScatterSrc, vec![x], Loc::Edge, cols, name)
+        Ok(self.push(IrOp::ScatterDst, vec![x], Loc::Edge, cols, name))
     }
 
     pub fn scatter_dst(&mut self, x: NodeId, name: &str) -> NodeId {
-        assert_eq!(self.nodes[x].loc, Loc::Vertex);
-        let cols = self.nodes[x].cols;
-        self.push(IrOp::ScatterDst, vec![x], Loc::Edge, cols, name)
+        self.try_scatter_dst(x, name)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn try_gather(&mut self, reduce: Reduce, e: NodeId, name: &str) -> Result<NodeId, IrError> {
+        if self.nodes[e].loc != Loc::Edge {
+            return Err(IrError::new(format!(
+                "gather input '{}' must be Edge-located (scatter first)",
+                self.nodes[e].name
+            )));
+        }
+        let cols = self.nodes[e].cols;
+        Ok(self.push(IrOp::Gather(reduce), vec![e], Loc::Vertex, cols, name))
     }
 
     pub fn gather(&mut self, reduce: Reduce, e: NodeId, name: &str) -> NodeId {
-        assert_eq!(self.nodes[e].loc, Loc::Edge);
-        let cols = self.nodes[e].cols;
-        self.push(IrOp::Gather(reduce), vec![e], Loc::Vertex, cols, name)
+        self.try_gather(reduce, e, name)
+            .unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn try_set_output(&mut self, x: NodeId) -> Result<(), IrError> {
+        if self.nodes[x].loc != Loc::Vertex {
+            return Err(IrError::new(format!(
+                "output '{}' must be per-vertex",
+                self.nodes[x].name
+            )));
+        }
+        let id = self.push(IrOp::Output, vec![x], Loc::Vertex, self.nodes[x].cols, "out");
+        self.output = Some(id);
+        Ok(())
     }
 
     pub fn set_output(&mut self, x: NodeId) {
-        assert_eq!(self.nodes[x].loc, Loc::Vertex, "output must be per-vertex");
-        let id = self.push(IrOp::Output, vec![x], Loc::Vertex, self.nodes[x].cols, "out");
-        self.output = Some(id);
+        self.try_set_output(x).unwrap_or_else(|e| panic!("{e}"))
     }
 
     // ----- analysis helpers -------------------------------------------------
+
+    /// Feature width of the model's `Input` node (0 for degenerate graphs
+    /// without one). Drivers use this to size the feature matrix instead
+    /// of hard-coding the shape.
+    pub fn input_dim(&self) -> u32 {
+        self.nodes
+            .iter()
+            .find(|n| matches!(n.op, IrOp::Input))
+            .map(|n| n.cols)
+            .unwrap_or(0)
+    }
 
     /// Gather depth per node: the maximum number of `Gather` ops on any
     /// path from an input to (and including inputs of) this node. This is
@@ -327,6 +503,32 @@ mod tests {
         let x = g.input(8);
         let w = g.weight(16, 4, 1, "w");
         g.dmm(x, w, "z");
+    }
+
+    #[test]
+    fn try_builders_report_typed_errors() {
+        let mut g = IrGraph::new("bad");
+        let x = g.input(8);
+        let w = g.weight(16, 4, 1, "w");
+        let e = g.try_dmm(x, w, "z").unwrap_err();
+        assert!(e.message.contains("shape mismatch"), "{e}");
+        assert_eq!(e.line, None);
+        assert!(format!("{}", e.at(7)).starts_with("line 7:"));
+        let y = g.unary(ElwOp::Relu, x, "y");
+        assert!(g.try_gather(Reduce::Sum, y, "a").is_err());
+        assert!(g.try_row_scale(x, y, "s").is_err(), "scale must be [*,1]");
+        let edge = g.scatter_src(x, "e");
+        assert!(g.try_scatter_src(edge, "e2").is_err());
+        assert!(g.try_set_output(edge).is_err());
+        assert!(g.try_binary(ElwOp::Relu, x, y, "b").is_err());
+        assert!(g.try_unary(ElwOp::Add, x, "u").is_err());
+    }
+
+    #[test]
+    fn input_dim_reads_input_node() {
+        let g = tiny();
+        assert_eq!(g.input_dim(), 8);
+        assert_eq!(IrGraph::new("empty").input_dim(), 0);
     }
 
     #[test]

@@ -1,7 +1,15 @@
-//! Model zoo: the four evaluation models of Tbl I, built as unified
-//! computational graphs. Each follows the paper's setup: two stacked
-//! identical layers, dimension 128 for input / hidden / output (the dims
-//! are parameters here so tests and the AOT path can use small shapes).
+//! The *legacy* model builders: the four evaluation models of Tbl I,
+//! built as unified computational graphs. Each follows the paper's setup:
+//! two stacked identical layers, dimension 128 for input / hidden /
+//! output (the dims are parameters here so tests and the AOT path can use
+//! small shapes).
+//!
+//! The pipeline's public currency is no longer this closed enum but the
+//! open, spec-driven [`zoo`](super::zoo): every builder here has a
+//! built-in `.gnn` zoo entry proven node-for-node identical (see
+//! `ir::zoo` tests). The enum and builders stay as the differential
+//! ground truth and for in-crate tests/benches; new models should be
+//! written as specs, not added here.
 
 use super::IrGraph;
 use crate::isa::{ElwOp, Reduce};
@@ -50,6 +58,14 @@ impl Model {
     /// Paper configuration: 2 layers, 128-dim everywhere (§VI).
     pub fn build_paper(&self) -> IrGraph {
         self.build(2, 128, 128, 128)
+    }
+
+    /// The zoo spec equivalent of this legacy builder (proven
+    /// node-for-node identical in `ir::zoo` tests).
+    pub fn spec(&self) -> std::sync::Arc<super::spec::ModelSpec> {
+        super::zoo::ModelZoo::builtin()
+            .get(self.name())
+            .expect("builtin zoo entry")
     }
 }
 

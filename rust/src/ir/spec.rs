@@ -1,0 +1,1038 @@
+//! `.gnn` model specs — the declarative, *open* front door of the model
+//! zoo. A spec is a small text program, one IR operation per line,
+//! mirroring the [`IrGraph`](super::IrGraph) builder verbs; parsing it
+//! yields a validated [`ModelSpec`] that builds the unified computational
+//! graph at any `(layers, in, hid, out)` shape and carries a stable
+//! content fingerprint (the `ProgramCache` key). No Rust changes are
+//! needed to run a new GNN through compile → partition → simulate → exec.
+//!
+//! # Grammar
+//!
+//! Line-oriented; `#` starts a comment; blank lines are ignored.
+//!
+//! ```text
+//! model NAME                      # optional; defaults to the file stem
+//! dims LAYERS IN HID OUT          # optional default shape (else 2 128 128 128)
+//!
+//! h   = input IN                  # per-vertex feature matrix [N, IN]
+//! deg = degree                    # in-degree column [N, 1]
+//! W   = weight ROWS COLS seed EXPR   # parameter [ROWS, COLS] (seed optional)
+//! b   = bias COLS seed EXPR          # bias row [1, COLS]    (seed optional)
+//! z   = dmm X W                   # dense matmul with a weight
+//! y   = unary OP X                # OP: relu leaky_relu exp sigmoid tanh
+//!                                 #     rsqrt recip copy
+//! y   = unary add_scalar C X      # x + C (C a float literal); mul_scalar: x * C
+//! y   = binary OP A B             # OP: add sub mul div max (B may be a bias)
+//! y   = row_scale X S             # X[r, :] * S[r, 0]
+//! y   = concat A B                # feature concatenation
+//! e   = scatter_src X             # GTR vertex→edge (source endpoint)
+//! e   = scatter_dst X             # GTR vertex→edge (destination endpoint)
+//! a   = gather REDUCE E           # GTR edge→vertex; REDUCE: sum max mean
+//! output X                        # marks the per-vertex model output
+//!
+//! layer {                         # repeat the body for L in 0..LAYERS
+//!   ...
+//! }
+//! layer A..B {                    # or an explicit half-open range
+//!   ...
+//! }
+//! ```
+//!
+//! Bindings may be freely re-assigned — a `layer` body that rebinds `h`
+//! expresses the usual layer recurrence. Node debug names are the binding
+//! identifier, prefixed `l{L}.` inside a layer block; append `as NAME` to
+//! a statement to override the debug suffix without renaming the binding
+//! (`h = unary relu z as relu` names the node `l0.relu` but keeps `h`
+//! referring to it).
+//!
+//! Dimension, seed and range arguments are single-token integer
+//! expressions over `+` and `*` (no spaces): literals and the symbols
+//! `IN`, `HID`, `OUT`, `LAYERS`, plus — inside a layer block — `L` (the
+//! layer index) and `DI`/`DO` (the layer's input/output width, following
+//! the stacked-layer convention: `DI = IN if L == 0 else HID`,
+//! `DO = OUT if L == LAYERS-1 else HID`). A weight without an explicit
+//! `seed` gets a deterministic auto seed, distinct for every weight/bias
+//! statement execution across the whole build.
+//!
+//! Worked examples ship in `examples/models/*.gnn` (a GIN-style sum-MLP
+//! and a 3-layer GCN variant); the built-in zoo entries in
+//! [`zoo`](super::zoo) are the Tbl I models expressed in this grammar and
+//! proven node-for-node identical to the legacy Rust builders.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::{IrError, IrGraph, NodeId};
+use crate::isa::{ElwOp, Reduce};
+
+/// The shape a spec is instantiated at: layer count plus input / hidden /
+/// output feature widths (the paper's models stack `layers` identical
+/// layers, §VI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ModelDims {
+    pub layers: u32,
+    pub in_dim: u32,
+    pub hid_dim: u32,
+    pub out_dim: u32,
+}
+
+impl ModelDims {
+    pub const fn new(layers: u32, in_dim: u32, hid_dim: u32, out_dim: u32) -> Self {
+        ModelDims {
+            layers,
+            in_dim,
+            hid_dim,
+            out_dim,
+        }
+    }
+
+    /// Paper configuration: 2 layers, 128-dim everywhere (§VI).
+    pub const fn paper() -> Self {
+        Self::new(2, 128, 128, 128)
+    }
+
+    /// `layers` stacked layers with one width throughout.
+    pub const fn uniform(layers: u32, dim: u32) -> Self {
+        Self::new(layers, dim, dim, dim)
+    }
+
+    /// Per-layer (input, output) widths — `DI`/`DO` in spec expressions,
+    /// mirroring `models::layer_dims`.
+    pub fn layer_io(&self, l: u32) -> (u32, u32) {
+        let di = if l == 0 { self.in_dim } else { self.hid_dim };
+        let d_o = if l + 1 == self.layers {
+            self.out_dim
+        } else {
+            self.hid_dim
+        };
+        (di, d_o)
+    }
+}
+
+impl std::fmt::Display for ModelDims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}x[{}->{}->{}]",
+            self.layers, self.in_dim, self.hid_dim, self.out_dim
+        )
+    }
+}
+
+// ----- expressions -----------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Var {
+    In,
+    Hid,
+    Out,
+    Layers,
+    L,
+    Di,
+    Do,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Factor {
+    Num(i64),
+    Var(Var),
+}
+
+/// A `+`/`*` integer expression, stored as a sum of products.
+#[derive(Clone, Debug, PartialEq)]
+struct Expr {
+    terms: Vec<Vec<Factor>>,
+    src: String,
+}
+
+fn parse_expr(tok: &str, line: u32) -> Result<Expr, IrError> {
+    let mut terms = Vec::new();
+    for term in tok.split('+') {
+        let mut factors = Vec::new();
+        for fct in term.split('*') {
+            if fct.is_empty() {
+                return Err(
+                    IrError::new(format!("malformed expression '{tok}' (empty operand)")).at(line),
+                );
+            }
+            let f = if fct.chars().all(|c| c.is_ascii_digit()) {
+                Factor::Num(fct.parse().map_err(|_| {
+                    IrError::new(format!("integer '{fct}' out of range in '{tok}'")).at(line)
+                })?)
+            } else {
+                Factor::Var(match fct.to_ascii_uppercase().as_str() {
+                    "IN" => Var::In,
+                    "HID" => Var::Hid,
+                    "OUT" => Var::Out,
+                    "LAYERS" => Var::Layers,
+                    "L" => Var::L,
+                    "DI" => Var::Di,
+                    "DO" => Var::Do,
+                    _ => {
+                        return Err(IrError::new(format!(
+                            "unknown symbol '{fct}' in expression '{tok}' \
+                             (expected an integer or IN|HID|OUT|LAYERS|L|DI|DO)"
+                        ))
+                        .at(line))
+                    }
+                })
+            };
+            factors.push(f);
+        }
+        terms.push(factors);
+    }
+    Ok(Expr {
+        terms,
+        src: tok.to_string(),
+    })
+}
+
+/// Evaluation context: the instantiation dims plus the current layer
+/// index (None outside `layer` blocks).
+struct EvalCtx {
+    dims: ModelDims,
+    layer: Option<u32>,
+}
+
+impl EvalCtx {
+    fn var(&self, v: Var, src: &str, line: u32) -> Result<i64, IrError> {
+        Ok(match v {
+            Var::In => self.dims.in_dim as i64,
+            Var::Hid => self.dims.hid_dim as i64,
+            Var::Out => self.dims.out_dim as i64,
+            Var::Layers => self.dims.layers as i64,
+            Var::L | Var::Di | Var::Do => {
+                let Some(l) = self.layer else {
+                    return Err(IrError::new(format!(
+                        "L/DI/DO in '{src}' are only defined inside a layer block"
+                    ))
+                    .at(line));
+                };
+                match v {
+                    Var::L => l as i64,
+                    Var::Di => self.dims.layer_io(l).0 as i64,
+                    _ => self.dims.layer_io(l).1 as i64,
+                }
+            }
+        })
+    }
+
+    fn eval(&self, e: &Expr, line: u32) -> Result<i64, IrError> {
+        let mut sum = 0i64;
+        for term in &e.terms {
+            let mut p = 1i64;
+            for f in term {
+                p = p.saturating_mul(match f {
+                    Factor::Num(n) => *n,
+                    Factor::Var(v) => self.var(*v, &e.src, line)?,
+                });
+            }
+            sum = sum.saturating_add(p);
+        }
+        Ok(sum)
+    }
+
+    fn eval_dim(&self, e: &Expr, line: u32) -> Result<u32, IrError> {
+        let v = self.eval(e, line)?;
+        if v < 1 || v > u32::MAX as i64 {
+            return Err(
+                IrError::new(format!("dimension '{}' evaluates to {v} (need >= 1)", e.src))
+                    .at(line),
+            );
+        }
+        Ok(v as u32)
+    }
+}
+
+// ----- statements ------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum OpStmt {
+    Input { dim: Expr },
+    Degree,
+    Weight { rows: Expr, cols: Expr, seed: Option<Expr> },
+    Bias { cols: Expr, seed: Option<Expr> },
+    Dmm { x: String, w: String },
+    Unary { op: ElwOp, x: String },
+    Binary { op: ElwOp, a: String, b: String },
+    RowScale { x: String, s: String },
+    Concat { a: String, b: String },
+    ScatterSrc { x: String },
+    ScatterDst { x: String },
+    Gather { reduce: Reduce, e: String },
+}
+
+#[derive(Clone, Debug)]
+enum Stmt {
+    Assign {
+        line: u32,
+        binding: String,
+        alias: Option<String>,
+        op: OpStmt,
+    },
+    Output {
+        line: u32,
+        arg: String,
+    },
+    Layer {
+        line: u32,
+        range: Option<(Expr, Expr)>,
+        body: Vec<Stmt>,
+    },
+}
+
+fn is_ident(s: &str) -> bool {
+    let mut chars = s.chars();
+    let ok_first = chars
+        .next()
+        .map(|c| c.is_ascii_alphabetic() || c == '_')
+        .unwrap_or(false);
+    // `as` is the alias keyword; reserving it keeps operand lists
+    // unambiguous.
+    ok_first && s != "as" && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn parse_unary_op(s: &str, line: u32) -> Result<ElwOp, IrError> {
+    Ok(match s {
+        "relu" => ElwOp::Relu,
+        "leaky_relu" => ElwOp::LeakyRelu,
+        "exp" => ElwOp::Exp,
+        "sigmoid" => ElwOp::Sigmoid,
+        "tanh" => ElwOp::Tanh,
+        "rsqrt" => ElwOp::Rsqrt,
+        "recip" => ElwOp::Recip,
+        "copy" => ElwOp::Copy,
+        _ => {
+            return Err(IrError::new(format!(
+                "unknown unary op '{s}' (relu|leaky_relu|exp|sigmoid|tanh|rsqrt|\
+                 recip|copy|add_scalar C|mul_scalar C)"
+            ))
+            .at(line))
+        }
+    })
+}
+
+fn parse_binary_op(s: &str, line: u32) -> Result<ElwOp, IrError> {
+    Ok(match s {
+        "add" => ElwOp::Add,
+        "sub" => ElwOp::Sub,
+        "mul" => ElwOp::Mul,
+        "div" => ElwOp::Div,
+        "max" => ElwOp::Max,
+        _ => {
+            return Err(
+                IrError::new(format!("unknown binary op '{s}' (add|sub|mul|div|max)")).at(line),
+            )
+        }
+    })
+}
+
+fn parse_reduce(s: &str, line: u32) -> Result<Reduce, IrError> {
+    Ok(match s {
+        "sum" => Reduce::Sum,
+        "max" => Reduce::Max,
+        "mean" => Reduce::Mean,
+        _ => return Err(IrError::new(format!("unknown reduce '{s}' (sum|max|mean)")).at(line)),
+    })
+}
+
+fn parse_rhs(tokens: &[&str], line: u32) -> Result<OpStmt, IrError> {
+    let verb = tokens[0];
+    let args = &tokens[1..];
+    let need = |n: usize, sig: &str| -> Result<(), IrError> {
+        if args.len() == n {
+            Ok(())
+        } else {
+            Err(IrError::new(format!("'{verb}' expects `{sig}`")).at(line))
+        }
+    };
+    Ok(match verb {
+        "input" => {
+            need(1, "input DIM")?;
+            OpStmt::Input {
+                dim: parse_expr(args[0], line)?,
+            }
+        }
+        "degree" => {
+            need(0, "degree")?;
+            OpStmt::Degree
+        }
+        "weight" | "bias" => {
+            let base = if verb == "weight" { 2 } else { 1 };
+            let sig = if verb == "weight" {
+                "weight ROWS COLS [seed EXPR]"
+            } else {
+                "bias COLS [seed EXPR]"
+            };
+            let with_seed = args.len() == base + 2 && args[base] == "seed";
+            if !(args.len() == base || with_seed) {
+                return Err(IrError::new(format!("'{verb}' expects `{sig}`")).at(line));
+            }
+            let seed = if with_seed {
+                Some(parse_expr(args[base + 1], line)?)
+            } else {
+                None
+            };
+            if verb == "weight" {
+                OpStmt::Weight {
+                    rows: parse_expr(args[0], line)?,
+                    cols: parse_expr(args[1], line)?,
+                    seed,
+                }
+            } else {
+                OpStmt::Bias {
+                    cols: parse_expr(args[0], line)?,
+                    seed,
+                }
+            }
+        }
+        "dmm" => {
+            need(2, "dmm X W")?;
+            OpStmt::Dmm {
+                x: args[0].into(),
+                w: args[1].into(),
+            }
+        }
+        "unary" => match args.first().copied() {
+            Some(s @ ("add_scalar" | "mul_scalar")) => {
+                need(3, "unary add_scalar|mul_scalar C X")?;
+                let c: f32 = args[1].parse().map_err(|_| {
+                    IrError::new(format!("bad scalar '{}' for {s}", args[1])).at(line)
+                })?;
+                let op = if s == "add_scalar" {
+                    ElwOp::AddScalar(c.to_bits())
+                } else {
+                    ElwOp::MulScalar(c.to_bits())
+                };
+                OpStmt::Unary {
+                    op,
+                    x: args[2].into(),
+                }
+            }
+            Some(s) => {
+                need(2, "unary OP X")?;
+                OpStmt::Unary {
+                    op: parse_unary_op(s, line)?,
+                    x: args[1].into(),
+                }
+            }
+            None => return Err(IrError::new("'unary' expects `unary OP X`").at(line)),
+        },
+        "binary" => {
+            need(3, "binary OP A B")?;
+            OpStmt::Binary {
+                op: parse_binary_op(args[0], line)?,
+                a: args[1].into(),
+                b: args[2].into(),
+            }
+        }
+        "row_scale" => {
+            need(2, "row_scale X S")?;
+            OpStmt::RowScale {
+                x: args[0].into(),
+                s: args[1].into(),
+            }
+        }
+        "concat" => {
+            need(2, "concat A B")?;
+            OpStmt::Concat {
+                a: args[0].into(),
+                b: args[1].into(),
+            }
+        }
+        "scatter_src" => {
+            need(1, "scatter_src X")?;
+            OpStmt::ScatterSrc { x: args[0].into() }
+        }
+        "scatter_dst" => {
+            need(1, "scatter_dst X")?;
+            OpStmt::ScatterDst { x: args[0].into() }
+        }
+        "gather" => {
+            need(2, "gather sum|max|mean E")?;
+            OpStmt::Gather {
+                reduce: parse_reduce(args[0], line)?,
+                e: args[1].into(),
+            }
+        }
+        _ => {
+            return Err(IrError::new(format!(
+                "unknown op '{verb}' (input|degree|weight|bias|dmm|unary|binary|\
+                 row_scale|concat|scatter_src|scatter_dst|gather)"
+            ))
+            .at(line))
+        }
+    })
+}
+
+/// Parse the full source into (model name, default dims, statements).
+#[allow(clippy::type_complexity)]
+fn parse_source(source: &str) -> Result<(Option<String>, Option<ModelDims>, Vec<Stmt>), IrError> {
+    let mut name: Option<String> = None;
+    let mut dims: Option<ModelDims> = None;
+    let mut top: Vec<Stmt> = Vec::new();
+    let mut block: Option<(u32, Option<(Expr, Expr)>, Vec<Stmt>)> = None;
+
+    for (i, raw) in source.lines().enumerate() {
+        let line = i as u32 + 1;
+        let text = raw.split('#').next().unwrap_or("").trim();
+        if text.is_empty() {
+            continue;
+        }
+        if text == "}" {
+            let (l, range, body) =
+                block.take().ok_or_else(|| IrError::new("unmatched '}'").at(line))?;
+            top.push(Stmt::Layer {
+                line: l,
+                range,
+                body,
+            });
+            continue;
+        }
+        let toks: Vec<&str> = text.split_whitespace().collect();
+        match toks[0] {
+            "layer" => {
+                if block.is_some() {
+                    return Err(IrError::new("nested layer blocks are not supported").at(line));
+                }
+                if toks.last() != Some(&"{") {
+                    return Err(
+                        IrError::new("layer syntax: `layer [A..B] {` ('{' on the same line)")
+                            .at(line),
+                    );
+                }
+                let range = match toks.len() {
+                    2 => None,
+                    3 => {
+                        let (a, b) = toks[1].split_once("..").ok_or_else(|| {
+                            IrError::new(format!("bad layer range '{}' (expected A..B)", toks[1]))
+                                .at(line)
+                        })?;
+                        Some((parse_expr(a, line)?, parse_expr(b, line)?))
+                    }
+                    _ => return Err(IrError::new("layer syntax: `layer [A..B] {`").at(line)),
+                };
+                block = Some((line, range, Vec::new()));
+            }
+            "model" => {
+                if block.is_some() {
+                    return Err(IrError::new("'model' must be at the top level").at(line));
+                }
+                if toks.len() != 2 || !is_ident(toks[1]) {
+                    return Err(IrError::new("model syntax: `model NAME`").at(line));
+                }
+                if name.is_some() {
+                    return Err(IrError::new("duplicate 'model' statement").at(line));
+                }
+                name = Some(toks[1].to_string());
+            }
+            "dims" => {
+                if block.is_some() {
+                    return Err(IrError::new("'dims' must be at the top level").at(line));
+                }
+                if dims.is_some() {
+                    return Err(IrError::new("duplicate 'dims' statement").at(line));
+                }
+                if toks.len() != 5 {
+                    return Err(IrError::new("dims syntax: `dims LAYERS IN HID OUT`").at(line));
+                }
+                let mut v = [0u32; 4];
+                for (slot, tok) in v.iter_mut().zip(&toks[1..]) {
+                    *slot = tok.parse().map_err(|_| {
+                        IrError::new(format!("bad dims value '{tok}' (positive integer)")).at(line)
+                    })?;
+                    if *slot == 0 {
+                        return Err(IrError::new("dims values must be >= 1").at(line));
+                    }
+                }
+                dims = Some(ModelDims::new(v[0], v[1], v[2], v[3]));
+            }
+            "output" => {
+                if toks.len() != 2 {
+                    return Err(IrError::new("output syntax: `output X`").at(line));
+                }
+                let stmt = Stmt::Output {
+                    line,
+                    arg: toks[1].to_string(),
+                };
+                match &mut block {
+                    Some((_, _, body)) => body.push(stmt),
+                    None => top.push(stmt),
+                }
+            }
+            _ => {
+                // Assignment: `binding = verb args... [as NAME]`.
+                if toks.len() < 3 || toks[1] != "=" {
+                    return Err(IrError::new(format!(
+                        "expected `NAME = OP ...`, `output X` or a directive, got '{text}'"
+                    ))
+                    .at(line));
+                }
+                let binding = toks[0];
+                if !is_ident(binding) {
+                    return Err(
+                        IrError::new(format!("bad binding name '{binding}'")).at(line)
+                    );
+                }
+                let mut rhs: Vec<&str> = toks[2..].to_vec();
+                let alias = if rhs.len() >= 2 && rhs[rhs.len() - 2] == "as" {
+                    let a = rhs.pop().unwrap();
+                    rhs.pop();
+                    if !is_ident(a) {
+                        return Err(IrError::new(format!("bad alias name '{a}'")).at(line));
+                    }
+                    Some(a.to_string())
+                } else {
+                    None
+                };
+                if rhs.is_empty() {
+                    return Err(IrError::new("assignment needs an op").at(line));
+                }
+                let op = parse_rhs(&rhs, line)?;
+                let stmt = Stmt::Assign {
+                    line,
+                    binding: binding.to_string(),
+                    alias,
+                    op,
+                };
+                match &mut block {
+                    Some((_, _, body)) => body.push(stmt),
+                    None => top.push(stmt),
+                }
+            }
+        }
+    }
+    if let Some((line, _, _)) = block {
+        return Err(IrError::new("unclosed layer block").at(line));
+    }
+    Ok((name, dims, top))
+}
+
+// ----- interpreter -----------------------------------------------------------
+
+fn lookup(env: &HashMap<String, NodeId>, s: &str, line: u32) -> Result<NodeId, IrError> {
+    env.get(s)
+        .copied()
+        .ok_or_else(|| IrError::new(format!("unknown value '{s}' (not defined above)")).at(line))
+}
+
+/// Resolve an optional seed expression; weights/biases without one get a
+/// deterministic auto seed from `which`, a build-global counter of
+/// weight/bias statement *executions* (never reset, so top-level
+/// statements, repeated layer iterations and sibling `layer` blocks can
+/// never collide).
+fn seed_value(
+    seed: &Option<Expr>,
+    ctx: &EvalCtx,
+    which: &mut u32,
+    line: u32,
+) -> Result<u64, IrError> {
+    let v = match seed {
+        Some(e) => {
+            let v = ctx.eval(e, line)?;
+            if v < 0 {
+                return Err(
+                    IrError::new(format!("seed '{}' evaluates to {v} (need >= 0)", e.src)).at(line),
+                );
+            }
+            v as u64
+        }
+        None => 9_000_000 + *which as u64,
+    };
+    *which += 1;
+    Ok(v)
+}
+
+fn exec_op(
+    op: &OpStmt,
+    g: &mut IrGraph,
+    env: &HashMap<String, NodeId>,
+    ctx: &EvalCtx,
+    which: &mut u32,
+    name: &str,
+    line: u32,
+) -> Result<NodeId, IrError> {
+    Ok(match op {
+        OpStmt::Input { dim } => g.input(ctx.eval_dim(dim, line)?),
+        OpStmt::Degree => g.degree(),
+        OpStmt::Weight { rows, cols, seed } => {
+            let r = ctx.eval_dim(rows, line)?;
+            let c = ctx.eval_dim(cols, line)?;
+            let s = seed_value(seed, ctx, which, line)?;
+            g.weight(r, c, s, name)
+        }
+        OpStmt::Bias { cols, seed } => {
+            let c = ctx.eval_dim(cols, line)?;
+            let s = seed_value(seed, ctx, which, line)?;
+            g.bias(c, s, name)
+        }
+        OpStmt::Dmm { x, w } => {
+            let (x, w) = (lookup(env, x, line)?, lookup(env, w, line)?);
+            g.try_dmm(x, w, name).map_err(|e| e.at(line))?
+        }
+        OpStmt::Unary { op, x } => {
+            let x = lookup(env, x, line)?;
+            g.try_unary(*op, x, name).map_err(|e| e.at(line))?
+        }
+        OpStmt::Binary { op, a, b } => {
+            let (a, b) = (lookup(env, a, line)?, lookup(env, b, line)?);
+            g.try_binary(*op, a, b, name).map_err(|e| e.at(line))?
+        }
+        OpStmt::RowScale { x, s } => {
+            let (x, s) = (lookup(env, x, line)?, lookup(env, s, line)?);
+            g.try_row_scale(x, s, name).map_err(|e| e.at(line))?
+        }
+        OpStmt::Concat { a, b } => {
+            let (a, b) = (lookup(env, a, line)?, lookup(env, b, line)?);
+            g.try_concat(a, b, name).map_err(|e| e.at(line))?
+        }
+        OpStmt::ScatterSrc { x } => {
+            let x = lookup(env, x, line)?;
+            g.try_scatter_src(x, name).map_err(|e| e.at(line))?
+        }
+        OpStmt::ScatterDst { x } => {
+            let x = lookup(env, x, line)?;
+            g.try_scatter_dst(x, name).map_err(|e| e.at(line))?
+        }
+        OpStmt::Gather { reduce, e } => {
+            let e_id = lookup(env, e, line)?;
+            g.try_gather(*reduce, e_id, name).map_err(|e| e.at(line))?
+        }
+    })
+}
+
+fn exec_block(
+    stmts: &[Stmt],
+    g: &mut IrGraph,
+    env: &mut HashMap<String, NodeId>,
+    ctx: &mut EvalCtx,
+    which: &mut u32,
+) -> Result<(), IrError> {
+    for stmt in stmts {
+        match stmt {
+            Stmt::Layer { line, range, body } => {
+                let (a, b) = match range {
+                    None => (0, ctx.dims.layers as i64),
+                    Some((ea, eb)) => (ctx.eval(ea, *line)?, ctx.eval(eb, *line)?),
+                };
+                if a < 0 || b < a {
+                    return Err(IrError::new(format!("bad layer range {a}..{b}")).at(*line));
+                }
+                for l in a..b {
+                    ctx.layer = Some(l as u32);
+                    exec_block(body, g, env, ctx, which)?;
+                }
+                ctx.layer = None;
+            }
+            Stmt::Output { line, arg } => {
+                if g.output.is_some() {
+                    return Err(IrError::new("duplicate 'output' statement").at(*line));
+                }
+                let id = lookup(env, arg, *line)?;
+                g.try_set_output(id).map_err(|e| e.at(*line))?;
+            }
+            Stmt::Assign {
+                line,
+                binding,
+                alias,
+                op,
+            } => {
+                let suffix = alias.as_deref().unwrap_or(binding);
+                let full = match ctx.layer {
+                    Some(l) => format!("l{l}.{suffix}"),
+                    None => suffix.to_string(),
+                };
+                let id = exec_op(op, g, env, ctx, which, &full, *line)?;
+                env.insert(binding.clone(), id);
+            }
+        }
+    }
+    Ok(())
+}
+
+// ----- ModelSpec -------------------------------------------------------------
+
+/// A parsed, validated `.gnn` model definition: the currency of the open
+/// model zoo. Carries a name, the canonical source text, default
+/// instantiation dims, and a stable content [fingerprint](Self::fingerprint)
+/// that the program cache keys on.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    name: String,
+    source: String,
+    dims: ModelDims,
+    stmts: Vec<Stmt>,
+}
+
+impl ModelSpec {
+    /// Parse `source`, taking the model name from the `model` statement
+    /// (falling back to `fallback_name`) and default dims from the `dims`
+    /// statement (falling back to the paper shape). Validates by building
+    /// once at the default dims.
+    pub fn parse(fallback_name: &str, source: &str) -> Result<ModelSpec, IrError> {
+        let (name, dims, stmts) = parse_source(source)?;
+        let spec = ModelSpec {
+            name: name.unwrap_or_else(|| fallback_name.to_string()),
+            source: source.to_string(),
+            dims: dims.unwrap_or_else(ModelDims::paper),
+            stmts,
+        };
+        if !is_ident(&spec.name) {
+            return Err(IrError::new(format!("bad model name '{}'", spec.name)));
+        }
+        spec.build(spec.dims)?;
+        Ok(spec)
+    }
+
+    /// Load a spec from a `.gnn` file; the file stem is the fallback name.
+    pub fn from_file(path: &Path) -> Result<ModelSpec, IrError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| IrError::new(format!("{}: {e}", path.display())))?;
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("model");
+        Self::parse(stem, &text).map_err(|e| IrError {
+            line: e.line,
+            message: format!("{}: {}", path.display(), e.message),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Upper-cased name for tables and CLI reports.
+    pub fn display(&self) -> String {
+        self.name.to_uppercase()
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+
+    /// The same spec with different default dims (re-validated: dims feed
+    /// weight shapes, so a shape that breaks the model is rejected here).
+    pub fn with_dims(&self, dims: ModelDims) -> Result<ModelSpec, IrError> {
+        let mut s = self.clone();
+        s.dims = dims;
+        s.build(dims)?;
+        Ok(s)
+    }
+
+    /// Build the IR at an arbitrary shape.
+    pub fn build(&self, dims: ModelDims) -> Result<IrGraph, IrError> {
+        let mut g = IrGraph::new(&self.name);
+        let mut env = HashMap::new();
+        let mut ctx = EvalCtx { dims, layer: None };
+        let mut which = 0u32;
+        exec_block(&self.stmts, &mut g, &mut env, &mut ctx, &mut which)?;
+        if g.output.is_none() {
+            return Err(IrError::new("spec has no 'output' statement"));
+        }
+        g.validate().map_err(IrError::new)?;
+        Ok(g)
+    }
+
+    /// Build at the spec's own default dims. Cannot fail: that exact
+    /// build was validated at construction time.
+    pub fn graph(&self) -> IrGraph {
+        self.build(self.dims)
+            .expect("spec validated at construction")
+    }
+
+    /// Stable content fingerprint over (name, source, dims) — the program
+    /// cache key. Unlike the old enum key, two instantiations that differ
+    /// only in layers/dims get distinct fingerprints.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        eat(self.name.as_bytes());
+        eat(&[0]);
+        eat(self.source.as_bytes());
+        eat(&[0]);
+        for v in [
+            self.dims.layers,
+            self.dims.in_dim,
+            self.dims.hid_dim,
+            self.dims.out_dim,
+        ] {
+            eat(&v.to_le_bytes());
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::IrOp;
+
+    const TINY: &str = "\
+model tiny
+h = input IN
+layer {
+  e = scatter_src h
+  a = gather sum e
+  W = weight DI DO seed 100+L
+  h = dmm a W as z
+}
+output h
+";
+
+    #[test]
+    fn parses_builds_and_repeats_layers() {
+        let spec = ModelSpec::parse("fallback", TINY).unwrap();
+        assert_eq!(spec.name(), "tiny");
+        assert_eq!(spec.dims(), ModelDims::paper());
+        let g = spec.build(ModelDims::new(2, 8, 16, 4)).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.num_groups(), 2);
+        // Per-layer DI/DO: l0 8->16, l1 16->4.
+        let weights: Vec<&crate::ir::Node> = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, IrOp::Weight { .. }))
+            .collect();
+        assert_eq!(weights.len(), 2);
+        assert_eq!(weights[0].name, "l0.W");
+        assert_eq!(weights[1].name, "l1.W");
+        let IrOp::Weight { rows, seed } = weights[0].op else {
+            unreachable!()
+        };
+        assert_eq!((rows, weights[0].cols, seed), (8, 16, 100));
+        let IrOp::Weight { rows, seed } = weights[1].op else {
+            unreachable!()
+        };
+        assert_eq!((rows, weights[1].cols, seed), (16, 4, 101));
+        // Alias: the dmm node is named l{L}.z but bound to `h`.
+        assert!(g.nodes.iter().any(|n| n.name == "l1.z"));
+        assert_eq!(g.nodes[g.output.unwrap()].cols, 4);
+    }
+
+    #[test]
+    fn explicit_layer_ranges() {
+        let src = "\
+h = input IN
+layer 0..LAYERS {
+  e = scatter_src h
+  h = gather max e as agg
+}
+output h
+";
+        let spec = ModelSpec::parse("ranged", src).unwrap();
+        let g = spec.build(ModelDims::uniform(3, 8)).unwrap();
+        assert_eq!(g.num_groups(), 3);
+        assert_eq!(spec.name(), "ranged", "falls back to the given name");
+    }
+
+    #[test]
+    fn errors_carry_source_lines() {
+        // Line 3: dmm against a mis-shaped weight.
+        let src = "h = input IN\nW = weight 7 4 seed 1\nz = dmm h W\noutput z\n";
+        let e = ModelSpec::parse("bad", src).unwrap_err();
+        assert_eq!(e.line, Some(3), "{e}");
+        assert!(e.message.contains("shape mismatch"), "{e}");
+        assert!(format!("{e}").starts_with("line 3:"));
+
+        let e = ModelSpec::parse("bad", "h = input IN\nz = unary relu nope\noutput z\n")
+            .unwrap_err();
+        assert_eq!(e.line, Some(2));
+        assert!(e.message.contains("unknown value 'nope'"), "{e}");
+
+        let e = ModelSpec::parse("bad", "h = input IN\nW = weight DI 4\noutput h\n").unwrap_err();
+        assert_eq!(e.line, Some(2));
+        assert!(e.message.contains("layer block"), "{e}");
+    }
+
+    #[test]
+    fn structural_parse_errors() {
+        for (src, what) in [
+            ("h = input IN\n}\noutput h\n", "unmatched '}'"),
+            ("layer {\nh = input IN\n", "unclosed layer block"),
+            ("layer {\nlayer {\n}\n}\n", "nested"),
+            ("h = input IN\nh = frobnicate x\noutput h\n", "unknown op"),
+            ("h = input IN\noutput h\noutput h\n", "duplicate 'output'"),
+            ("model a\nmodel b\nh = input IN\noutput h\n", "duplicate 'model'"),
+            ("h = input IN\n", "no 'output'"),
+            ("as = input IN\noutput as\n", "bad binding"),
+            ("h = input IN\nz = gather sum h\noutput z\n", "must be Edge-located"),
+        ] {
+            let e = ModelSpec::parse("t", src).unwrap_err();
+            assert!(e.message.contains(what), "{src:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn dims_directive_sets_defaults() {
+        let src = "dims 3 64 64 32\nh = input IN\noutput h\n";
+        let spec = ModelSpec::parse("t", src).unwrap();
+        assert_eq!(spec.dims(), ModelDims::new(3, 64, 64, 32));
+        assert_eq!(spec.graph().input_dim(), 64);
+        assert_eq!(format!("{}", spec.dims()), "3x[64->64->32]");
+    }
+
+    #[test]
+    fn auto_seeds_are_distinct_per_layer_and_statement() {
+        // W0 at top level and W/b inside the layer body: auto seeds must
+        // not collide across the top-level/layer boundary nor across
+        // layer iterations.
+        let src = "\
+h = input IN
+W0 = weight IN IN
+h0 = dmm h W0
+layer {
+  W = weight DI DO
+  b = bias DO
+  z = dmm h0 W
+  h0 = binary add z b as h2
+}
+output h0
+";
+        let g = ModelSpec::parse("t", src)
+            .unwrap()
+            .build(ModelDims::uniform(2, 8))
+            .unwrap();
+        let seeds: Vec<u64> = g
+            .nodes
+            .iter()
+            .filter_map(|n| match n.op {
+                IrOp::Weight { seed, .. } => Some(seed),
+                IrOp::Bias { seed } => Some(seed),
+                _ => None,
+            })
+            .collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seeds.len(), "auto seeds collide: {seeds:?}");
+    }
+
+    #[test]
+    fn fingerprint_tracks_name_source_and_dims() {
+        let a = ModelSpec::parse("t", TINY).unwrap();
+        let b = a.with_dims(ModelDims::uniform(1, 8)).unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint(), "dims must re-key");
+        let c = ModelSpec::parse("t", &TINY.replace("gather sum", "gather max")).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint(), "source must re-key");
+        let d = ModelSpec::parse("t", TINY).unwrap();
+        assert_eq!(a.fingerprint(), d.fingerprint(), "stable across parses");
+        // Spec-level mul_scalar/add_scalar round-trip through f32 bits.
+        let e = ModelSpec::parse(
+            "t",
+            "h = input IN\nq = unary mul_scalar -1 h\noutput q\n",
+        )
+        .unwrap();
+        let n = &e.graph().nodes[1];
+        assert_eq!(n.op, IrOp::Unary(ElwOp::MulScalar((-1.0f32).to_bits())));
+    }
+}

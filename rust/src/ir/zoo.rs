@@ -1,0 +1,367 @@
+//! The open model zoo: a registry of [`ModelSpec`]s that replaces the
+//! closed four-variant `Model` enum as the currency of the pipeline.
+//!
+//! The built-in entries are the paper's Tbl I models (plus `sage_mean`)
+//! *expressed as `.gnn` specs* — the legacy Rust builders in
+//! [`models`](super::models) stay as ground truth, and the tests below
+//! prove each spec builds a node-for-node identical [`IrGraph`]. Anything
+//! else enters through [`ModelZoo::resolve`]: a user-supplied `.gnn` file
+//! runs the whole compile → partition → simulate → exec stack with no
+//! Rust changes.
+
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
+
+use super::spec::ModelSpec;
+
+/// GCN (Kipf & Welling, Tbl I row 1) — seeds mirror `models::seed("gcn", ...)`.
+const GCN: &str = "\
+# GCN: a_i = sum_{j in N(i)} h_j d_j^-1/2 ; h' = ReLU(d_i^-1/2 * W a_i)
+model gcn
+deg = degree
+deg_rsqrt = unary rsqrt deg
+h = input IN
+layer {
+  h_norm = row_scale h deg_rsqrt
+  msg = scatter_src h_norm
+  agg = gather sum msg
+  W = weight DI DO seed 1000000+1000*L
+  z = dmm agg W
+  z_norm = row_scale z deg_rsqrt
+  h = unary relu z_norm as relu
+}
+output h
+";
+
+/// GAT (Veličković et al., Tbl I row 2), single head, stable edge softmax.
+const GAT: &str = "\
+# GAT: e_ij = LeakyReLU(a_l.Wh_i + a_r.Wh_j); alpha = softmax_j(e_ij);
+# a_i = sum_j alpha_ij W h_j ; h' = ReLU(a_i). Two gather rounds per layer.
+model gat
+h = input IN
+layer {
+  W = weight DI DO seed 2000000+1000*L
+  a_l = weight DO 1 seed 2000001+1000*L
+  a_r = weight DO 1 seed 2000002+1000*L
+  hw = dmm h W
+  att_dst = dmm hw a_l
+  att_src = dmm hw a_r
+  s_dst = scatter_dst att_dst
+  s_src = scatter_src att_src
+  s_raw = binary add s_dst s_src
+  s = unary leaky_relu s_raw
+  s_max = gather max s
+  s_max_e = scatter_dst s_max
+  s_cent = binary sub s s_max_e
+  s_exp = unary exp s_cent
+  den = gather sum s_exp
+  msg = scatter_src hw
+  wmsg = row_scale msg s_exp
+  num = gather sum wmsg
+  rden = unary recip den
+  alpha_agg = row_scale num rden
+  h = unary relu alpha_agg as relu
+}
+output h
+";
+
+/// GraphSAGE, max-pool aggregator (Hamilton et al., Tbl I row 3).
+const SAGE: &str = "\
+# SAGE-pool: a_i = max_j(W_pool h_j + b); h' = ReLU(W (h_i || a_i))
+model sage
+h = input IN
+layer {
+  W_pool = weight DI DI seed 3000000+1000*L
+  b = bias DI seed 3000001+1000*L
+  pool_proj = dmm h W_pool
+  pool_biased = binary add pool_proj b
+  msg = scatter_src pool_biased
+  agg = gather max msg
+  cat = concat h agg
+  W = weight 2*DI DO seed 3000002+1000*L
+  z = dmm cat W
+  h = unary relu z as relu
+}
+output h
+";
+
+/// GraphSAGE, *mean* aggregator — exercises `Reduce::Mean` end to end.
+const SAGE_MEAN: &str = "\
+# SAGE-mean: a_i = mean_j h_j ; h' = ReLU(W (h_i || a_i))
+model sage_mean
+h = input IN
+layer {
+  msg = scatter_src h
+  agg = gather mean msg
+  cat = concat h agg
+  W = weight 2*DI DO seed 3000007+1000*L
+  z = dmm cat W
+  h = unary relu z as relu
+}
+output h
+";
+
+/// GG-NN (Li et al., Tbl I row 4): Σ(Wh+b) aggregation into a GRU cell.
+/// The GRU keeps the hidden size constant — instantiate with uniform dims.
+const GGNN: &str = "\
+# GGNN: a_i = sum_j (W h_j + b); h' = GRU(h_i, a_i)
+model ggnn
+h = input IN
+layer {
+  W = weight DI DI seed 4000000+1000*L
+  b = bias DI seed 4000001+1000*L
+  proj = dmm h W
+  proj_b = binary add proj b
+  msg = scatter_src proj_b
+  agg = gather sum msg
+  W_z = weight DI DI seed 4000002+1000*L
+  U_z = weight DI DI seed 4000003+1000*L
+  W_r = weight DI DI seed 4000004+1000*L
+  U_r = weight DI DI seed 4000005+1000*L
+  W_h = weight DI DI seed 4000006+1000*L
+  U_h = weight DI DI seed 4000007+1000*L
+  z_a = dmm agg W_z
+  z_h = dmm h U_z
+  z_sum = binary add z_a z_h
+  z = unary sigmoid z_sum
+  r_a = dmm agg W_r
+  r_h = dmm h U_r
+  r_sum = binary add r_a r_h
+  r = unary sigmoid r_sum
+  r_gate = binary mul r h
+  h_a = dmm agg W_h
+  h_r = dmm r_gate U_h
+  h_sum = binary add h_a h_r
+  h_cand = unary tanh h_sum
+  neg_z = unary mul_scalar -1 z
+  one_m_z = unary add_scalar 1 neg_z
+  keep = binary mul one_m_z h
+  update = binary mul z h_cand
+  h = binary add keep update as h_next
+}
+output h
+";
+
+const BUILTINS: [(&str, &str); 5] = [
+    ("gcn", GCN),
+    ("gat", GAT),
+    ("sage", SAGE),
+    ("sage_mean", SAGE_MEAN),
+    ("ggnn", GGNN),
+];
+
+/// The four Tbl I models the figure harness sweeps, paper order.
+const PAPER_FOUR: [&str; 4] = ["gcn", "gat", "sage", "ggnn"];
+
+/// Historical aliases (kept from the old `Model::parse`).
+fn canonical(name: &str) -> String {
+    let n = name.to_ascii_lowercase().replace('-', "_");
+    match n.as_str() {
+        "graphsage" | "sage_pool" => "sage".into(),
+        "gg_nn" => "ggnn".into(),
+        _ => n,
+    }
+}
+
+/// An ordered, name-keyed registry of model specs.
+pub struct ModelZoo {
+    entries: Vec<Arc<ModelSpec>>,
+}
+
+impl Default for ModelZoo {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl ModelZoo {
+    pub fn empty() -> ModelZoo {
+        ModelZoo {
+            entries: Vec::new(),
+        }
+    }
+
+    /// The built-in zoo (parsed once per process).
+    pub fn builtin() -> &'static ModelZoo {
+        static ZOO: OnceLock<ModelZoo> = OnceLock::new();
+        ZOO.get_or_init(|| {
+            let mut z = ModelZoo::empty();
+            for (name, text) in BUILTINS {
+                z.register(
+                    ModelSpec::parse(name, text)
+                        .unwrap_or_else(|e| panic!("builtin spec '{name}': {e}")),
+                );
+            }
+            z
+        })
+    }
+
+    /// Add (or replace) an entry. Replacement matches canonically — the
+    /// same rule [`get`](Self::get) uses — so registering `GraphSAGE`
+    /// replaces the `sage` slot rather than leaving a shadowed duplicate.
+    pub fn register(&mut self, spec: ModelSpec) {
+        let canon = canonical(spec.name());
+        let spec = Arc::new(spec);
+        match self
+            .entries
+            .iter_mut()
+            .find(|s| canonical(s.name()) == canon)
+        {
+            Some(slot) => *slot = spec,
+            None => self.entries.push(spec),
+        }
+    }
+
+    pub fn entries(&self) -> &[Arc<ModelSpec>] {
+        &self.entries
+    }
+
+    /// Registered names, registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|s| s.name()).collect()
+    }
+
+    /// Case-insensitive, alias-aware lookup. Stored names are
+    /// canonicalized for comparison too, so a registered `MyGIN` is
+    /// reachable as `mygin`/`MyGIN`/`my-gin`.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelSpec>> {
+        let canon = canonical(name);
+        self.entries
+            .iter()
+            .find(|s| canonical(s.name()) == canon)
+            .cloned()
+    }
+
+    /// The four Tbl I models (the 4×5 figure sweep), paper order.
+    pub fn paper_models(&self) -> Vec<Arc<ModelSpec>> {
+        PAPER_FOUR.into_iter().filter_map(|n| self.get(n)).collect()
+    }
+
+    /// Resolve a CLI model argument: a zoo name, or a path to a `.gnn`
+    /// spec file. The error enumerates the zoo dynamically.
+    pub fn resolve(&self, arg: &str) -> Result<Arc<ModelSpec>, String> {
+        if let Some(s) = self.get(arg) {
+            return Ok(s);
+        }
+        if arg.ends_with(".gnn") || arg.contains('/') {
+            return ModelSpec::from_file(Path::new(arg))
+                .map(Arc::new)
+                .map_err(|e| e.to_string());
+        }
+        Err(format!(
+            "unknown model '{arg}' (available: {}; or pass a .gnn spec file via --model-file)",
+            self.names().join("|").to_uppercase()
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::models::{self, Model};
+    use crate::ir::spec::ModelDims;
+
+    /// The tentpole proof: every built-in spec builds the *same graph* —
+    /// node for node (op, inputs, location, width, debug name) — as the
+    /// legacy Rust builder it replaces, at the paper shape and at an
+    /// asymmetric small shape.
+    #[test]
+    fn builtin_specs_match_legacy_builders() {
+        let zoo = ModelZoo::builtin();
+        for d in [ModelDims::paper(), ModelDims::new(3, 8, 16, 4)] {
+            let build = |n: &str| zoo.get(n).unwrap().build(d).unwrap();
+            assert_eq!(build("gcn"), models::gcn(d.layers, d.in_dim, d.hid_dim, d.out_dim));
+            assert_eq!(build("gat"), models::gat(d.layers, d.in_dim, d.hid_dim, d.out_dim));
+            assert_eq!(build("sage"), models::sage(d.layers, d.in_dim, d.hid_dim, d.out_dim));
+            assert_eq!(
+                build("sage_mean"),
+                models::sage_mean(d.layers, d.in_dim, d.hid_dim, d.out_dim)
+            );
+        }
+        // GGNN holds the hidden size constant: uniform shapes only.
+        for dim in [8u32, 128] {
+            assert_eq!(
+                zoo.get("ggnn").unwrap().build(ModelDims::uniform(2, dim)).unwrap(),
+                models::ggnn(2, dim)
+            );
+        }
+    }
+
+    #[test]
+    fn default_dims_match_build_paper() {
+        let zoo = ModelZoo::builtin();
+        for m in Model::ALL {
+            let spec = zoo.get(m.name()).expect(m.name());
+            assert_eq!(spec.graph(), m.build_paper(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn zoo_lists_five_models_in_order() {
+        let zoo = ModelZoo::builtin();
+        assert_eq!(zoo.names(), ["gcn", "gat", "sage", "sage_mean", "ggnn"]);
+        assert_eq!(
+            zoo.paper_models()
+                .iter()
+                .map(|s| s.name().to_string())
+                .collect::<Vec<_>>(),
+            ["gcn", "gat", "sage", "ggnn"]
+        );
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive_and_alias_aware() {
+        let zoo = ModelZoo::builtin();
+        for (alias, want) in [
+            ("GCN", "gcn"),
+            ("GraphSAGE", "sage"),
+            ("SAGE-POOL", "sage"),
+            ("GG-NN", "ggnn"),
+            ("Sage_Mean", "sage_mean"),
+        ] {
+            assert_eq!(zoo.get(alias).expect(alias).name(), want);
+        }
+        assert!(zoo.get("nope").is_none());
+    }
+
+    #[test]
+    fn resolve_error_enumerates_zoo() {
+        let e = ModelZoo::builtin().resolve("nope").unwrap_err();
+        for n in ["GCN", "GAT", "SAGE", "SAGE_MEAN", "GGNN"] {
+            assert!(e.contains(n), "{e}");
+        }
+        assert!(e.contains(".gnn"), "{e}");
+        assert!(ModelZoo::builtin().resolve("/nonexistent/x.gnn").is_err());
+    }
+
+    #[test]
+    fn register_replaces_by_name() {
+        let mut zoo = ModelZoo::empty();
+        let a = ModelSpec::parse("m", "h = input IN\noutput h\n").unwrap();
+        let b = ModelSpec::parse("m", "h = input IN\ny = unary relu h\noutput y\n").unwrap();
+        zoo.register(a);
+        zoo.register(b.clone());
+        assert_eq!(zoo.entries().len(), 1);
+        assert_eq!(zoo.get("m").unwrap().fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn register_and_get_are_canonical() {
+        // A mixed-case registered name is reachable through any casing...
+        let mut zoo = ModelZoo::empty();
+        let g = ModelSpec::parse("MyGIN", "h = input IN\noutput h\n").unwrap();
+        zoo.register(g.clone());
+        assert_eq!(zoo.get("mygin").unwrap().fingerprint(), g.fingerprint());
+        assert_eq!(zoo.get("MyGIN").unwrap().fingerprint(), g.fingerprint());
+        // ...and registering under an alias replaces the aliased slot
+        // instead of leaving a shadowed duplicate.
+        let mut zoo = ModelZoo::empty();
+        for (name, text) in BUILTINS {
+            zoo.register(ModelSpec::parse(name, text).unwrap());
+        }
+        let mine = ModelSpec::parse("GraphSAGE", "h = input IN\noutput h\n").unwrap();
+        zoo.register(mine.clone());
+        assert_eq!(zoo.entries().len(), BUILTINS.len());
+        assert_eq!(zoo.get("sage").unwrap().fingerprint(), mine.fingerprint());
+    }
+}

@@ -3,7 +3,10 @@
 //!
 //! The crate implements the paper's full stack:
 //!
-//! * [`ir`] — the unified computational graph + the Tbl I model zoo,
+//! * [`ir`] — the unified computational graph, the declarative `.gnn`
+//!   model-spec format (`ir::spec`) and the *open* model zoo (`ir::zoo`):
+//!   the Tbl I models ship as built-in specs, and user spec files run the
+//!   whole pipeline with no Rust changes,
 //! * [`compiler`] — PLOF phase construction and ISA code generation (§V-C),
 //! * [`partition`] — DSW-GP (Alg 1) and FGGP (Alg 3) graph partitioners,
 //! * [`isa`] — the accelerator instruction set (§V-A),

@@ -7,19 +7,26 @@
 
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use switchblade::compiler::compile;
 use switchblade::coordinator::{bench_executor, Caches, Harness};
 use switchblade::dse::{self, Objective, TuneOptions};
 use switchblade::exec::weights;
 use switchblade::graph::datasets::{Dataset, DEFAULT_SCALE};
-use switchblade::ir::models::Model;
+use switchblade::ir::spec::{ModelDims, ModelSpec};
+use switchblade::ir::zoo::ModelZoo;
 use switchblade::partition::{stats as pstats, Method};
 use switchblade::runtime::{artifacts_dir, ArtifactShape, Runtime};
 use switchblade::sim::{simulate, AcceleratorConfig};
 use switchblade::util::report::{bytes, f as ff, Table};
 
-const USAGE: &str = "\
+/// Usage text; the MODELS line is generated from the zoo so a registered
+/// model is never missing from the help (and a removed one never lingers).
+fn usage() -> String {
+    let models = ModelZoo::builtin().names().join(" ").to_uppercase();
+    format!(
+        "\
 switchblade — generic GNN acceleration via architecture/compiler/partition co-design
 
 USAGE:
@@ -39,15 +46,21 @@ COMMANDS:
               [--config FILE]              regenerate the paper's figures/tables
     serve     [--model M] [--requests R] [--config FILE]
                                            PJRT serving demo over AOT artifacts
-                                           (requests must be >= 1)
-    validate  [--scale N]                  three-way numerics check (needs artifacts)
+                                           (requests >= 1; artifacts exist for the
+                                           four paper models only)
+    validate  [--scale N] [--layers N] [--dim D] [--model M]
+                                           executor-vs-oracle numerics check over the
+                                           zoo (or one model / spec file)
     bench     [--model M] [--dataset D] [--scale N] [--iters N] [--workers W]
-                                           functional-executor throughput probe
+              [--layers N] [--dim D]       functional-executor throughput probe
                                            (single vs shard-parallel; bench.sh
                                            folds this into BENCH_exec.json)
     help                                   this text
 
-MODELS:   GCN GAT SAGE GGNN        DATASETS: AK AD HW CP SL
+MODELS:   {models}
+          or any .gnn spec file via --model-file PATH (accepted wherever a
+          model is; grammar documented in rust/src/ir/spec.rs)
+DATASETS: AK AD HW CP SL
 
 TUNED CONFIGS (--config):
     `repro` and `serve` accept a `dse_*_frontier.json|csv` (or sweep)
@@ -56,7 +69,9 @@ TUNED CONFIGS (--config):
     re-renders every figure on the tuned hardware; `serve --config`
     additionally prints the predicted accelerator latency for the
     serving shape.
-";
+"
+    )
+}
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -72,10 +87,10 @@ fn main() -> ExitCode {
         "validate" => cmd_validate(rest),
         "bench" => cmd_bench(rest),
         "help" | "--help" | "-h" => {
-            print!("{USAGE}");
+            print!("{}", usage());
             Ok(())
         }
-        other => Err(format!("unknown command '{other}'\n\n{USAGE}")),
+        other => Err(format!("unknown command '{other}'\n\n{}", usage())),
     };
     match r {
         Ok(()) => ExitCode::SUCCESS,
@@ -87,6 +102,32 @@ fn main() -> ExitCode {
 }
 
 // ---- option helpers ----------------------------------------------------------
+
+/// Options that consume the following token as their value; everything
+/// else starting with `--` is a bare flag.
+const VALUE_OPTS: &[&str] = &[
+    "--scale", "--method", "--model", "--model-file", "--sthreads", "--budget", "--objective",
+    "--out", "--fig", "--tbl", "--config", "--requests", "--dataset", "--iters", "--workers",
+    "--layers", "--dim",
+];
+
+/// Positional arguments: whatever is not an option or an option's value.
+fn positionals(rest: &[String]) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < rest.len() {
+        let a = rest[i].as_str();
+        if VALUE_OPTS.contains(&a) {
+            i += 2;
+        } else if a.starts_with("--") {
+            i += 1;
+        } else {
+            out.push(a);
+            i += 1;
+        }
+    }
+    out
+}
 
 fn opt_val<'a>(rest: &'a [String], name: &str) -> Option<&'a str> {
     rest.iter()
@@ -106,8 +147,17 @@ fn has_flag(rest: &[String], name: &str) -> bool {
     rest.iter().any(|a| a == name)
 }
 
-fn parse_model(s: &str) -> Result<Model, String> {
-    Model::parse(s).ok_or_else(|| format!("unknown model '{s}' (GCN|GAT|SAGE|GGNN)"))
+/// Resolve the model for a subcommand: `--model-file PATH` wins (and
+/// replaces the model positional), else `name` is looked up in the zoo or
+/// treated as a spec path. The zoo's error enumerates the available names.
+fn resolve_model(rest: &[String], name: Option<&str>, cmd: &str) -> Result<Arc<ModelSpec>, String> {
+    if let Some(p) = opt_val(rest, "--model-file") {
+        return ModelSpec::from_file(std::path::Path::new(p))
+            .map(Arc::new)
+            .map_err(|e| e.to_string());
+    }
+    let name = name.ok_or_else(|| format!("{cmd} needs a model (or --model-file path.gnn)"))?;
+    ModelZoo::builtin().resolve(name)
 }
 
 fn parse_dataset(s: &str) -> Result<Dataset, String> {
@@ -119,12 +169,50 @@ fn parse_method(s: &str) -> Result<Method, String> {
 }
 
 /// Shared `<model> <dataset> [--scale N]` parsing for the workload-taking
-/// subcommands (simulate / tune).
-fn parse_workload(rest: &[String], cmd: &str) -> Result<(Model, Dataset, u32), String> {
-    let m = parse_model(rest.first().ok_or_else(|| format!("{cmd} needs a model"))?)?;
-    let d = parse_dataset(rest.get(1).ok_or_else(|| format!("{cmd} needs a dataset"))?)?;
+/// subcommands (simulate / tune). With `--model FILE-or-NAME` or
+/// `--model-file PATH` the model positional is omitted and the dataset
+/// moves up front.
+fn parse_workload(rest: &[String], cmd: &str) -> Result<(Arc<ModelSpec>, Dataset, u32), String> {
+    let pos = positionals(rest);
+    let by_opt = opt_val(rest, "--model-file").is_some() || opt_val(rest, "--model").is_some();
+    let (model_name, dataset_pos) = if by_opt {
+        (opt_val(rest, "--model"), pos.first().copied())
+    } else {
+        (pos.first().copied(), pos.get(1).copied())
+    };
+    let spec = resolve_model(rest, model_name, cmd)?;
+    let d = parse_dataset(dataset_pos.ok_or_else(|| format!("{cmd} needs a dataset"))?)?;
     let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
-    Ok((m, d, scale))
+    Ok((spec, d, scale))
+}
+
+/// Model shape for `validate`/`bench`: explicit `--layers`/`--dim` force
+/// a uniform shape; a spec-file model (however it was passed — it is one
+/// exactly when it isn't a builtin zoo entry) otherwise runs at its own
+/// declared `dims`; zoo entries keep the fast historical defaults (their
+/// declared shape is the 128-dim paper config — too slow for a smoke
+/// check against the dense oracle).
+fn opt_dims(
+    rest: &[String],
+    spec: &ModelSpec,
+    def_layers: u32,
+    def_dim: u32,
+) -> Result<ModelDims, String> {
+    if opt_val(rest, "--layers").is_some() || opt_val(rest, "--dim").is_some() {
+        return Ok(ModelDims::uniform(
+            opt_u32(rest, "--layers", def_layers)?,
+            opt_u32(rest, "--dim", def_dim)?,
+        ));
+    }
+    let is_builtin = ModelZoo::builtin()
+        .get(spec.name())
+        .map(|z| z.fingerprint() == spec.fingerprint())
+        .unwrap_or(false);
+    if is_builtin {
+        Ok(ModelDims::uniform(def_layers, def_dim))
+    } else {
+        Ok(spec.dims())
+    }
 }
 
 /// `--config FILE`: load a tuned design point from a `switchblade tune`
@@ -139,8 +227,9 @@ fn opt_design(rest: &[String]) -> Result<Option<dse::DesignPoint>, String> {
 // ---- subcommands ---------------------------------------------------------------
 
 fn cmd_compile(rest: &[String]) -> Result<(), String> {
-    let m = parse_model(rest.first().ok_or("compile needs a model")?)?;
-    let prog = compile(&m.build_paper());
+    let pos = positionals(rest);
+    let spec = resolve_model(rest, pos.first().copied(), "compile")?;
+    let prog = compile(&spec.graph());
     print!("{}", prog.disassemble());
     println!(
         "; weights: {} tensors, {}",
@@ -151,12 +240,13 @@ fn cmd_compile(rest: &[String]) -> Result<(), String> {
 }
 
 fn cmd_partition(rest: &[String]) -> Result<(), String> {
-    let d = parse_dataset(rest.first().ok_or("partition needs a dataset")?)?;
+    let pos = positionals(rest);
+    let d = parse_dataset(pos.first().ok_or("partition needs a dataset")?)?;
     let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
-    let m = parse_model(opt_val(rest, "--model").unwrap_or("GCN"))?;
+    let spec = resolve_model(rest, Some(opt_val(rest, "--model").unwrap_or("GCN")), "partition")?;
     let method = parse_method(opt_val(rest, "--method").unwrap_or("fggp"))?;
     let accel = AcceleratorConfig::switchblade();
-    let prog = compile(&m.build_paper());
+    let prog = compile(&spec.graph());
     let pc = accel.partition_config(&prog);
     eprintln!("generating {} at scale {scale}...", d.full_name());
     let g = d.load(scale);
@@ -166,7 +256,7 @@ fn cmd_partition(rest: &[String]) -> Result<(), String> {
         .map_err(|e| format!("invalid partitioning: {e}"))?;
     let st = pstats::analyze(&parts);
     let mut t = Table::new(
-        &format!("{} / {} / {}", d.full_name(), m.name(), method.name()),
+        &format!("{} / {} / {}", d.full_name(), spec.display(), method.name()),
         &["metric", "value"],
     );
     t.row(vec!["vertices".into(), g.num_vertices().to_string()]);
@@ -182,11 +272,11 @@ fn cmd_partition(rest: &[String]) -> Result<(), String> {
 }
 
 fn cmd_simulate(rest: &[String]) -> Result<(), String> {
-    let (m, d, scale) = parse_workload(rest, "simulate")?;
+    let (spec, d, scale) = parse_workload(rest, "simulate")?;
     let sthreads = opt_u32(rest, "--sthreads", 3)?;
     let method = parse_method(opt_val(rest, "--method").unwrap_or("fggp"))?;
     let accel = AcceleratorConfig::switchblade().with_sthreads(sthreads);
-    let prog = compile(&m.build_paper());
+    let prog = compile(&spec.graph());
     let pc = accel.partition_config(&prog);
     eprintln!("generating {} at scale {scale}...", d.full_name());
     let g = d.load(scale);
@@ -196,7 +286,7 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
     let mut t = Table::new(
         &format!(
             "{} on {} (scale {scale}, {sthreads} sThreads, {})",
-            m.name(),
+            spec.display(),
             d.full_name(),
             method.name()
         ),
@@ -218,7 +308,7 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
 
 /// `tune`: budgeted design-space exploration for one workload.
 fn cmd_tune(rest: &[String]) -> Result<(), String> {
-    let (m, d, scale) = parse_workload(rest, "tune")?;
+    let (spec, d, scale) = parse_workload(rest, "tune")?;
     let budget = opt_u32(rest, "--budget", 64)? as usize;
     let obj_s = opt_val(rest, "--objective").unwrap_or("latency");
     let objective = Objective::parse(obj_s)
@@ -233,7 +323,7 @@ fn cmd_tune(rest: &[String]) -> Result<(), String> {
     let caches = Caches::new(scale);
     eprintln!(
         "tuning {} on {} (scale 1/2^{scale}): evaluating {} of {} grid points...",
-        m.name(),
+        spec.display(),
         d.full_name(),
         if budget == 0 {
             opts.space.len()
@@ -243,7 +333,7 @@ fn cmd_tune(rest: &[String]) -> Result<(), String> {
         opts.space.len()
     );
     let t0 = std::time::Instant::now();
-    let r = dse::tune(m, d, &caches, &opts);
+    let r = dse::tune(&spec, d, &caches, &opts);
     eprintln!("swept {} points in {:?}", r.evaluated.len(), t0.elapsed());
 
     println!();
@@ -252,7 +342,7 @@ fn cmd_tune(rest: &[String]) -> Result<(), String> {
     print!("{}", r.summary());
     println!();
 
-    let slug = format!("{}_{}", m.name().to_lowercase(), d.code().to_lowercase());
+    let slug = format!("{}_{}", spec.name().to_lowercase(), d.code().to_lowercase());
     let sweep = r.sweep_table();
     let csv = out_dir.join(format!("dse_{slug}_sweep.csv"));
     sweep.write_csv(&csv).map_err(|e| e.to_string())?;
@@ -343,22 +433,26 @@ fn cmd_repro(rest: &[String]) -> Result<(), String> {
 /// Prints a table plus stable `key=value` lines `scripts/bench.sh` greps
 /// into `BENCH_exec.json`.
 fn cmd_bench(rest: &[String]) -> Result<(), String> {
-    let m = parse_model(opt_val(rest, "--model").unwrap_or("GCN"))?;
+    let spec = resolve_model(rest, Some(opt_val(rest, "--model").unwrap_or("GCN")), "bench")?;
     let d = parse_dataset(opt_val(rest, "--dataset").unwrap_or("AK"))?;
     let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
     let iters = opt_u32(rest, "--iters", 3)?.max(1) as usize;
     let workers = opt_u32(rest, "--workers", 0)? as usize; // 0 = sThread count
+    let dims = opt_dims(rest, &spec, 2, 32)?;
+    let ir = spec
+        .build(dims)
+        .map_err(|e| format!("{}: {e}", spec.name()))?;
     let accel = AcceleratorConfig::switchblade();
     eprintln!("generating {} at scale {scale}...", d.full_name());
     let g = d.load(scale);
-    let b = bench_executor(m, &g, &accel, workers, iters);
+    let b = bench_executor(&ir, &g, &accel, workers, iters);
     if !b.bit_identical {
         return Err("shard-parallel executor diverged bitwise from single-worker run".into());
     }
     let mut t = Table::new(
         &format!(
-            "executor throughput — {} on {} (scale {scale}, {} iters)",
-            m.name(),
+            "executor throughput — {} on {} (scale {scale}, dims {dims}, {} iters)",
+            spec.display(),
             d.full_name(),
             b.iters
         ),
@@ -390,7 +484,21 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
 }
 
 fn cmd_serve(rest: &[String]) -> Result<(), String> {
-    let model = opt_val(rest, "--model").unwrap_or("gcn").to_lowercase();
+    let spec = resolve_model(rest, Some(opt_val(rest, "--model").unwrap_or("gcn")), "serve")?;
+    // Serving runs AOT-compiled PJRT artifacts, which the Python side
+    // bakes for the four paper models only — fail fast with a clear
+    // message instead of a downstream load error (see ROADMAP: AOT for
+    // spec-defined models is an open item).
+    if switchblade::ir::models::Model::parse(spec.name()).is_none() {
+        return Err(format!(
+            "serve requires an AOT-compiled artifact model (GCN|GAT|SAGE|GGNN); \
+             '{}' has no artifacts — spec-defined models run via \
+             compile/simulate/validate/bench/tune instead",
+            spec.display()
+        ));
+    }
+    // AOT artifacts are keyed by the canonical (lowercase) model name.
+    let model = spec.name().to_lowercase();
     let requests = opt_u32(rest, "--requests", 32)? as usize;
     if requests == 0 {
         return Err("serve needs --requests >= 1 (latency percentiles are undefined \
@@ -401,8 +509,7 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
     if let Some(dp) = opt_design(rest)? {
         // Predicted accelerator latency for the serving shape under the
         // tuned (config, partition method) point.
-        let m = parse_model(&model)?;
-        let prog = compile(&m.build_paper());
+        let prog = compile(&spec.graph());
         let accel = dp.accel();
         let el = switchblade::graph::generators::rmat(shape.n, shape.e, 0.57, 0.19, 0.19, 1000);
         let g = switchblade::graph::Csr::from_edge_list(&el);
@@ -477,25 +584,40 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
 
 fn cmd_validate(rest: &[String]) -> Result<(), String> {
     // Historical default: validation runs at a smaller scale (1/2^9) than
-    // repro so the dense IR reference stays fast.
+    // repro, and zoo models at a small shape (2 layers, 16-dim), so the
+    // dense IR reference stays fast. A `--model-file` spec validates at
+    // its own declared dims; `--layers`/`--dim` override either.
     let scale = opt_u32(rest, "--scale", 9)?;
+    let pos = positionals(rest);
+    // Default: sweep the whole zoo (including sage_mean's Mean reduce);
+    // `--model`/`--model-file`/a positional narrows it to one model.
+    let one = opt_val(rest, "--model").or_else(|| pos.first().copied());
+    let specs: Vec<Arc<ModelSpec>> =
+        if one.is_some() || opt_val(rest, "--model-file").is_some() {
+            vec![resolve_model(rest, one, "validate")?]
+        } else {
+            ModelZoo::builtin().entries().to_vec()
+        };
     let cache = Caches::new(scale);
     let g = cache.graph(Dataset::Ak);
     let accel = AcceleratorConfig::switchblade();
     let mut t = Table::new(
         "numerics: compiled-ISA executor vs IR reference",
-        &["model", "max |delta|", "status"],
+        &["model", "dims", "max |delta|", "status"],
     );
-    for m in Model::ALL {
-        let diff = switchblade::coordinator::validate_numerics(m, &g, &accel);
+    for m in &specs {
+        let dims = opt_dims(rest, m, 2, 16)?;
+        let ir = m.build(dims).map_err(|e| format!("{}: {e}", m.name()))?;
+        let diff = switchblade::coordinator::validate_numerics(&ir, &g, &accel);
         let ok = diff < 1e-4;
         t.row(vec![
-            m.name().into(),
+            m.display(),
+            format!("{dims}"),
             format!("{diff:.2e}"),
             if ok { "OK".into() } else { "FAIL".into() },
         ]);
         if !ok {
-            return Err(format!("{} numerics diverged: {diff}", m.name()));
+            return Err(format!("{} numerics diverged: {diff}", m.display()));
         }
     }
     t.print();

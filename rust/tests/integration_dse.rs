@@ -2,12 +2,19 @@
 //! small scale, exercising the full search-space → parallel-evaluate →
 //! Pareto → report pipeline plus the CSV/JSON emission the CLI uses.
 
+use std::sync::Arc;
+
 use switchblade::dse::{
     tune, Caches, DesignPoint, MemoryKind, Objective, SearchSpace, TuneOptions,
 };
 use switchblade::graph::datasets::Dataset;
-use switchblade::ir::models::Model;
+use switchblade::ir::spec::ModelSpec;
+use switchblade::ir::zoo::ModelZoo;
 use switchblade::partition::Method;
+
+fn gcn() -> Arc<ModelSpec> {
+    ModelZoo::builtin().get("gcn").expect("builtin gcn")
+}
 
 fn tiny_space() -> SearchSpace {
     SearchSpace {
@@ -27,7 +34,7 @@ fn tiny_space() -> SearchSpace {
 fn tune_gcn_ak_default_space_end_to_end() {
     let caches = Caches::new(9);
     let opts = TuneOptions::default();
-    let r = tune(Model::Gcn, Dataset::Ak, &caches, &opts);
+    let r = tune(&gcn(), Dataset::Ak, &caches, &opts);
 
     // Budget respected (+1 possible for the appended Tbl III baseline).
     assert!(
@@ -84,9 +91,9 @@ fn warm_caches_make_repeat_sweeps_free() {
         budget: 8,
         objective: Objective::Edp,
     };
-    let first = tune(Model::Gcn, Dataset::Ak, &caches, &opts);
+    let first = tune(&gcn(), Dataset::Ak, &caches, &opts);
     let after_first = first.caches;
-    let second = tune(Model::Gcn, Dataset::Ak, &caches, &opts);
+    let second = tune(&gcn(), Dataset::Ak, &caches, &opts);
     let after_second = second.caches;
 
     // The repeat sweep must not rebuild anything: misses stay flat while

@@ -3,7 +3,7 @@
 
 use switchblade::coordinator::{Caches, Harness};
 use switchblade::graph::datasets::Dataset;
-use switchblade::ir::models::Model;
+use switchblade::ir::zoo::ModelZoo;
 use switchblade::sim::AcceleratorConfig;
 
 fn harness() -> (Harness, Caches) {
@@ -19,12 +19,13 @@ fn harness() -> (Harness, Caches) {
 fn sweep_produces_full_grid() {
     let (h, cache) = harness();
     let rows = h.eval_all(&cache);
-    assert_eq!(rows.len(), Model::ALL.len() * Dataset::ALL.len());
+    let paper = ModelZoo::builtin().paper_models();
+    assert_eq!(rows.len(), paper.len() * Dataset::ALL.len());
     for r in &rows {
         assert!(r.sim.cycles > 0.0);
         assert!(r.gpu.seconds > 0.0);
         assert!(r.energy.total_j() > 0.0);
-        assert_eq!(r.hygcn.is_some(), r.model == Model::Gcn);
+        assert_eq!(r.hygcn.is_some(), r.model.name() == "gcn");
     }
 }
 
@@ -44,7 +45,7 @@ fn headline_claims_hold_qualitatively() {
         assert!(
             (r.sim.traffic.total() as f64) < r.gpu.dram_bytes as f64,
             "{} on {}: accel traffic must undercut GPU",
-            r.model.name(),
+            r.model.display(),
             r.dataset.code()
         );
     }
@@ -78,10 +79,11 @@ fn fig11_u_curve_bottom_not_at_extremes() {
     let cache = Caches::new(h.scale);
     let g = cache.graph(Dataset::Sl);
     let counts = [1u32, 2, 3, 4, 6];
+    let gat = ModelZoo::builtin().get("gat").expect("builtin gat");
     let cycles: Vec<f64> = counts
         .iter()
         .map(|&c| {
-            h.eval_one(Model::Gat, &g, &h.accel.with_sthreads(c)).2.cycles
+            h.eval_one(&gat, &g, &h.accel.with_sthreads(c)).2.cycles
         })
         .collect();
     let best = cycles

@@ -15,6 +15,17 @@ echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
 
+# Zoo smoke: every shipped .gnn spec must survive the CLI pipeline —
+# compile, simulate (tiny scale), and the executor-vs-oracle diff — so a
+# grammar or spec regression fails fast.
+echo "== zoo smoke: compile + simulate + validate examples/models/*.gnn =="
+for f in "$SCRIPT_DIR"/../examples/models/*.gnn; do
+  echo "--- $(basename "$f")"
+  cargo run --release --quiet -- compile --model-file "$f" > /dev/null
+  cargo run --release --quiet -- simulate --model-file "$f" AK --scale 12 > /dev/null
+  cargo run --release --quiet -- validate --model-file "$f" --scale 11 > /dev/null
+done
+
 # Optional perf step: BENCH=1 ./scripts/check.sh also records the wall
 # clock of `repro --fig 7` + executor throughput into BENCH_exec.json.
 if [[ "${BENCH:-0}" != "0" ]]; then
