@@ -11,7 +11,7 @@ use std::sync::{Arc, Mutex};
 use crate::baseline::{gpu_run, hygcn_run, GpuConfig, GpuResult, HygcnConfig, HygcnResult};
 use crate::compiler::compile;
 use crate::energy::{switchblade_energy, tbl5_rows, EnergyResult, TBL5};
-use crate::exec::Matrix;
+use crate::exec::{KernelMode, Matrix, ScratchStats};
 use crate::graph::datasets::Dataset;
 use crate::graph::Csr;
 use crate::ir::spec::ModelSpec;
@@ -19,6 +19,7 @@ use crate::ir::zoo::ModelZoo;
 use crate::ir::IrGraph;
 use crate::isa::Program;
 use crate::partition::{partition_fggp, stats as pstats, Method, Partitions};
+use crate::sched::PhaseProfile;
 use crate::sim::{simulate, AcceleratorConfig, SimResult};
 use crate::util::report::{f, speedup, Table};
 use crate::util::{geomean, mean};
@@ -383,23 +384,39 @@ impl Harness {
 /// One functional-executor timing probe: the `switchblade bench`
 /// subcommand (and `scripts/bench.sh`, which seeds `BENCH_exec.json`)
 /// reports these numbers.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ExecBench {
     /// Worker-pool width of the parallel run.
     pub workers: usize,
-    /// Mean seconds per run, forced single worker.
+    /// Mean seconds per run, forced single worker (kernel layer).
     pub secs_single: f64,
-    /// Mean seconds per run at `workers`.
+    /// Mean seconds per run at `workers` (kernel layer).
     pub secs_parallel: f64,
+    /// Mean seconds per single-worker run through the preserved naive
+    /// compute path ([`KernelMode::Naive`]) — only measured under
+    /// `--profile`, so bench.sh can record kernel vs. legacy.
+    pub secs_legacy: Option<f64>,
     pub vertices: usize,
     pub iters: usize,
-    /// Whether the two runs agreed bit-for-bit (they must).
+    /// Whether every measured run agreed bit-for-bit (they must):
+    /// single vs. parallel, and — when measured — the legacy path too.
     pub bit_identical: bool,
+    /// Per-(group, phase) wall-time breakdown of one profiled parallel
+    /// run (`--profile` only).
+    pub profile: Option<PhaseProfile>,
+    /// Scratch-arena hit/miss counters of the parallel run.
+    pub scratch: ScratchStats,
 }
 
 impl ExecBench {
     pub fn speedup(&self) -> f64 {
         self.secs_single / self.secs_parallel
+    }
+
+    /// Kernel-layer speedup over the preserved naive path (single worker
+    /// both sides); `None` unless the legacy run was measured.
+    pub fn kernel_speedup(&self) -> Option<f64> {
+        self.secs_legacy.map(|l| l / self.secs_single)
     }
 
     /// Executor throughput at the parallel width.
@@ -412,12 +429,15 @@ impl ExecBench {
 /// one (model IR, graph) workload. Works for any validated `IrGraph` —
 /// zoo entry or user `.gnn` spec — sized from the IR's own input width.
 /// `workers == 0` means "the partitioning's simulated sThread count".
+/// With `profile` set, additionally times the preserved naive kernel path
+/// and records a per-(group, phase) [`PhaseProfile`] of one parallel run.
 pub fn bench_executor(
     ir: &IrGraph,
     g: &Csr,
     accel: &AcceleratorConfig,
     workers: usize,
     iters: usize,
+    profile: bool,
 ) -> ExecBench {
     fn timed(
         prog: &Program,
@@ -426,14 +446,21 @@ pub fn bench_executor(
         deg: &Matrix,
         workers: usize,
         iters: usize,
-    ) -> (f64, Matrix) {
-        let mut ex = crate::exec::Executor::new(prog, parts).with_workers(workers);
+        mode: KernelMode,
+    ) -> (f64, Matrix, ScratchStats) {
+        let mut ex = crate::exec::Executor::new(prog, parts)
+            .with_workers(workers)
+            .with_kernel_mode(mode);
         let t0 = std::time::Instant::now();
         let mut out = ex.run(x, deg);
         for _ in 1..iters {
             out = ex.run(x, deg);
         }
-        (t0.elapsed().as_secs_f64() / iters as f64, out)
+        (
+            t0.elapsed().as_secs_f64() / iters as f64,
+            out,
+            ex.scratch_stats(),
+        )
     }
 
     let iters = iters.max(1);
@@ -450,21 +477,35 @@ pub fn bench_executor(
     for v in 0..g.num_vertices() {
         deg.set(v, 0, g.in_degree(v as u32) as f32);
     }
-    let (secs_single, out_single) = timed(&prog, &parts, &x, &deg, 1, iters);
-    let (secs_parallel, out_parallel) = timed(&prog, &parts, &x, &deg, workers, iters);
-    let bit_identical = out_single.data.len() == out_parallel.data.len()
-        && out_single
-            .data
-            .iter()
-            .zip(&out_parallel.data)
-            .all(|(a, b)| a.to_bits() == b.to_bits());
+    let (secs_single, out_single, _) =
+        timed(&prog, &parts, &x, &deg, 1, iters, KernelMode::Blocked);
+    let (secs_parallel, out_parallel, scratch) =
+        timed(&prog, &parts, &x, &deg, workers, iters, KernelMode::Blocked);
+    let mut bit_identical = out_single.bits_eq(&out_parallel);
+    let (secs_legacy, profile_data) = if profile {
+        let (legacy_s, out_legacy, _) =
+            timed(&prog, &parts, &x, &deg, 1, iters, KernelMode::Naive);
+        bit_identical = bit_identical && out_single.bits_eq(&out_legacy);
+        // Warm the scratch pools with one discarded run first, so the
+        // profile reflects steady-state phase costs (what the timed
+        // iterations measure), not first-interval pool allocation.
+        let mut ex = crate::exec::Executor::new(&prog, &parts).with_workers(workers);
+        let _ = ex.run(&x, &deg);
+        let (_, p) = ex.run_profiled(&x, &deg);
+        (Some(legacy_s), Some(p))
+    } else {
+        (None, None)
+    };
     ExecBench {
         workers,
         secs_single,
         secs_parallel,
+        secs_legacy,
         vertices: g.num_vertices(),
         iters,
         bit_identical,
+        profile: profile_data,
+        scratch,
     }
 }
 
@@ -536,12 +577,34 @@ mod tests {
             .unwrap()
             .build(ModelDims::uniform(2, 32))
             .unwrap();
-        let b = bench_executor(&ir, &g, &AcceleratorConfig::switchblade(), 2, 1);
+        let b = bench_executor(&ir, &g, &AcceleratorConfig::switchblade(), 2, 1, false);
         assert!(b.bit_identical, "parallel executor diverged bitwise");
         assert!(b.secs_single > 0.0 && b.secs_parallel > 0.0);
         assert_eq!(b.workers, 2);
         assert!(b.vertices_per_sec() > 0.0);
         assert!(b.speedup() > 0.0);
+        // Non-profiled probes skip the legacy run and the phase profile.
+        assert!(b.secs_legacy.is_none() && b.profile.is_none());
+        assert!(b.scratch.hits + b.scratch.misses > 0);
+    }
+
+    #[test]
+    fn bench_executor_profile_covers_legacy_and_phases() {
+        let cache = GraphCache::new(11);
+        let g = cache.get(Dataset::Ak);
+        let ir = ModelZoo::builtin()
+            .get("gcn")
+            .unwrap()
+            .build(ModelDims::uniform(2, 16))
+            .unwrap();
+        let b = bench_executor(&ir, &g, &AcceleratorConfig::switchblade(), 2, 1, true);
+        assert!(b.bit_identical, "kernel/legacy/parallel runs diverged");
+        let legacy = b.secs_legacy.expect("legacy timing measured");
+        assert!(legacy > 0.0 && b.kernel_speedup().unwrap() > 0.0);
+        let p = b.profile.as_ref().expect("phase profile recorded");
+        assert!(!p.groups.is_empty());
+        assert!(p.groups.iter().map(|g| g.shards).sum::<u64>() > 0);
+        assert!(p.to_json().contains("\"groups\""));
     }
 
     #[test]

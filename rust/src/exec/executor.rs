@@ -3,7 +3,7 @@
 //! executor is a [`PhaseVisitor`] over [`sched::PartitionWalk`], the
 //! same canonical Alg 2 traversal the cycle simulator drives through.
 //!
-//! Two performance properties mirror the hardware:
+//! Performance properties mirroring the hardware:
 //!
 //! * **Partition-level multi-threading in software**: shards within an
 //!   interval are independent (paper §IV-C), so their GatherPhases run
@@ -16,17 +16,47 @@
 //! * **Dense slot arenas**: symbols and DRAM arrays are addressed by
 //!   `Vec` index (`Program::slot_layout`), not by hashing `Sym`/`DataRef`
 //!   per instruction.
+//! * **Kernel-layer inner loops** ([`exec::kernels`](crate::exec::kernels)):
+//!   cache-blocked branch-free DMM and fused slice-based row kernels
+//!   drive every compute instruction, the gather inner loops, and the
+//!   shard merge. The pre-kernel per-element loops are preserved as
+//!   [`KernelMode::Naive`] purely as the bit-identity reference the
+//!   differential tests diff against.
+//! * **Scratch arenas** ([`exec::scratch`](crate::exec::scratch)):
+//!   interval matrices, gather accumulators, and per-worker shard
+//!   matrices are recycled through slot-keyed buffer pools, so the walk
+//!   performs no per-shard / per-interval `Matrix` allocation once the
+//!   first interval of a group has sized the pools (steady state; exact
+//!   under deterministic single-worker assignment, asymptotic under the
+//!   racy multi-worker pool whose per-worker arenas warm independently).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::exec::kernels;
 use crate::exec::reference::{apply_binary, apply_unary};
+use crate::exec::scratch::{IntervalScratch, Pool, ScratchStats, WorkerScratch};
 use crate::exec::{weights, Matrix};
 use crate::isa::{
-    DataRef, Dim, Instr, PhaseGroup, Program, Reduce, ScatterDir, SlotLayout, Space, Sym,
+    DataRef, Dim, Instr, Program, Reduce, ScatterDir, SlotLayout, Space, Sym,
 };
 use crate::partition::{Interval, Partitions, Shard};
-use crate::sched::{PartitionWalk, PhaseVisitor, StepCtx, Traced, WalkStep};
+use crate::sched::{
+    PartitionWalk, PhaseProfile, PhaseVisitor, Profiler, StepCtx, Traced, WalkStep,
+};
+
+/// Which compute-instruction implementation the executor runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelMode {
+    /// The kernel layer: blocked branch-free DMM + slice-based ELW /
+    /// RSCALE / CAT writing into scratch-arena buffers. The default.
+    #[default]
+    Blocked,
+    /// The preserved pre-kernel reference: naive zero-skipping matmul and
+    /// per-element `get`/`set` loops, allocating fresh matrices. Kept
+    /// only so tests can prove the kernel path bit-identical.
+    Naive,
+}
 
 /// Functional executor over one (program, partitions) pair.
 pub struct Executor<'a> {
@@ -40,10 +70,23 @@ pub struct Executor<'a> {
     weights: Vec<Option<Matrix>>,
     /// GatherPhase worker-pool width (the software sThread count).
     workers: usize,
-    /// Live state of the interval currently being walked.
+    mode: KernelMode,
+    /// Live state of the interval currently being walked. Never dropped:
+    /// `begin_interval` drains its matrices back into `iv_scratch` and
+    /// re-arms it, so interval state is allocated once per executor.
     iv: Option<IntervalState>,
     /// Shard indices queued by `gather_shard`, drained at `end_gather`.
     pending: Vec<usize>,
+    /// iThread-side buffer pools (D matrices + gather accumulators).
+    iv_scratch: IntervalScratch,
+    /// One scratch arena per GatherPhase worker, grown lazily to the pool
+    /// width. Merged buffers return to the worker they came from, so each
+    /// arena's contents stay effectively thread-private.
+    shard_scratch: Vec<Mutex<WorkerScratch>>,
+    /// Per `(group, gather-instr)` flag: true when an `ST.E` is the last
+    /// use of its symbol in the phase, so the spill can move the matrix
+    /// out of the arena instead of cloning it.
+    movable_spills: Vec<Vec<bool>>,
 }
 
 impl<'a> Executor<'a> {
@@ -53,15 +96,35 @@ impl<'a> Executor<'a> {
         for wi in &program.weights {
             w[wi.sym.id as usize] = Some(weights::init_weight(wi.seed, wi.rows, wi.cols));
         }
+        let movable_spills = program
+            .groups
+            .iter()
+            .map(|g| {
+                g.gather
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, i)| match i {
+                        Instr::St { sym, .. } if sym.space == Space::E => {
+                            !g.gather[idx + 1..].iter().any(|later| later.uses().contains(sym))
+                        }
+                        _ => false,
+                    })
+                    .collect()
+            })
+            .collect();
         Executor {
             program,
             parts,
+            iv_scratch: IntervalScratch::new(&layout),
             layout,
-            dram: vec![None; layout.dram],
+            dram: Vec::new(),
             weights: w,
             workers: parts.config.num_sthreads.max(1) as usize,
+            mode: KernelMode::default(),
             iv: None,
             pending: Vec::new(),
+            shard_scratch: Vec::new(),
+            movable_spills,
         }
     }
 
@@ -73,9 +136,36 @@ impl<'a> Executor<'a> {
         self
     }
 
+    /// Select the compute-kernel implementation (differential tests run
+    /// [`KernelMode::Naive`] as the golden reference).
+    pub fn with_kernel_mode(mut self, mode: KernelMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
     /// The effective worker-pool width.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The active compute-kernel implementation.
+    pub fn kernel_mode(&self) -> KernelMode {
+        self.mode
+    }
+
+    /// Aggregate scratch-arena hit/miss counters (interval pools + every
+    /// worker arena). In steady state — after the first interval of each
+    /// group has sized the pools — `misses` stops growing. That guarantee
+    /// is exact for deterministic shard assignment (a single worker, as
+    /// `scratch_arena_steady_state_no_new_misses` pins); with a racy
+    /// multi-worker pool a worker can still meet a shard size its private
+    /// arena has never seen, so misses taper rather than stop.
+    pub fn scratch_stats(&self) -> ScratchStats {
+        let mut st = self.iv_scratch.stats();
+        for ws in &self.shard_scratch {
+            st.merge(ws.lock().unwrap().stats());
+        }
+        st
     }
 
     /// Run the whole program. `x` is `[N, in_dim]`; `degree` the in-degree
@@ -98,6 +188,17 @@ impl<'a> Executor<'a> {
         (self.take_output(), steps)
     }
 
+    /// Like [`Executor::run`], additionally timing every walk phase —
+    /// the `switchblade bench --profile` path.
+    pub fn run_profiled(&mut self, x: &Matrix, degree: &Matrix) -> (Matrix, PhaseProfile) {
+        self.seed_inputs(x, degree);
+        let walk = PartitionWalk::new(self.program, self.parts);
+        let mut prof = Profiler::new(&mut *self);
+        walk.drive(&mut prof);
+        let profile = prof.into_profile();
+        (self.take_output(), profile)
+    }
+
     fn seed_inputs(&mut self, x: &Matrix, degree: &Matrix) {
         assert_eq!(x.rows, self.parts.num_vertices);
         assert_eq!(x.cols as u32, self.program.in_dim);
@@ -106,9 +207,12 @@ impl<'a> Executor<'a> {
         self.dram[DataRef::Degree.slot()] = Some(degree.clone());
     }
 
+    /// Move the output matrix out of its DRAM slot (no copy — the run is
+    /// over and `seed_inputs` re-arms the arena for the next one).
     fn take_output(&mut self) -> Matrix {
-        self.dram[self.output_ref().slot()]
-            .clone()
+        let slot = self.output_ref().slot();
+        self.dram[slot]
+            .take()
             .unwrap_or_else(|| panic!("program never stored its output"))
     }
 
@@ -136,11 +240,14 @@ impl<'a> Executor<'a> {
                 let src = self.dram[data.slot()]
                     .as_ref()
                     .unwrap_or_else(|| panic!("LD of unwritten {data}"));
-                let mut m = Matrix::zeros(v, *cols as usize);
+                let slot = sym.id as usize;
+                let mut m = self.iv_scratch.m.take_matrix_any(slot, v, *cols as usize);
                 for (r, gv) in (iv.begin..iv.end).enumerate() {
                     m.row_mut(r).copy_from_slice(src.row(gv));
                 }
-                iv.d[sym.id as usize] = Some(m);
+                if let Some(old) = iv.d[slot].replace(m) {
+                    self.iv_scratch.m.give(slot, old.data);
+                }
             }
             Instr::St { sym, data, cols, .. } => {
                 let slot = data.slot();
@@ -157,8 +264,26 @@ impl<'a> Executor<'a> {
                 }
             }
             _ => {
-                let out = compute_instr(i, v, &self.weights, None, None, &iv.d);
-                iv.d[i.def().expect("compute defines").id as usize] = Some(out);
+                let def = i.def().expect("compute defines");
+                let slot = def.id as usize;
+                let out = match self.mode {
+                    KernelMode::Blocked => compute_instr_kernel(
+                        i,
+                        v,
+                        &self.weights,
+                        None,
+                        None,
+                        &iv.d,
+                        &mut self.iv_scratch.m,
+                        slot,
+                    ),
+                    KernelMode::Naive => {
+                        compute_instr_naive(i, v, &self.weights, None, None, &iv.d)
+                    }
+                };
+                if let Some(old) = iv.d[slot].replace(out) {
+                    self.iv_scratch.m.give(slot, old.data);
+                }
             }
         }
     }
@@ -169,10 +294,15 @@ impl<'a> Executor<'a> {
     /// merge their partial results in canonical shard order. However the
     /// workers raced, the merge sees the same partials in the same order,
     /// so any pool width is bit-identical to a single worker.
-    fn run_pending_shards(&mut self, group: &PhaseGroup) {
-        let pending = std::mem::take(&mut self.pending);
+    fn run_pending_shards(&mut self, cx: &StepCtx) {
+        let mut pending = std::mem::take(&mut self.pending);
         if pending.is_empty() {
             return;
+        }
+        let workers = self.workers.min(pending.len()).max(1);
+        while self.shard_scratch.len() < workers {
+            self.shard_scratch
+                .push(Mutex::new(WorkerScratch::new(&self.layout)));
         }
         let mut iv = self.iv.take().expect("interval state");
         let outs: Vec<ShardOut> = {
@@ -182,27 +312,37 @@ impl<'a> Executor<'a> {
                 dram: &self.dram,
                 iv: &iv,
                 parts: self.parts,
-                gather: &group.gather[..],
+                gather: &cx.group.gather[..],
+                movable: &self.movable_spills[cx.group_idx][..],
+                mode: self.mode,
             };
-            let workers = self.workers.min(pending.len());
             if workers <= 1 {
-                pending.iter().map(|&si| env.run_shard(si)).collect()
+                let mut ws = self.shard_scratch[0].lock().unwrap();
+                pending
+                    .iter()
+                    .map(|&si| env.run_shard(si, &mut ws, 0))
+                    .collect()
             } else {
                 let cells: Vec<Mutex<Option<ShardOut>>> =
                     pending.iter().map(|_| Mutex::new(None)).collect();
                 let next = AtomicUsize::new(0);
+                let (env_ref, cells_ref, next_ref, pending_ref) =
+                    (&env, &cells, &next, &pending);
                 std::thread::scope(|scope| {
-                    for _ in 0..workers {
-                        scope.spawn(|| loop {
-                            // Dynamic assignment: the next shard goes to
-                            // whichever worker frees first (the software
-                            // analogue of the phase scheduler, §V-B2).
-                            let k = next.fetch_add(1, Ordering::Relaxed);
-                            if k >= pending.len() {
-                                break;
+                    for (w, ws_cell) in self.shard_scratch[..workers].iter().enumerate() {
+                        scope.spawn(move || {
+                            let mut ws = ws_cell.lock().unwrap();
+                            loop {
+                                // Dynamic assignment: the next shard goes to
+                                // whichever worker frees first (the software
+                                // analogue of the phase scheduler, §V-B2).
+                                let k = next_ref.fetch_add(1, Ordering::Relaxed);
+                                if k >= pending_ref.len() {
+                                    break;
+                                }
+                                let out = env_ref.run_shard(pending_ref[k], &mut ws, w);
+                                *cells_ref[k].lock().unwrap() = Some(out);
                             }
-                            let out = env.run_shard(pending[k]);
-                            *cells[k].lock().unwrap() = Some(out);
                         });
                     }
                 });
@@ -215,14 +355,22 @@ impl<'a> Executor<'a> {
         for (&si, out) in pending.iter().zip(outs) {
             self.merge_shard(&mut iv, si, out);
         }
+        pending.clear();
+        self.pending = pending; // keep the capacity for the next interval
         self.iv = Some(iv);
     }
 
     /// Fold one shard's partial accumulators and spills into the interval
-    /// state. Called in canonical shard order only.
-    fn merge_shard(&mut self, iv: &mut IntervalState, shard_idx: usize, out: ShardOut) {
+    /// state, then recycle the shard's buffers into the arena of the
+    /// worker that produced them. Called in canonical shard order only.
+    fn merge_shard(&mut self, iv: &mut IntervalState, shard_idx: usize, mut out: ShardOut) {
         let shard = &self.parts.shards[shard_idx];
-        for (slot, p) in out.partials {
+        let mut ws = self.shard_scratch[out.worker].lock().unwrap();
+        for &slot in &out.touched {
+            let slot = slot as usize;
+            let p = out.partials[slot]
+                .take()
+                .expect("touched slot carries a partial");
             let acc = iv.accs[slot]
                 .as_mut()
                 .expect("gather accumulator pre-created by scatter_phase");
@@ -234,40 +382,40 @@ impl<'a> Executor<'a> {
                     continue;
                 }
                 let ar = p.base + r;
-                let orow = acc.m.row_mut(ar);
-                let prow = p.acc.m.row(r);
                 match acc.reduce {
                     Reduce::Sum | Reduce::Mean => {
-                        for (o, &x) in orow.iter_mut().zip(prow) {
-                            *o += x;
-                        }
+                        kernels::axpy(acc.m.row_mut(ar), p.acc.m.row(r))
                     }
-                    Reduce::Max => {
-                        for (o, &x) in orow.iter_mut().zip(prow) {
-                            *o = o.max(x);
-                        }
-                    }
+                    Reduce::Max => kernels::max_assign(acc.m.row_mut(ar), p.acc.m.row(r)),
                 }
                 acc.counts[ar] += cnt;
             }
+            ws.pm.give(slot, p.acc.m.data);
+            ws.pc.give(slot, p.acc.counts);
         }
-        for (slot, m) in out.spills {
+        for (dram_slot, e_slot, m) in out.spills.drain(..) {
             // ST.E rows land at canonical edge ids; shards own disjoint
             // edge sets, so the order is immaterial for the values.
-            if self.dram[slot].is_none() {
-                self.dram[slot] = Some(Matrix::zeros(self.parts.num_edges, m.cols));
+            if self.dram[dram_slot].is_none() {
+                self.dram[dram_slot] = Some(Matrix::zeros(self.parts.num_edges, m.cols));
             }
-            let dst = self.dram[slot].as_mut().unwrap();
+            let dst = self.dram[dram_slot].as_mut().unwrap();
             for (r, e) in shard.edges.iter().enumerate() {
                 dst.row_mut(e.edge_id as usize).copy_from_slice(m.row(r));
             }
+            ws.e.give(e_slot as usize, m.data);
         }
     }
 }
 
 impl PhaseVisitor for Executor<'_> {
     fn begin_interval(&mut self, cx: &StepCtx) {
-        self.iv = Some(IntervalState::new(cx.interval, &self.layout));
+        let mut st = self
+            .iv
+            .take()
+            .unwrap_or_else(|| IntervalState::empty(&self.layout));
+        st.reset(cx.interval, &mut self.iv_scratch);
+        self.iv = Some(st);
         self.pending.clear();
     }
 
@@ -282,7 +430,7 @@ impl PhaseVisitor for Executor<'_> {
             match i {
                 Instr::Gather { reduce, dst, cols, .. }
                 | Instr::FusedGather { reduce, dst, cols, .. } => {
-                    iv.ensure_acc(*dst, *reduce, *cols as usize);
+                    iv.ensure_acc(*dst, *reduce, *cols as usize, &mut self.iv_scratch);
                 }
                 _ => {}
             }
@@ -297,25 +445,28 @@ impl PhaseVisitor for Executor<'_> {
     }
 
     fn end_gather(&mut self, cx: &StepCtx) {
-        self.run_pending_shards(cx.group);
+        self.run_pending_shards(cx);
     }
 
     fn apply_phase(&mut self, cx: &StepCtx) {
         let mut iv = self.iv.take().expect("interval state");
         // Mean finalisation + empty-row convention.
-        iv.finalize_gathers();
+        iv.finalize_gathers(&mut self.iv_scratch);
         for i in &cx.group.apply {
             self.exec_interval_instr(i, &mut iv);
         }
         self.iv = Some(iv);
     }
 
-    fn end_interval(&mut self, _cx: &StepCtx) {
-        self.iv = None;
-    }
+    // `end_interval` intentionally stays a no-op: the interval state is
+    // retained and recycled by the next `begin_interval`'s reset, so the
+    // matrices it holds flow back into the scratch pools instead of the
+    // allocator.
 }
 
-/// Per-interval state: resident D slots + gather accumulators.
+/// Per-interval state: resident D slots + gather accumulators. One
+/// instance lives for the whole executor; `reset` re-arms it per interval
+/// and drains retired buffers into the scratch pools.
 struct IntervalState {
     begin: usize,
     end: usize,
@@ -327,12 +478,30 @@ struct IntervalState {
 }
 
 impl IntervalState {
-    fn new(iv: &Interval, layout: &SlotLayout) -> Self {
+    fn empty(layout: &SlotLayout) -> Self {
         IntervalState {
-            begin: iv.begin as usize,
-            end: iv.end as usize,
-            d: vec![None; layout.d],
-            accs: vec![None; layout.d],
+            begin: 0,
+            end: 0,
+            d: (0..layout.d).map(|_| None).collect(),
+            accs: (0..layout.d).map(|_| None).collect(),
+        }
+    }
+
+    /// Point the state at a new interval, recycling every buffer the
+    /// previous interval left behind.
+    fn reset(&mut self, iv: &Interval, scratch: &mut IntervalScratch) {
+        self.begin = iv.begin as usize;
+        self.end = iv.end as usize;
+        for (slot, m) in self.d.iter_mut().enumerate() {
+            if let Some(m) = m.take() {
+                scratch.m.give(slot, m.data);
+            }
+        }
+        for (slot, a) in self.accs.iter_mut().enumerate() {
+            if let Some(a) = a.take() {
+                scratch.m.give(slot, a.m.data);
+                scratch.counts.give(slot, a.counts);
+            }
         }
     }
 
@@ -342,16 +511,23 @@ impl IntervalState {
 
     /// Pre-create a gather accumulator (first touch in this interval
     /// zeroes it — mirrors the hardware's phase-scheduler reset).
-    fn ensure_acc(&mut self, dst: Sym, reduce: Reduce, cols: usize) {
+    fn ensure_acc(&mut self, dst: Sym, reduce: Reduce, cols: usize, scratch: &mut IntervalScratch) {
         let slot = dst.id as usize;
         if self.accs[slot].is_none() {
-            self.accs[slot] = Some(Acc::new(reduce, self.len(), cols));
+            let rows = self.len();
+            self.accs[slot] = Some(Acc {
+                reduce,
+                m: scratch.m.take_matrix_filled(slot, rows, cols, reduce_identity(reduce)),
+                counts: scratch.counts.take_filled(slot, rows, 0),
+            });
         }
     }
 
     /// Post-merge fixups: Mean division and the zero-for-empty convention.
-    fn finalize_gathers(&mut self) {
-        for (acc_slot, d_slot) in self.accs.iter_mut().zip(self.d.iter_mut()) {
+    fn finalize_gathers(&mut self, scratch: &mut IntervalScratch) {
+        for (slot, (acc_slot, d_slot)) in
+            self.accs.iter_mut().zip(self.d.iter_mut()).enumerate()
+        {
             if let Some(mut acc) = acc_slot.take() {
                 for (r, &cnt) in acc.counts.iter().enumerate() {
                     if cnt == 0 {
@@ -363,9 +539,20 @@ impl IntervalState {
                         }
                     }
                 }
-                *d_slot = Some(acc.m);
+                scratch.counts.give(slot, acc.counts);
+                if let Some(old) = d_slot.replace(acc.m) {
+                    scratch.m.give(slot, old.data);
+                }
             }
         }
+    }
+}
+
+/// The reduce-specific accumulator identity element.
+fn reduce_identity(reduce: Reduce) -> f32 {
+    match reduce {
+        Reduce::Sum | Reduce::Mean => 0.0,
+        Reduce::Max => f32::NEG_INFINITY,
     }
 }
 
@@ -376,20 +563,6 @@ struct Acc {
     counts: Vec<u32>,
 }
 
-impl Acc {
-    fn new(reduce: Reduce, rows: usize, cols: usize) -> Self {
-        let m = match reduce {
-            Reduce::Sum | Reduce::Mean => Matrix::zeros(rows, cols),
-            Reduce::Max => Matrix::filled(rows, cols, f32::NEG_INFINITY),
-        };
-        Acc {
-            reduce,
-            m,
-            counts: vec![0; rows],
-        }
-    }
-}
-
 /// A shard's partial gather accumulator: an [`Acc`] covering only the
 /// shard's destination window, placed at interval-local row `base`.
 struct Partial {
@@ -398,15 +571,36 @@ struct Partial {
 }
 
 /// What one shard's GatherPhase produced: partial gather accumulators
-/// (merged in shard order) and queued ST.E spills.
+/// (merged in shard order) and queued ST.E spills. Matrix buffers inside
+/// come from — and return to — the producing worker's scratch arena; the
+/// three container `Vec`s are the only per-shard heap traffic left.
 struct ShardOut {
-    /// `(D slot, windowed partial)` in first-touch order.
-    partials: Vec<(usize, Partial)>,
-    /// `(DRAM slot, [shard_edges, cols] rows)` to write at canonical ids.
-    spills: Vec<(usize, Matrix)>,
+    /// Worker index that ran the shard (owner of the buffers inside).
+    worker: usize,
+    /// Partials indexed by D slot (`SlotLayout::d` wide) — no linear
+    /// `position()` scan per gather instruction.
+    partials: Vec<Option<Partial>>,
+    /// D slots present in `partials`, in first-touch order (the
+    /// deterministic merge order).
+    touched: Vec<u32>,
+    /// `(DRAM slot, E slot, [shard_edges, cols] rows)` to write at
+    /// canonical edge ids; the E slot routes the buffer back to the
+    /// worker's pool after the merge.
+    spills: Vec<(usize, u32, Matrix)>,
 }
 
 impl ShardOut {
+    fn new(worker: usize, d_slots: usize) -> Self {
+        ShardOut {
+            worker,
+            partials: (0..d_slots).map(|_| None).collect(),
+            touched: Vec::new(),
+            spills: Vec::new(),
+        }
+    }
+
+    /// Get-or-create the shard's partial accumulator for `slot`.
+    #[allow(clippy::too_many_arguments)]
     fn partial(
         &mut self,
         slot: usize,
@@ -414,19 +608,21 @@ impl ShardOut {
         base: usize,
         rows: usize,
         cols: usize,
+        pm: &mut Pool<f32>,
+        pc: &mut Pool<u32>,
     ) -> &mut Acc {
-        if let Some(pos) = self.partials.iter().position(|(s, _)| *s == slot) {
-            &mut self.partials[pos].1.acc
-        } else {
-            self.partials.push((
-                slot,
-                Partial {
-                    base,
-                    acc: Acc::new(reduce, rows, cols),
+        if self.partials[slot].is_none() {
+            self.touched.push(slot as u32);
+            self.partials[slot] = Some(Partial {
+                base,
+                acc: Acc {
+                    reduce,
+                    m: pm.take_matrix_filled(slot, rows, cols, reduce_identity(reduce)),
+                    counts: pc.take_filled(slot, rows, 0),
                 },
-            ));
-            &mut self.partials.last_mut().unwrap().1.acc
+            });
         }
+        &mut self.partials[slot].as_mut().unwrap().acc
     }
 }
 
@@ -438,26 +634,36 @@ struct ShardEnv<'x> {
     iv: &'x IntervalState,
     parts: &'x Partitions,
     gather: &'x [Instr],
+    /// Per gather-instruction last-use flags for ST.E spills.
+    movable: &'x [bool],
+    mode: KernelMode,
 }
 
 impl ShardEnv<'_> {
-    fn run_shard(&self, shard_idx: usize) -> ShardOut {
+    fn run_shard(&self, shard_idx: usize, ws: &mut WorkerScratch, worker: usize) -> ShardOut {
         let shard = &self.parts.shards[shard_idx];
         let span = shard.dst_span();
-        let mut s: Vec<Option<Matrix>> = vec![None; self.layout.s];
-        let mut e: Vec<Option<Matrix>> = vec![None; self.layout.e];
-        let mut out = ShardOut {
-            partials: Vec::new(),
-            spills: Vec::new(),
-        };
-        for i in self.gather {
-            self.exec_shard_instr(i, shard, span, &mut s, &mut e, &mut out);
+        let mut out = ShardOut::new(worker, self.layout.d);
+        for (idx, i) in self.gather.iter().enumerate() {
+            self.exec_shard_instr(i, self.movable[idx], shard, span, ws, &mut out);
+        }
+        // Retire the shard's S/E matrices into the worker's pools.
+        for (slot, m) in ws.s_arena.iter_mut().enumerate() {
+            if let Some(m) = m.take() {
+                ws.s.give(slot, m.data);
+            }
+        }
+        for (slot, m) in ws.e_arena.iter_mut().enumerate() {
+            if let Some(m) = m.take() {
+                ws.e.give(slot, m.data);
+            }
         }
         out
     }
 
     /// Get-or-create the shard's partial accumulator for `dst`, sized to
     /// the shard's destination window within the interval.
+    #[allow(clippy::too_many_arguments)]
     fn windowed_partial<'o>(
         &self,
         out: &'o mut ShardOut,
@@ -465,20 +671,22 @@ impl ShardEnv<'_> {
         reduce: Reduce,
         span: Option<(u32, u32)>,
         cols: usize,
+        pm: &mut Pool<f32>,
+        pc: &mut Pool<u32>,
     ) -> &'o mut Acc {
         let (lo, hi) = span.expect("edgeless shards return before accumulating");
         let base = lo as usize - self.iv.begin;
         let rows = (hi - lo + 1) as usize;
-        out.partial(dst.id as usize, reduce, base, rows, cols)
+        out.partial(dst.id as usize, reduce, base, rows, cols, pm, pc)
     }
 
     fn exec_shard_instr(
         &self,
         i: &Instr,
+        movable: bool,
         shard: &Shard,
         span: Option<(u32, u32)>,
-        s: &mut [Option<Matrix>],
-        e: &mut [Option<Matrix>],
+        ws: &mut WorkerScratch,
         out: &mut ShardOut,
     ) {
         let iv = self.iv;
@@ -487,20 +695,27 @@ impl ShardEnv<'_> {
                 let src = self.dram[data.slot()]
                     .as_ref()
                     .unwrap_or_else(|| panic!("LD of unwritten {data}"));
+                let slot = sym.id as usize;
                 match sym.space {
                     Space::S => {
-                        let mut m = Matrix::zeros(shard.num_src(), *cols as usize);
+                        let mut m =
+                            ws.s.take_matrix_any(slot, shard.num_src(), *cols as usize);
                         for (r, &gv) in shard.sources.iter().enumerate() {
                             m.row_mut(r).copy_from_slice(src.row(gv as usize));
                         }
-                        s[sym.id as usize] = Some(m);
+                        if let Some(old) = ws.s_arena[slot].replace(m) {
+                            ws.s.give(slot, old.data);
+                        }
                     }
                     Space::E => {
-                        let mut m = Matrix::zeros(shard.num_edges(), *cols as usize);
+                        let mut m =
+                            ws.e.take_matrix_any(slot, shard.num_edges(), *cols as usize);
                         for (r, ed) in shard.edges.iter().enumerate() {
                             m.row_mut(r).copy_from_slice(src.row(ed.edge_id as usize));
                         }
-                        e[sym.id as usize] = Some(m);
+                        if let Some(old) = ws.e_arena[slot].replace(m) {
+                            ws.e.give(slot, old.data);
+                        }
                     }
                     _ => panic!("GatherPhase LD of {sym}"),
                 }
@@ -508,17 +723,30 @@ impl ShardEnv<'_> {
             Instr::St { sym, data, .. } => {
                 // ST.E — spill edge rows; the writes are queued and land
                 // at canonical edge ids during the deterministic merge.
-                let m = e[sym.id as usize]
-                    .as_ref()
-                    .unwrap_or_else(|| panic!("ST of undefined {sym}"))
-                    .clone();
-                out.spills.push((data.slot(), m));
+                // When this is the symbol's last use in the phase the
+                // matrix moves out of the arena (no copy); otherwise it is
+                // duplicated into a pool buffer.
+                let slot = sym.id as usize;
+                let m = if movable {
+                    ws.e_arena[slot]
+                        .take()
+                        .unwrap_or_else(|| panic!("ST of undefined {sym}"))
+                } else {
+                    let src = ws.e_arena[slot]
+                        .as_ref()
+                        .unwrap_or_else(|| panic!("ST of undefined {sym}"));
+                    let mut c = ws.e.take_matrix_any(slot, src.rows, src.cols);
+                    c.data.copy_from_slice(&src.data);
+                    c
+                };
+                out.spills.push((data.slot(), slot as u32, m));
             }
             Instr::Scatter { dir, dst, src, cols } => {
-                let mut m = Matrix::zeros(shard.num_edges(), *cols as usize);
+                let slot = dst.id as usize;
+                let mut m = ws.e.take_matrix_any(slot, shard.num_edges(), *cols as usize);
                 match dir {
                     ScatterDir::SrcToEdge => {
-                        let sm = s[src.id as usize]
+                        let sm = ws.s_arena[src.id as usize]
                             .as_ref()
                             .unwrap_or_else(|| panic!("S operand {src} missing"));
                         for (r, ed) in shard.edges.iter().enumerate() {
@@ -535,7 +763,9 @@ impl ShardEnv<'_> {
                         }
                     }
                 }
-                e[dst.id as usize] = Some(m);
+                if let Some(old) = ws.e_arena[slot].replace(m) {
+                    ws.e.give(slot, old.data);
+                }
             }
             Instr::FusedGather {
                 reduce,
@@ -547,32 +777,34 @@ impl ShardEnv<'_> {
                 // An edgeless shard contributes nothing (the interval-level
                 // accumulator was pre-created by `scatter_phase`).
                 let Some((lo, _)) = span else { return };
-                let scale_col: Option<Vec<f32>> = scale.map(|sc| {
-                    let m = e[sc.id as usize]
-                        .as_ref()
-                        .unwrap_or_else(|| panic!("E operand {sc} missing"));
-                    (0..shard.num_edges()).map(|r| m.get(r, 0)).collect()
-                });
-                let sm = s[src.id as usize]
+                let sm = ws.s_arena[src.id as usize]
                     .as_ref()
                     .unwrap_or_else(|| panic!("S operand {src} missing"));
-                let acc = self.windowed_partial(out, *dst, *reduce, span, *cols as usize);
+                let scale_m = scale.map(|sc| {
+                    ws.e_arena[sc.id as usize]
+                        .as_ref()
+                        .unwrap_or_else(|| panic!("E operand {sc} missing"))
+                });
+                let acc = self.windowed_partial(
+                    out,
+                    *dst,
+                    *reduce,
+                    span,
+                    *cols as usize,
+                    &mut ws.pm,
+                    &mut ws.pc,
+                );
                 for (r, ed) in shard.edges.iter().enumerate() {
                     let local = (ed.dst - lo) as usize;
                     acc.counts[local] += 1;
                     let row = sm.row(ed.src_slot as usize);
-                    let f = scale_col.as_ref().map_or(1.0, |c| c[r]);
-                    let orow = acc.m.row_mut(local);
+                    let f = scale_m.map_or(1.0, |m| m.get(r, 0));
                     match reduce {
                         Reduce::Sum | Reduce::Mean => {
-                            for (o, &x) in orow.iter_mut().zip(row) {
-                                *o += x * f;
-                            }
+                            kernels::scale_axpy(acc.m.row_mut(local), row, f)
                         }
                         Reduce::Max => {
-                            for (o, &x) in orow.iter_mut().zip(row) {
-                                *o = o.max(x * f);
-                            }
+                            kernels::scale_max_assign(acc.m.row_mut(local), row, f)
                         }
                     }
                 }
@@ -584,26 +816,27 @@ impl ShardEnv<'_> {
                 cols,
             } => {
                 let Some((lo, _)) = span else { return };
-                let ev = e[src.id as usize]
+                let ev = ws.e_arena[src.id as usize]
                     .as_ref()
                     .unwrap_or_else(|| panic!("E operand {src} missing"));
-                let acc = self.windowed_partial(out, *dst, *reduce, span, *cols as usize);
+                let acc = self.windowed_partial(
+                    out,
+                    *dst,
+                    *reduce,
+                    span,
+                    *cols as usize,
+                    &mut ws.pm,
+                    &mut ws.pc,
+                );
                 for (r, ed) in shard.edges.iter().enumerate() {
                     let local = (ed.dst - lo) as usize;
                     acc.counts[local] += 1;
                     let row = ev.row(r);
-                    let orow = acc.m.row_mut(local);
                     match reduce {
                         Reduce::Sum | Reduce::Mean => {
-                            for (o, &x) in orow.iter_mut().zip(row) {
-                                *o += x;
-                            }
+                            kernels::axpy(acc.m.row_mut(local), row)
                         }
-                        Reduce::Max => {
-                            for (o, &x) in orow.iter_mut().zip(row) {
-                                *o = o.max(x);
-                            }
-                        }
+                        Reduce::Max => kernels::max_assign(acc.m.row_mut(local), row),
                     }
                 }
             }
@@ -611,40 +844,86 @@ impl ShardEnv<'_> {
                 // Shard-side compute: rows decode against the shard.
                 let rows_dim = instr_rows(i);
                 let rows = rows_dim.decode(iv.len(), shard.num_src(), shard.num_edges());
-                let m = compute_instr(i, rows, self.weights, Some(&*s), Some(&*e), &iv.d);
                 let def = i.def().expect("compute defines");
-                match def.space {
-                    Space::S => s[def.id as usize] = Some(m),
-                    Space::E => e[def.id as usize] = Some(m),
+                let slot = def.id as usize;
+                let m = match self.mode {
+                    KernelMode::Blocked => {
+                        // The def's pool is a field disjoint from the
+                        // operand arenas, so this borrow-splits cleanly.
+                        let pool = match def.space {
+                            Space::S => &mut ws.s,
+                            Space::E => &mut ws.e,
+                            _ => panic!("GatherPhase compute must write S/E"),
+                        };
+                        compute_instr_kernel(
+                            i,
+                            rows,
+                            self.weights,
+                            Some(&ws.s_arena[..]),
+                            Some(&ws.e_arena[..]),
+                            &iv.d,
+                            pool,
+                            slot,
+                        )
+                    }
+                    KernelMode::Naive => compute_instr_naive(
+                        i,
+                        rows,
+                        self.weights,
+                        Some(&ws.s_arena[..]),
+                        Some(&ws.e_arena[..]),
+                        &iv.d,
+                    ),
+                };
+                let (arena, pool) = match def.space {
+                    Space::S => (&mut ws.s_arena, &mut ws.s),
+                    Space::E => (&mut ws.e_arena, &mut ws.e),
                     _ => panic!("GatherPhase compute must write S/E"),
+                };
+                if let Some(old) = arena[slot].replace(m) {
+                    pool.give(slot, old.data);
                 }
             }
         }
     }
 }
 
-/// Evaluate a compute instruction against slot-arena operand sources:
-/// W from `weights`, S/E from the shard arenas (GatherPhase only), D
-/// from the interval arena.
-fn compute_instr(
+/// Resolve a compute operand against the slot arenas: W from `weights`,
+/// S/E from the shard arenas (GatherPhase only), D from the interval
+/// arena.
+fn look_operand<'m>(
+    sym: &Sym,
+    weights: &'m [Option<Matrix>],
+    s: Option<&'m [Option<Matrix>]>,
+    e: Option<&'m [Option<Matrix>]>,
+    d: &'m [Option<Matrix>],
+) -> &'m Matrix {
+    let arena: &[Option<Matrix>] = match sym.space {
+        Space::W => weights,
+        Space::S => s.unwrap_or_else(|| panic!("S operand {sym} outside GatherPhase")),
+        Space::E => e.unwrap_or_else(|| panic!("E operand {sym} outside GatherPhase")),
+        Space::D => d,
+    };
+    arena[sym.id as usize]
+        .as_ref()
+        .unwrap_or_else(|| panic!("operand {sym} missing"))
+}
+
+/// Evaluate a compute instruction through the kernel layer, writing into
+/// a scratch buffer taken from `pool` at `slot` (blocked branch-free DMM,
+/// flat-slice ELW/RSCALE/CAT — no per-element `get`/`set`). Results are
+/// bit-identical to [`compute_instr_naive`] for finite inputs.
+#[allow(clippy::too_many_arguments)]
+fn compute_instr_kernel(
     i: &Instr,
     rows: usize,
     weights: &[Option<Matrix>],
     s: Option<&[Option<Matrix>]>,
     e: Option<&[Option<Matrix>]>,
     d: &[Option<Matrix>],
+    pool: &mut Pool<f32>,
+    slot: usize,
 ) -> Matrix {
-    let look = |sym: &Sym| -> &Matrix {
-        let arena: &[Option<Matrix>] = match sym.space {
-            Space::W => weights,
-            Space::S => s.unwrap_or_else(|| panic!("S operand {sym} outside GatherPhase")),
-            Space::E => e.unwrap_or_else(|| panic!("E operand {sym} outside GatherPhase")),
-            Space::D => d,
-        };
-        arena[sym.id as usize]
-            .as_ref()
-            .unwrap_or_else(|| panic!("operand {sym} missing"))
-    };
     match i {
         Instr::Elw {
             op,
@@ -654,7 +933,85 @@ fn compute_instr(
             cols,
             ..
         } => {
-            let am = look(a);
+            let cols = *cols as usize;
+            let am = look_operand(a, weights, s, e, d);
+            let mut out = pool.take_matrix_any(slot, rows, cols);
+            match b {
+                None => kernels::elw_unary(*op, &am.data[..rows * cols], &mut out.data),
+                Some(bs) => {
+                    let bm = look_operand(bs, weights, s, e, d);
+                    if *broadcast_b {
+                        for r in 0..rows {
+                            kernels::elw_binary(*op, am.row(r), bm.row(0), out.row_mut(r));
+                        }
+                    } else {
+                        kernels::elw_binary(
+                            *op,
+                            &am.data[..rows * cols],
+                            &bm.data[..rows * cols],
+                            &mut out.data,
+                        );
+                    }
+                }
+            }
+            out
+        }
+        Instr::RowScale { a, scale, cols, .. } => {
+            let cols = *cols as usize;
+            let am = look_operand(a, weights, s, e, d);
+            let sm = look_operand(scale, weights, s, e, d);
+            let mut out = pool.take_matrix_any(slot, rows, cols);
+            for r in 0..rows {
+                kernels::row_scale(&am.row(r)[..cols], sm.get(r, 0), out.row_mut(r));
+            }
+            out
+        }
+        Instr::Concat {
+            a, b, cols_a, cols_b, ..
+        } => {
+            let (ca, cb) = (*cols_a as usize, *cols_b as usize);
+            let am = look_operand(a, weights, s, e, d);
+            let bm = look_operand(b, weights, s, e, d);
+            let mut out = pool.take_matrix_any(slot, rows, ca + cb);
+            for r in 0..rows {
+                out.row_mut(r)[..ca].copy_from_slice(am.row(r));
+                out.row_mut(r)[ca..].copy_from_slice(bm.row(r));
+            }
+            out
+        }
+        Instr::Dmm { a, w, .. } => {
+            let am = look_operand(a, weights, s, e, d);
+            let wm = look_operand(w, weights, s, e, d);
+            let mut out = pool.take_matrix_any(slot, am.rows, wm.cols);
+            kernels::matmul_blocked(am, wm, &mut out);
+            out
+        }
+        _ => panic!("not a compute instruction: {}", i.render()),
+    }
+}
+
+/// The pre-kernel-layer compute path, preserved verbatim: naive
+/// zero-skipping matmul, per-element `get`/`set` loops, and a fresh
+/// allocation per result. This is the golden reference the differential
+/// tests diff [`KernelMode::Blocked`] against — do not "optimise" it.
+fn compute_instr_naive(
+    i: &Instr,
+    rows: usize,
+    weights: &[Option<Matrix>],
+    s: Option<&[Option<Matrix>]>,
+    e: Option<&[Option<Matrix>]>,
+    d: &[Option<Matrix>],
+) -> Matrix {
+    match i {
+        Instr::Elw {
+            op,
+            a,
+            b,
+            broadcast_b,
+            cols,
+            ..
+        } => {
+            let am = look_operand(a, weights, s, e, d);
             let mut out = Matrix::zeros(rows, *cols as usize);
             match b {
                 None => {
@@ -665,7 +1022,7 @@ fn compute_instr(
                     }
                 }
                 Some(bs) => {
-                    let bm = look(bs);
+                    let bm = look_operand(bs, weights, s, e, d);
                     for r in 0..rows {
                         let br = if *broadcast_b { 0 } else { r };
                         for c in 0..*cols as usize {
@@ -677,8 +1034,8 @@ fn compute_instr(
             out
         }
         Instr::RowScale { a, scale, cols, .. } => {
-            let am = look(a);
-            let sm = look(scale);
+            let am = look_operand(a, weights, s, e, d);
+            let sm = look_operand(scale, weights, s, e, d);
             let mut out = Matrix::zeros(rows, *cols as usize);
             for r in 0..rows {
                 let f = sm.get(r, 0);
@@ -691,8 +1048,8 @@ fn compute_instr(
         Instr::Concat {
             a, b, cols_a, cols_b, ..
         } => {
-            let am = look(a);
-            let bm = look(b);
+            let am = look_operand(a, weights, s, e, d);
+            let bm = look_operand(b, weights, s, e, d);
             let mut out = Matrix::zeros(rows, (*cols_a + *cols_b) as usize);
             for r in 0..rows {
                 out.row_mut(r)[..*cols_a as usize].copy_from_slice(am.row(r));
@@ -701,9 +1058,9 @@ fn compute_instr(
             out
         }
         Instr::Dmm { a, w, .. } => {
-            let am = look(a);
-            let wm = look(w);
-            am.matmul(wm)
+            let am = look_operand(a, weights, s, e, d);
+            let wm = look_operand(w, weights, s, e, d);
+            kernels::matmul_naive(am, wm)
         }
         _ => panic!("not a compute instruction: {}", i.render()),
     }

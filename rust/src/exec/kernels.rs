@@ -1,0 +1,229 @@
+//! The executor's inner-loop kernel layer: cache-blocked, branch-free
+//! matmul plus fused row kernels, all written as straight-line slice
+//! iteration so the compiler's autovectorizer can keep the SIMD lanes
+//! full (the software analogue of keeping the VU/MU saturated, §IV).
+//!
+//! Every kernel preserves the *exact* floating-point operation order of
+//! the naive loops it replaced, so the executor's output stays
+//! bit-identical — the differential tests in `exec::tests` pin the kernel
+//! path against the preserved naive reference
+//! ([`matmul_naive`] / `compute_instr_naive`) on every zoo model.
+
+use crate::exec::matrix::Matrix;
+use crate::exec::reference::{apply_binary, apply_unary};
+use crate::isa::ElwOp;
+
+/// Column-tile width of the blocked matmul: 8 f32 lanes (one AVX2
+/// register / two NEON registers) of output accumulated in registers.
+pub const MM_TILE: usize = 8;
+
+/// Cache-blocked, branch-free matmul: `out[i, j] = Σ_k a[i, k] · b[k, j]`,
+/// written into the pre-sized `out` (`[out.rows, b.cols]`; contents are
+/// fully overwritten, so scratch-arena buffers need no zeroing).
+///
+/// Three properties vs. the naive triple loop:
+/// * no `a == 0.0` skip branch — the data-dependent branch defeated
+///   autovectorization and bought nothing on dense activations;
+/// * 8-wide column tiles with a fixed-size register accumulator, so the
+///   inner loop is a pure `acc[j] += a·b[j]` FMA chain over a slice;
+/// * for each output element the k-summation order is unchanged
+///   (ascending), so results are bit-identical to [`matmul_naive`] for
+///   finite inputs.
+pub fn matmul_blocked(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul shape");
+    assert_eq!(out.cols, b.cols, "matmul out cols");
+    assert!(a.rows >= out.rows, "matmul out rows");
+    let n = b.cols;
+    let mut j = 0;
+    while j < n {
+        let jw = MM_TILE.min(n - j);
+        for i in 0..out.rows {
+            let arow = a.row(i);
+            let mut acc = [0.0f32; MM_TILE];
+            for (k, &av) in arow.iter().enumerate() {
+                let brow = &b.row(k)[j..j + jw];
+                for (x, &bv) in acc[..jw].iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+            out.row_mut(i)[j..j + jw].copy_from_slice(&acc[..jw]);
+        }
+        j += MM_TILE;
+    }
+}
+
+/// The pre-kernel-layer matmul, preserved verbatim as the differential
+/// reference (and to document what the blocked kernel replaced): row-major
+/// triple loop with an `a == 0.0` skip branch.
+pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape");
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = out.row_mut(i);
+        for (k, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = b.row(k);
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+// ---- fused row kernels (gather inner loops + shard merge) -------------------
+
+/// `o += x`, element-wise over a row.
+#[inline]
+pub fn axpy(o: &mut [f32], x: &[f32]) {
+    for (o, &v) in o.iter_mut().zip(x) {
+        *o += v;
+    }
+}
+
+/// `o += f · x`, element-wise over a row (the FusedGather inner loop).
+#[inline]
+pub fn scale_axpy(o: &mut [f32], x: &[f32], f: f32) {
+    for (o, &v) in o.iter_mut().zip(x) {
+        *o += v * f;
+    }
+}
+
+/// `o = max(o, x)`, element-wise over a row.
+#[inline]
+pub fn max_assign(o: &mut [f32], x: &[f32]) {
+    for (o, &v) in o.iter_mut().zip(x) {
+        *o = o.max(v);
+    }
+}
+
+/// `o = max(o, f · x)`, element-wise over a row.
+#[inline]
+pub fn scale_max_assign(o: &mut [f32], x: &[f32], f: f32) {
+    for (o, &v) in o.iter_mut().zip(x) {
+        *o = o.max(v * f);
+    }
+}
+
+// ---- slice-based element-wise kernels (ELW / RSCALE) ------------------------
+
+/// Unary ELW over a flat slice: `out[i] = op(a[i])`.
+#[inline]
+pub fn elw_unary(op: ElwOp, a: &[f32], out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(a) {
+        *o = apply_unary(op, v);
+    }
+}
+
+/// Binary ELW over flat slices: `out[i] = op(a[i], b[i])`.
+#[inline]
+pub fn elw_binary(op: ElwOp, a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = apply_binary(op, x, y);
+    }
+}
+
+/// Row-scale: `out[i] = f · a[i]` over one row.
+#[inline]
+pub fn row_scale(a: &[f32], f: f32, out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(a) {
+        *o = v * f;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::weights;
+
+    fn check_shape(m: usize, k: usize, n: usize, seed: u64) {
+        let a = weights::init_weight(seed, m as u32, k as u32);
+        let b = weights::init_weight(seed + 1, k as u32, n as u32);
+        let want = matmul_naive(&a, &b);
+        let mut got = Matrix::zeros(m, n);
+        matmul_blocked(&a, &b, &mut got);
+        assert!(got.bits_eq(&want), "blocked != naive at {m}x{k}x{n}");
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_odd_shapes() {
+        // 1×k, k×1, exact tile multiples, and every misalignment of the
+        // 8-wide column tile.
+        check_shape(1, 7, 5, 3);
+        check_shape(5, 7, 1, 4);
+        check_shape(1, 1, 1, 5);
+        check_shape(8, 8, 8, 6);
+        check_shape(16, 32, 24, 7);
+        for n in 1..=17 {
+            check_shape(3, 5, n, 100 + n as u64);
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_with_zero_rows() {
+        // The naive kernel's `a == 0.0` skip must be value-equivalent to
+        // the branch-free accumulation (isolated-vertex zero rows).
+        let mut a = weights::init_weight(9, 4, 6);
+        a.row_mut(1).fill(0.0);
+        a.set(3, 0, 0.0);
+        a.set(3, 5, 0.0);
+        let b = weights::init_weight(10, 6, 9);
+        let want = matmul_naive(&a, &b);
+        let mut got = Matrix::zeros(4, 9);
+        matmul_blocked(&a, &b, &mut got);
+        assert!(got.bits_eq(&want));
+        assert!(got.row(1).iter().all(|v| v.to_bits() == 0.0f32.to_bits()));
+    }
+
+    #[test]
+    fn blocked_overwrites_stale_out() {
+        // Scratch-arena buffers arrive with stale contents; the kernel
+        // must not read-modify-write them.
+        let a = weights::init_weight(11, 3, 4);
+        let b = weights::init_weight(12, 4, 10);
+        let want = matmul_naive(&a, &b);
+        let mut got = Matrix::filled(3, 10, f32::NAN);
+        matmul_blocked(&a, &b, &mut got);
+        assert!(got.bits_eq(&want));
+    }
+
+    #[test]
+    fn row_kernels_match_scalar_loops() {
+        let x = [1.5f32, -2.0, 0.25, 3.0];
+        let mut o = [0.5f32, 1.0, -1.0, 2.0];
+        let mut o2 = o;
+        axpy(&mut o, &x);
+        for (o, &v) in o2.iter_mut().zip(&x) {
+            *o += v;
+        }
+        assert_eq!(o, o2);
+
+        let mut m = [0.5f32, 1.0, -1.0, 2.0];
+        max_assign(&mut m, &x);
+        assert_eq!(m, [1.5, 1.0, 0.25, 3.0]);
+
+        let mut s = [0.0f32; 4];
+        scale_axpy(&mut s, &x, 2.0);
+        assert_eq!(s, [3.0, -4.0, 0.5, 6.0]);
+
+        let mut sm = [2.9f32, 0.0, 0.0, 0.0];
+        scale_max_assign(&mut sm, &x, 2.0);
+        assert_eq!(sm, [3.0, 0.0, 0.5, 6.0]);
+    }
+
+    #[test]
+    fn elw_kernels_apply_op_semantics() {
+        let a = [-1.0f32, 0.0, 2.0];
+        let mut out = [0.0f32; 3];
+        elw_unary(ElwOp::Relu, &a, &mut out);
+        assert_eq!(out, [0.0, 0.0, 2.0]);
+        let b = [3.0f32, 4.0, 5.0];
+        elw_binary(ElwOp::Add, &a, &b, &mut out);
+        assert_eq!(out, [2.0, 4.0, 7.0]);
+        row_scale(&a, -2.0, &mut out);
+        assert_eq!(out, [2.0, -0.0, -4.0]);
+    }
+}

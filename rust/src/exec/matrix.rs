@@ -50,24 +50,14 @@ impl Matrix {
         self.data[r * self.cols + c] = v;
     }
 
-    /// `self × other` (naive; functional path only — the timing model and
-    /// the JAX layers own performance).
+    /// `self × other` via the cache-blocked kernel layer
+    /// ([`kernels::matmul_blocked`](crate::exec::kernels::matmul_blocked));
+    /// the pre-kernel loop survives as
+    /// [`kernels::matmul_naive`](crate::exec::kernels::matmul_naive), the
+    /// bit-identity reference of the differential tests.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.rows, "matmul shape");
         let mut out = Matrix::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            let orow = out.row_mut(i);
-            for (k, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = other.row(k);
-                for (j, &b) in brow.iter().enumerate() {
-                    orow[j] += a * b;
-                }
-            }
-        }
+        crate::exec::kernels::matmul_blocked(self, other, &mut out);
         out
     }
 
@@ -80,6 +70,18 @@ impl Matrix {
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
+    }
+
+    /// Bitwise equality: same shape and every element's f32 bit pattern
+    /// identical — the differential tests' notion of "identical output".
+    pub fn bits_eq(&self, other: &Matrix) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
     }
 
     /// Relative-tolerance comparison mirroring `np.allclose`.

@@ -16,14 +16,24 @@
 //! `compile(ir) ∘ partition(g) ∘ Executor == reference(ir, g)` is the
 //! core correctness property of the whole stack (tested here and, against
 //! the JAX/PJRT oracle, in `rust/tests/integration_runtime.rs`).
+//!
+//! The executor's hot path is built from two support layers: [`kernels`]
+//! (cache-blocked branch-free matmul + fused slice-based row kernels,
+//! bit-identical to the preserved naive loops) and [`scratch`]
+//! (slot-keyed buffer pools making the walk allocation-free in steady
+//! state). [`KernelMode::Naive`] keeps the pre-kernel compute path alive
+//! purely as the differential-test reference.
 
 mod executor;
+pub mod kernels;
 mod matrix;
 pub mod reference;
+pub mod scratch;
 pub mod weights;
 
-pub use executor::Executor;
+pub use executor::{Executor, KernelMode};
 pub use matrix::Matrix;
+pub use scratch::ScratchStats;
 
 #[cfg(test)]
 mod tests;

@@ -1,0 +1,351 @@
+//! Scratch arenas: slot-keyed buffer pools that make the executor
+//! allocation-free in steady state.
+//!
+//! Every `Ld`, `Scatter`, compute instruction and gather accumulator used
+//! to allocate a fresh [`Matrix`] per shard / per interval. The pools here
+//! recycle those buffers: a matrix retired at the end of an interval (or a
+//! shard) goes back into the pool slot of the symbol that owned it, and
+//! the next interval's instruction for the same symbol takes it out again.
+//! After the first interval of each group the demanded sizes repeat (or
+//! shrink, for the ragged last interval), so every `take` is a capacity
+//! hit and the walk performs no further heap allocation — exact under
+//! deterministic (single-worker) shard assignment, where
+//! `exec::tests::scratch_arena_steady_state_no_new_misses` pins it via
+//! the hit/miss counters; under the racy multi-worker pool each worker's
+//! private arenas warm independently, so misses taper instead of
+//! stopping at a hard boundary.
+//!
+//! Layout: one [`Pool`] slot per symbol id (sized from
+//! [`SlotLayout`](crate::isa::SlotLayout)), each slot a small stack of
+//! buffers — a stack because one slot can transiently own two buffers
+//! (e.g. a D symbol that is overwritten within an interval).
+//! [`WorkerScratch`] is private to one GatherPhase worker thread, so the
+//! pools need no synchronisation beyond the per-worker `Mutex` the
+//! executor holds them in.
+
+use crate::exec::matrix::Matrix;
+use crate::isa::SlotLayout;
+
+/// Aggregate hit/miss counters across one or more pools. A *miss* is a
+/// `take` that had to allocate (empty slot) or regrow (buffer capacity
+/// smaller than the request); in steady state misses stop growing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScratchStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ScratchStats {
+    pub fn merge(&mut self, other: ScratchStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+
+    /// Fraction of takes served without allocating, in `[0, 1]`.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+/// A slot-keyed pool of `Vec<T>` buffers.
+///
+/// Each slot tracks how many of its buffers are currently *loaned out*
+/// (taken, not yet given back). A `give` when nothing is on loan means
+/// the buffer did not originate here — e.g. `KernelMode::Naive` compute
+/// results, which allocate outside the pools by design — and is dropped
+/// instead of stored, so foreign buffers cannot grow the pool without
+/// bound (one fresh matrix per compute slot per interval/shard, forever).
+#[derive(Clone, Debug, Default)]
+pub struct Pool<T> {
+    slots: Vec<Vec<Vec<T>>>,
+    /// Buffers taken and not yet returned, per slot.
+    loaned: Vec<usize>,
+    hits: u64,
+    misses: u64,
+}
+
+impl<T: Copy + Default> Pool<T> {
+    pub fn new(slots: usize) -> Self {
+        Pool {
+            slots: (0..slots).map(|_| Vec::new()).collect(),
+            loaned: vec![0; slots],
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Take a buffer of exactly `len` elements whose contents are
+    /// *unspecified* (stale data or `T::default()` tail) — for writers
+    /// that overwrite every element (LD row copies, ELW, DMM, ...).
+    ///
+    /// Selection is *best-fit* (smallest pooled buffer whose capacity
+    /// covers `len`), not LIFO: shard windows and interval heights vary,
+    /// and a repeat run pairs its demands with pooled buffers in a
+    /// different order than the run that grew them — best-fit guarantees
+    /// that once one pass has sized the pool, every later identical
+    /// demand sequence is served without regrowing (the steady-state
+    /// property the executor test pins). Slots hold a handful of buffers,
+    /// so the scan is trivial.
+    pub fn take_any(&mut self, slot: usize, len: usize) -> Vec<T> {
+        self.loaned[slot] += 1;
+        let stack = &mut self.slots[slot];
+        if stack.is_empty() {
+            self.misses += 1;
+            return vec![T::default(); len];
+        }
+        let mut pick = 0;
+        for (i, v) in stack.iter().enumerate() {
+            let better_fit = v.capacity() >= len
+                && (stack[pick].capacity() < len || v.capacity() < stack[pick].capacity());
+            // While nothing fits, track the largest buffer — regrowing it
+            // wastes the least.
+            let larger_fallback =
+                stack[pick].capacity() < len && v.capacity() > stack[pick].capacity();
+            if better_fit || larger_fallback {
+                pick = i;
+            }
+        }
+        let mut v = stack.swap_remove(pick);
+        if v.capacity() >= len {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        if v.len() > len {
+            v.truncate(len);
+        } else {
+            v.resize(len, T::default());
+        }
+        v
+    }
+
+    /// Take a buffer of `len` elements, every element set to `fill` — for
+    /// accumulators (gather partials, counts).
+    pub fn take_filled(&mut self, slot: usize, len: usize, fill: T) -> Vec<T> {
+        let mut v = self.take_any(slot, len);
+        v.fill(fill);
+        v
+    }
+
+    /// Return a buffer to its slot for reuse. A buffer handed in while
+    /// nothing is on loan did not come from this pool (naive-mode compute
+    /// results retire through the same code paths as pooled matrices) and
+    /// is dropped, keeping the pool bounded by its own loan count.
+    pub fn give(&mut self, slot: usize, v: Vec<T>) {
+        if self.loaned[slot] == 0 {
+            return;
+        }
+        self.loaned[slot] -= 1;
+        self.slots[slot].push(v);
+    }
+
+    pub fn stats(&self) -> ScratchStats {
+        ScratchStats {
+            hits: self.hits,
+            misses: self.misses,
+        }
+    }
+}
+
+impl Pool<f32> {
+    /// [`Pool::take_any`] wrapped as a `rows × cols` matrix.
+    pub fn take_matrix_any(&mut self, slot: usize, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take_any(slot, rows * cols))
+    }
+
+    /// [`Pool::take_filled`] wrapped as a `rows × cols` matrix.
+    pub fn take_matrix_filled(&mut self, slot: usize, rows: usize, cols: usize, fill: f32) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take_filled(slot, rows * cols, fill))
+    }
+}
+
+/// Interval-side scratch (iThread): D-symbol matrices and gather
+/// accumulators, keyed by D slot. Accumulator matrices and plain D
+/// matrices share `m` — `finalize_gathers` moves an accumulator's matrix
+/// into the D arena, and the buffer must flow back into the same pool at
+/// the next interval reset regardless of which role it last played.
+#[derive(Debug)]
+pub struct IntervalScratch {
+    /// `[interval height, cols]` f32 buffers, keyed by D-symbol id.
+    pub m: Pool<f32>,
+    /// Gather-count columns, keyed by D-symbol id.
+    pub counts: Pool<u32>,
+}
+
+impl IntervalScratch {
+    pub fn new(layout: &SlotLayout) -> Self {
+        IntervalScratch {
+            m: Pool::new(layout.d),
+            counts: Pool::new(layout.d),
+        }
+    }
+
+    pub fn stats(&self) -> ScratchStats {
+        let mut s = self.m.stats();
+        s.merge(self.counts.stats());
+        s
+    }
+}
+
+/// Per-worker shard-side scratch (one sThread): S/E matrix pools,
+/// partial gather-accumulator pools, and the reusable live slot arenas
+/// of `run_shard`. (`ShardOut` itself is *not* pooled — its three small
+/// container `Vec`s are the one remaining per-shard heap touch.) Owned
+/// by exactly one worker while the pool is running; the executor returns
+/// merged buffers to the worker they came from, so pool contents stay
+/// thread-private.
+#[derive(Debug)]
+pub struct WorkerScratch {
+    /// `[shard sources, cols]` buffers keyed by S-symbol id.
+    pub s: Pool<f32>,
+    /// `[shard edges, cols]` buffers keyed by E-symbol id (also receives
+    /// ST.E spill buffers back after the merge writes them to DRAM).
+    pub e: Pool<f32>,
+    /// Partial gather-accumulator matrices keyed by D-symbol id.
+    pub pm: Pool<f32>,
+    /// Partial gather-count columns keyed by D-symbol id.
+    pub pc: Pool<u32>,
+    /// Live S-slot arena reused across shards (cleared each shard).
+    pub s_arena: Vec<Option<Matrix>>,
+    /// Live E-slot arena reused across shards (cleared each shard).
+    pub e_arena: Vec<Option<Matrix>>,
+}
+
+impl WorkerScratch {
+    pub fn new(layout: &SlotLayout) -> Self {
+        WorkerScratch {
+            s: Pool::new(layout.s),
+            e: Pool::new(layout.e),
+            pm: Pool::new(layout.d),
+            pc: Pool::new(layout.d),
+            s_arena: (0..layout.s).map(|_| None).collect(),
+            e_arena: (0..layout.e).map(|_| None).collect(),
+        }
+    }
+
+    pub fn stats(&self) -> ScratchStats {
+        let mut st = self.s.stats();
+        st.merge(self.e.stats());
+        st.merge(self.pm.stats());
+        st.merge(self.pc.stats());
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_give_cycle_hits_after_first_miss() {
+        let mut p: Pool<f32> = Pool::new(2);
+        let v = p.take_any(0, 16);
+        assert_eq!(v.len(), 16);
+        assert_eq!(p.stats(), ScratchStats { hits: 0, misses: 1 });
+        p.give(0, v);
+        let v2 = p.take_any(0, 12); // smaller fits: hit
+        assert_eq!(v2.len(), 12);
+        assert_eq!(p.stats(), ScratchStats { hits: 1, misses: 1 });
+        p.give(0, v2);
+        let v3 = p.take_any(0, 64); // larger: capacity miss, buffer regrown
+        assert_eq!(v3.len(), 64);
+        assert_eq!(p.stats().misses, 2);
+        // Slots are independent.
+        let _ = p.take_any(1, 4);
+        assert_eq!(p.stats().misses, 3);
+    }
+
+    #[test]
+    fn take_filled_resets_contents() {
+        let mut p: Pool<u32> = Pool::new(1);
+        let mut v = p.take_filled(0, 4, 7);
+        assert_eq!(v, vec![7; 4]);
+        v[2] = 99;
+        p.give(0, v);
+        assert_eq!(p.take_filled(0, 4, 0), vec![0; 4]);
+    }
+
+    #[test]
+    fn slots_hold_multiple_buffers() {
+        let mut p: Pool<f32> = Pool::new(1);
+        let a = p.take_any(0, 8);
+        let b = p.take_any(0, 8); // second live buffer on the same slot
+        p.give(0, a);
+        p.give(0, b);
+        let _ = p.take_any(0, 8);
+        let _ = p.take_any(0, 8);
+        assert_eq!(p.stats(), ScratchStats { hits: 2, misses: 2 });
+    }
+
+    #[test]
+    fn take_is_best_fit_not_lifo() {
+        // A repeat run pairs demands with pooled buffers in a different
+        // order than the run that grew them; best-fit must still serve
+        // (100, 90) from a pool holding capacities {100, 90} regardless
+        // of give order.
+        let mut p: Pool<f32> = Pool::new(1);
+        let big = p.take_any(0, 100);
+        let small = p.take_any(0, 90);
+        p.give(0, small);
+        p.give(0, big); // LIFO would hand `big` to the 90-demand below
+        let first = p.take_any(0, 90);
+        assert!(
+            first.capacity() < 100,
+            "best-fit must pick the smaller buffer, got capacity {}",
+            first.capacity()
+        );
+        let second = p.take_any(0, 100);
+        assert!(second.capacity() >= 100);
+        assert_eq!(p.stats(), ScratchStats { hits: 2, misses: 2 });
+    }
+
+    #[test]
+    fn matrix_take_shapes() {
+        let mut p: Pool<f32> = Pool::new(1);
+        let m = p.take_matrix_filled(0, 3, 4, -1.0);
+        assert_eq!((m.rows, m.cols, m.data.len()), (3, 4, 12));
+        assert!(m.data.iter().all(|&v| v == -1.0));
+        p.give(0, m.data);
+        let m2 = p.take_matrix_any(0, 2, 6);
+        assert_eq!((m2.rows, m2.cols), (2, 6));
+    }
+
+    #[test]
+    fn foreign_gives_are_dropped() {
+        // Buffers that never came from the pool (KernelMode::Naive
+        // compute results) retire through the same give() calls; the
+        // pool must drop them rather than grow without bound.
+        let mut p: Pool<f32> = Pool::new(1);
+        p.give(0, vec![0.0; 8]);
+        p.give(0, vec![0.0; 8]);
+        let first = p.take_any(0, 8);
+        assert_eq!(
+            p.stats(),
+            ScratchStats { hits: 0, misses: 1 },
+            "foreign buffers must not be stored"
+        );
+        // With one buffer on loan, a same-sized foreign buffer may be
+        // accepted in its stead (replace-then-retire interleavings swap
+        // which Vec carries the slot) — but the extra give is dropped, so
+        // depth stays bounded by the loan count.
+        p.give(0, vec![1.0; 8]); // accepted: stands in for `first`
+        p.give(0, first); // nothing on loan any more: dropped
+        let again = p.take_any(0, 8);
+        assert_eq!(again.len(), 8);
+        assert_eq!(p.stats(), ScratchStats { hits: 1, misses: 1 });
+        assert!(p.slots[0].is_empty(), "pool depth exceeded its loan count");
+    }
+
+    #[test]
+    fn hit_rate_aggregates() {
+        let mut s = ScratchStats { hits: 3, misses: 1 };
+        s.merge(ScratchStats { hits: 1, misses: 3 });
+        assert_eq!(s, ScratchStats { hits: 4, misses: 4 });
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(ScratchStats::default().hit_rate(), 0.0);
+    }
+}

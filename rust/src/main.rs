@@ -52,7 +52,8 @@ COMMANDS:
                                            executor-vs-oracle numerics check over the
                                            zoo (or one model / spec file)
     bench     [--model M] [--dataset D] [--scale N] [--iters N] [--workers W]
-              [--layers N] [--dim D]       functional-executor throughput probe
+              [--layers N] [--dim D] [--profile]
+                                           functional-executor throughput probe
                                            (single vs shard-parallel; bench.sh
                                            folds this into BENCH_exec.json)
     help                                   this text
@@ -69,6 +70,16 @@ TUNED CONFIGS (--config):
     re-renders every figure on the tuned hardware; `serve --config`
     additionally prints the predicted accelerator latency for the
     serving shape.
+
+PROFILER (bench --profile):
+    Adds a walk-level profile of one shard-parallel run: a table with one
+    row per (group, phase) — columns time ms / calls / mean us / share —
+    plus a TOTAL row, and also times the preserved naive (pre-kernel)
+    executor for a kernel-vs-legacy comparison. Machine-readable trailer
+    lines: `exec_ms_legacy=` and `exec_profile_json=` — one JSON object
+    with total_s and per-group scatter_s / gather_s / apply_s /
+    intervals / shards / max_gather_s — which scripts/bench.sh embeds
+    into BENCH_exec.json as the \"profile\" section.
 "
     )
 }
@@ -431,13 +442,16 @@ fn cmd_repro(rest: &[String]) -> Result<(), String> {
 
 /// `bench`: functional-executor throughput, single vs shard-parallel.
 /// Prints a table plus stable `key=value` lines `scripts/bench.sh` greps
-/// into `BENCH_exec.json`.
+/// into `BENCH_exec.json`. With `--profile`, adds the walk-level
+/// per-(group, phase) timing table, the preserved naive-kernel (legacy)
+/// timing, and the `exec_profile_json=` trailer (see PROFILER in help).
 fn cmd_bench(rest: &[String]) -> Result<(), String> {
     let spec = resolve_model(rest, Some(opt_val(rest, "--model").unwrap_or("GCN")), "bench")?;
     let d = parse_dataset(opt_val(rest, "--dataset").unwrap_or("AK"))?;
     let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
     let iters = opt_u32(rest, "--iters", 3)?.max(1) as usize;
     let workers = opt_u32(rest, "--workers", 0)? as usize; // 0 = sThread count
+    let profile = has_flag(rest, "--profile");
     let dims = opt_dims(rest, &spec, 2, 32)?;
     let ir = spec
         .build(dims)
@@ -445,9 +459,9 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     let accel = AcceleratorConfig::switchblade();
     eprintln!("generating {} at scale {scale}...", d.full_name());
     let g = d.load(scale);
-    let b = bench_executor(&ir, &g, &accel, workers, iters);
+    let b = bench_executor(&ir, &g, &accel, workers, iters, profile);
     if !b.bit_identical {
-        return Err("shard-parallel executor diverged bitwise from single-worker run".into());
+        return Err("executor runs diverged bitwise (single vs parallel vs legacy)".into());
     }
     let mut t = Table::new(
         &format!(
@@ -468,18 +482,49 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
         "shard-parallel".into(),
         format!("{:.3} ms/run", b.secs_parallel * 1e3),
     ]);
+    if let Some(legacy) = b.secs_legacy {
+        t.row(vec![
+            "legacy kernels".into(),
+            format!("{:.3} ms/run", legacy * 1e3),
+        ]);
+        t.row(vec![
+            "kernel speedup".into(),
+            format!("{:.2}x", b.kernel_speedup().unwrap_or(0.0)),
+        ]);
+    }
     t.row(vec![
         "throughput".into(),
         format!("{:.0} vertices/s", b.vertices_per_sec()),
     ]);
     t.row(vec!["speedup".into(), format!("{:.2}x", b.speedup())]);
+    t.row(vec![
+        "scratch hit rate".into(),
+        format!(
+            "{:.1}% ({} hits / {} misses)",
+            b.scratch.hit_rate() * 100.0,
+            b.scratch.hits,
+            b.scratch.misses
+        ),
+    ]);
     t.print();
+    if let Some(p) = &b.profile {
+        println!();
+        p.table().print();
+    }
     // Machine-readable trailer for scripts/bench.sh.
     println!("exec_ms_single={:.3}", b.secs_single * 1e3);
     println!("exec_ms_parallel={:.3}", b.secs_parallel * 1e3);
     println!("exec_workers={}", b.workers);
     println!("exec_speedup={:.3}", b.speedup());
     println!("exec_bitmatch={}", b.bit_identical);
+    println!("exec_scratch_hits={}", b.scratch.hits);
+    println!("exec_scratch_misses={}", b.scratch.misses);
+    if let Some(legacy) = b.secs_legacy {
+        println!("exec_ms_legacy={:.3}", legacy * 1e3);
+    }
+    if let Some(p) = &b.profile {
+        println!("exec_profile_json={}", p.to_json());
+    }
     Ok(())
 }
 

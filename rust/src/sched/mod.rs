@@ -58,9 +58,17 @@
 //! executor's and the simulator's recorded traces are identical to the
 //! canonical one — the order-equivalence property that previously had to
 //! be taken on faith.
+//!
+//! [`Profiler`] is `Traced`'s sibling: instead of recording *order* it
+//! records *wall time* per `(group, phase)` plus per-shard gather
+//! statistics, so `switchblade bench --profile` can point the next perf
+//! PR at the actual hot phase instead of a guess.
+
+use std::time::Instant;
 
 use crate::isa::{PhaseGroup, Program};
 use crate::partition::{Interval, Partitions, Shard};
+use crate::util::report::Table;
 
 /// Which of the three Alg 2 phases a [`WalkStep`] belongs to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -233,6 +241,196 @@ impl<V: PhaseVisitor> PhaseVisitor for Traced<'_, V> {
     }
 }
 
+/// Wall time spent in one group's phases, as measured by [`Profiler`].
+///
+/// For a pooled backend like the executor, `gather_shard` is only a
+/// schedule point — the shard work happens when the pool drains at
+/// `end_gather` — so `gather_s` folds both together: it is the time from
+/// the walker's perspective that the group spent in GatherPhase work
+/// (queueing + pool drain + deterministic merge).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimes {
+    /// Seconds in `scatter_phase` hooks (iThread pre-processing).
+    pub scatter_s: f64,
+    /// Seconds in `gather_shard` + `end_gather` hooks (sThread work).
+    pub gather_s: f64,
+    /// Seconds in `apply_phase` hooks (iThread post-processing).
+    pub apply_s: f64,
+    /// Intervals walked for this group.
+    pub intervals: u64,
+    /// Shards offered to this group's GatherPhase.
+    pub shards: u64,
+    /// Largest single gather step (one `gather_shard` hook or one
+    /// `end_gather` drain) — the load-balance ceiling.
+    pub max_gather_s: f64,
+}
+
+impl PhaseTimes {
+    pub fn total_s(&self) -> f64 {
+        self.scatter_s + self.gather_s + self.apply_s
+    }
+}
+
+/// A full walk's timing breakdown: one [`PhaseTimes`] per phase group, in
+/// program order (prologue group included when the program has one).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseProfile {
+    pub groups: Vec<PhaseTimes>,
+}
+
+impl PhaseProfile {
+    /// Total hook seconds across all groups and phases.
+    pub fn total_s(&self) -> f64 {
+        self.groups.iter().map(|g| g.total_s()).sum()
+    }
+
+    /// The per-`(group, phase)` timing table `switchblade bench --profile`
+    /// prints: one row per phase of each group plus a TOTAL row, with each
+    /// row's share of the whole walk.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "walk profile — wall time per (group, phase)",
+            &["group", "phase", "time ms", "calls", "mean us", "share"],
+        );
+        let total = self.total_s().max(f64::MIN_POSITIVE);
+        for (gi, g) in self.groups.iter().enumerate() {
+            let rows: [(&str, f64, u64); 3] = [
+                ("scatter", g.scatter_s, g.intervals),
+                ("gather", g.gather_s, g.shards),
+                ("apply", g.apply_s, g.intervals),
+            ];
+            for (phase, secs, calls) in rows {
+                let mean_us = if calls == 0 {
+                    0.0
+                } else {
+                    secs * 1e6 / calls as f64
+                };
+                t.row(vec![
+                    format!("g{gi}"),
+                    phase.into(),
+                    format!("{:.3}", secs * 1e3),
+                    calls.to_string(),
+                    format!("{mean_us:.1}"),
+                    format!("{:.1}%", secs / total * 100.0),
+                ]);
+            }
+        }
+        t.row(vec![
+            "ALL".into(),
+            "total".into(),
+            format!("{:.3}", self.total_s() * 1e3),
+            self.groups.iter().map(|g| g.shards).sum::<u64>().to_string(),
+            "".into(),
+            "100.0%".into(),
+        ]);
+        t
+    }
+
+    /// Compact JSON rendering (one object, no trailing newline) —
+    /// embedded verbatim by `scripts/bench.sh` into `BENCH_exec.json`.
+    pub fn to_json(&self) -> String {
+        let groups: Vec<String> = self
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                format!(
+                    "{{\"group\":{gi},\"scatter_s\":{:.9},\"gather_s\":{:.9},\
+                     \"apply_s\":{:.9},\"intervals\":{},\"shards\":{},\
+                     \"max_gather_s\":{:.9}}}",
+                    g.scatter_s, g.gather_s, g.apply_s, g.intervals, g.shards, g.max_gather_s
+                )
+            })
+            .collect();
+        format!(
+            "{{\"total_s\":{:.9},\"groups\":[{}]}}",
+            self.total_s(),
+            groups.join(",")
+        )
+    }
+}
+
+/// Visitor wrapper timing every phase hook while delegating to the
+/// wrapped visitor — the walk-level profiler (sibling of [`Traced`]).
+/// Works over any backend: the executor, the simulator, or a test stub.
+pub struct Profiler<'v, V> {
+    pub inner: &'v mut V,
+    groups: Vec<PhaseTimes>,
+}
+
+impl<'v, V> Profiler<'v, V> {
+    pub fn new(inner: &'v mut V) -> Self {
+        Profiler {
+            inner,
+            groups: Vec::new(),
+        }
+    }
+
+    fn slot(&mut self, group_idx: usize) -> &mut PhaseTimes {
+        if self.groups.len() <= group_idx {
+            self.groups.resize_with(group_idx + 1, PhaseTimes::default);
+        }
+        &mut self.groups[group_idx]
+    }
+
+    pub fn into_profile(self) -> PhaseProfile {
+        PhaseProfile {
+            groups: self.groups,
+        }
+    }
+}
+
+impl<V: PhaseVisitor> PhaseVisitor for Profiler<'_, V> {
+    fn begin_group(&mut self, cx: &GroupCtx) {
+        self.slot(cx.index);
+        self.inner.begin_group(cx);
+    }
+
+    fn end_group(&mut self, cx: &GroupCtx) {
+        self.inner.end_group(cx);
+    }
+
+    fn begin_interval(&mut self, cx: &StepCtx) {
+        self.slot(cx.group_idx).intervals += 1;
+        self.inner.begin_interval(cx);
+    }
+
+    fn scatter_phase(&mut self, cx: &StepCtx) {
+        let t = Instant::now();
+        self.inner.scatter_phase(cx);
+        self.slot(cx.group_idx).scatter_s += t.elapsed().as_secs_f64();
+    }
+
+    fn gather_shard(&mut self, cx: &StepCtx, shard_idx: usize, shard: &Shard) {
+        let t = Instant::now();
+        self.inner.gather_shard(cx, shard_idx, shard);
+        let dt = t.elapsed().as_secs_f64();
+        let g = self.slot(cx.group_idx);
+        g.shards += 1;
+        g.gather_s += dt;
+        g.max_gather_s = g.max_gather_s.max(dt);
+    }
+
+    fn end_gather(&mut self, cx: &StepCtx) {
+        let t = Instant::now();
+        self.inner.end_gather(cx);
+        let dt = t.elapsed().as_secs_f64();
+        let g = self.slot(cx.group_idx);
+        g.gather_s += dt;
+        g.max_gather_s = g.max_gather_s.max(dt);
+    }
+
+    fn apply_phase(&mut self, cx: &StepCtx) {
+        let t = Instant::now();
+        self.inner.apply_phase(cx);
+        self.slot(cx.group_idx).apply_s += t.elapsed().as_secs_f64();
+    }
+
+    fn end_interval(&mut self, cx: &StepCtx) {
+        self.inner.end_interval(cx);
+    }
+}
+
 /// The canonical `(group, interval, shard, phase)` order for one
 /// `(program, partitions)` pair — what any conforming backend must emit.
 pub fn canonical_trace(program: &Program, parts: &Partitions) -> Vec<WalkStep> {
@@ -367,5 +565,32 @@ mod tests {
             log.0,
             vec!["bg", "bi", "s", "g", "g", "G", "a", "ei", "bi", "s", "G", "a", "ei", "eg"]
         );
+    }
+
+    #[test]
+    fn profiler_counts_phases_and_delegates() {
+        struct Null;
+        impl PhaseVisitor for Null {}
+        let mut null = Null;
+        let mut prof = Profiler::new(&mut null);
+        PartitionWalk::new(&toy_program(2), &toy_parts()).drive(&mut prof);
+        let p = prof.into_profile();
+        assert_eq!(p.groups.len(), 2);
+        for g in &p.groups {
+            // Two intervals per group; the first has two shards.
+            assert_eq!(g.intervals, 2);
+            assert_eq!(g.shards, 2);
+            assert!(g.scatter_s >= 0.0 && g.gather_s >= 0.0 && g.apply_s >= 0.0);
+            assert!(g.max_gather_s <= g.gather_s + 1e-12);
+            assert!(g.total_s() <= p.total_s() + 1e-12);
+        }
+        // Renderings exist and carry the per-(group, phase) rows.
+        let rendered = p.table().render();
+        assert!(rendered.contains("g0"));
+        assert!(rendered.contains("gather"));
+        let json = p.to_json();
+        assert!(json.starts_with("{\"total_s\":"));
+        assert!(json.contains("\"groups\":[{\"group\":0,"));
+        assert!(json.contains("\"shards\":2"));
     }
 }

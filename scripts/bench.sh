@@ -27,10 +27,12 @@ t0=$(date +%s.%N)
 t1=$(date +%s.%N)
 repro_s=$(awk -v a="$t0" -v b="$t1" 'BEGIN { printf "%.3f", b - a }')
 
-echo "timing executor ($MODEL on $DATASET, $ITERS iters)..." >&2
-bench_out=$("$BIN" bench --model "$MODEL" --dataset "$DATASET" --scale "$SCALE" --iters "$ITERS")
+echo "timing executor ($MODEL on $DATASET, $ITERS iters, profiled)..." >&2
+bench_out=$("$BIN" bench --model "$MODEL" --dataset "$DATASET" --scale "$SCALE" --iters "$ITERS" --profile)
 
 get() { printf '%s\n' "$bench_out" | sed -n "s/^$1=//p" | head -1; }
+# Default for optional keys so the JSON stays valid if a section is absent.
+getd() { v=$(get "$1"); printf '%s' "${v:-$2}"; }
 
 cat > "$OUT" <<EOF
 {
@@ -40,9 +42,13 @@ cat > "$OUT" <<EOF
   "bench_dataset": "$DATASET",
   "exec_ms_single": $(get exec_ms_single),
   "exec_ms_parallel": $(get exec_ms_parallel),
+  "exec_ms_legacy": $(getd exec_ms_legacy null),
   "exec_workers": $(get exec_workers),
   "exec_speedup": $(get exec_speedup),
-  "exec_bitmatch": $(get exec_bitmatch)
+  "exec_bitmatch": $(get exec_bitmatch),
+  "exec_scratch_hits": $(getd exec_scratch_hits 0),
+  "exec_scratch_misses": $(getd exec_scratch_misses 0),
+  "profile": $(getd exec_profile_json null)
 }
 EOF
 echo "wrote $OUT:" >&2

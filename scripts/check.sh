@@ -26,6 +26,18 @@ for f in "$SCRIPT_DIR"/../examples/models/*.gnn; do
   cargo run --release --quiet -- validate --model-file "$f" --scale 11 > /dev/null
 done
 
+# Profiler smoke: `bench --profile` at tiny scale — the walk-level phase
+# profiler and the kernel-vs-legacy differential path must not rot, and
+# the profile JSON trailer bench.sh embeds must stay present.
+echo "== profiler smoke: bench --profile at tiny scale =="
+prof_out=$(cargo run --release --quiet -- bench --model GCN --dataset AK \
+  --scale 12 --iters 1 --profile)
+echo "$prof_out" | grep -q '^exec_profile_json={' \
+  || { echo "bench --profile lost its exec_profile_json trailer" >&2; exit 1; }
+echo "$prof_out" | grep -q '^exec_ms_legacy=' \
+  || { echo "bench --profile lost its exec_ms_legacy trailer" >&2; exit 1; }
+echo "profiler smoke OK"
+
 # Optional perf step: BENCH=1 ./scripts/check.sh also records the wall
 # clock of `repro --fig 7` + executor throughput into BENCH_exec.json.
 if [[ "${BENCH:-0}" != "0" ]]; then
