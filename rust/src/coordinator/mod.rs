@@ -11,7 +11,7 @@ use std::sync::{Arc, Mutex};
 use crate::baseline::{gpu_run, hygcn_run, GpuConfig, GpuResult, HygcnConfig, HygcnResult};
 use crate::compiler::compile;
 use crate::energy::{switchblade_energy, tbl5_rows, EnergyResult, TBL5};
-use crate::exec::{KernelMode, Matrix, ScratchStats};
+use crate::exec::{KernelMode, Matrix, PipelineMode, ScratchStats};
 use crate::graph::datasets::Dataset;
 use crate::graph::Csr;
 use crate::ir::spec::ModelSpec;
@@ -388,10 +388,16 @@ impl Harness {
 pub struct ExecBench {
     /// Worker-pool width of the parallel run.
     pub workers: usize,
+    /// Interval-pipelining mode of the measured runs.
+    pub pipeline: PipelineMode,
     /// Mean seconds per run, forced single worker (kernel layer).
     pub secs_single: f64,
     /// Mean seconds per run at `workers` (kernel layer).
     pub secs_parallel: f64,
+    /// Mean seconds per run at `workers` with interval pipelining forced
+    /// off — the sequential baseline of [`ExecBench::pipeline_speedup`].
+    /// `None` when the probe itself ran with pipelining off.
+    pub secs_pipeline_off: Option<f64>,
     /// Mean seconds per single-worker run through the preserved naive
     /// compute path ([`KernelMode::Naive`]) — only measured under
     /// `--profile`, so bench.sh can record kernel vs. legacy.
@@ -399,13 +405,18 @@ pub struct ExecBench {
     pub vertices: usize,
     pub iters: usize,
     /// Whether every measured run agreed bit-for-bit (they must):
-    /// single vs. parallel, and — when measured — the legacy path too.
+    /// single vs. parallel vs. pipeline-off, and — when measured — the
+    /// legacy path too.
     pub bit_identical: bool,
     /// Per-(group, phase) wall-time breakdown of one profiled parallel
-    /// run (`--profile` only).
+    /// run (`--profile` only; includes the per-group `prepare` row).
     pub profile: Option<PhaseProfile>,
     /// Scratch-arena hit/miss counters of the parallel run.
     pub scratch: ScratchStats,
+    /// Intervals whose DstBuffer state was prepared under the previous
+    /// interval's gather drain in one parallel run (0 with pipelining
+    /// off or single-interval partitionings).
+    pub prepared_intervals: u64,
 }
 
 impl ExecBench {
@@ -419,6 +430,13 @@ impl ExecBench {
         self.secs_legacy.map(|l| l / self.secs_single)
     }
 
+    /// Interval-pipelining speedup at the parallel width (sequential
+    /// intervals / pipelined intervals); `None` when the probe ran with
+    /// pipelining off.
+    pub fn pipeline_speedup(&self) -> Option<f64> {
+        self.secs_pipeline_off.map(|s| s / self.secs_parallel)
+    }
+
     /// Executor throughput at the parallel width.
     pub fn vertices_per_sec(&self) -> f64 {
         self.vertices as f64 / self.secs_parallel
@@ -429,6 +447,9 @@ impl ExecBench {
 /// one (model IR, graph) workload. Works for any validated `IrGraph` —
 /// zoo entry or user `.gnn` spec — sized from the IR's own input width.
 /// `workers == 0` means "the partitioning's simulated sThread count".
+/// With `pipeline == PipelineMode::Interval` (the `bench` default), the
+/// probe also times `PipelineMode::Off` at the parallel width — the
+/// per-mode numbers `scripts/bench.sh` embeds into `BENCH_exec.json`.
 /// With `profile` set, additionally times the preserved naive kernel path
 /// and records a per-(group, phase) [`PhaseProfile`] of one parallel run.
 pub fn bench_executor(
@@ -438,7 +459,9 @@ pub fn bench_executor(
     workers: usize,
     iters: usize,
     profile: bool,
+    pipeline: PipelineMode,
 ) -> ExecBench {
+    #[allow(clippy::too_many_arguments)]
     fn timed(
         prog: &Program,
         parts: &Partitions,
@@ -447,10 +470,12 @@ pub fn bench_executor(
         workers: usize,
         iters: usize,
         mode: KernelMode,
-    ) -> (f64, Matrix, ScratchStats) {
+        pipeline: PipelineMode,
+    ) -> (f64, Matrix, ScratchStats, u64) {
         let mut ex = crate::exec::Executor::new(prog, parts)
             .with_workers(workers)
-            .with_kernel_mode(mode);
+            .with_kernel_mode(mode)
+            .with_pipeline_mode(pipeline);
         let t0 = std::time::Instant::now();
         let mut out = ex.run(x, deg);
         for _ in 1..iters {
@@ -460,6 +485,7 @@ pub fn bench_executor(
             t0.elapsed().as_secs_f64() / iters as f64,
             out,
             ex.scratch_stats(),
+            ex.prepared_intervals(),
         )
     }
 
@@ -477,19 +503,50 @@ pub fn bench_executor(
     for v in 0..g.num_vertices() {
         deg.set(v, 0, g.in_degree(v as u32) as f32);
     }
-    let (secs_single, out_single, _) =
-        timed(&prog, &parts, &x, &deg, 1, iters, KernelMode::Blocked);
-    let (secs_parallel, out_parallel, scratch) =
-        timed(&prog, &parts, &x, &deg, workers, iters, KernelMode::Blocked);
+    let (secs_single, out_single, _, _) =
+        timed(&prog, &parts, &x, &deg, 1, iters, KernelMode::Blocked, pipeline);
+    let (secs_parallel, out_parallel, scratch, prepared_intervals) =
+        timed(&prog, &parts, &x, &deg, workers, iters, KernelMode::Blocked, pipeline);
     let mut bit_identical = out_single.bits_eq(&out_parallel);
+    // Pipelined probes also time the sequential interval order at the
+    // same width — the per-mode comparison the pipeline speedup is made
+    // of — and fold its output into the bit-identity verdict.
+    let secs_pipeline_off = if pipeline == PipelineMode::Interval {
+        let (off_s, out_off, _, _) = timed(
+            &prog,
+            &parts,
+            &x,
+            &deg,
+            workers,
+            iters,
+            KernelMode::Blocked,
+            PipelineMode::Off,
+        );
+        bit_identical = bit_identical && out_single.bits_eq(&out_off);
+        Some(off_s)
+    } else {
+        None
+    };
     let (secs_legacy, profile_data) = if profile {
-        let (legacy_s, out_legacy, _) =
-            timed(&prog, &parts, &x, &deg, 1, iters, KernelMode::Naive);
+        // The legacy reference is doubly golden: naive kernels AND
+        // strictly sequential intervals.
+        let (legacy_s, out_legacy, _, _) = timed(
+            &prog,
+            &parts,
+            &x,
+            &deg,
+            1,
+            iters,
+            KernelMode::Naive,
+            PipelineMode::Off,
+        );
         bit_identical = bit_identical && out_single.bits_eq(&out_legacy);
         // Warm the scratch pools with one discarded run first, so the
         // profile reflects steady-state phase costs (what the timed
         // iterations measure), not first-interval pool allocation.
-        let mut ex = crate::exec::Executor::new(&prog, &parts).with_workers(workers);
+        let mut ex = crate::exec::Executor::new(&prog, &parts)
+            .with_workers(workers)
+            .with_pipeline_mode(pipeline);
         let _ = ex.run(&x, &deg);
         let (_, p) = ex.run_profiled(&x, &deg);
         (Some(legacy_s), Some(p))
@@ -498,14 +555,17 @@ pub fn bench_executor(
     };
     ExecBench {
         workers,
+        pipeline,
         secs_single,
         secs_parallel,
+        secs_pipeline_off,
         secs_legacy,
         vertices: g.num_vertices(),
         iters,
         bit_identical,
         profile: profile_data,
         scratch,
+        prepared_intervals,
     }
 }
 
@@ -513,8 +573,22 @@ pub fn bench_executor(
 /// compiled executor against the IR reference on a sampled graph. Works
 /// for any validated `IrGraph`, sized from the IR's own input width —
 /// this is the differential check a user-supplied `.gnn` spec runs
-/// through `switchblade validate --model-file`.
+/// through `switchblade validate --model-file`. Runs the executor at its
+/// default (pipelined) mode; see [`validate_numerics_pipelined`].
 pub fn validate_numerics(ir: &IrGraph, g: &Csr, accel: &AcceleratorConfig) -> f32 {
+    validate_numerics_pipelined(ir, g, accel, PipelineMode::default())
+}
+
+/// [`validate_numerics`] with an explicit executor pipeline mode —
+/// `switchblade validate --pipeline off` routes here, the CLI escape
+/// hatch for diffing a suspected pipelining issue against the strictly
+/// sequential reference order.
+pub fn validate_numerics_pipelined(
+    ir: &IrGraph,
+    g: &Csr,
+    accel: &AcceleratorConfig,
+    pipeline: PipelineMode,
+) -> f32 {
     let prog = compile(ir);
     let pc = accel.partition_config(&prog);
     let parts = partition_fggp(g, pc);
@@ -523,7 +597,9 @@ pub fn validate_numerics(ir: &IrGraph, g: &Csr, accel: &AcceleratorConfig) -> f3
     for v in 0..g.num_vertices() {
         deg.set(v, 0, g.in_degree(v as u32) as f32);
     }
-    let got = crate::exec::Executor::new(&prog, &parts).run(&x, &deg);
+    let got = crate::exec::Executor::new(&prog, &parts)
+        .with_pipeline_mode(pipeline)
+        .run(&x, &deg);
     let want = crate::exec::reference::evaluate(ir, g, &x);
     got.max_abs_diff(&want)
 }
@@ -577,12 +653,24 @@ mod tests {
             .unwrap()
             .build(ModelDims::uniform(2, 32))
             .unwrap();
-        let b = bench_executor(&ir, &g, &AcceleratorConfig::switchblade(), 2, 1, false);
+        let b = bench_executor(
+            &ir,
+            &g,
+            &AcceleratorConfig::switchblade(),
+            2,
+            1,
+            false,
+            PipelineMode::Interval,
+        );
         assert!(b.bit_identical, "parallel executor diverged bitwise");
         assert!(b.secs_single > 0.0 && b.secs_parallel > 0.0);
         assert_eq!(b.workers, 2);
         assert!(b.vertices_per_sec() > 0.0);
         assert!(b.speedup() > 0.0);
+        // Pipelined probes time the sequential interval order too.
+        assert_eq!(b.pipeline, PipelineMode::Interval);
+        let off = b.secs_pipeline_off.expect("pipeline-off baseline measured");
+        assert!(off > 0.0 && b.pipeline_speedup().unwrap() > 0.0);
         // Non-profiled probes skip the legacy run and the phase profile.
         assert!(b.secs_legacy.is_none() && b.profile.is_none());
         assert!(b.scratch.hits + b.scratch.misses > 0);
@@ -597,14 +685,47 @@ mod tests {
             .unwrap()
             .build(ModelDims::uniform(2, 16))
             .unwrap();
-        let b = bench_executor(&ir, &g, &AcceleratorConfig::switchblade(), 2, 1, true);
-        assert!(b.bit_identical, "kernel/legacy/parallel runs diverged");
+        let b = bench_executor(
+            &ir,
+            &g,
+            &AcceleratorConfig::switchblade(),
+            2,
+            1,
+            true,
+            PipelineMode::Interval,
+        );
+        assert!(b.bit_identical, "kernel/legacy/pipeline/parallel runs diverged");
         let legacy = b.secs_legacy.expect("legacy timing measured");
         assert!(legacy > 0.0 && b.kernel_speedup().unwrap() > 0.0);
         let p = b.profile.as_ref().expect("phase profile recorded");
         assert!(!p.groups.is_empty());
         assert!(p.groups.iter().map(|g| g.shards).sum::<u64>() > 0);
         assert!(p.to_json().contains("\"groups\""));
+    }
+
+    #[test]
+    fn bench_executor_pipeline_off_is_sequential() {
+        let cache = GraphCache::new(11);
+        let g = cache.get(Dataset::Ak);
+        let ir = ModelZoo::builtin()
+            .get("gcn")
+            .unwrap()
+            .build(ModelDims::uniform(2, 16))
+            .unwrap();
+        let b = bench_executor(
+            &ir,
+            &g,
+            &AcceleratorConfig::switchblade(),
+            1,
+            1,
+            false,
+            PipelineMode::Off,
+        );
+        assert!(b.bit_identical);
+        assert_eq!(b.pipeline, PipelineMode::Off);
+        // No pipelined run, no baseline to compare against, no prefetch.
+        assert!(b.secs_pipeline_off.is_none() && b.pipeline_speedup().is_none());
+        assert_eq!(b.prepared_intervals, 0, "off mode must not prefetch");
     }
 
     #[test]

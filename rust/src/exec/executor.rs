@@ -29,16 +29,32 @@
 //!   first interval of a group has sized the pools (steady state; exact
 //!   under deterministic single-worker assignment, asymptotic under the
 //!   racy multi-worker pool whose per-worker arenas warm independently).
+//! * **Interval pipelining** ([`PipelineMode::Interval`], the default):
+//!   the phases of consecutive intervals overlap on different resources,
+//!   exactly as the paper's partition-level multi-threading (§IV-C) and
+//!   the cycle simulator's SLMT timing model describe. While interval
+//!   *i*'s shards drain through the worker pool, the main (iThread)
+//!   thread prepares interval *i+1*'s DstBuffer state — ScatterPhase LDs
+//!   and computes plus the pre-created gather accumulators — into a
+//!   second `IntervalState` ping-ponged through the scratch pools
+//!   (pipeline depth 2). The walk order, merge order, and output bits
+//!   are untouched: only *when* next-interval state is materialised
+//!   changes, and only for groups where that is provably safe (no
+//!   ScatterPhase STs, no ScatterPhase LD of a DataRef the same group
+//!   stores — the prologue group stays strictly sequential).
+//!   [`PipelineMode::Off`] preserves the sequential order as the golden
+//!   reference of the pipelining differential tests.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::exec::kernels;
 use crate::exec::reference::{apply_binary, apply_unary};
 use crate::exec::scratch::{IntervalScratch, Pool, ScratchStats, WorkerScratch};
 use crate::exec::{weights, Matrix};
 use crate::isa::{
-    DataRef, Dim, Instr, Program, Reduce, ScatterDir, SlotLayout, Space, Sym,
+    DataRef, Dim, Instr, PhaseGroup, Program, Reduce, ScatterDir, SlotLayout, Space, Sym,
 };
 use crate::partition::{Interval, Partitions, Shard};
 use crate::sched::{
@@ -58,6 +74,38 @@ pub enum KernelMode {
     Naive,
 }
 
+/// Whether the executor overlaps consecutive destination intervals.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Double-buffered interval pipelining: while one interval's shards
+    /// drain through the worker pool, the next interval's DstBuffer state
+    /// is prepared from a second buffer set (walk lookahead, see the
+    /// module docs). Bit-identical to [`PipelineMode::Off`]. The default.
+    #[default]
+    Interval,
+    /// Strictly sequential intervals — the golden reference the
+    /// pipelining differential tests diff against.
+    Off,
+}
+
+impl PipelineMode {
+    /// CLI rendering (`bench --pipeline on|off`, trailer lines).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PipelineMode::Interval => "on",
+            PipelineMode::Off => "off",
+        }
+    }
+}
+
+/// A next-interval state built under the previous interval's gather drain,
+/// waiting for its `begin_interval` to swap it in.
+struct Prepared {
+    group: usize,
+    interval: usize,
+    state: IntervalState,
+}
+
 /// Functional executor over one (program, partitions) pair.
 pub struct Executor<'a> {
     program: &'a Program,
@@ -73,7 +121,9 @@ pub struct Executor<'a> {
     mode: KernelMode,
     /// Live state of the interval currently being walked. Never dropped:
     /// `begin_interval` drains its matrices back into `iv_scratch` and
-    /// re-arms it, so interval state is allocated once per executor.
+    /// re-arms it (or swaps in a prepared standby and keeps this one as
+    /// the spare), so at most two interval states — pipeline depth 2 —
+    /// are ever allocated per executor.
     iv: Option<IntervalState>,
     /// Shard indices queued by `gather_shard`, drained at `end_gather`.
     pending: Vec<usize>,
@@ -87,6 +137,30 @@ pub struct Executor<'a> {
     /// use of its symbol in the phase, so the spill can move the matrix
     /// out of the arena instead of cloning it.
     movable_spills: Vec<Vec<bool>>,
+    /// Interval-pipelining mode (see [`PipelineMode`]).
+    pipeline: PipelineMode,
+    /// Per-group prefetch safety, computed once at construction: a group
+    /// may pipeline only when its ScatterPhase contains no `ST` and no
+    /// `LD` of a DataRef the same group stores — otherwise preparing the
+    /// next interval early would write DRAM ahead of order, or read rows
+    /// the in-flight interval's merge/apply is still producing. (In
+    /// practice this keeps the prologue sweep sequential; groups are DRAM
+    /// barriers for everything else.)
+    prefetchable: Vec<bool>,
+    /// The walker's `lookahead_interval` notice: `(group, next interval)`
+    /// to prepare during the coming `end_gather` drain.
+    lookahead: Option<(usize, usize)>,
+    /// A prepared next-interval state (pipeline depth 2: this plus `iv`).
+    standby: Option<Prepared>,
+    /// Empty `IntervalState` container recycled between preparations, so
+    /// depth-2 pipelining allocates its second state exactly once.
+    spare: Option<IntervalState>,
+    /// True when the current interval's ScatterPhase already ran at
+    /// prepare time — `scatter_phase` then skips, verbatim.
+    scatter_prepared: bool,
+    /// Per-group `(prepared intervals, seconds)` pipelining telemetry for
+    /// the last run; backfilled into `PhaseProfile` by `run_profiled`.
+    prep_stats: Vec<(u64, f64)>,
 }
 
 impl<'a> Executor<'a> {
@@ -112,6 +186,24 @@ impl<'a> Executor<'a> {
                     .collect()
             })
             .collect();
+        let prefetchable = program
+            .groups
+            .iter()
+            .map(|g| {
+                let stores: Vec<usize> = g
+                    .all_instrs()
+                    .filter_map(|i| match i {
+                        Instr::St { data, .. } => Some(data.slot()),
+                        _ => None,
+                    })
+                    .collect();
+                g.scatter.iter().all(|i| match i {
+                    Instr::St { .. } => false,
+                    Instr::Ld { data, .. } => !stores.contains(&data.slot()),
+                    _ => true,
+                })
+            })
+            .collect();
         Executor {
             program,
             parts,
@@ -125,6 +217,13 @@ impl<'a> Executor<'a> {
             pending: Vec::new(),
             shard_scratch: Vec::new(),
             movable_spills,
+            pipeline: PipelineMode::default(),
+            prefetchable,
+            lookahead: None,
+            standby: None,
+            spare: None,
+            scatter_prepared: false,
+            prep_stats: Vec::new(),
         }
     }
 
@@ -143,6 +242,13 @@ impl<'a> Executor<'a> {
         self
     }
 
+    /// Select the interval-pipelining mode (differential tests run
+    /// [`PipelineMode::Off`] as the golden reference).
+    pub fn with_pipeline_mode(mut self, mode: PipelineMode) -> Self {
+        self.pipeline = mode;
+        self
+    }
+
     /// The effective worker-pool width.
     pub fn workers(&self) -> usize {
         self.workers
@@ -151,6 +257,18 @@ impl<'a> Executor<'a> {
     /// The active compute-kernel implementation.
     pub fn kernel_mode(&self) -> KernelMode {
         self.mode
+    }
+
+    /// The active interval-pipelining mode.
+    pub fn pipeline_mode(&self) -> PipelineMode {
+        self.pipeline
+    }
+
+    /// Intervals whose DstBuffer state was prepared ahead of order during
+    /// the last run — 0 when pipelining is off, every group is
+    /// single-interval, or no group is prefetch-safe.
+    pub fn prepared_intervals(&self) -> u64 {
+        self.prep_stats.iter().map(|&(n, _)| n).sum()
     }
 
     /// Aggregate scratch-arena hit/miss counters (interval pools + every
@@ -195,7 +313,17 @@ impl<'a> Executor<'a> {
         let walk = PartitionWalk::new(self.program, self.parts);
         let mut prof = Profiler::new(&mut *self);
         walk.drive(&mut prof);
-        let profile = prof.into_profile();
+        let mut profile = prof.into_profile();
+        // Backfill the pipelining columns: the sched Profiler times hooks,
+        // but next-interval preparation runs *inside* the `end_gather`
+        // drain, overlapped with the worker pool — only the executor
+        // knows how many intervals were prepared and for how long.
+        for (gi, &(prepared, secs)) in self.prep_stats.iter().enumerate() {
+            if let Some(g) = profile.groups.get_mut(gi) {
+                g.prepared = prepared;
+                g.prepare_s = secs;
+            }
+        }
         (self.take_output(), profile)
     }
 
@@ -205,6 +333,17 @@ impl<'a> Executor<'a> {
         self.dram = vec![None; self.layout.dram];
         self.dram[DataRef::Input.slot()] = Some(x.clone());
         self.dram[DataRef::Degree.slot()] = Some(degree.clone());
+        // Re-arm the pipeline for a fresh walk. A completed walk leaves no
+        // standby (the last interval has no lookahead), but recycle one
+        // defensively so its buffers flow back into the pools.
+        self.lookahead = None;
+        self.scatter_prepared = false;
+        self.prep_stats.clear();
+        if let Some(p) = self.standby.take() {
+            let mut st = p.state;
+            st.recycle(&mut self.iv_scratch);
+            self.spare = Some(st);
+        }
     }
 
     /// Move the output matrix out of its DRAM slot (no copy — the run is
@@ -234,58 +373,31 @@ impl<'a> Executor<'a> {
     // ---- interval-phase execution (Scatter / Apply) --------------------------
 
     fn exec_interval_instr(&mut self, i: &Instr, iv: &mut IntervalState) {
-        let v = iv.len();
-        match i {
-            Instr::Ld { sym, data, cols, .. } => {
-                let src = self.dram[data.slot()]
-                    .as_ref()
-                    .unwrap_or_else(|| panic!("LD of unwritten {data}"));
-                let slot = sym.id as usize;
-                let mut m = self.iv_scratch.m.take_matrix_any(slot, v, *cols as usize);
-                for (r, gv) in (iv.begin..iv.end).enumerate() {
-                    m.row_mut(r).copy_from_slice(src.row(gv));
-                }
-                if let Some(old) = iv.d[slot].replace(m) {
-                    self.iv_scratch.m.give(slot, old.data);
-                }
+        if let Instr::St { sym, data, cols, .. } = i {
+            // ST — the one interval instruction that writes DRAM, so it
+            // stays on the sequential path (prefetch-unsafe groups never
+            // reach the prepare-ahead code).
+            let slot = data.slot();
+            if self.dram[slot].is_none() {
+                self.dram[slot] = Some(Matrix::zeros(self.parts.num_vertices, *cols as usize));
             }
-            Instr::St { sym, data, cols, .. } => {
-                let slot = data.slot();
-                if self.dram[slot].is_none() {
-                    self.dram[slot] =
-                        Some(Matrix::zeros(self.parts.num_vertices, *cols as usize));
-                }
-                let m = iv.d[sym.id as usize]
-                    .as_ref()
-                    .unwrap_or_else(|| panic!("ST of undefined {sym}"));
-                let dst = self.dram[slot].as_mut().unwrap();
-                for (r, gv) in (iv.begin..iv.end).enumerate() {
-                    dst.row_mut(gv).copy_from_slice(m.row(r));
-                }
+            let m = iv.d[sym.id as usize]
+                .as_ref()
+                .unwrap_or_else(|| panic!("ST of undefined {sym}"));
+            let dst = self.dram[slot].as_mut().unwrap();
+            for (r, gv) in (iv.begin..iv.end).enumerate() {
+                dst.row_mut(gv).copy_from_slice(m.row(r));
             }
-            _ => {
-                let def = i.def().expect("compute defines");
-                let slot = def.id as usize;
-                let out = match self.mode {
-                    KernelMode::Blocked => compute_instr_kernel(
-                        i,
-                        v,
-                        &self.weights,
-                        None,
-                        None,
-                        &iv.d,
-                        &mut self.iv_scratch.m,
-                        slot,
-                    ),
-                    KernelMode::Naive => {
-                        compute_instr_naive(i, v, &self.weights, None, None, &iv.d)
-                    }
-                };
-                if let Some(old) = iv.d[slot].replace(out) {
-                    self.iv_scratch.m.give(slot, old.data);
-                }
-            }
+            return;
         }
+        exec_interval_read_instr(
+            i,
+            iv,
+            &self.dram,
+            &self.weights,
+            &mut self.iv_scratch,
+            self.mode,
+        );
     }
 
     // ---- shard-phase execution (Gather) ---------------------------------------
@@ -294,70 +406,152 @@ impl<'a> Executor<'a> {
     /// merge their partial results in canonical shard order. However the
     /// workers raced, the merge sees the same partials in the same order,
     /// so any pool width is bit-identical to a single worker.
+    ///
+    /// When the walker announced a lookahead (pipelining on, group
+    /// prefetch-safe), the next interval's DstBuffer state is prepared on
+    /// this thread *while the workers drain* — the software realisation
+    /// of the paper's interval overlap. The standby state is swapped in
+    /// by the next `begin_interval`; the serial (≤1 worker) path prepares
+    /// after the drain so buffer-pool traffic stays deterministic at any
+    /// width.
     fn run_pending_shards(&mut self, cx: &StepCtx) {
         let mut pending = std::mem::take(&mut self.pending);
-        if pending.is_empty() {
+        let prefetch = self
+            .lookahead
+            .take()
+            .and_then(|(g, i)| (g == cx.group_idx).then_some(i));
+        if pending.is_empty() && prefetch.is_none() {
+            self.pending = pending; // keep the capacity for the next interval
             return;
         }
-        let workers = self.workers.min(pending.len()).max(1);
-        while self.shard_scratch.len() < workers {
-            self.shard_scratch
-                .push(Mutex::new(WorkerScratch::new(&self.layout)));
-        }
-        let mut iv = self.iv.take().expect("interval state");
-        let outs: Vec<ShardOut> = {
-            let env = ShardEnv {
-                layout: &self.layout,
-                weights: &self.weights,
-                dram: &self.dram,
-                iv: &iv,
-                parts: self.parts,
-                gather: &cx.group.gather[..],
-                movable: &self.movable_spills[cx.group_idx][..],
-                mode: self.mode,
-            };
-            if workers <= 1 {
-                let mut ws = self.shard_scratch[0].lock().unwrap();
-                pending
-                    .iter()
-                    .map(|&si| env.run_shard(si, &mut ws, 0))
-                    .collect()
-            } else {
-                let cells: Vec<Mutex<Option<ShardOut>>> =
-                    pending.iter().map(|_| Mutex::new(None)).collect();
-                let next = AtomicUsize::new(0);
-                let (env_ref, cells_ref, next_ref, pending_ref) =
-                    (&env, &cells, &next, &pending);
-                std::thread::scope(|scope| {
-                    for (w, ws_cell) in self.shard_scratch[..workers].iter().enumerate() {
-                        scope.spawn(move || {
-                            let mut ws = ws_cell.lock().unwrap();
-                            loop {
-                                // Dynamic assignment: the next shard goes to
-                                // whichever worker frees first (the software
-                                // analogue of the phase scheduler, §V-B2).
-                                let k = next_ref.fetch_add(1, Ordering::Relaxed);
-                                if k >= pending_ref.len() {
-                                    break;
-                                }
-                                let out = env_ref.run_shard(pending_ref[k], &mut ws, w);
-                                *cells_ref[k].lock().unwrap() = Some(out);
-                            }
-                        });
-                    }
-                });
-                cells
-                    .into_iter()
-                    .map(|c| c.into_inner().unwrap().expect("worker filled its slot"))
-                    .collect()
+        // Rebind the standby container up front (recycling whatever the
+        // spare held) so pool take order is independent of the drain.
+        let mut standby = prefetch.map(|ni| {
+            let mut st = self
+                .spare
+                .take()
+                .unwrap_or_else(|| IntervalState::empty(&self.layout));
+            st.reset(&self.parts.intervals[ni], &mut self.iv_scratch);
+            (ni, st)
+        });
+        let mut prep_s = 0.0f64;
+        if pending.is_empty() {
+            // An interval with no shards still pipelines the next one.
+            prep_s = timed_prepare(
+                cx.group,
+                &mut standby,
+                &self.dram,
+                &self.weights,
+                &mut self.iv_scratch,
+                self.mode,
+            );
+        } else {
+            let workers = self.workers.min(pending.len()).max(1);
+            while self.shard_scratch.len() < workers {
+                self.shard_scratch
+                    .push(Mutex::new(WorkerScratch::new(&self.layout)));
             }
-        };
-        for (&si, out) in pending.iter().zip(outs) {
-            self.merge_shard(&mut iv, si, out);
+            let mut iv = self.iv.take().expect("interval state");
+            let outs: Vec<ShardOut> = {
+                // `scratch` (the main thread's prepare arena) and the
+                // worker-facing borrows inside `env` are disjoint fields,
+                // so the prepare can run under the pool without touching
+                // anything a worker reads.
+                let scratch = &mut self.iv_scratch;
+                let worker_arenas = &self.shard_scratch;
+                let env = ShardEnv {
+                    layout: &self.layout,
+                    weights: &self.weights,
+                    dram: &self.dram,
+                    iv: &iv,
+                    parts: self.parts,
+                    gather: &cx.group.gather[..],
+                    movable: &self.movable_spills[cx.group_idx][..],
+                    mode: self.mode,
+                };
+                if workers <= 1 {
+                    let outs: Vec<ShardOut> = {
+                        let mut ws = worker_arenas[0].lock().unwrap();
+                        pending
+                            .iter()
+                            .map(|&si| env.run_shard(si, &mut ws, 0))
+                            .collect()
+                    };
+                    prep_s = timed_prepare(
+                        cx.group,
+                        &mut standby,
+                        env.dram,
+                        env.weights,
+                        scratch,
+                        env.mode,
+                    );
+                    outs
+                } else {
+                    let cells: Vec<Mutex<Option<ShardOut>>> =
+                        pending.iter().map(|_| Mutex::new(None)).collect();
+                    let next = AtomicUsize::new(0);
+                    let (env_ref, cells_ref, next_ref, pending_ref) =
+                        (&env, &cells, &next, &pending);
+                    std::thread::scope(|scope| {
+                        for (w, ws_cell) in worker_arenas[..workers].iter().enumerate() {
+                            scope.spawn(move || {
+                                let mut ws = ws_cell.lock().unwrap();
+                                loop {
+                                    // Dynamic assignment: the next shard goes to
+                                    // whichever worker frees first (the software
+                                    // analogue of the phase scheduler, §V-B2).
+                                    let k = next_ref.fetch_add(1, Ordering::Relaxed);
+                                    if k >= pending_ref.len() {
+                                        break;
+                                    }
+                                    let out = env_ref.run_shard(pending_ref[k], &mut ws, w);
+                                    *cells_ref[k].lock().unwrap() = Some(out);
+                                }
+                            });
+                        }
+                        // The overlap: interval i+1's iThread preparation
+                        // runs here, concurrent with interval i's sThread
+                        // drain above.
+                        prep_s = timed_prepare(
+                            cx.group,
+                            &mut standby,
+                            env.dram,
+                            env.weights,
+                            scratch,
+                            env.mode,
+                        );
+                    });
+                    cells
+                        .into_iter()
+                        .map(|c| c.into_inner().unwrap().expect("worker filled its slot"))
+                        .collect()
+                }
+            };
+            for (&si, out) in pending.iter().zip(outs) {
+                self.merge_shard(&mut iv, si, out);
+            }
+            pending.clear();
+            self.iv = Some(iv);
         }
-        pending.clear();
         self.pending = pending; // keep the capacity for the next interval
-        self.iv = Some(iv);
+        if let Some((ni, st)) = standby {
+            self.note_prepared(cx.group_idx, prep_s);
+            self.standby = Some(Prepared {
+                group: cx.group_idx,
+                interval: ni,
+                state: st,
+            });
+        }
+    }
+
+    /// Record one prepared interval in the per-group pipeline telemetry.
+    fn note_prepared(&mut self, group: usize, secs: f64) {
+        if self.prep_stats.len() <= group {
+            self.prep_stats.resize(group + 1, (0, 0.0));
+        }
+        let (n, s) = &mut self.prep_stats[group];
+        *n += 1;
+        *s += secs;
     }
 
     /// Fold one shard's partial accumulators and spills into the interval
@@ -410,6 +604,28 @@ impl<'a> Executor<'a> {
 
 impl PhaseVisitor for Executor<'_> {
     fn begin_interval(&mut self, cx: &StepCtx) {
+        self.scatter_prepared = false;
+        if let Some(p) = self.standby.take() {
+            if p.group == cx.group_idx && p.interval == cx.interval_idx {
+                // The pipeline ping-pong: the prepared state becomes the
+                // live one; the outgoing interval's buffers flow back
+                // into the pools and its container becomes the spare for
+                // the next preparation.
+                if let Some(mut old) = self.iv.take() {
+                    old.recycle(&mut self.iv_scratch);
+                    self.spare = Some(old);
+                }
+                self.iv = Some(p.state);
+                self.scatter_prepared = true;
+                self.pending.clear();
+                return;
+            }
+            // Stale standby (unreachable under the walk contract —
+            // defensive): recycle its buffers and container.
+            let mut st = p.state;
+            st.recycle(&mut self.iv_scratch);
+            self.spare = Some(st);
+        }
         let mut st = self
             .iv
             .take()
@@ -420,21 +636,19 @@ impl PhaseVisitor for Executor<'_> {
     }
 
     fn scatter_phase(&mut self, cx: &StepCtx) {
+        if std::mem::take(&mut self.scatter_prepared) {
+            // Already ran at prepare time, under the previous interval's
+            // gather drain — LDs, computes and the pre-created gather
+            // accumulators are in place, verbatim.
+            return;
+        }
         let mut iv = self.iv.take().expect("interval state");
         for i in &cx.group.scatter {
             self.exec_interval_instr(i, &mut iv);
         }
         // Gather accumulators exist per interval even when the interval
         // has no shards (isolated destination ranges).
-        for i in &cx.group.gather {
-            match i {
-                Instr::Gather { reduce, dst, cols, .. }
-                | Instr::FusedGather { reduce, dst, cols, .. } => {
-                    iv.ensure_acc(*dst, *reduce, *cols as usize, &mut self.iv_scratch);
-                }
-                _ => {}
-            }
-        }
+        ensure_accs(cx.group, &mut iv, &mut self.iv_scratch);
         self.iv = Some(iv);
     }
 
@@ -442,6 +656,17 @@ impl PhaseVisitor for Executor<'_> {
         // Schedule point only — the pool drains at `end_gather` so shards
         // overlap while the merge order stays canonical.
         self.pending.push(shard_idx);
+    }
+
+    fn lookahead_interval(&mut self, cx: &StepCtx, next: &StepCtx) {
+        // Record the walker's lookahead; the coming `end_gather` drain
+        // consumes it and prepares that interval's DstBuffer state under
+        // the worker pool. Gated on the group's prefetch safety so the
+        // ST-bearing prologue (and any intra-group DRAM dependence) keeps
+        // the strictly sequential order.
+        if self.pipeline == PipelineMode::Interval && self.prefetchable[cx.group_idx] {
+            self.lookahead = Some((next.group_idx, next.interval_idx));
+        }
     }
 
     fn end_gather(&mut self, cx: &StepCtx) {
@@ -487,11 +712,9 @@ impl IntervalState {
         }
     }
 
-    /// Point the state at a new interval, recycling every buffer the
-    /// previous interval left behind.
-    fn reset(&mut self, iv: &Interval, scratch: &mut IntervalScratch) {
-        self.begin = iv.begin as usize;
-        self.end = iv.end as usize;
+    /// Drain every buffer this state holds back into the scratch pools
+    /// (the state stays usable as an empty container).
+    fn recycle(&mut self, scratch: &mut IntervalScratch) {
         for (slot, m) in self.d.iter_mut().enumerate() {
             if let Some(m) = m.take() {
                 scratch.m.give(slot, m.data);
@@ -503,6 +726,14 @@ impl IntervalState {
                 scratch.counts.give(slot, a.counts);
             }
         }
+    }
+
+    /// Point the state at a new interval, recycling every buffer the
+    /// previous interval left behind.
+    fn reset(&mut self, iv: &Interval, scratch: &mut IntervalScratch) {
+        self.recycle(scratch);
+        self.begin = iv.begin as usize;
+        self.end = iv.end as usize;
     }
 
     fn len(&self) -> usize {
@@ -886,6 +1117,106 @@ impl ShardEnv<'_> {
             }
         }
     }
+}
+
+/// Execute one ScatterPhase/ApplyPhase instruction that only *reads*
+/// DRAM — `LD` or compute. `ST`, the one DRAM-writing interval
+/// instruction, is handled by the sequential caller
+/// (`Executor::exec_interval_instr`); the pipelined prepare path never
+/// sees one because ST-bearing ScatterPhases are not prefetch-safe.
+fn exec_interval_read_instr(
+    i: &Instr,
+    iv: &mut IntervalState,
+    dram: &[Option<Matrix>],
+    weights: &[Option<Matrix>],
+    scratch: &mut IntervalScratch,
+    mode: KernelMode,
+) {
+    let v = iv.len();
+    match i {
+        Instr::Ld { sym, data, cols, .. } => {
+            let src = dram[data.slot()]
+                .as_ref()
+                .unwrap_or_else(|| panic!("LD of unwritten {data}"));
+            let slot = sym.id as usize;
+            let mut m = scratch.m.take_matrix_any(slot, v, *cols as usize);
+            for (r, gv) in (iv.begin..iv.end).enumerate() {
+                m.row_mut(r).copy_from_slice(src.row(gv));
+            }
+            if let Some(old) = iv.d[slot].replace(m) {
+                scratch.m.give(slot, old.data);
+            }
+        }
+        Instr::St { .. } => unreachable!("ST is the sequential caller's case"),
+        _ => {
+            let def = i.def().expect("compute defines");
+            let slot = def.id as usize;
+            let out = match mode {
+                KernelMode::Blocked => {
+                    compute_instr_kernel(i, v, weights, None, None, &iv.d, &mut scratch.m, slot)
+                }
+                KernelMode::Naive => compute_instr_naive(i, v, weights, None, None, &iv.d),
+            };
+            if let Some(old) = iv.d[slot].replace(out) {
+                scratch.m.give(slot, old.data);
+            }
+        }
+    }
+}
+
+/// Pre-create the interval's gather accumulators (first touch zeroes them
+/// — mirrors the hardware's phase-scheduler reset). Shared by the
+/// sequential `scatter_phase` and the pipelined prepare.
+fn ensure_accs(group: &PhaseGroup, iv: &mut IntervalState, scratch: &mut IntervalScratch) {
+    for i in &group.gather {
+        match i {
+            Instr::Gather { reduce, dst, cols, .. }
+            | Instr::FusedGather { reduce, dst, cols, .. } => {
+                iv.ensure_acc(*dst, *reduce, *cols as usize, scratch);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// The single timed entry point all three `run_pending_shards` arms
+/// (empty-pending, serial, threaded) share: run [`prepare_interval`] for
+/// the standby, if one is planned, and return the seconds spent.
+fn timed_prepare(
+    group: &PhaseGroup,
+    standby: &mut Option<(usize, IntervalState)>,
+    dram: &[Option<Matrix>],
+    weights: &[Option<Matrix>],
+    scratch: &mut IntervalScratch,
+    mode: KernelMode,
+) -> f64 {
+    let Some((_, st)) = standby.as_mut() else {
+        return 0.0;
+    };
+    let t0 = Instant::now();
+    prepare_interval(group, st, dram, weights, scratch, mode);
+    t0.elapsed().as_secs_f64()
+}
+
+/// Build a (rebound) standby `IntervalState` for the *next* interval of a
+/// prefetch-safe group: run its ScatterPhase LDs/computes and pre-create
+/// its gather accumulators. Runs on the main thread, overlapped with the
+/// current interval's worker-pool drain — every input it reads (DRAM
+/// arrays, weights) is provably unchanged until the interval's own
+/// `scatter_phase` slot in the sequential order, so the prepared state is
+/// bit-identical to what `PipelineMode::Off` would build there.
+fn prepare_interval(
+    group: &PhaseGroup,
+    st: &mut IntervalState,
+    dram: &[Option<Matrix>],
+    weights: &[Option<Matrix>],
+    scratch: &mut IntervalScratch,
+    mode: KernelMode,
+) {
+    for i in &group.scatter {
+        exec_interval_read_instr(i, st, dram, weights, scratch, mode);
+    }
+    ensure_accs(group, st, scratch);
 }
 
 /// Resolve a compute operand against the slot arenas: W from `weights`,

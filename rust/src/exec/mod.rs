@@ -23,6 +23,14 @@
 //! (slot-keyed buffer pools making the walk allocation-free in steady
 //! state). [`KernelMode::Naive`] keeps the pre-kernel compute path alive
 //! purely as the differential-test reference.
+//!
+//! Consecutive destination intervals are pipelined by default
+//! ([`PipelineMode::Interval`]): while one interval's shards drain
+//! through the worker pool, the next interval's DstBuffer state is
+//! prepared from a second buffer set ping-ponged through the scratch
+//! pools — the functional realisation of the simulator's interval-overlap
+//! timing. [`PipelineMode::Off`] preserves the strictly sequential order
+//! as the golden reference of the pipelining differential tests.
 
 mod executor;
 pub mod kernels;
@@ -31,7 +39,7 @@ pub mod reference;
 pub mod scratch;
 pub mod weights;
 
-pub use executor::{Executor, KernelMode};
+pub use executor::{Executor, KernelMode, PipelineMode};
 pub use matrix::Matrix;
 pub use scratch::ScratchStats;
 

@@ -18,7 +18,14 @@
 //! Layout: one [`Pool`] slot per symbol id (sized from
 //! [`SlotLayout`](crate::isa::SlotLayout)), each slot a small stack of
 //! buffers — a stack because one slot can transiently own two buffers
-//! (e.g. a D symbol that is overwritten within an interval).
+//! (e.g. a D symbol that is overwritten within an interval). Interval
+//! pipelining (`PipelineMode::Interval`) leans on the same property: two
+//! `IntervalState`s are live at once — the active interval and the
+//! standby being prepared under its gather drain — so the interval pools
+//! run two deep per slot in steady state, and the no-new-misses
+//! invariant holds unchanged once the first *two* intervals of a group
+//! have sized them (pinned by
+//! `exec::tests::pipelined_scratch_arena_steady_state_no_new_misses`).
 //! [`WorkerScratch`] is private to one GatherPhase worker thread, so the
 //! pools need no synchronisation beyond the per-worker `Mutex` the
 //! executor holds them in.

@@ -217,6 +217,93 @@ fn kernel_executor_bit_identical_to_naive_reference() {
 }
 
 #[test]
+fn pipelined_executor_bit_identical_to_sequential() {
+    // The interval-pipelining differential property: with
+    // PipelineMode::Interval the next interval's DstBuffer state is
+    // prepared under the previous interval's gather drain, and the output
+    // must still be bit-identical to the strictly sequential
+    // PipelineMode::Off reference — on every zoo model, both partition
+    // methods, and both worker counts (serial prepare and overlapped
+    // prepare exercise different code paths).
+    use crate::exec::PipelineMode;
+    use crate::ir::spec::ModelDims;
+    use crate::ir::zoo::ModelZoo;
+    let g = Csr::from_edge_list(&generators::rmat(1 << 8, 3_000, 0.57, 0.19, 0.19, 31));
+    let deg = degree_col(&g);
+    for m in ModelZoo::builtin().entries() {
+        let ir = m.build(ModelDims::uniform(2, 8)).unwrap();
+        let prog = compile(&ir);
+        // Small budgets force several intervals per group (no intervals,
+        // no pipeline) and several shards per interval.
+        let mut cfg = cfg_for(&prog, 2 * 1024, 4 * 1024);
+        cfg.num_sthreads = 4;
+        let x = weights::init_features(7, g.num_vertices(), ir.input_dim() as usize);
+        for parts in [partition_fggp(&g, cfg), partition_dsw(&g, cfg)] {
+            assert!(parts.intervals.len() > 1, "need intervals to pipeline");
+            let golden = Executor::new(&prog, &parts)
+                .with_pipeline_mode(PipelineMode::Off)
+                .with_workers(1)
+                .run(&x, &deg);
+            for workers in [1usize, 4] {
+                let mut ex = Executor::new(&prog, &parts)
+                    .with_pipeline_mode(PipelineMode::Interval)
+                    .with_workers(workers);
+                let got = ex.run(&x, &deg);
+                assert!(
+                    ex.prepared_intervals() > 0,
+                    "{} ({:?}, {workers} workers): pipelining never engaged",
+                    m.name(),
+                    parts.method,
+                );
+                assert!(
+                    got.bits_eq(&golden),
+                    "{} ({:?}, {workers} workers): pipelined run diverged bitwise \
+                     from the sequential reference",
+                    m.name(),
+                    parts.method,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_scratch_arena_steady_state_no_new_misses() {
+    // Interval pipelining holds two interval states live at once (the
+    // active one plus the standby being prepared), so the interval pools
+    // run two deep per slot. The allocation-freedom property must hold at
+    // that depth: once the first run has sized the pools, a repeat run
+    // (single worker, deterministic prepare order) allocates nothing.
+    use crate::exec::PipelineMode;
+    let g = Csr::from_edge_list(&generators::rmat(1 << 8, 3_000, 0.57, 0.19, 0.19, 37));
+    let ir = Model::Gcn.build(2, 8, 8, 8);
+    let prog = compile(&ir);
+    let cfg = cfg_for(&prog, 2 * 1024, 4 * 1024);
+    let parts = partition_fggp(&g, cfg);
+    assert!(
+        parts.intervals.len() > 1,
+        "need multiple intervals to exercise depth-2 buffer reuse"
+    );
+    let x = weights::init_features(7, g.num_vertices(), 8);
+    let deg = degree_col(&g);
+    let mut ex = Executor::new(&prog, &parts)
+        .with_pipeline_mode(PipelineMode::Interval)
+        .with_workers(1);
+    let out1 = ex.run(&x, &deg);
+    assert!(ex.prepared_intervals() > 0, "pipelining never engaged");
+    let warm = ex.scratch_stats();
+    assert!(warm.misses > 0, "first run must populate the pools");
+    let out2 = ex.run(&x, &deg);
+    let steady = ex.scratch_stats();
+    assert_eq!(
+        steady.misses, warm.misses,
+        "steady-state pipelined run allocated fresh buffers (pool misses grew)"
+    );
+    assert!(steady.hits > warm.hits, "steady-state run bypassed the pools");
+    assert!(out1.bits_eq(&out2), "repeat pipelined run diverged bitwise");
+}
+
+#[test]
 fn scratch_arena_steady_state_no_new_misses() {
     // The allocation-freedom property: once the first run has sized every
     // pool, a repeat run (identical shard/interval demands, single worker

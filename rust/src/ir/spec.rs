@@ -46,7 +46,8 @@
 //! referring to it).
 //!
 //! Dimension, seed and range arguments are single-token integer
-//! expressions over `+` and `*` (no spaces): literals and the symbols
+//! expressions over `+`, `-` and `*` (no spaces, no parentheses or unary
+//! minus — `A-B+C` reads `A + (-B) + C`): literals and the symbols
 //! `IN`, `HID`, `OUT`, `LAYERS`, plus — inside a layer block — `L` (the
 //! layer index) and `DI`/`DO` (the layer's input/output width, following
 //! the stacked-layer convention: `DI = IN if L == 0 else HID`,
@@ -138,7 +139,8 @@ enum Factor {
     Var(Var),
 }
 
-/// A `+`/`*` integer expression, stored as a sum of products.
+/// A `+`/`-`/`*` integer expression, stored as a signed sum of products
+/// (a subtracted term carries a literal `-1` factor).
 #[derive(Clone, Debug, PartialEq)]
 struct Expr {
     terms: Vec<Vec<Factor>>,
@@ -147,8 +149,18 @@ struct Expr {
 
 fn parse_expr(tok: &str, line: u32) -> Result<Expr, IrError> {
     let mut terms = Vec::new();
-    for term in tok.split('+') {
+    // Split into sign-carrying `*`-product terms. There is no unary minus
+    // or parenthesis: `A-B+C` means `A + (-B) + C`, and a leading /
+    // doubled sign falls out as an empty operand below.
+    let mut rest = tok;
+    let mut negated = false;
+    loop {
+        let cut = rest.find(|c| c == '+' || c == '-');
+        let term = &rest[..cut.unwrap_or(rest.len())];
         let mut factors = Vec::new();
+        if negated {
+            factors.push(Factor::Num(-1));
+        }
         for fct in term.split('*') {
             if fct.is_empty() {
                 return Err(
@@ -180,6 +192,13 @@ fn parse_expr(tok: &str, line: u32) -> Result<Expr, IrError> {
             factors.push(f);
         }
         terms.push(factors);
+        match cut {
+            None => break,
+            Some(i) => {
+                negated = rest.as_bytes()[i] == b'-';
+                rest = &rest[i + 1..];
+            }
+        }
     }
     Ok(Expr {
         terms,
@@ -969,6 +988,57 @@ output h
         ] {
             let e = ModelSpec::parse("t", src).unwrap_err();
             assert!(e.message.contains(what), "{src:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn subtraction_in_expressions() {
+        // `-` is a negated term in the sum-of-products grammar: dims,
+        // seeds and layer ranges all accept it.
+        let src = "\
+h = input IN
+W = weight IN 2*HID-OUT seed 10-3
+z = dmm h W
+output z
+";
+        let g = ModelSpec::parse("t", src)
+            .unwrap()
+            .build(ModelDims::new(1, 8, 6, 4))
+            .unwrap();
+        let w = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, IrOp::Weight { .. }))
+            .expect("weight node");
+        assert_eq!(w.cols, 2 * 6 - 4);
+        let IrOp::Weight { seed, .. } = w.op else {
+            unreachable!()
+        };
+        assert_eq!(seed, 7);
+
+        // A `LAYERS-1` range leaves the last layer out.
+        let ranged = "\
+h = input IN
+layer 0..LAYERS-1 {
+  e = scatter_src h
+  h = gather sum e as agg
+}
+output h
+";
+        let g = ModelSpec::parse("t", ranged)
+            .unwrap()
+            .build(ModelDims::uniform(3, 8))
+            .unwrap();
+        assert_eq!(g.num_groups(), 2);
+
+        // Dims that cancel to zero are rejected with the offending line;
+        // dangling / unary minus is malformed.
+        let e = ModelSpec::parse("t", "h = input IN-IN\noutput h\n").unwrap_err();
+        assert!(e.message.contains("evaluates to 0"), "{e}");
+        assert_eq!(e.line, Some(1));
+        for bad in ["h = input -8\noutput h\n", "h = input IN-\noutput h\n"] {
+            let e = ModelSpec::parse("t", bad).unwrap_err();
+            assert!(e.message.contains("empty operand"), "{bad:?}: {e}");
         }
     }
 

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use switchblade::compiler::compile;
 use switchblade::coordinator::{bench_executor, Caches, Harness};
 use switchblade::dse::{self, Objective, TuneOptions};
-use switchblade::exec::weights;
+use switchblade::exec::{weights, PipelineMode};
 use switchblade::graph::datasets::{Dataset, DEFAULT_SCALE};
 use switchblade::ir::spec::{ModelDims, ModelSpec};
 use switchblade::ir::zoo::ModelZoo;
@@ -48,11 +48,11 @@ COMMANDS:
                                            PJRT serving demo over AOT artifacts
                                            (requests >= 1; artifacts exist for the
                                            four paper models only)
-    validate  [--scale N] [--layers N] [--dim D] [--model M]
+    validate  [--scale N] [--layers N] [--dim D] [--model M] [--pipeline on|off]
                                            executor-vs-oracle numerics check over the
                                            zoo (or one model / spec file)
     bench     [--model M] [--dataset D] [--scale N] [--iters N] [--workers W]
-              [--layers N] [--dim D] [--profile]
+              [--layers N] [--dim D] [--pipeline on|off] [--profile]
                                            functional-executor throughput probe
                                            (single vs shard-parallel; bench.sh
                                            folds this into BENCH_exec.json)
@@ -71,15 +71,33 @@ TUNED CONFIGS (--config):
     additionally prints the predicted accelerator latency for the
     serving shape.
 
+PIPELINE (bench/validate --pipeline on|off, default on):
+    The functional executor overlaps consecutive destination intervals
+    (PipelineMode::Interval): while interval i's shards drain through the
+    worker pool, interval i+1's DstBuffer state is prepared from a second
+    buffer set — the software analogue of the paper's partition-level
+    multi-threading (§IV-C), bit-identical to the sequential order.
+    `--pipeline off` forces the strictly sequential reference — the
+    escape hatch for diffing a suspected pipelining issue (`validate
+    --pipeline off` re-runs the oracle check that way). When on, bench
+    also times the off mode at the same worker count and prints the
+    per-mode trailers `exec_pipeline=`, `exec_prepared=`,
+    `exec_ms_pipeline_off=` and `exec_pipeline_speedup=` (embedded into
+    BENCH_exec.json by scripts/bench.sh). `repro` figures come from the
+    cycle simulator, whose SLMT timing always models this overlap — there
+    is no executor mode to toggle there.
+
 PROFILER (bench --profile):
     Adds a walk-level profile of one shard-parallel run: a table with one
-    row per (group, phase) — columns time ms / calls / mean us / share —
-    plus a TOTAL row, and also times the preserved naive (pre-kernel)
-    executor for a kernel-vs-legacy comparison. Machine-readable trailer
-    lines: `exec_ms_legacy=` and `exec_profile_json=` — one JSON object
-    with total_s and per-group scatter_s / gather_s / apply_s /
-    intervals / shards / max_gather_s — which scripts/bench.sh embeds
-    into BENCH_exec.json as the \"profile\" section.
+    row per (group, phase) — scatter / gather / apply plus a `prepare`
+    row counting next-interval preparations overlapped under the gather
+    drain — columns time ms / calls / mean us / share — plus a TOTAL row,
+    and also times the preserved naive (pre-kernel) executor for a
+    kernel-vs-legacy comparison. Machine-readable trailer lines:
+    `exec_ms_legacy=` and `exec_profile_json=` — one JSON object with
+    total_s and per-group scatter_s / gather_s / apply_s / intervals /
+    shards / max_gather_s / prepared / prepare_s — which scripts/bench.sh
+    embeds into BENCH_exec.json as the \"profile\" section.
 "
     )
 }
@@ -119,7 +137,7 @@ fn main() -> ExitCode {
 const VALUE_OPTS: &[&str] = &[
     "--scale", "--method", "--model", "--model-file", "--sthreads", "--budget", "--objective",
     "--out", "--fig", "--tbl", "--config", "--requests", "--dataset", "--iters", "--workers",
-    "--layers", "--dim",
+    "--layers", "--dim", "--pipeline",
 ];
 
 /// Positional arguments: whatever is not an option or an option's value.
@@ -223,6 +241,16 @@ fn opt_dims(
         Ok(ModelDims::uniform(def_layers, def_dim))
     } else {
         Ok(spec.dims())
+    }
+}
+
+/// `--pipeline on|off` for the executor-running subcommands
+/// (bench / validate); defaults to the pipelined executor.
+fn opt_pipeline(rest: &[String]) -> Result<PipelineMode, String> {
+    match opt_val(rest, "--pipeline").unwrap_or("on") {
+        "on" | "interval" => Ok(PipelineMode::Interval),
+        "off" => Ok(PipelineMode::Off),
+        other => Err(format!("bad --pipeline value '{other}' (on|off)")),
     }
 }
 
@@ -440,11 +468,13 @@ fn cmd_repro(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// `bench`: functional-executor throughput, single vs shard-parallel.
-/// Prints a table plus stable `key=value` lines `scripts/bench.sh` greps
-/// into `BENCH_exec.json`. With `--profile`, adds the walk-level
-/// per-(group, phase) timing table, the preserved naive-kernel (legacy)
-/// timing, and the `exec_profile_json=` trailer (see PROFILER in help).
+/// `bench`: functional-executor throughput, single vs shard-parallel,
+/// interval pipeline on vs off (see PIPELINE in help). Prints a table
+/// plus stable `key=value` lines `scripts/bench.sh` greps into
+/// `BENCH_exec.json`. With `--profile`, adds the walk-level per-(group,
+/// phase) timing table (including the pipelining `prepare` row), the
+/// preserved naive-kernel (legacy) timing, and the `exec_profile_json=`
+/// trailer (see PROFILER in help).
 fn cmd_bench(rest: &[String]) -> Result<(), String> {
     let spec = resolve_model(rest, Some(opt_val(rest, "--model").unwrap_or("GCN")), "bench")?;
     let d = parse_dataset(opt_val(rest, "--dataset").unwrap_or("AK"))?;
@@ -452,6 +482,7 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     let iters = opt_u32(rest, "--iters", 3)?.max(1) as usize;
     let workers = opt_u32(rest, "--workers", 0)? as usize; // 0 = sThread count
     let profile = has_flag(rest, "--profile");
+    let pipeline = opt_pipeline(rest)?;
     let dims = opt_dims(rest, &spec, 2, 32)?;
     let ir = spec
         .build(dims)
@@ -459,9 +490,12 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     let accel = AcceleratorConfig::switchblade();
     eprintln!("generating {} at scale {scale}...", d.full_name());
     let g = d.load(scale);
-    let b = bench_executor(&ir, &g, &accel, workers, iters, profile);
+    let b = bench_executor(&ir, &g, &accel, workers, iters, profile, pipeline);
     if !b.bit_identical {
-        return Err("executor runs diverged bitwise (single vs parallel vs legacy)".into());
+        return Err(
+            "executor runs diverged bitwise (single vs parallel vs pipeline-off vs legacy)"
+                .into(),
+        );
     }
     let mut t = Table::new(
         &format!(
@@ -481,6 +515,21 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     t.row(vec![
         "shard-parallel".into(),
         format!("{:.3} ms/run", b.secs_parallel * 1e3),
+    ]);
+    t.row(vec!["pipeline".into(), b.pipeline.label().into()]);
+    if let Some(off) = b.secs_pipeline_off {
+        t.row(vec![
+            "pipeline off".into(),
+            format!("{:.3} ms/run", off * 1e3),
+        ]);
+        t.row(vec![
+            "pipeline speedup".into(),
+            format!("{:.2}x", b.pipeline_speedup().unwrap_or(0.0)),
+        ]);
+    }
+    t.row(vec![
+        "prefetched intervals".into(),
+        b.prepared_intervals.to_string(),
     ]);
     if let Some(legacy) = b.secs_legacy {
         t.row(vec![
@@ -519,6 +568,15 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     println!("exec_bitmatch={}", b.bit_identical);
     println!("exec_scratch_hits={}", b.scratch.hits);
     println!("exec_scratch_misses={}", b.scratch.misses);
+    println!("exec_pipeline={}", b.pipeline.label());
+    println!("exec_prepared={}", b.prepared_intervals);
+    if let Some(off) = b.secs_pipeline_off {
+        println!("exec_ms_pipeline_off={:.3}", off * 1e3);
+        println!(
+            "exec_pipeline_speedup={:.3}",
+            b.pipeline_speedup().unwrap_or(0.0)
+        );
+    }
     if let Some(legacy) = b.secs_legacy {
         println!("exec_ms_legacy={:.3}", legacy * 1e3);
     }
@@ -643,6 +701,7 @@ fn cmd_validate(rest: &[String]) -> Result<(), String> {
         } else {
             ModelZoo::builtin().entries().to_vec()
         };
+    let pipeline = opt_pipeline(rest)?;
     let cache = Caches::new(scale);
     let g = cache.graph(Dataset::Ak);
     let accel = AcceleratorConfig::switchblade();
@@ -653,7 +712,8 @@ fn cmd_validate(rest: &[String]) -> Result<(), String> {
     for m in &specs {
         let dims = opt_dims(rest, m, 2, 16)?;
         let ir = m.build(dims).map_err(|e| format!("{}: {e}", m.name()))?;
-        let diff = switchblade::coordinator::validate_numerics(&ir, &g, &accel);
+        let diff =
+            switchblade::coordinator::validate_numerics_pipelined(&ir, &g, &accel, pipeline);
         let ok = diff < 1e-4;
         t.row(vec![
             m.display(),

@@ -27,6 +27,7 @@
 //!         scatter_phase(g, i)              # iThread: group.scatter instrs
 //!         for shard s of interval i (ascending global shard index):
 //!             gather_shard(g, i, s)        # sThreads: group.gather instrs
+//!         lookahead_interval(g, i, i+1)    # only when interval i+1 exists
 //!         end_gather(g, i)                 # barrier: all shards of i done
 //!         apply_phase(g, i)                # iThread: group.apply instrs
 //!         end_interval(g, i)
@@ -49,6 +50,15 @@
 //! * `end_gather` is the only place an interval's gather results may be
 //!   reduced — it is the software analogue of the hardware phase
 //!   scheduler waiting for all sThreads before switching to ApplyPhase.
+//! * `lookahead_interval` is the interval-pipelining hook (paper §IV-C:
+//!   consecutive intervals overlap on different hardware resources). It
+//!   fires between the last `gather_shard` of interval *i* and
+//!   `end_gather(i)`, naming interval *i+1* of the same group. It is
+//!   advisory — not a traced step, never reordering the walk — and a
+//!   pipelined backend may use it to prepare the next interval's
+//!   DstBuffer state while the current interval's shards drain (the
+//!   executor's `PipelineMode::Interval` does exactly that, against a
+//!   second buffer set ping-ponged through its scratch pools).
 //!
 //! # Traces
 //!
@@ -118,6 +128,12 @@ pub trait PhaseVisitor {
     /// One shard's GatherPhase (sThreads). `shard_idx` is the global
     /// index into `Partitions::shards`.
     fn gather_shard(&mut self, _cx: &StepCtx, _shard_idx: usize, _shard: &Shard) {}
+    /// Pipelining lookahead: `next` is the following interval of the same
+    /// group (the hook is skipped for the last interval). Fired before
+    /// `end_gather`, so a pipelined backend can overlap next-interval
+    /// preparation with the current interval's gather drain. Advisory —
+    /// it is not a walk step and must not change observable order.
+    fn lookahead_interval(&mut self, _cx: &StepCtx, _next: &StepCtx) {}
     /// All shards of the interval have been offered; gather results may
     /// now be reduced.
     fn end_gather(&mut self, _cx: &StepCtx) {}
@@ -155,6 +171,15 @@ impl<'a> PartitionWalk<'a> {
                 v.scatter_phase(&cx);
                 for (si, shard) in self.parts.shards_of_indexed(ii) {
                     v.gather_shard(&cx, si, shard);
+                }
+                if let Some(next) = self.parts.intervals.get(ii + 1) {
+                    let ncx = StepCtx {
+                        group_idx: gi,
+                        group,
+                        interval_idx: ii + 1,
+                        interval: next,
+                    };
+                    v.lookahead_interval(&cx, &ncx);
                 }
                 v.end_gather(&cx);
                 v.apply_phase(&cx);
@@ -222,6 +247,12 @@ impl<V: PhaseVisitor> PhaseVisitor for Traced<'_, V> {
         self.inner.gather_shard(cx, shard_idx, shard);
     }
 
+    // Not a walk step (the lookahead is advisory), but it must reach the
+    // wrapped backend or tracing would silently disable its pipelining.
+    fn lookahead_interval(&mut self, cx: &StepCtx, next: &StepCtx) {
+        self.inner.lookahead_interval(cx, next);
+    }
+
     fn end_gather(&mut self, cx: &StepCtx) {
         self.inner.end_gather(cx);
     }
@@ -263,6 +294,18 @@ pub struct PhaseTimes {
     /// Largest single gather step (one `gather_shard` hook or one
     /// `end_gather` drain) — the load-balance ceiling.
     pub max_gather_s: f64,
+    /// Next-interval DstBuffer preparations that ran under this group's
+    /// gather drains (interval pipelining). The sched Profiler cannot see
+    /// inside `end_gather`, so these two fields are backfilled by the
+    /// backend — `exec::Executor::run_profiled` — and stay zero for
+    /// non-pipelined backends or `PipelineMode::Off`.
+    pub prepared: u64,
+    /// Seconds spent in those preparations. Main-thread work overlapped
+    /// with the worker pool, so it is *not* added to [`total_s`]: in a
+    /// parallel drain it is already contained in the gather wall time.
+    ///
+    /// [`total_s`]: PhaseTimes::total_s
+    pub prepare_s: f64,
 }
 
 impl PhaseTimes {
@@ -294,10 +337,13 @@ impl PhaseProfile {
         );
         let total = self.total_s().max(f64::MIN_POSITIVE);
         for (gi, g) in self.groups.iter().enumerate() {
-            let rows: [(&str, f64, u64); 3] = [
+            // `prepare` is the interval-pipelining row: next-interval
+            // DstBuffer preparations overlapped under the gather drain.
+            let rows: [(&str, f64, u64); 4] = [
                 ("scatter", g.scatter_s, g.intervals),
                 ("gather", g.gather_s, g.shards),
                 ("apply", g.apply_s, g.intervals),
+                ("prepare", g.prepare_s, g.prepared),
             ];
             for (phase, secs, calls) in rows {
                 let mean_us = if calls == 0 {
@@ -337,8 +383,15 @@ impl PhaseProfile {
                 format!(
                     "{{\"group\":{gi},\"scatter_s\":{:.9},\"gather_s\":{:.9},\
                      \"apply_s\":{:.9},\"intervals\":{},\"shards\":{},\
-                     \"max_gather_s\":{:.9}}}",
-                    g.scatter_s, g.gather_s, g.apply_s, g.intervals, g.shards, g.max_gather_s
+                     \"max_gather_s\":{:.9},\"prepared\":{},\"prepare_s\":{:.9}}}",
+                    g.scatter_s,
+                    g.gather_s,
+                    g.apply_s,
+                    g.intervals,
+                    g.shards,
+                    g.max_gather_s,
+                    g.prepared,
+                    g.prepare_s
                 )
             })
             .collect();
@@ -409,6 +462,13 @@ impl<V: PhaseVisitor> PhaseVisitor for Profiler<'_, V> {
         g.shards += 1;
         g.gather_s += dt;
         g.max_gather_s = g.max_gather_s.max(dt);
+    }
+
+    // The lookahead itself is a bookkeeping no-op in every backend (the
+    // overlapped preparation it announces runs inside `end_gather`, whose
+    // wall time lands in `gather_s`); delegate untimed.
+    fn lookahead_interval(&mut self, cx: &StepCtx, next: &StepCtx) {
+        self.inner.lookahead_interval(cx, next);
     }
 
     fn end_gather(&mut self, cx: &StepCtx) {
@@ -549,6 +609,10 @@ mod tests {
             fn gather_shard(&mut self, _: &StepCtx, _: usize, _: &Shard) {
                 self.0.push("g");
             }
+            fn lookahead_interval(&mut self, _: &StepCtx, next: &StepCtx) {
+                assert_eq!(next.interval_idx, 1, "lookahead names the next interval");
+                self.0.push("la");
+            }
             fn end_gather(&mut self, _: &StepCtx) {
                 self.0.push("G");
             }
@@ -561,9 +625,15 @@ mod tests {
         }
         let mut log = Log::default();
         PartitionWalk::new(&toy_program(1), &toy_parts()).drive(&mut log);
+        // The lookahead fires only while a next interval exists (between
+        // the last gather_shard and end_gather of interval 0, never for
+        // the group's final interval).
         assert_eq!(
             log.0,
-            vec!["bg", "bi", "s", "g", "g", "G", "a", "ei", "bi", "s", "G", "a", "ei", "eg"]
+            vec![
+                "bg", "bi", "s", "g", "g", "la", "G", "a", "ei", "bi", "s", "G", "a", "ei",
+                "eg"
+            ]
         );
     }
 
@@ -592,5 +662,9 @@ mod tests {
         assert!(json.starts_with("{\"total_s\":"));
         assert!(json.contains("\"groups\":[{\"group\":0,"));
         assert!(json.contains("\"shards\":2"));
+        // Pipelining columns exist (zero here — only the pipelined
+        // executor backfills them).
+        assert!(json.contains("\"prepared\":0"));
+        assert!(p.table().render().contains("prepare"));
     }
 }

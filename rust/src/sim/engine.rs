@@ -64,7 +64,12 @@ struct Engine {
     /// Per-sThread compute / load pipeline cursors. Intervals *pipeline*
     /// within a group (paper Fig 3): while the iThread applies interval
     /// i, the sThreads already stream interval i+1's shards (the
-    /// DstBuffer double-buffers interval state).
+    /// DstBuffer double-buffers interval state). Since PR 5 this overlap
+    /// is no longer simulation-only: the functional executor realises it
+    /// as `exec::PipelineMode::Interval` (next-interval DstBuffer state
+    /// prepared under the current interval's gather drain), so this
+    /// timing model is the oracle for behaviour the executor actually
+    /// has — not an aspiration.
     compute_free: Vec<f64>,
     load_free: Vec<f64>,
     group_end: f64,

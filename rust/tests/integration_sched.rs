@@ -5,10 +5,10 @@
 //! between the two backends' execution orders.
 
 use switchblade::compiler::compile;
-use switchblade::exec::{weights, Executor, Matrix};
+use switchblade::exec::{weights, Executor, Matrix, PipelineMode};
 use switchblade::graph::{generators, Csr};
 use switchblade::ir::models::Model;
-use switchblade::partition::Method;
+use switchblade::partition::{Method, PartitionConfig};
 use switchblade::sched::{canonical_trace, Phase, WalkStep};
 use switchblade::sim::{simulate_traced, AcceleratorConfig};
 
@@ -85,6 +85,67 @@ fn executor_and_simulator_walk_identically() {
                 sim_trace,
                 want,
                 "{} / {}: simulator left the canonical walk",
+                m.name(),
+                method.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn pipelined_executor_keeps_canonical_merge_order() {
+    // Interval pipelining (PipelineMode::Interval) prepares interval i+1's
+    // DstBuffer state under interval i's gather drain — but the observable
+    // walk must be untouched: the traced (group, interval, shard, phase)
+    // sequence of a pipelined run is exactly the canonical trace (so the
+    // deterministic gather-merge order cannot shift), and the output is
+    // bit-identical to the sequential PipelineMode::Off reference. The
+    // simulator's SLMT timing (which always models this overlap) stays the
+    // oracle for what the executor now actually does.
+    let g = Csr::from_edge_list(&generators::rmat(1 << 8, 3_000, 0.57, 0.19, 0.19, 51));
+    for m in Model::ALL {
+        let ir = m.build(2, 8, 8, 8);
+        let prog = compile(&ir);
+        // Small budgets force several intervals (no intervals, no
+        // pipeline) with several shards each.
+        let cfg = PartitionConfig {
+            shard_bytes: 2 * 1024,
+            dst_bytes: 4 * 1024,
+            dim_src: prog.dim_src.max(1),
+            dim_edge: prog.dim_edge.max(1),
+            dim_dst: prog.dim_dst.max(1),
+            num_sthreads: 4,
+        };
+        for method in Method::ALL {
+            let parts = method.run(&g, cfg);
+            assert!(parts.intervals.len() > 1, "need intervals to pipeline");
+            let want = canonical_trace(&prog, &parts);
+            let x = weights::init_features(5, g.num_vertices(), 8);
+            let deg = degree_col(&g);
+            let mut ex = Executor::new(&prog, &parts)
+                .with_pipeline_mode(PipelineMode::Interval)
+                .with_workers(4);
+            let (out_pipe, trace) = ex.run_traced(&x, &deg);
+            assert!(
+                ex.prepared_intervals() > 0,
+                "{} / {}: pipelining never engaged",
+                m.name(),
+                method.name()
+            );
+            assert_eq!(
+                trace,
+                want,
+                "{} / {}: pipelined walk left the canonical order",
+                m.name(),
+                method.name()
+            );
+            let out_seq = Executor::new(&prog, &parts)
+                .with_pipeline_mode(PipelineMode::Off)
+                .with_workers(1)
+                .run(&x, &deg);
+            assert!(
+                out_pipe.bits_eq(&out_seq),
+                "{} / {}: pipelined output diverged bitwise",
                 m.name(),
                 method.name()
             );

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Perf trajectory seeder: times `repro --fig 7` end-to-end and the
-# functional executor (single-worker vs shard-parallel) and writes the
-# results to BENCH_exec.json at the repo root. Re-run before and after a
-# perf-relevant change and diff the two files.
+# functional executor (single-worker vs shard-parallel, interval pipeline
+# on vs off, kernel vs legacy) and writes the results to BENCH_exec.json
+# at the repo root. Re-run before and after a perf-relevant change and
+# diff the two files. CI's scheduled bench job uploads this file as an
+# artifact (.github/workflows/ci.yml).
 #
 # Env knobs: SCALE (default 6, the harness default), ITERS (default 3),
 # OUT (default BENCH_exec.json), BENCH_MODEL / BENCH_DATASET (GCN / AK).
@@ -42,9 +44,13 @@ cat > "$OUT" <<EOF
   "bench_dataset": "$DATASET",
   "exec_ms_single": $(get exec_ms_single),
   "exec_ms_parallel": $(get exec_ms_parallel),
+  "exec_ms_pipeline_off": $(getd exec_ms_pipeline_off null),
   "exec_ms_legacy": $(getd exec_ms_legacy null),
   "exec_workers": $(get exec_workers),
   "exec_speedup": $(get exec_speedup),
+  "exec_pipeline": "$(getd exec_pipeline on)",
+  "exec_pipeline_speedup": $(getd exec_pipeline_speedup null),
+  "exec_prepared": $(getd exec_prepared 0),
   "exec_bitmatch": $(get exec_bitmatch),
   "exec_scratch_hits": $(getd exec_scratch_hits 0),
   "exec_scratch_misses": $(getd exec_scratch_misses 0),

@@ -1,48 +1,112 @@
 #!/usr/bin/env bash
-# Repo-wide check: format, lints, release build, and the tier-1 test
-# suite. Run from anywhere; requires the rust toolchain on PATH.
+# Repo-wide check, stage-selectable so CI can run stages as separate jobs:
+#
+#   scripts/check.sh              # everything (fmt clippy test smoke profiler)
+#   scripts/check.sh fmt          # one stage
+#   scripts/check.sh clippy test  # any subset, in the given order
+#
+# Stages:
+#   fmt       cargo fmt --check
+#   clippy    cargo clippy --all-targets -- -D warnings
+#   test      tier-1 gate: cargo build --release && cargo test -q
+#   smoke     zoo smoke: compile + simulate + validate examples/models/*.gnn
+#   profiler  `bench --profile` at tiny scale + its machine-readable trailers
+#   bench     scripts/bench.sh -> BENCH_exec.json (perf trajectory point)
+#   all       fmt clippy test smoke profiler (+ bench when BENCH=1, the
+#             historical knob)
 set -euo pipefail
 SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
 cd "$SCRIPT_DIR/../rust"
 
-echo "== cargo fmt --check =="
-cargo fmt --check
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "error: check.sh needs the rust toolchain, but 'cargo' is not on PATH." >&2
+  echo "       Install it from https://rustup.rs (or run inside an image that" >&2
+  echo "       ships it) and re-run. No stage can run without cargo." >&2
+  exit 2
+fi
 
-echo "== cargo clippy (all targets, warnings are errors) =="
-cargo clippy --all-targets -- -D warnings
+stage_fmt() {
+  echo "== cargo fmt --check =="
+  cargo fmt --check
+}
 
-echo "== tier-1: cargo build --release && cargo test -q =="
-cargo build --release
-cargo test -q
+stage_clippy() {
+  echo "== cargo clippy (all targets, warnings are errors) =="
+  cargo clippy --all-targets -- -D warnings
+}
+
+stage_test() {
+  echo "== tier-1: cargo build --release && cargo test -q =="
+  cargo build --release
+  cargo test -q
+}
 
 # Zoo smoke: every shipped .gnn spec must survive the CLI pipeline —
 # compile, simulate (tiny scale), and the executor-vs-oracle diff — so a
 # grammar or spec regression fails fast.
-echo "== zoo smoke: compile + simulate + validate examples/models/*.gnn =="
-for f in "$SCRIPT_DIR"/../examples/models/*.gnn; do
-  echo "--- $(basename "$f")"
-  cargo run --release --quiet -- compile --model-file "$f" > /dev/null
-  cargo run --release --quiet -- simulate --model-file "$f" AK --scale 12 > /dev/null
-  cargo run --release --quiet -- validate --model-file "$f" --scale 11 > /dev/null
-done
+stage_smoke() {
+  echo "== zoo smoke: compile + simulate + validate examples/models/*.gnn =="
+  for f in "$SCRIPT_DIR"/../examples/models/*.gnn; do
+    echo "--- $(basename "$f")"
+    cargo run --release --quiet -- compile --model-file "$f" > /dev/null
+    cargo run --release --quiet -- simulate --model-file "$f" AK --scale 12 > /dev/null
+    cargo run --release --quiet -- validate --model-file "$f" --scale 11 > /dev/null
+  done
+}
 
 # Profiler smoke: `bench --profile` at tiny scale — the walk-level phase
-# profiler and the kernel-vs-legacy differential path must not rot, and
-# the profile JSON trailer bench.sh embeds must stay present.
-echo "== profiler smoke: bench --profile at tiny scale =="
-prof_out=$(cargo run --release --quiet -- bench --model GCN --dataset AK \
-  --scale 12 --iters 1 --profile)
-echo "$prof_out" | grep -q '^exec_profile_json={' \
-  || { echo "bench --profile lost its exec_profile_json trailer" >&2; exit 1; }
-echo "$prof_out" | grep -q '^exec_ms_legacy=' \
-  || { echo "bench --profile lost its exec_ms_legacy trailer" >&2; exit 1; }
-echo "profiler smoke OK"
+# profiler, the kernel-vs-legacy differential path and the interval
+# pipeline's per-mode timing must not rot, and the trailer lines
+# bench.sh embeds must stay present.
+stage_profiler() {
+  echo "== profiler smoke: bench --profile at tiny scale =="
+  local prof_out
+  prof_out=$(cargo run --release --quiet -- bench --model GCN --dataset AK \
+    --scale 12 --iters 1 --profile)
+  local key
+  for key in 'exec_profile_json={' 'exec_ms_legacy=' 'exec_ms_pipeline_off=' \
+             'exec_pipeline=on' 'exec_bitmatch=true'; do
+    echo "$prof_out" | grep -q "^$key" \
+      || { echo "bench --profile lost its '$key' trailer" >&2; exit 1; }
+  done
+  echo "profiler smoke OK"
+}
 
-# Optional perf step: BENCH=1 ./scripts/check.sh also records the wall
-# clock of `repro --fig 7` + executor throughput into BENCH_exec.json.
-if [[ "${BENCH:-0}" != "0" ]]; then
-  echo "== bench (BENCH=1) =="
+stage_bench() {
+  echo "== bench: scripts/bench.sh -> BENCH_exec.json =="
   "$SCRIPT_DIR/bench.sh"
-fi
+}
 
-echo "all checks passed"
+run_stage() {
+  case "$1" in
+    fmt)      stage_fmt ;;
+    clippy)   stage_clippy ;;
+    test)     stage_test ;;
+    smoke)    stage_smoke ;;
+    profiler) stage_profiler ;;
+    bench)    stage_bench ;;
+    all)
+      stage_fmt
+      stage_clippy
+      stage_test
+      stage_smoke
+      stage_profiler
+      if [[ "${BENCH:-0}" != "0" ]]; then
+        stage_bench
+      fi
+      ;;
+    *)
+      echo "unknown stage '$1' (fmt|clippy|test|smoke|profiler|bench|all)" >&2
+      exit 2
+      ;;
+  esac
+}
+
+if [[ $# -eq 0 ]]; then
+  run_stage all
+else
+  for s in "$@"; do
+    run_stage "$s"
+  done
+fi
+echo "check.sh: ${*:-all} passed"
