@@ -36,6 +36,11 @@ pub fn compile(ir: &IrGraph) -> Program {
 
 /// Compile with explicit feature toggles.
 pub fn compile_with(ir: &IrGraph, opts: CompilerOptions) -> Program {
+    let _span = crate::obs::trace::span(
+        crate::obs::trace::names::COMPILE,
+        crate::obs::trace::cat::FRONTEND,
+        crate::obs::trace::TRACK_MAIN,
+    );
     ir.validate().expect("IR must validate before compilation");
     let mut cg = Codegen::new(ir);
     cg.opts = opts;

@@ -441,6 +441,48 @@ impl ExecBench {
     pub fn vertices_per_sec(&self) -> f64 {
         self.vertices as f64 / self.secs_parallel
     }
+
+    /// Publish the probe into the process metrics registry under the
+    /// `exec_*` names `scripts/bench.sh` embeds into `BENCH_exec.json`
+    /// (and `scripts/bench_diff.sh` gates on). One source of truth: the
+    /// bench table, the stdout trailer, and the `--metrics` artifact all
+    /// read the same struct this publishes.
+    pub fn record_metrics(&self) {
+        use crate::obs::metrics;
+        metrics::gauge("exec_ms_single", self.secs_single * 1e3);
+        metrics::gauge("exec_ms_parallel", self.secs_parallel * 1e3);
+        metrics::counter_abs("exec_workers", self.workers as u64);
+        metrics::gauge("exec_speedup", self.speedup());
+        metrics::gauge("exec_vertices_per_sec", self.vertices_per_sec());
+        metrics::counter_abs("exec_bitmatch", self.bit_identical as u64);
+        metrics::counter_abs(
+            "exec_pipeline_on",
+            matches!(self.pipeline, PipelineMode::Interval) as u64,
+        );
+        metrics::counter_abs("exec_prepared", self.prepared_intervals);
+        metrics::counter_abs("exec_scratch_hits", self.scratch.hits);
+        metrics::counter_abs("exec_scratch_misses", self.scratch.misses);
+        metrics::gauge("exec_scratch_hit_rate", self.scratch.hit_rate());
+        if let Some(off) = self.secs_pipeline_off {
+            metrics::gauge("exec_ms_pipeline_off", off * 1e3);
+        }
+        if let Some(sp) = self.pipeline_speedup() {
+            metrics::gauge("exec_pipeline_speedup", sp);
+        }
+        if let Some(legacy) = self.secs_legacy {
+            metrics::gauge("exec_ms_legacy", legacy * 1e3);
+        }
+        if let Some(sp) = self.kernel_speedup() {
+            metrics::gauge("exec_kernel_speedup", sp);
+        }
+        if let Some(p) = &self.profile {
+            metrics::gauge("exec_profile_total_s", p.total_s());
+            metrics::counter_abs(
+                "exec_profile_shards",
+                p.groups.iter().map(|g| g.shards).sum::<u64>(),
+            );
+        }
+    }
 }
 
 /// Time the shard-parallel executor against a forced single-worker run on

@@ -207,6 +207,21 @@ impl CacheSnapshot {
             one("graphs", &self.graphs)
         )
     }
+
+    /// Publish all three caches into the metrics registry under
+    /// `dse_cache_{kind}_{hits,misses,hit_rate}` names.
+    pub fn record_metrics(&self) {
+        use crate::obs::metrics;
+        for (kind, s) in [
+            ("graphs", &self.graphs),
+            ("programs", &self.programs),
+            ("partitions", &self.partitions),
+        ] {
+            metrics::counter_abs(&format!("dse_cache_{kind}_hits"), s.hits);
+            metrics::counter_abs(&format!("dse_cache_{kind}_misses"), s.misses);
+            metrics::gauge(&format!("dse_cache_{kind}_hit_rate"), s.hit_rate());
+        }
+    }
 }
 
 /// The cache bundle threaded through the coordinator and the DSE

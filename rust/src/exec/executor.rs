@@ -56,10 +56,9 @@ use crate::exec::{weights, Matrix};
 use crate::isa::{
     DataRef, Dim, Instr, PhaseGroup, Program, Reduce, ScatterDir, SlotLayout, Space, Sym,
 };
+use crate::obs::trace;
 use crate::partition::{Interval, Partitions, Shard};
-use crate::sched::{
-    PartitionWalk, PhaseProfile, PhaseVisitor, Profiler, StepCtx, Traced, WalkStep,
-};
+use crate::sched::{PartitionWalk, PhaseProfile, PhaseVisitor, StepCtx, Traced, WalkStep};
 
 /// Which compute-instruction implementation the executor runs.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -308,22 +307,23 @@ impl<'a> Executor<'a> {
 
     /// Like [`Executor::run`], additionally timing every walk phase —
     /// the `switchblade bench --profile` path.
+    ///
+    /// Implemented on the span stream: an [`obs::trace`](crate::obs::trace)
+    /// session is opened around the walk (re-entrant — inside a
+    /// surrounding `--trace` session this borrows it and reads only the
+    /// tail recorded here, leaving the spans for the outer export) and
+    /// [`PhaseProfile::from_spans`] folds the recorded walk + `prepare`
+    /// spans into the per-(group, phase) profile. The pipelining columns
+    /// need no backfill: the executor's `prepare` spans carry them.
     pub fn run_profiled(&mut self, x: &Matrix, degree: &Matrix) -> (Matrix, PhaseProfile) {
         self.seed_inputs(x, degree);
-        let walk = PartitionWalk::new(self.program, self.parts);
-        let mut prof = Profiler::new(&mut *self);
-        walk.drive(&mut prof);
-        let mut profile = prof.into_profile();
-        // Backfill the pipelining columns: the sched Profiler times hooks,
-        // but next-interval preparation runs *inside* the `end_gather`
-        // drain, overlapped with the worker pool — only the executor
-        // knows how many intervals were prepared and for how long.
-        for (gi, &(prepared, secs)) in self.prep_stats.iter().enumerate() {
-            if let Some(g) = profile.groups.get_mut(gi) {
-                g.prepared = prepared;
-                g.prepare_s = secs;
-            }
-        }
+        let sess = trace::begin();
+        let mark = trace::mark();
+        PartitionWalk::new(self.program, self.parts).drive(&mut *self);
+        let spans = trace::since(mark);
+        drop(sess.end());
+        let mut profile = PhaseProfile::from_spans(&spans);
+        profile.pad_groups(self.program.groups.len());
         (self.take_output(), profile)
     }
 
@@ -438,6 +438,7 @@ impl<'a> Executor<'a> {
         if pending.is_empty() {
             // An interval with no shards still pipelines the next one.
             prep_s = timed_prepare(
+                cx.group_idx,
                 cx.group,
                 &mut standby,
                 &self.dram,
@@ -469,15 +470,32 @@ impl<'a> Executor<'a> {
                     movable: &self.movable_spills[cx.group_idx][..],
                     mode: self.mode,
                 };
+                // Worker spans gate on an explicit flag captured here:
+                // spawned pool threads cannot see this thread's
+                // trace-session flag.
+                let tracing = trace::active();
+                let (g_arg, i_arg) = (cx.group_idx as i32, cx.interval_idx as i32);
                 if workers <= 1 {
                     let outs: Vec<ShardOut> = {
                         let mut ws = worker_arenas[0].lock().unwrap();
                         pending
                             .iter()
-                            .map(|&si| env.run_shard(si, &mut ws, 0))
+                            .map(|&si| {
+                                let _span = trace::span_if(
+                                    tracing,
+                                    trace::names::SHARD,
+                                    trace::cat::EXEC,
+                                    trace::worker_track(0),
+                                    g_arg,
+                                    i_arg,
+                                    si as i32,
+                                );
+                                env.run_shard(si, &mut ws, 0)
+                            })
                             .collect()
                     };
                     prep_s = timed_prepare(
+                        cx.group_idx,
                         cx.group,
                         &mut standby,
                         env.dram,
@@ -504,6 +522,15 @@ impl<'a> Executor<'a> {
                                     if k >= pending_ref.len() {
                                         break;
                                     }
+                                    let _span = trace::span_if(
+                                        tracing,
+                                        trace::names::SHARD,
+                                        trace::cat::EXEC,
+                                        trace::worker_track(w),
+                                        g_arg,
+                                        i_arg,
+                                        pending_ref[k] as i32,
+                                    );
                                     let out = env_ref.run_shard(pending_ref[k], &mut ws, w);
                                     *cells_ref[k].lock().unwrap() = Some(out);
                                 }
@@ -513,6 +540,7 @@ impl<'a> Executor<'a> {
                         // runs here, concurrent with interval i's sThread
                         // drain above.
                         prep_s = timed_prepare(
+                            cx.group_idx,
                             cx.group,
                             &mut standby,
                             env.dram,
@@ -1182,7 +1210,14 @@ fn ensure_accs(group: &PhaseGroup, iv: &mut IntervalState, scratch: &mut Interva
 /// The single timed entry point all three `run_pending_shards` arms
 /// (empty-pending, serial, threaded) share: run [`prepare_interval`] for
 /// the standby, if one is planned, and return the seconds spent.
+///
+/// Always called on the walk's driving thread (the threaded arm calls it
+/// from inside the scope, not from a spawned worker), so the `prepare`
+/// trace span gates on this thread's session flag and lands on the main
+/// track — in a trace it shows up *under* the enclosing `gather_drain`
+/// span, which is exactly the pipelining overlap being claimed.
 fn timed_prepare(
+    group_idx: usize,
     group: &PhaseGroup,
     standby: &mut Option<(usize, IntervalState)>,
     dram: &[Option<Matrix>],
@@ -1190,9 +1225,17 @@ fn timed_prepare(
     scratch: &mut IntervalScratch,
     mode: KernelMode,
 ) -> f64 {
-    let Some((_, st)) = standby.as_mut() else {
+    let Some((ni, st)) = standby.as_mut() else {
         return 0.0;
     };
+    let _span = trace::span_args(
+        trace::names::PREPARE,
+        trace::cat::EXEC,
+        trace::TRACK_MAIN,
+        group_idx as i32,
+        *ni as i32,
+        -1,
+    );
     let t0 = Instant::now();
     prepare_interval(group, st, dram, weights, scratch, mode);
     t0.elapsed().as_secs_f64()

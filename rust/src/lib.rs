@@ -24,7 +24,11 @@
 //! * [`dse`] — parallel design-space exploration & auto-tuning: budgeted
 //!   sweeps over (architecture × partition method) through a generalized
 //!   program/graph/partition cache layer, with Pareto reporting over
-//!   (latency, energy, SRAM area) — the `switchblade tune` subcommand.
+//!   (latency, energy, SRAM area) — the `switchblade tune` subcommand,
+//! * [`obs`] — observability: the span recorder behind `--trace`
+//!   (Chrome trace-event export, per-worker lanes) and the metrics
+//!   registry behind `--metrics` (JSON / Prometheus exporters, the
+//!   source of `BENCH_exec.json` and the CI perf-regression gate).
 
 pub mod coordinator;
 pub mod dse;
@@ -33,6 +37,7 @@ pub mod exec;
 pub mod graph;
 pub mod ir;
 pub mod isa;
+pub mod obs;
 pub mod baseline;
 pub mod compiler;
 pub mod partition;

@@ -16,6 +16,7 @@ use switchblade::exec::{weights, PipelineMode};
 use switchblade::graph::datasets::{Dataset, DEFAULT_SCALE};
 use switchblade::ir::spec::{ModelDims, ModelSpec};
 use switchblade::ir::zoo::ModelZoo;
+use switchblade::obs::{metrics, trace};
 use switchblade::partition::{stats as pstats, Method};
 use switchblade::runtime::{artifacts_dir, ArtifactShape, Runtime};
 use switchblade::sim::{simulate, AcceleratorConfig};
@@ -37,23 +38,24 @@ COMMANDS:
     partition <dataset> [--scale N] [--method fggp|dsw] [--model M]
                                            partition a graph and print stats
     simulate  <model> <dataset> [--scale N] [--sthreads T] [--method fggp|dsw]
-                                           cycle-level simulation of one workload
+              [--trace F] [--metrics F]    cycle-level simulation of one workload
     tune      <model> <dataset> [--scale N] [--budget N] [--objective latency|energy|edp]
-              [--out DIR]                  design-space exploration: sweep accelerator
+              [--out DIR] [--trace F] [--metrics F]
+                                           design-space exploration: sweep accelerator
                                            + partition configs, report Pareto frontier
                                            (budget 0 = exhaustive; default 64)
     repro     [--fig 7|8|9|10|11|12|13] [--tbl 4|5] [--all] [--scale N] [--out DIR]
               [--config FILE]              regenerate the paper's figures/tables
-    serve     [--model M] [--requests R] [--config FILE]
+    serve     [--model M] [--requests R] [--config FILE] [--trace F] [--metrics F]
                                            PJRT serving demo over AOT artifacts
                                            (requests >= 1; artifacts exist for the
                                            four paper models only)
     validate  [--scale N] [--layers N] [--dim D] [--model M] [--pipeline on|off]
-                                           executor-vs-oracle numerics check over the
+              [--trace F] [--metrics F]    executor-vs-oracle numerics check over the
                                            zoo (or one model / spec file)
     bench     [--model M] [--dataset D] [--scale N] [--iters N] [--workers W]
               [--layers N] [--dim D] [--pipeline on|off] [--profile]
-                                           functional-executor throughput probe
+              [--trace F] [--metrics F]    functional-executor throughput probe
                                            (single vs shard-parallel; bench.sh
                                            folds this into BENCH_exec.json)
     help                                   this text
@@ -80,12 +82,13 @@ PIPELINE (bench/validate --pipeline on|off, default on):
     `--pipeline off` forces the strictly sequential reference — the
     escape hatch for diffing a suspected pipelining issue (`validate
     --pipeline off` re-runs the oracle check that way). When on, bench
-    also times the off mode at the same worker count and prints the
-    per-mode trailers `exec_pipeline=`, `exec_prepared=`,
-    `exec_ms_pipeline_off=` and `exec_pipeline_speedup=` (embedded into
-    BENCH_exec.json by scripts/bench.sh). `repro` figures come from the
-    cycle simulator, whose SLMT timing always models this overlap — there
-    is no executor mode to toggle there.
+    also times the off mode at the same worker count; all per-mode
+    numbers land in the `--metrics` registry and the OBSERVABILITY
+    trailers. `repro` figures come from the cycle simulator, whose SLMT
+    timing always models this overlap — there is no executor mode to
+    toggle there. `bench --trace` makes the overlap visible: `prepare`
+    spans sit under `gather_drain` on the main lane while `shard` spans
+    fill the worker lanes.
 
 PROFILER (bench --profile):
     Adds a walk-level profile of one shard-parallel run: a table with one
@@ -93,11 +96,38 @@ PROFILER (bench --profile):
     row counting next-interval preparations overlapped under the gather
     drain — columns time ms / calls / mean us / share — plus a TOTAL row,
     and also times the preserved naive (pre-kernel) executor for a
-    kernel-vs-legacy comparison. Machine-readable trailer lines:
-    `exec_ms_legacy=` and `exec_profile_json=` — one JSON object with
-    total_s and per-group scatter_s / gather_s / apply_s / intervals /
-    shards / max_gather_s / prepared / prepare_s — which scripts/bench.sh
-    embeds into BENCH_exec.json as the \"profile\" section.
+    kernel-vs-legacy comparison. The profile is folded from the same
+    span stream `--trace` exports (sched::PhaseProfile::from_spans), so
+    profile and trace always agree. Adds the `exec_ms_legacy=` and
+    `exec_profile_json=` trailers (see OBSERVABILITY).
+
+OBSERVABILITY (--trace F / --metrics F on bench, simulate, validate, serve, tune):
+    --trace F    record a span timeline of the whole run — compile,
+                 partition, every walk phase (scatter / gather_shard /
+                 gather_drain / apply), pipelined `prepare` steps, and
+                 per-worker `shard` spans — and write Chrome trace-event
+                 JSON to F. Load it in chrome://tracing or
+                 https://ui.perfetto.dev: one lane per executor worker
+                 plus a main/prepare lane; interval-pipelining overlap
+                 appears as `prepare` spans nested under `gather_drain`.
+    --metrics F  write the process metrics registry to F after the run:
+                 flat JSON (one \"name\": value per line), or Prometheus
+                 text when F ends in `.prom`. Series include the
+                 executor probe (exec_ms_single / exec_ms_parallel /
+                 exec_ms_pipeline_off / exec_ms_legacy / exec_workers /
+                 exec_speedup / exec_pipeline_speedup / exec_prepared /
+                 exec_bitmatch / exec_scratch_hits / exec_scratch_misses /
+                 exec_scratch_hit_rate), the simulator (sim_cycles /
+                 sim_latency_s / sim_vu|mu|bw|overall_utilization /
+                 sim_traffic_bytes_* per tag), serving latency
+                 percentiles (serve_latency_s histogram, serve_p50_s /
+                 serve_p99_s), validation deltas
+                 (validate_max_abs_diff_*), and DSE cache accounting
+                 (dse_cache_{graphs,programs,partitions}_*).
+    The same `exec_*` names are also printed as `key=value` stdout
+    trailers by bench (kept for greppability); scripts/bench.sh builds
+    BENCH_exec.json from the `--metrics` artifact, and
+    scripts/bench_diff.sh gates CI on it against main's baseline.
 "
     )
 }
@@ -137,7 +167,7 @@ fn main() -> ExitCode {
 const VALUE_OPTS: &[&str] = &[
     "--scale", "--method", "--model", "--model-file", "--sthreads", "--budget", "--objective",
     "--out", "--fig", "--tbl", "--config", "--requests", "--dataset", "--iters", "--workers",
-    "--layers", "--dim", "--pipeline",
+    "--layers", "--dim", "--pipeline", "--trace", "--metrics",
 ];
 
 /// Positional arguments: whatever is not an option or an option's value.
@@ -263,6 +293,60 @@ fn opt_design(rest: &[String]) -> Result<Option<dse::DesignPoint>, String> {
     }
 }
 
+/// `--trace F` / `--metrics F` wiring shared by the observability-aware
+/// subcommands (bench / simulate / validate / serve / tune): open a trace
+/// session and reset the metrics registry up front, export both files
+/// at [`Obs::finish`]. See OBSERVABILITY in the usage text.
+struct Obs {
+    trace_path: Option<PathBuf>,
+    metrics_path: Option<PathBuf>,
+    session: Option<trace::Session>,
+}
+
+fn obs_begin(rest: &[String]) -> Obs {
+    let trace_path = opt_val(rest, "--trace").map(PathBuf::from);
+    let metrics_path = opt_val(rest, "--metrics").map(PathBuf::from);
+    if metrics_path.is_some() {
+        // One command = one metrics run; recording happens regardless
+        // (it is cheap), the flag only controls reset + export.
+        metrics::reset();
+    }
+    let session = trace_path.is_some().then(trace::begin);
+    Obs {
+        trace_path,
+        metrics_path,
+        session,
+    }
+}
+
+impl Obs {
+    fn finish(self) -> Result<(), String> {
+        if let Some(sess) = self.session {
+            let tr = sess.end();
+            let path = self.trace_path.expect("session implies a path");
+            tr.write_chrome(&path)
+                .map_err(|e| format!("writing trace {}: {e}", path.display()))?;
+            eprintln!(
+                "wrote trace {} ({} spans{}) — load in chrome://tracing or ui.perfetto.dev",
+                path.display(),
+                tr.spans.len(),
+                if tr.dropped > 0 {
+                    format!(", {} dropped", tr.dropped)
+                } else {
+                    String::new()
+                }
+            );
+        }
+        if let Some(path) = self.metrics_path {
+            let snap = metrics::snapshot();
+            snap.write(&path)
+                .map_err(|e| format!("writing metrics {}: {e}", path.display()))?;
+            eprintln!("wrote metrics {} ({} series)", path.display(), snap.entries.len());
+        }
+        Ok(())
+    }
+}
+
 // ---- subcommands ---------------------------------------------------------------
 
 fn cmd_compile(rest: &[String]) -> Result<(), String> {
@@ -314,6 +398,7 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
     let (spec, d, scale) = parse_workload(rest, "simulate")?;
     let sthreads = opt_u32(rest, "--sthreads", 3)?;
     let method = parse_method(opt_val(rest, "--method").unwrap_or("fggp"))?;
+    let obs = obs_begin(rest);
     let accel = AcceleratorConfig::switchblade().with_sthreads(sthreads);
     let prog = compile(&spec.graph());
     let pc = accel.partition_config(&prog);
@@ -338,11 +423,18 @@ fn cmd_simulate(rest: &[String]) -> Result<(), String> {
     t.row(vec!["BW util".into(), ff(r.bw_utilization(), 3)]);
     t.row(vec!["overall util".into(), ff(r.overall_utilization(), 3)]);
     t.row(vec!["DRAM traffic".into(), bytes(r.traffic.total())]);
+    for (tag, b) in r.traffic.iter() {
+        t.row(vec![format!("  traffic {}", tag.name()), bytes(b)]);
+    }
     t.row(vec!["shards".into(), r.shards_processed.to_string()]);
     t.row(vec!["instructions".into(), r.instructions.to_string()]);
     t.row(vec!["energy".into(), format!("{:.3} mJ", e.total_j() * 1e3)]);
     t.print();
-    Ok(())
+    // One recorder for utilizations + per-tag traffic — the table above,
+    // repro, and the metrics artifact all read the same SimResult.
+    r.record_metrics();
+    metrics::gauge("sim_energy_j", e.total_j());
+    obs.finish()
 }
 
 /// `tune`: budgeted design-space exploration for one workload.
@@ -359,6 +451,7 @@ fn cmd_tune(rest: &[String]) -> Result<(), String> {
         objective,
         ..Default::default()
     };
+    let obs = obs_begin(rest);
     let caches = Caches::new(scale);
     eprintln!(
         "tuning {} on {} (scale 1/2^{scale}): evaluating {} of {} grid points...",
@@ -390,7 +483,9 @@ fn cmd_tune(rest: &[String]) -> Result<(), String> {
     let fcsv = out_dir.join(format!("dse_{slug}_frontier.csv"));
     r.frontier_table().write_csv(&fcsv).map_err(|e| e.to_string())?;
     eprintln!("wrote {}, {}, {}", csv.display(), json.display(), fcsv.display());
-    Ok(())
+    r.caches.record_metrics();
+    metrics::counter_abs("dse_points_evaluated", r.evaluated.len() as u64);
+    obs.finish()
 }
 
 fn cmd_repro(rest: &[String]) -> Result<(), String> {
@@ -490,6 +585,7 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     let accel = AcceleratorConfig::switchblade();
     eprintln!("generating {} at scale {scale}...", d.full_name());
     let g = d.load(scale);
+    let obs = obs_begin(rest);
     let b = bench_executor(&ir, &g, &accel, workers, iters, profile, pipeline);
     if !b.bit_identical {
         return Err(
@@ -560,7 +656,11 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
         println!();
         p.table().print();
     }
-    // Machine-readable trailer for scripts/bench.sh.
+    // Publish the probe into the metrics registry (the single source
+    // `--metrics` exports and scripts/bench.sh reads), then echo the
+    // historical stdout trailers from the same struct — table, trailer
+    // and artifact can no longer disagree.
+    b.record_metrics();
     println!("exec_ms_single={:.3}", b.secs_single * 1e3);
     println!("exec_ms_parallel={:.3}", b.secs_parallel * 1e3);
     println!("exec_workers={}", b.workers);
@@ -568,6 +668,7 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     println!("exec_bitmatch={}", b.bit_identical);
     println!("exec_scratch_hits={}", b.scratch.hits);
     println!("exec_scratch_misses={}", b.scratch.misses);
+    println!("exec_scratch_hit_rate={:.4}", b.scratch.hit_rate());
     println!("exec_pipeline={}", b.pipeline.label());
     println!("exec_prepared={}", b.prepared_intervals);
     if let Some(off) = b.secs_pipeline_off {
@@ -583,7 +684,7 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     if let Some(p) = &b.profile {
         println!("exec_profile_json={}", p.to_json());
     }
-    Ok(())
+    obs.finish()
 }
 
 fn cmd_serve(rest: &[String]) -> Result<(), String> {
@@ -609,6 +710,7 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
             .into());
     }
     let shape = ArtifactShape::default();
+    let obs = obs_begin(rest);
     if let Some(dp) = opt_design(rest)? {
         // Predicted accelerator latency for the serving shape under the
         // tuned (config, partition method) point.
@@ -659,8 +761,20 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
             .collect();
         let x = weights::init_features(r as u64, shape.n, shape.d);
         let t0 = std::time::Instant::now();
-        let out = exe.run(&x, &src, &dst, &deg).map_err(|e| format!("{e:#}"))?;
-        lat.push(t0.elapsed());
+        let out = {
+            let _span = trace::span_args(
+                trace::names::REQUEST,
+                trace::cat::EXEC,
+                trace::TRACK_MAIN,
+                -1,
+                r as i32,
+                -1,
+            );
+            exe.run(&x, &src, &dst, &deg).map_err(|e| format!("{e:#}"))?
+        };
+        let dt = t0.elapsed();
+        metrics::observe("serve_latency_s", dt.as_secs_f64());
+        lat.push(dt);
         assert!(out.data.iter().all(|v| v.is_finite()));
     }
     let total = t_all.elapsed();
@@ -682,7 +796,17 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         format!("{:.1} req/s", requests as f64 / total.as_secs_f64()),
     ]);
     t.print();
-    Ok(())
+    metrics::gauge("serve_p50_s", lat[requests / 2].as_secs_f64());
+    metrics::gauge(
+        "serve_p99_s",
+        lat[(requests * 99 / 100).min(requests - 1)].as_secs_f64(),
+    );
+    metrics::gauge(
+        "serve_requests_per_sec",
+        requests as f64 / total.as_secs_f64(),
+    );
+    metrics::counter_abs("serve_requests", requests as u64);
+    obs.finish()
 }
 
 fn cmd_validate(rest: &[String]) -> Result<(), String> {
@@ -702,6 +826,7 @@ fn cmd_validate(rest: &[String]) -> Result<(), String> {
             ModelZoo::builtin().entries().to_vec()
         };
     let pipeline = opt_pipeline(rest)?;
+    let obs = obs_begin(rest);
     let cache = Caches::new(scale);
     let g = cache.graph(Dataset::Ak);
     let accel = AcceleratorConfig::switchblade();
@@ -714,6 +839,10 @@ fn cmd_validate(rest: &[String]) -> Result<(), String> {
         let ir = m.build(dims).map_err(|e| format!("{}: {e}", m.name()))?;
         let diff =
             switchblade::coordinator::validate_numerics_pipelined(&ir, &g, &accel, pipeline);
+        metrics::gauge(
+            &format!("validate_max_abs_diff_{}", m.name().to_lowercase()),
+            diff as f64,
+        );
         let ok = diff < 1e-4;
         t.row(vec![
             m.display(),
@@ -730,5 +859,5 @@ fn cmd_validate(rest: &[String]) -> Result<(), String> {
         "(for the PJRT three-way check, add the `anyhow`/`xla` deps per rust/Cargo.toml's \
          note, then run `cargo test --features pjrt --test integration_runtime`)"
     );
-    Ok(())
+    obs.finish()
 }

@@ -1,0 +1,330 @@
+//! Process-wide metrics registry: named counters, gauges and
+//! histograms, with JSON and Prometheus-text exporters.
+//!
+//! The registry is a global keyed by plain `[a-z0-9_]` metric names
+//! (no labels — names like `sim_traffic_bytes_src` carry the tag in
+//! the name so both exporters stay line-oriented and greppable).
+//! Recording is lock-per-update on a `BTreeMap`, cheap at this crate's
+//! rates (metrics are recorded per run / per phase, not per vertex),
+//! and the sorted map makes every export deterministic.
+//!
+//! [`Snapshot::to_json`] emits one flat JSON object, **one metric per
+//! line** — `scripts/bench.sh` and `scripts/bench_diff.sh` extract
+//! values with `sed`, which that shape guarantees works. Histograms
+//! flatten to `<name>_count` / `_sum` / `_min` / `_max` / `_mean`
+//! lines in JSON and expand to real `_bucket{le=...}` series in
+//! [`Snapshot::to_prometheus`].
+//!
+//! Because the registry is process-global and `cargo test` runs many
+//! tests in one process, tests must use test-unique metric names and
+//! assert only on their own keys; only `main.rs` calls [`reset`] (once,
+//! at command start, before any thread is spawned).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+
+/// Histogram bucket upper bounds: decades from 1 µs-ish to 1000 —
+/// wide enough for latencies in seconds and row counts alike.
+pub const BOUNDS: [f64; 10] = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 1e1, 1e2, 1e3];
+
+/// Streaming histogram: per-decade cumulative counts plus the moments
+/// needed for mean / min / max.
+#[derive(Clone, Copy, Debug)]
+pub struct Hist {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    /// `buckets[i]` counts observations `<= BOUNDS[i]` (cumulative,
+    /// Prometheus-style; values above the last bound only land in
+    /// `count`).
+    pub buckets: [u64; BOUNDS.len()],
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: [0; BOUNDS.len()],
+        }
+    }
+}
+
+impl Hist {
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        for (i, b) in BOUNDS.iter().enumerate() {
+            if v <= *b {
+                self.buckets[i] += 1;
+            }
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// One registered metric.
+#[derive(Clone, Debug)]
+pub enum Metric {
+    /// Monotonic count (hits, bytes, rows).
+    Counter(u64),
+    /// Point-in-time value (latency, utilization, speedup).
+    Gauge(f64),
+    /// Distribution (per-request latencies).
+    Histogram(Hist),
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, Metric>> {
+    static REG: OnceLock<Mutex<BTreeMap<String, Metric>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Clear every metric. Command entry points call this once before
+/// recording; never call it from library code or tests.
+pub fn reset() {
+    registry().lock().unwrap().clear();
+}
+
+/// Add `delta` to counter `name` (created at 0). A `name` previously
+/// registered as another kind is overwritten as a counter.
+pub fn counter(name: &str, delta: u64) {
+    let mut r = registry().lock().unwrap();
+    match r.get_mut(name) {
+        Some(Metric::Counter(c)) => *c += delta,
+        _ => {
+            r.insert(name.to_string(), Metric::Counter(delta));
+        }
+    }
+}
+
+/// Set counter `name` to an absolute value (for counters the source
+/// already accumulated, e.g. scratch hits of one run).
+pub fn counter_abs(name: &str, v: u64) {
+    registry().lock().unwrap().insert(name.to_string(), Metric::Counter(v));
+}
+
+/// Set gauge `name`.
+pub fn gauge(name: &str, v: f64) {
+    registry().lock().unwrap().insert(name.to_string(), Metric::Gauge(v));
+}
+
+/// Record one observation into histogram `name` (created empty).
+pub fn observe(name: &str, v: f64) {
+    let mut r = registry().lock().unwrap();
+    match r.get_mut(name) {
+        Some(Metric::Histogram(h)) => h.observe(v),
+        _ => {
+            let mut h = Hist::default();
+            h.observe(v);
+            r.insert(name.to_string(), Metric::Histogram(h));
+        }
+    }
+}
+
+/// Point-in-time copy of the registry, sorted by name.
+pub fn snapshot() -> Snapshot {
+    let r = registry().lock().unwrap();
+    Snapshot {
+        entries: r.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+    }
+}
+
+/// A sorted copy of the registry at one instant.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub entries: Vec<(String, Metric)>,
+}
+
+/// JSON number formatting: f64 via `Display` (shortest round-trip, no
+/// exponent for the magnitudes we record), non-finite as `null`.
+fn fnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+impl Snapshot {
+    pub fn get(&self, name: &str) -> Option<&Metric> {
+        self.entries
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, m)| m)
+    }
+
+    /// Scalar view of a metric: counter as f64, gauge value, histogram
+    /// mean.
+    pub fn value(&self, name: &str) -> Option<f64> {
+        self.get(name).map(|m| match m {
+            Metric::Counter(c) => *c as f64,
+            Metric::Gauge(v) => *v,
+            Metric::Histogram(h) => h.mean(),
+        })
+    }
+
+    /// Flat JSON object, one `"name": value` pair per line (the shape
+    /// `bench.sh` / `bench_diff.sh` extract from with `sed`).
+    pub fn to_json(&self) -> String {
+        let mut lines: Vec<String> = Vec::with_capacity(self.entries.len());
+        for (name, m) in &self.entries {
+            match m {
+                Metric::Counter(c) => lines.push(format!("  \"{name}\": {c}")),
+                Metric::Gauge(v) => lines.push(format!("  \"{name}\": {}", fnum(*v))),
+                Metric::Histogram(h) => {
+                    lines.push(format!("  \"{name}_count\": {}", h.count));
+                    lines.push(format!("  \"{name}_sum\": {}", fnum(h.sum)));
+                    lines.push(format!("  \"{name}_min\": {}", fnum(h.min)));
+                    lines.push(format!("  \"{name}_max\": {}", fnum(h.max)));
+                    lines.push(format!("  \"{name}_mean\": {}", fnum(h.mean())));
+                }
+            }
+        }
+        format!("{{\n{}\n}}\n", lines.join(",\n"))
+    }
+
+    /// Prometheus text exposition format.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, m) in &self.entries {
+            match m {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "# TYPE {name} counter");
+                    let _ = writeln!(out, "{name} {c}");
+                }
+                Metric::Gauge(v) => {
+                    let _ = writeln!(out, "# TYPE {name} gauge");
+                    let _ = writeln!(out, "{name} {v}");
+                }
+                Metric::Histogram(h) => {
+                    let _ = writeln!(out, "# TYPE {name} histogram");
+                    for (i, b) in BOUNDS.iter().enumerate() {
+                        let _ = writeln!(out, "{name}_bucket{{le=\"{b}\"}} {}", h.buckets[i]);
+                    }
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+                    let _ = writeln!(out, "{name}_sum {}", h.sum);
+                    let _ = writeln!(out, "{name}_count {}", h.count);
+                }
+            }
+        }
+        out
+    }
+
+    /// Write to `path`: Prometheus text when the extension is `.prom`,
+    /// flat JSON otherwise.
+    pub fn write(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let body = if path.extension().is_some_and(|e| e == "prom") {
+            self.to_prometheus()
+        } else {
+            self.to_json()
+        };
+        std::fs::write(path, body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is shared by every test in this process: use
+    // test-unique names, assert only on our own keys, never reset().
+
+    #[test]
+    fn counter_accumulates_and_sets() {
+        counter("obs_mtest_c", 2);
+        counter("obs_mtest_c", 3);
+        counter_abs("obs_mtest_c_abs", 41);
+        let s = snapshot();
+        assert_eq!(s.value("obs_mtest_c"), Some(5.0));
+        assert_eq!(s.value("obs_mtest_c_abs"), Some(41.0));
+        assert!(s.value("obs_mtest_c_missing").is_none());
+    }
+
+    #[test]
+    fn gauge_overwrites() {
+        gauge("obs_mtest_g", 1.5);
+        gauge("obs_mtest_g", 2.25);
+        assert_eq!(snapshot().value("obs_mtest_g"), Some(2.25));
+    }
+
+    #[test]
+    fn histogram_moments_and_buckets() {
+        observe("obs_mtest_h", 0.5e-3);
+        observe("obs_mtest_h", 2e-3);
+        observe("obs_mtest_h", 2e3); // above the last bound
+        let s = snapshot();
+        let Some(Metric::Histogram(h)) = s.get("obs_mtest_h") else {
+            panic!("histogram registered");
+        };
+        assert_eq!(h.count, 3);
+        assert!((h.min - 0.5e-3).abs() < 1e-12);
+        assert!((h.max - 2e3).abs() < 1e-9);
+        // 1e-3 bucket holds only the first observation; 1e-2 holds two;
+        // the out-of-range value appears in no bucket.
+        assert_eq!(h.buckets[3], 1);
+        assert_eq!(h.buckets[4], 2);
+        assert_eq!(h.buckets[BOUNDS.len() - 1], 2);
+        assert!((s.value("obs_mtest_h").unwrap() - h.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_is_flat_one_metric_per_line() {
+        counter_abs("obs_mtest_json_hits", 7);
+        gauge("obs_mtest_json_ms", 12.5);
+        observe("obs_mtest_json_lat", 0.25);
+        let j = snapshot().to_json();
+        assert!(j.starts_with("{\n"));
+        assert!(j.ends_with("}\n"));
+        // One key per line, sed-extractable.
+        assert!(j.lines().any(|l| l.trim() == "\"obs_mtest_json_hits\": 7"
+            || l.trim() == "\"obs_mtest_json_hits\": 7,"));
+        assert!(j.contains("\"obs_mtest_json_ms\": 12.5"));
+        assert!(j.contains("\"obs_mtest_json_lat_count\": 1"));
+        assert!(j.contains("\"obs_mtest_json_lat_mean\": 0.25"));
+        // BTreeMap-backed registry ⇒ our keys appear in sorted order
+        // (hits < lat < ms) regardless of recording order.
+        let pos = |k: &str| j.find(k).unwrap();
+        assert!(pos("obs_mtest_json_hits") < pos("obs_mtest_json_lat_count"));
+        assert!(pos("obs_mtest_json_lat_count") < pos("obs_mtest_json_ms"));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        counter_abs("obs_mtest_prom_total", 3);
+        observe("obs_mtest_prom_lat", 0.5);
+        let p = snapshot().to_prometheus();
+        assert!(p.contains("# TYPE obs_mtest_prom_total counter\nobs_mtest_prom_total 3\n"));
+        assert!(p.contains("# TYPE obs_mtest_prom_lat histogram"));
+        assert!(p.contains("obs_mtest_prom_lat_bucket{le=\"1\"} 1"));
+        assert!(p.contains("obs_mtest_prom_lat_bucket{le=\"+Inf\"} 1"));
+        assert!(p.contains("obs_mtest_prom_lat_sum 0.5"));
+        assert!(p.contains("obs_mtest_prom_lat_count 1"));
+    }
+
+    #[test]
+    fn non_finite_gauges_export_as_null() {
+        gauge("obs_mtest_nan", f64::NAN);
+        let j = snapshot().to_json();
+        assert!(j.contains("\"obs_mtest_nan\": null"));
+    }
+}

@@ -1,0 +1,28 @@
+//! Observability: structured tracing + metrics for the whole pipeline.
+//!
+//! Two independent halves, both zero-dependency:
+//!
+//! * [`trace`] — a lightweight span recorder. Code anywhere in the crate
+//!   brackets work in [`trace::span`] guards; when a [`trace::Session`]
+//!   is open the guards record `(name, track, start, duration)` spans
+//!   into thread-local buffers, and the finished [`trace::Trace`]
+//!   exports Chrome trace-event JSON (`chrome://tracing` / Perfetto).
+//!   One track per executor worker plus a main/prepare track makes the
+//!   interval-pipelining overlap literally visible. When no session is
+//!   open the guards are inert: no clock read, no allocation.
+//! * [`metrics`] — a process-wide registry of named counters, gauges
+//!   and histograms with JSON and Prometheus-text exporters. The
+//!   single source for `scripts/bench.sh`'s `BENCH_exec.json` and the
+//!   `bench_diff.sh` perf-regression gate.
+//!
+//! The CLI wires both: `bench` / `simulate` / `validate` / `serve`
+//! accept `--trace out.json` and `--metrics out.json`.
+//!
+//! `sched::PhaseProfile` is a *consumer* of the span stream
+//! ([`crate::sched::PhaseProfile::from_spans`]) rather than a parallel
+//! timing mechanism: `exec::Executor::run_profiled` opens a session,
+//! drives the walk, and folds the recorded walk spans into the familiar
+//! per-(group, phase) table.
+
+pub mod metrics;
+pub mod trace;

@@ -24,6 +24,11 @@ fn cal_shard_height(g: &Csr, cfg: &PartitionConfig, interval_height: usize) -> u
 
 /// Partition `g` with plain DSW-GP + sparsity elimination.
 pub fn partition_dsw(g: &Csr, cfg: PartitionConfig) -> Partitions {
+    let _span = crate::obs::trace::span(
+        crate::obs::trace::names::PARTITION_DSW,
+        crate::obs::trace::cat::FRONTEND,
+        crate::obs::trace::TRACK_MAIN,
+    );
     let n = g.num_vertices();
     let interval_height = cfg.interval_height();
     let shard_height = cal_shard_height(g, &cfg, interval_height);

@@ -14,6 +14,11 @@ use crate::graph::{Csr, VertexId};
 
 /// Partition `g` with FGGP (Alg 3).
 pub fn partition_fggp(g: &Csr, cfg: PartitionConfig) -> Partitions {
+    let _span = crate::obs::trace::span(
+        crate::obs::trace::names::PARTITION_FGGP,
+        crate::obs::trace::cat::FRONTEND,
+        crate::obs::trace::TRACK_MAIN,
+    );
     let n = g.num_vertices();
     let interval_height = cfg.interval_height();
 

@@ -69,14 +69,19 @@
 //! canonical one — the order-equivalence property that previously had to
 //! be taken on faith.
 //!
-//! [`Profiler`] is `Traced`'s sibling: instead of recording *order* it
-//! records *wall time* per `(group, phase)` plus per-shard gather
-//! statistics, so `switchblade bench --profile` can point the next perf
-//! PR at the actual hot phase instead of a guess.
-
-use std::time::Instant;
+//! [`PhaseProfile`] is the timing counterpart. [`PartitionWalk::drive`]
+//! brackets every hook in an [`obs::trace`](crate::obs::trace) span
+//! (inert unless a trace session is open), and
+//! [`PhaseProfile::from_spans`] folds that span stream into wall time
+//! per `(group, phase)` plus per-shard gather statistics —
+//! `exec::Executor::run_profiled` opens a session around one walk and
+//! derives the profile from it, so `switchblade bench --profile` and
+//! `--trace` are two views of the *same* measurement, and the profile
+//! can point the next perf PR at the actual hot phase instead of a
+//! guess.
 
 use crate::isa::{PhaseGroup, Program};
+use crate::obs::trace::{self, cat, names, Span, TRACK_MAIN};
 use crate::partition::{Interval, Partitions, Shard};
 use crate::util::report::Table;
 
@@ -156,9 +161,17 @@ impl<'a> PartitionWalk<'a> {
     /// Drive a visitor through the canonical order. This loop nest is the
     /// single source of truth for PLOF execution order — backends must
     /// not reimplement it.
+    ///
+    /// Every hook is bracketed in an [`obs::trace`](crate::obs::trace)
+    /// span on the main track (group / interval scopes plus one span per
+    /// scatter / gather / drain / apply step), so any traced or profiled
+    /// walk — executor or simulator — gets its phase timeline for free.
+    /// With no trace session open the span guards are inert.
     pub fn drive<V: PhaseVisitor>(&self, v: &mut V) {
         for (gi, group) in self.program.groups.iter().enumerate() {
             let gcx = GroupCtx { index: gi, group };
+            let _group_span =
+                trace::span_args(names::GROUP, cat::WALK, TRACK_MAIN, gi as i32, -1, -1);
             v.begin_group(&gcx);
             for (ii, iv) in self.parts.intervals.iter().enumerate() {
                 let cx = StepCtx {
@@ -167,9 +180,35 @@ impl<'a> PartitionWalk<'a> {
                     interval_idx: ii,
                     interval: iv,
                 };
+                let _interval_span = trace::span_args(
+                    names::INTERVAL,
+                    cat::WALK,
+                    TRACK_MAIN,
+                    gi as i32,
+                    ii as i32,
+                    -1,
+                );
                 v.begin_interval(&cx);
-                v.scatter_phase(&cx);
+                {
+                    let _s = trace::span_args(
+                        names::SCATTER,
+                        cat::WALK,
+                        TRACK_MAIN,
+                        gi as i32,
+                        ii as i32,
+                        -1,
+                    );
+                    v.scatter_phase(&cx);
+                }
                 for (si, shard) in self.parts.shards_of_indexed(ii) {
+                    let _g = trace::span_args(
+                        names::GATHER_SHARD,
+                        cat::WALK,
+                        TRACK_MAIN,
+                        gi as i32,
+                        ii as i32,
+                        si as i32,
+                    );
                     v.gather_shard(&cx, si, shard);
                 }
                 if let Some(next) = self.parts.intervals.get(ii + 1) {
@@ -181,8 +220,28 @@ impl<'a> PartitionWalk<'a> {
                     };
                     v.lookahead_interval(&cx, &ncx);
                 }
-                v.end_gather(&cx);
-                v.apply_phase(&cx);
+                {
+                    let _d = trace::span_args(
+                        names::GATHER_DRAIN,
+                        cat::WALK,
+                        TRACK_MAIN,
+                        gi as i32,
+                        ii as i32,
+                        -1,
+                    );
+                    v.end_gather(&cx);
+                }
+                {
+                    let _a = trace::span_args(
+                        names::APPLY,
+                        cat::WALK,
+                        TRACK_MAIN,
+                        gi as i32,
+                        ii as i32,
+                        -1,
+                    );
+                    v.apply_phase(&cx);
+                }
                 v.end_interval(&cx);
             }
             v.end_group(&gcx);
@@ -272,7 +331,8 @@ impl<V: PhaseVisitor> PhaseVisitor for Traced<'_, V> {
     }
 }
 
-/// Wall time spent in one group's phases, as measured by [`Profiler`].
+/// Wall time spent in one group's phases, as folded from the walk's
+/// span stream by [`PhaseProfile::from_spans`].
 ///
 /// For a pooled backend like the executor, `gather_shard` is only a
 /// schedule point — the shard work happens when the pool drains at
@@ -295,9 +355,8 @@ pub struct PhaseTimes {
     /// `end_gather` drain) — the load-balance ceiling.
     pub max_gather_s: f64,
     /// Next-interval DstBuffer preparations that ran under this group's
-    /// gather drains (interval pipelining). The sched Profiler cannot see
-    /// inside `end_gather`, so these two fields are backfilled by the
-    /// backend — `exec::Executor::run_profiled` — and stay zero for
+    /// gather drains (interval pipelining) — folded from the `prepare`
+    /// spans the pipelined executor emits inside `end_gather`. Zero for
     /// non-pipelined backends or `PipelineMode::Off`.
     pub prepared: u64,
     /// Seconds spent in those preparations. Main-thread work overlapped
@@ -322,6 +381,59 @@ pub struct PhaseProfile {
 }
 
 impl PhaseProfile {
+    /// Fold a span stream (what one [`obs::trace`](crate::obs::trace)
+    /// session recorded around a walk) into per-(group, phase) wall
+    /// times — the profile consumer of the trace producer.
+    ///
+    /// Only walk-category step spans and the executor's `prepare` spans
+    /// are folded; scope spans (`group` / `interval` lanes) contribute
+    /// counts, and worker-lane `shard` spans are ignored so pooled
+    /// gather work is not double-counted (the drain span already holds
+    /// its wall time).
+    pub fn from_spans(spans: &[Span]) -> PhaseProfile {
+        let mut groups: Vec<PhaseTimes> = Vec::new();
+        for s in spans {
+            if s.group < 0 {
+                continue;
+            }
+            let gi = s.group as usize;
+            if groups.len() <= gi {
+                groups.resize_with(gi + 1, PhaseTimes::default);
+            }
+            let g = &mut groups[gi];
+            let secs = s.dur_ns as f64 / 1e9;
+            match s.name {
+                names::SCATTER if s.cat == cat::WALK => g.scatter_s += secs,
+                names::GATHER_SHARD if s.cat == cat::WALK => {
+                    g.shards += 1;
+                    g.gather_s += secs;
+                    g.max_gather_s = g.max_gather_s.max(secs);
+                }
+                names::GATHER_DRAIN if s.cat == cat::WALK => {
+                    g.gather_s += secs;
+                    g.max_gather_s = g.max_gather_s.max(secs);
+                }
+                names::APPLY if s.cat == cat::WALK => g.apply_s += secs,
+                names::INTERVAL if s.cat == cat::WALK => g.intervals += 1,
+                names::PREPARE => {
+                    g.prepared += 1;
+                    g.prepare_s += secs;
+                }
+                _ => {}
+            }
+        }
+        PhaseProfile { groups }
+    }
+
+    /// Grow to at least `n` groups (all-zero rows for groups the span
+    /// stream never touched), so the profile's group axis always matches
+    /// the program's.
+    pub fn pad_groups(&mut self, n: usize) {
+        if self.groups.len() < n {
+            self.groups.resize_with(n, PhaseTimes::default);
+        }
+    }
+
     /// Total hook seconds across all groups and phases.
     pub fn total_s(&self) -> f64 {
         self.groups.iter().map(|g| g.total_s()).sum()
@@ -400,94 +512,6 @@ impl PhaseProfile {
             self.total_s(),
             groups.join(",")
         )
-    }
-}
-
-/// Visitor wrapper timing every phase hook while delegating to the
-/// wrapped visitor — the walk-level profiler (sibling of [`Traced`]).
-/// Works over any backend: the executor, the simulator, or a test stub.
-pub struct Profiler<'v, V> {
-    pub inner: &'v mut V,
-    groups: Vec<PhaseTimes>,
-}
-
-impl<'v, V> Profiler<'v, V> {
-    pub fn new(inner: &'v mut V) -> Self {
-        Profiler {
-            inner,
-            groups: Vec::new(),
-        }
-    }
-
-    fn slot(&mut self, group_idx: usize) -> &mut PhaseTimes {
-        if self.groups.len() <= group_idx {
-            self.groups.resize_with(group_idx + 1, PhaseTimes::default);
-        }
-        &mut self.groups[group_idx]
-    }
-
-    pub fn into_profile(self) -> PhaseProfile {
-        PhaseProfile {
-            groups: self.groups,
-        }
-    }
-}
-
-impl<V: PhaseVisitor> PhaseVisitor for Profiler<'_, V> {
-    fn begin_group(&mut self, cx: &GroupCtx) {
-        self.slot(cx.index);
-        self.inner.begin_group(cx);
-    }
-
-    fn end_group(&mut self, cx: &GroupCtx) {
-        self.inner.end_group(cx);
-    }
-
-    fn begin_interval(&mut self, cx: &StepCtx) {
-        self.slot(cx.group_idx).intervals += 1;
-        self.inner.begin_interval(cx);
-    }
-
-    fn scatter_phase(&mut self, cx: &StepCtx) {
-        let t = Instant::now();
-        self.inner.scatter_phase(cx);
-        self.slot(cx.group_idx).scatter_s += t.elapsed().as_secs_f64();
-    }
-
-    fn gather_shard(&mut self, cx: &StepCtx, shard_idx: usize, shard: &Shard) {
-        let t = Instant::now();
-        self.inner.gather_shard(cx, shard_idx, shard);
-        let dt = t.elapsed().as_secs_f64();
-        let g = self.slot(cx.group_idx);
-        g.shards += 1;
-        g.gather_s += dt;
-        g.max_gather_s = g.max_gather_s.max(dt);
-    }
-
-    // The lookahead itself is a bookkeeping no-op in every backend (the
-    // overlapped preparation it announces runs inside `end_gather`, whose
-    // wall time lands in `gather_s`); delegate untimed.
-    fn lookahead_interval(&mut self, cx: &StepCtx, next: &StepCtx) {
-        self.inner.lookahead_interval(cx, next);
-    }
-
-    fn end_gather(&mut self, cx: &StepCtx) {
-        let t = Instant::now();
-        self.inner.end_gather(cx);
-        let dt = t.elapsed().as_secs_f64();
-        let g = self.slot(cx.group_idx);
-        g.gather_s += dt;
-        g.max_gather_s = g.max_gather_s.max(dt);
-    }
-
-    fn apply_phase(&mut self, cx: &StepCtx) {
-        let t = Instant::now();
-        self.inner.apply_phase(cx);
-        self.slot(cx.group_idx).apply_s += t.elapsed().as_secs_f64();
-    }
-
-    fn end_interval(&mut self, cx: &StepCtx) {
-        self.inner.end_interval(cx);
     }
 }
 
@@ -638,13 +662,14 @@ mod tests {
     }
 
     #[test]
-    fn profiler_counts_phases_and_delegates() {
+    fn traced_walk_profiles_from_its_span_stream() {
         struct Null;
         impl PhaseVisitor for Null {}
         let mut null = Null;
-        let mut prof = Profiler::new(&mut null);
-        PartitionWalk::new(&toy_program(2), &toy_parts()).drive(&mut prof);
-        let p = prof.into_profile();
+        let sess = trace::begin();
+        PartitionWalk::new(&toy_program(2), &toy_parts()).drive(&mut null);
+        let tr = sess.end();
+        let p = PhaseProfile::from_spans(&tr.spans);
         assert_eq!(p.groups.len(), 2);
         for g in &p.groups {
             // Two intervals per group; the first has two shards.
@@ -663,8 +688,54 @@ mod tests {
         assert!(json.contains("\"groups\":[{\"group\":0,"));
         assert!(json.contains("\"shards\":2"));
         // Pipelining columns exist (zero here — only the pipelined
-        // executor backfills them).
+        // executor emits `prepare` spans).
         assert!(json.contains("\"prepared\":0"));
         assert!(p.table().render().contains("prepare"));
+    }
+
+    #[test]
+    fn from_spans_folds_phases_and_skips_worker_lanes() {
+        let mk = |name, cat_, dur_ns: u64, g: i32, i: i32, s: i32| Span {
+            name,
+            cat: cat_,
+            track: TRACK_MAIN,
+            start_ns: 0,
+            dur_ns,
+            group: g,
+            interval: i,
+            shard: s,
+        };
+        let spans = [
+            mk(names::GROUP, cat::WALK, 1_000, 0, -1, -1), // scope: untimed
+            mk(names::INTERVAL, cat::WALK, 500, 0, 0, -1), // scope: counted
+            mk(names::SCATTER, cat::WALK, 10, 0, 0, -1),
+            mk(names::GATHER_SHARD, cat::WALK, 30, 0, 0, 0),
+            mk(names::GATHER_SHARD, cat::WALK, 50, 0, 0, 1),
+            mk(names::GATHER_DRAIN, cat::WALK, 40, 0, 0, -1),
+            mk(names::PREPARE, cat::EXEC, 20, 0, 1, -1),
+            mk(names::APPLY, cat::WALK, 5, 0, 0, -1),
+            // Worker-lane view of pooled work: must not double-count.
+            mk(names::SHARD, cat::EXEC, 9_999, 0, 0, 0),
+            // Span without a group index: skipped.
+            mk(names::COMPILE, cat::FRONTEND, 7, -1, -1, -1),
+        ];
+        let mut p = PhaseProfile::from_spans(&spans);
+        assert_eq!(p.groups.len(), 1);
+        let g = &p.groups[0];
+        assert_eq!(g.intervals, 1);
+        assert_eq!(g.shards, 2);
+        let ns = 1e-9;
+        assert!((g.scatter_s - 10.0 * ns).abs() < 1e-15);
+        assert!((g.gather_s - 120.0 * ns).abs() < 1e-15);
+        assert!((g.max_gather_s - 50.0 * ns).abs() < 1e-15);
+        assert!((g.apply_s - 5.0 * ns).abs() < 1e-15);
+        assert_eq!(g.prepared, 1);
+        assert!((g.prepare_s - 20.0 * ns).abs() < 1e-15);
+        // pad_groups grows the axis with zero rows, never shrinks.
+        p.pad_groups(3);
+        assert_eq!(p.groups.len(), 3);
+        assert_eq!(p.groups[2].shards, 0);
+        p.pad_groups(1);
+        assert_eq!(p.groups.len(), 3);
     }
 }

@@ -62,6 +62,12 @@ impl Traffic {
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()
     }
+
+    /// `(tag, bytes)` in [`TrafficTag::ALL`] order — the one enumeration
+    /// the metrics registry and the per-tag report rows share.
+    pub fn iter(&self) -> impl Iterator<Item = (TrafficTag, u64)> + '_ {
+        TrafficTag::ALL.iter().map(|&t| (t, self.get(t)))
+    }
 }
 
 /// One simulation outcome.
@@ -101,6 +107,27 @@ impl SimResult {
     pub fn overall_utilization(&self) -> f64 {
         (self.vu_utilization() + self.mu_utilization() + self.bw_utilization()) / 3.0
     }
+
+    /// Publish this result into the process metrics registry under
+    /// `sim_*` names — the single place the simulator's utilizations and
+    /// per-tag traffic become metrics, so `simulate`, `repro` and bench
+    /// trailers stop computing them independently.
+    pub fn record_metrics(&self) {
+        use crate::obs::metrics;
+        metrics::gauge("sim_cycles", self.cycles);
+        metrics::gauge("sim_latency_s", self.seconds);
+        metrics::gauge("sim_vu_utilization", self.vu_utilization());
+        metrics::gauge("sim_mu_utilization", self.mu_utilization());
+        metrics::gauge("sim_bw_utilization", self.bw_utilization());
+        metrics::gauge("sim_overall_utilization", self.overall_utilization());
+        metrics::counter_abs("sim_traffic_bytes_total", self.traffic.total());
+        for (tag, bytes) in self.traffic.iter() {
+            metrics::counter_abs(&format!("sim_traffic_bytes_{}", tag.name()), bytes);
+        }
+        metrics::counter_abs("sim_shards_processed", self.shards_processed);
+        metrics::counter_abs("sim_intervals_processed", self.intervals_processed);
+        metrics::counter_abs("sim_instructions", self.instructions);
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +142,35 @@ mod tests {
         t.add(TrafficTag::Meta, 8);
         assert_eq!(t.get(TrafficTag::SrcVertex), 150);
         assert_eq!(t.total(), 158);
+    }
+
+    #[test]
+    fn record_metrics_publishes_sim_names() {
+        // The only test in this process recording `sim_*` names (the
+        // registry is global; see obs::metrics docs).
+        let mut traffic = Traffic::default();
+        traffic.add(TrafficTag::SrcVertex, 640);
+        traffic.add(TrafficTag::Meta, 64);
+        let r = SimResult {
+            cycles: 200.0,
+            seconds: 2e-7,
+            vu_busy: 100.0,
+            mu_busy: 50.0,
+            dram_busy: 50.0,
+            traffic,
+            shards_processed: 4,
+            intervals_processed: 2,
+            instructions: 99,
+        };
+        r.record_metrics();
+        let s = crate::obs::metrics::snapshot();
+        assert_eq!(s.value("sim_vu_utilization"), Some(0.5));
+        assert_eq!(s.value("sim_overall_utilization"), Some(r.overall_utilization()));
+        assert_eq!(s.value("sim_traffic_bytes_src"), Some(640.0));
+        assert_eq!(s.value("sim_traffic_bytes_meta"), Some(64.0));
+        assert_eq!(s.value("sim_traffic_bytes_total"), Some(704.0));
+        assert_eq!(s.value("sim_traffic_bytes_edge"), Some(0.0));
+        assert_eq!(s.value("sim_instructions"), Some(99.0));
     }
 
     #[test]

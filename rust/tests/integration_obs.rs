@@ -1,0 +1,164 @@
+//! Observability acceptance tests: the trace layer's end-to-end claims.
+//!
+//! The trace session is process-global and exclusive (`trace::begin`
+//! blocks until the current holder ends), so these tests serialize
+//! against each other and against any other test that records — each
+//! one owns the span stream it asserts on.
+
+use switchblade::compiler::compile;
+use switchblade::exec::{weights, Executor, Matrix, PipelineMode};
+use switchblade::graph::{generators, Csr};
+use switchblade::ir::models::Model;
+use switchblade::isa::Program;
+use switchblade::obs::trace::{self, names, Span};
+use switchblade::partition::{partition_fggp, PartitionConfig, Partitions};
+
+/// A 2-layer GCN on a skewed graph with budgets small enough to force
+/// several destination intervals per group — the same recipe the
+/// pipelining differential tests use, so `prepare` spans must appear.
+fn workload() -> (Program, Partitions, Matrix, Matrix) {
+    let g = Csr::from_edge_list(&generators::rmat(1 << 8, 3_000, 0.57, 0.19, 0.19, 17));
+    let ir = Model::Gcn.build(2, 8, 8, 8);
+    let prog = compile(&ir);
+    let cfg = PartitionConfig {
+        shard_bytes: 2 * 1024,
+        dst_bytes: 4 * 1024,
+        dim_src: prog.dim_src.max(1),
+        dim_edge: prog.dim_edge.max(1),
+        dim_dst: prog.dim_dst.max(1),
+        num_sthreads: 1,
+    };
+    let parts = partition_fggp(&g, cfg);
+    assert!(parts.intervals.len() > 1, "need intervals to pipeline");
+    let x = weights::init_features(7, g.num_vertices(), 8);
+    let mut deg = Matrix::zeros(g.num_vertices(), 1);
+    for v in 0..g.num_vertices() {
+        deg.set(v, 0, g.in_degree(v as u32) as f32);
+    }
+    (prog, parts, x, deg)
+}
+
+fn traced_run(prog: &Program, parts: &Partitions, x: &Matrix, deg: &Matrix, workers: usize) -> trace::Trace {
+    let sess = trace::begin();
+    let mut ex = Executor::new(prog, parts)
+        .with_workers(workers)
+        .with_pipeline_mode(PipelineMode::Interval);
+    let _ = ex.run(x, deg);
+    assert!(ex.prepared_intervals() > 0, "pipelining never engaged");
+    sess.end()
+}
+
+/// Everything identity-like about a span except its timing.
+fn keys(spans: &[Span]) -> Vec<(&'static str, &'static str, u32, i32, i32, i32)> {
+    spans
+        .iter()
+        .map(|s| (s.name, s.cat, s.track, s.group, s.interval, s.shard))
+        .collect()
+}
+
+#[test]
+fn single_worker_span_stream_is_deterministic() {
+    // With one worker everything runs on the driving thread, so two
+    // identical runs must record the identical span sequence (names,
+    // lanes and indices; durations of course differ).
+    let (prog, parts, x, deg) = workload();
+    let a = traced_run(&prog, &parts, &x, &deg, 1);
+    let b = traced_run(&prog, &parts, &x, &deg, 1);
+    assert!(!a.spans.is_empty());
+    assert_eq!(a.dropped, 0);
+    assert_eq!(keys(&a.spans), keys(&b.spans));
+}
+
+#[test]
+fn chrome_export_shape_is_loadable() {
+    let (prog, parts, x, deg) = workload();
+    let tr = traced_run(&prog, &parts, &x, &deg, 2);
+    let json = tr.to_chrome_json();
+    assert!(json.starts_with("{\"traceEvents\":["));
+    assert!(json.trim_end().ends_with('}'));
+    assert!(json.contains("\"displayTimeUnit\":\"ms\""));
+    // Metadata names the process and one lane per track.
+    assert!(json.contains("\"ph\":\"M\""));
+    assert!(json.contains("\"name\":\"switchblade\""));
+    assert!(json.contains("\"name\":\"main/prepare\""));
+    assert!(json.contains("\"name\":\"worker "), "no worker lane in export");
+    // Complete events carry the walk vocabulary.
+    assert!(json.contains("\"ph\":\"X\""));
+    for name in [names::INTERVAL, names::SCATTER, names::GATHER_DRAIN, names::SHARD] {
+        assert!(
+            json.contains(&format!("\"name\":\"{name}\"")),
+            "missing {name} events"
+        );
+    }
+    // Cheap well-formedness probe without a JSON dependency: the export
+    // is brace-balanced and every event line is one object.
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+}
+
+#[test]
+fn pipelined_prepare_overlaps_the_gather_drain() {
+    // The tentpole visual claim: with the interval pipeline on, the
+    // next interval's `prepare` runs inside the current interval's
+    // `gather_drain` window — nested on the main lane while `shard`
+    // spans fill the worker lanes.
+    let (prog, parts, x, deg) = workload();
+    let tr = traced_run(&prog, &parts, &x, &deg, 2);
+    let preps = tr.named(names::PREPARE);
+    let drains = tr.named(names::GATHER_DRAIN);
+    assert!(!preps.is_empty(), "no prepare spans recorded");
+    assert!(!drains.is_empty(), "no gather_drain spans recorded");
+    assert!(
+        preps.iter().any(|p| drains.iter().any(|d| d.contains(p))),
+        "no prepare span nested under a gather_drain span"
+    );
+    // And the drained shards really ran on worker lanes.
+    assert!(tr
+        .named(names::SHARD)
+        .iter()
+        .all(|s| s.track != trace::TRACK_MAIN));
+}
+
+#[test]
+fn untraced_run_records_nothing() {
+    // Hold the exclusive session so no concurrent test can record, then
+    // run the executor on a thread with no session flag: every guard on
+    // its path must take the disabled branch and leave the global
+    // counter untouched.
+    let (prog, parts, x, deg) = workload();
+    let sess = trace::begin();
+    let before = trace::recorded_total();
+    let out = std::thread::scope(|s| {
+        s.spawn(|| {
+            assert!(!trace::active());
+            let mut ex = Executor::new(&prog, &parts)
+                .with_workers(2)
+                .with_pipeline_mode(PipelineMode::Interval);
+            ex.run(&x, &deg)
+        })
+        .join()
+        .unwrap()
+    });
+    assert_eq!(out.rows, x.rows);
+    assert_eq!(trace::recorded_total() - before, 0);
+    assert!(sess.end().spans.is_empty());
+}
+
+#[test]
+fn run_profiled_composes_with_an_open_session() {
+    // `--profile` under `--trace`: run_profiled borrows the open session
+    // (re-entrant begin), folds its profile from a tail slice of the
+    // same stream, and leaves every span in the session for export.
+    let (prog, parts, x, deg) = workload();
+    let sess = trace::begin();
+    let mut ex = Executor::new(&prog, &parts)
+        .with_workers(2)
+        .with_pipeline_mode(PipelineMode::Interval);
+    let (_, profile) = ex.run_profiled(&x, &deg);
+    assert_eq!(profile.groups.len(), prog.groups.len());
+    assert!(profile.total_s() > 0.0);
+    let tr = sess.end();
+    assert!(
+        !tr.named(names::INTERVAL).is_empty(),
+        "outer session lost the profiled walk's spans"
+    );
+}

@@ -1,0 +1,73 @@
+#!/usr/bin/env bash
+# Perf-regression gate: compare two bench artifacts and fail when a
+# latency key regressed beyond a threshold.
+#
+#   scripts/bench_diff.sh BASELINE.json CANDIDATE.json [MAX_PCT]
+#
+# Both files may be BENCH_exec.json (scripts/bench.sh) or a raw
+# `switchblade bench --metrics` snapshot — each is flat JSON with one
+# "name": value pair per line, so the same sed extraction works on both.
+#
+# Gated keys (lower is better): exec_ms_parallel (the headline number),
+# exec_ms_single, exec_ms_pipeline_off, repro_fig7_s. A key missing or
+# non-numeric on either side is reported and skipped, never fatal — a
+# raw metrics file has no repro_fig7_s, and an old baseline may predate
+# a key. The gate fails (exit 1) only when a key present on both sides
+# regressed by more than MAX_PCT percent (default 10).
+#
+# Exit codes: 0 ok / nothing comparable, 1 regression, 2 usage error.
+set -euo pipefail
+
+if [[ $# -lt 2 || $# -gt 3 ]]; then
+  echo "usage: $0 BASELINE.json CANDIDATE.json [MAX_PCT]" >&2
+  exit 2
+fi
+BASE="$1"
+CAND="$2"
+MAX_PCT="${3:-${BENCH_DIFF_MAX_PCT:-10}}"
+
+for f in "$BASE" "$CAND"; do
+  if [[ ! -f "$f" ]]; then
+    echo "bench_diff: '$f' not found — nothing to gate, skipping" >&2
+    exit 0
+  fi
+done
+
+# One value from flat JSON: `"key": 12.5,` -> `12.5` (first match wins).
+val() { sed -n "s/^ *\"$2\": *\(.*\)$/\1/p" "$1" | head -1 | tr -d ', '; }
+
+is_num() { [[ "$1" =~ ^-?[0-9]+([.][0-9]+)?([eE][+-]?[0-9]+)?$ ]]; }
+
+fail=0
+compared=0
+for key in exec_ms_parallel exec_ms_single exec_ms_pipeline_off repro_fig7_s; do
+  b=$(val "$BASE" "$key")
+  c=$(val "$CAND" "$key")
+  if ! is_num "${b:-x}" || ! is_num "${c:-x}"; then
+    echo "bench_diff: $key — not numeric on both sides (base='${b:-<missing>}', cand='${c:-<missing>}'), skipped"
+    continue
+  fi
+  compared=$((compared + 1))
+  # Percent change, guarded against a ~zero baseline (timer noise).
+  verdict=$(awk -v b="$b" -v c="$c" -v m="$MAX_PCT" 'BEGIN {
+    if (b <= 1e-9) { print "OK 0.0"; exit }
+    pct = 100.0 * (c - b) / b
+    print (pct > m ? "REGRESSED" : "OK"), sprintf("%+.1f", pct)
+  }')
+  state=${verdict%% *}
+  pct=${verdict#* }
+  echo "bench_diff: $key — base $b, candidate $c (${pct}%, limit +${MAX_PCT}%): $state"
+  if [[ "$state" == "REGRESSED" ]]; then
+    fail=1
+  fi
+done
+
+if [[ $compared -eq 0 ]]; then
+  echo "bench_diff: no comparable keys between $BASE and $CAND — skipping gate" >&2
+  exit 0
+fi
+if [[ $fail -ne 0 ]]; then
+  echo "bench_diff: FAIL — latency regressed beyond ${MAX_PCT}% against $BASE" >&2
+  exit 1
+fi
+echo "bench_diff: OK — no key regressed beyond ${MAX_PCT}%"

@@ -6,14 +6,18 @@
 #   scripts/check.sh clippy test  # any subset, in the given order
 #
 # Stages:
-#   fmt       cargo fmt --check
-#   clippy    cargo clippy --all-targets -- -D warnings
-#   test      tier-1 gate: cargo build --release && cargo test -q
-#   smoke     zoo smoke: compile + simulate + validate examples/models/*.gnn
-#   profiler  `bench --profile` at tiny scale + its machine-readable trailers
-#   bench     scripts/bench.sh -> BENCH_exec.json (perf trajectory point)
-#   all       fmt clippy test smoke profiler (+ bench when BENCH=1, the
-#             historical knob)
+#   fmt        cargo fmt --check
+#   clippy     cargo clippy --all-targets -- -D warnings
+#   test       tier-1 gate: cargo build --release && cargo test -q
+#   smoke      zoo smoke: compile + simulate + validate examples/models/*.gnn
+#   profiler   `bench --profile` at tiny scale + its machine-readable trailers
+#   trace      `bench --trace/--metrics` at tiny scale: Chrome-trace JSON
+#              schema sanity + metrics self-diff through bench_diff.sh
+#   bench      scripts/bench.sh -> BENCH_exec.json (perf trajectory point)
+#   bench-diff scripts/bench_diff.sh BENCH_exec.json against $BASELINE
+#              (skips gracefully when no baseline is present)
+#   all        fmt clippy test smoke profiler trace (+ bench when BENCH=1,
+#              the historical knob)
 set -euo pipefail
 SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
 cd "$SCRIPT_DIR/../rust"
@@ -72,31 +76,88 @@ stage_profiler() {
   echo "profiler smoke OK"
 }
 
+# Trace smoke: `bench --trace --metrics` at tiny scale. Checks the
+# Chrome-trace artifact is loadable JSON with the expected event shape
+# (traceEvents array, ph:"X" complete events, named worker lanes) and
+# that the metrics artifact round-trips through bench_diff.sh against
+# itself with zero regressions.
+stage_trace() {
+  echo "== trace smoke: bench --trace/--metrics at tiny scale =="
+  local dir trace metrics
+  dir=$(mktemp -d "${TMPDIR:-/tmp}/switchblade_trace.XXXXXX")
+  trap 'rm -rf "$dir"' RETURN
+  trace="$dir/t.json" metrics="$dir/m.json"
+  cargo run --release --quiet -- bench --model GCN --dataset AK \
+    --scale 12 --iters 1 --pipeline on --trace "$trace" --metrics "$metrics" \
+    > /dev/null
+  if command -v python3 >/dev/null 2>&1; then
+    python3 - "$trace" <<'PY'
+import json, sys
+with open(sys.argv[1]) as f:
+    t = json.load(f)
+evs = t["traceEvents"]
+assert any(e.get("ph") == "X" for e in evs), "no complete events"
+lanes = {e["args"]["name"] for e in evs if e.get("name") == "thread_name"}
+assert "main/prepare" in lanes, f"main lane missing: {lanes}"
+assert any(l.startswith("worker ") for l in lanes), f"worker lane missing: {lanes}"
+print(f"trace OK: {sum(e.get('ph') == 'X' for e in evs)} spans, lanes {sorted(lanes)}")
+PY
+  else
+    local key
+    for key in '"traceEvents"' '"ph":"X"' '"main/prepare"' '"worker 0"'; do
+      grep -q "$key" "$trace" \
+        || { echo "trace artifact lost $key" >&2; exit 1; }
+    done
+  fi
+  grep -q '"exec_ms_parallel"' "$metrics" \
+    || { echo "metrics artifact lost exec_ms_parallel" >&2; exit 1; }
+  "$SCRIPT_DIR/bench_diff.sh" "$metrics" "$metrics"
+  echo "trace smoke OK"
+}
+
 stage_bench() {
   echo "== bench: scripts/bench.sh -> BENCH_exec.json =="
   "$SCRIPT_DIR/bench.sh"
 }
 
+# Perf-regression gate: diff this checkout's BENCH_exec.json against a
+# baseline (main's uploaded artifact in CI, any older run locally).
+# Skips — success — when either side is absent, so the gate never blocks
+# the first run or a fork without artifact access.
+stage_bench_diff() {
+  echo "== bench-diff: BENCH_exec.json vs \${BASELINE:-baseline/BENCH_exec.json} =="
+  local baseline="${BASELINE:-$SCRIPT_DIR/../baseline/BENCH_exec.json}"
+  if [[ ! -f "$SCRIPT_DIR/../BENCH_exec.json" ]]; then
+    echo "no BENCH_exec.json in this checkout — run 'check.sh bench' first; skipping" >&2
+    return 0
+  fi
+  "$SCRIPT_DIR/bench_diff.sh" "$baseline" "$SCRIPT_DIR/../BENCH_exec.json" \
+    "${BENCH_DIFF_MAX_PCT:-10}"
+}
+
 run_stage() {
   case "$1" in
-    fmt)      stage_fmt ;;
-    clippy)   stage_clippy ;;
-    test)     stage_test ;;
-    smoke)    stage_smoke ;;
-    profiler) stage_profiler ;;
-    bench)    stage_bench ;;
+    fmt)        stage_fmt ;;
+    clippy)     stage_clippy ;;
+    test)       stage_test ;;
+    smoke)      stage_smoke ;;
+    profiler)   stage_profiler ;;
+    trace)      stage_trace ;;
+    bench)      stage_bench ;;
+    bench-diff) stage_bench_diff ;;
     all)
       stage_fmt
       stage_clippy
       stage_test
       stage_smoke
       stage_profiler
+      stage_trace
       if [[ "${BENCH:-0}" != "0" ]]; then
         stage_bench
       fi
       ;;
     *)
-      echo "unknown stage '$1' (fmt|clippy|test|smoke|profiler|bench|all)" >&2
+      echo "unknown stage '$1' (fmt|clippy|test|smoke|profiler|trace|bench|bench-diff|all)" >&2
       exit 2
       ;;
   esac
