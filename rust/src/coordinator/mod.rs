@@ -11,7 +11,7 @@ use std::sync::{Arc, Mutex};
 use crate::baseline::{gpu_run, hygcn_run, GpuConfig, GpuResult, HygcnConfig, HygcnResult};
 use crate::compiler::compile;
 use crate::energy::{switchblade_energy, tbl5_rows, EnergyResult, TBL5};
-use crate::exec::{KernelMode, Matrix, PipelineMode, ScratchStats};
+use crate::exec::{KernelMode, Matrix, PipelineMode, PoolStats, ScratchStats};
 use crate::graph::datasets::Dataset;
 use crate::graph::Csr;
 use crate::ir::spec::ModelSpec;
@@ -390,10 +390,17 @@ pub struct ExecBench {
     pub workers: usize,
     /// Interval-pipelining mode of the measured runs.
     pub pipeline: PipelineMode,
+    /// Kernel layer of the single/parallel/sweep timings.
+    pub kernel: KernelMode,
     /// Mean seconds per run, forced single worker (kernel layer).
     pub secs_single: f64,
     /// Mean seconds per run at `workers` (kernel layer).
     pub secs_parallel: f64,
+    /// Mean seconds per run at `workers` through the explicit-width SIMD
+    /// kernels ([`KernelMode::Simd`]) — always measured (reused from the
+    /// parallel run when the probe itself runs the Simd layer), folded
+    /// into the bit-identity verdict.
+    pub secs_simd: f64,
     /// Mean seconds per run at `workers` with interval pipelining forced
     /// off — the sequential baseline of [`ExecBench::pipeline_speedup`].
     /// `None` when the probe itself ran with pipelining off.
@@ -417,6 +424,14 @@ pub struct ExecBench {
     /// interval's gather drain in one parallel run (0 with pipelining
     /// off or single-interval partitionings).
     pub prepared_intervals: u64,
+    /// Persistent worker-pool counters of the parallel run: thread spawns
+    /// (once per executor, never per interval), batches drained, shard
+    /// throughput and lane occupancy.
+    pub pool: PoolStats,
+    /// `(width, mean seconds)` per worker-sweep point (`--sweep` only;
+    /// widths 1/2/4/8 at the probe's kernel + pipeline mode), each folded
+    /// into the bit-identity verdict.
+    pub sweep: Vec<(usize, f64)>,
 }
 
 impl ExecBench {
@@ -442,6 +457,12 @@ impl ExecBench {
         self.vertices as f64 / self.secs_parallel
     }
 
+    /// SIMD-layer speedup over the probe's kernel layer at the parallel
+    /// width (1.0 by construction when the probe itself ran Simd).
+    pub fn simd_speedup(&self) -> f64 {
+        self.secs_parallel / self.secs_simd
+    }
+
     /// Publish the probe into the process metrics registry under the
     /// `exec_*` names `scripts/bench.sh` embeds into `BENCH_exec.json`
     /// (and `scripts/bench_diff.sh` gates on). One source of truth: the
@@ -457,12 +478,22 @@ impl ExecBench {
         metrics::counter_abs("exec_bitmatch", self.bit_identical as u64);
         metrics::counter_abs(
             "exec_pipeline_on",
-            matches!(self.pipeline, PipelineMode::Interval) as u64,
+            !matches!(self.pipeline, PipelineMode::Off) as u64,
         );
         metrics::counter_abs("exec_prepared", self.prepared_intervals);
         metrics::counter_abs("exec_scratch_hits", self.scratch.hits);
         metrics::counter_abs("exec_scratch_misses", self.scratch.misses);
         metrics::gauge("exec_scratch_hit_rate", self.scratch.hit_rate());
+        metrics::gauge("exec_ms_simd", self.secs_simd * 1e3);
+        metrics::gauge("exec_simd_speedup", self.simd_speedup());
+        metrics::counter_abs("exec_pool_spawned", self.pool.spawned);
+        metrics::counter_abs("exec_pool_batches", self.pool.batches);
+        metrics::counter_abs("exec_pool_shards", self.pool.shards);
+        metrics::gauge("exec_pool_utilization", self.pool.utilization());
+        metrics::gauge("exec_pool_queue_depth", self.pool.queue_depth());
+        for &(w, s) in &self.sweep {
+            metrics::gauge(&format!("exec_ms_w{w}"), s * 1e3);
+        }
         if let Some(off) = self.secs_pipeline_off {
             metrics::gauge("exec_ms_pipeline_off", off * 1e3);
         }
@@ -489,11 +520,15 @@ impl ExecBench {
 /// one (model IR, graph) workload. Works for any validated `IrGraph` —
 /// zoo entry or user `.gnn` spec — sized from the IR's own input width.
 /// `workers == 0` means "the partitioning's simulated sThread count".
-/// With `pipeline == PipelineMode::Interval` (the `bench` default), the
-/// probe also times `PipelineMode::Off` at the parallel width — the
-/// per-mode numbers `scripts/bench.sh` embeds into `BENCH_exec.json`.
+/// With any pipelined mode (`bench` defaults to Interval), the probe
+/// also times `PipelineMode::Off` at the parallel width — the per-mode
+/// numbers `scripts/bench.sh` embeds into `BENCH_exec.json`.
 /// With `profile` set, additionally times the preserved naive kernel path
 /// and records a per-(group, phase) [`PhaseProfile`] of one parallel run.
+/// `kernel` picks the layer of the main timings (`bench` defaults to
+/// Blocked; a Simd probe is always timed alongside either way), and
+/// `sweep` adds a 1/2/4/8-worker scaling ladder at that layer.
+#[allow(clippy::too_many_arguments)]
 pub fn bench_executor(
     ir: &IrGraph,
     g: &Csr,
@@ -501,7 +536,9 @@ pub fn bench_executor(
     workers: usize,
     iters: usize,
     profile: bool,
+    kernel: KernelMode,
     pipeline: PipelineMode,
+    sweep: bool,
 ) -> ExecBench {
     #[allow(clippy::too_many_arguments)]
     fn timed(
@@ -513,7 +550,7 @@ pub fn bench_executor(
         iters: usize,
         mode: KernelMode,
         pipeline: PipelineMode,
-    ) -> (f64, Matrix, ScratchStats, u64) {
+    ) -> (f64, Matrix, ScratchStats, u64, PoolStats) {
         let mut ex = crate::exec::Executor::new(prog, parts)
             .with_workers(workers)
             .with_kernel_mode(mode)
@@ -528,6 +565,7 @@ pub fn bench_executor(
             out,
             ex.scratch_stats(),
             ex.prepared_intervals(),
+            ex.pool_stats(),
         )
     }
 
@@ -545,23 +583,42 @@ pub fn bench_executor(
     for v in 0..g.num_vertices() {
         deg.set(v, 0, g.in_degree(v as u32) as f32);
     }
-    let (secs_single, out_single, _, _) =
-        timed(&prog, &parts, &x, &deg, 1, iters, KernelMode::Blocked, pipeline);
-    let (secs_parallel, out_parallel, scratch, prepared_intervals) =
-        timed(&prog, &parts, &x, &deg, workers, iters, KernelMode::Blocked, pipeline);
+    let (secs_single, out_single, _, _, _) =
+        timed(&prog, &parts, &x, &deg, 1, iters, kernel, pipeline);
+    let (secs_parallel, out_parallel, scratch, prepared_intervals, pool) =
+        timed(&prog, &parts, &x, &deg, workers, iters, kernel, pipeline);
     let mut bit_identical = out_single.bits_eq(&out_parallel);
-    // Pipelined probes also time the sequential interval order at the
-    // same width — the per-mode comparison the pipeline speedup is made
-    // of — and fold its output into the bit-identity verdict.
-    let secs_pipeline_off = if pipeline == PipelineMode::Interval {
-        let (off_s, out_off, _, _) = timed(
+    // The SIMD layer is always probed at the parallel width (reusing the
+    // parallel run when it already ran Simd) so `exec_ms_simd` lands in
+    // every bench artifact — and its output joins the bit verdict.
+    let secs_simd = if kernel == KernelMode::Simd {
+        secs_parallel
+    } else {
+        let (simd_s, out_simd, _, _, _) = timed(
             &prog,
             &parts,
             &x,
             &deg,
             workers,
             iters,
-            KernelMode::Blocked,
+            KernelMode::Simd,
+            pipeline,
+        );
+        bit_identical = bit_identical && out_single.bits_eq(&out_simd);
+        simd_s
+    };
+    // Pipelined probes also time the sequential interval order at the
+    // same width — the per-mode comparison the pipeline speedup is made
+    // of — and fold its output into the bit-identity verdict.
+    let secs_pipeline_off = if pipeline != PipelineMode::Off {
+        let (off_s, out_off, _, _, _) = timed(
+            &prog,
+            &parts,
+            &x,
+            &deg,
+            workers,
+            iters,
+            kernel,
             PipelineMode::Off,
         );
         bit_identical = bit_identical && out_single.bits_eq(&out_off);
@@ -569,10 +626,24 @@ pub fn bench_executor(
     } else {
         None
     };
+    // Optional worker-scaling ladder: every width reuses the same inputs
+    // and must reproduce the same bits (the canonical-order merge claim,
+    // measured rather than just asserted).
+    let sweep_points = if sweep {
+        let mut pts = Vec::new();
+        for w in [1usize, 2, 4, 8] {
+            let (s, out_w, _, _, _) = timed(&prog, &parts, &x, &deg, w, iters, kernel, pipeline);
+            bit_identical = bit_identical && out_single.bits_eq(&out_w);
+            pts.push((w, s));
+        }
+        pts
+    } else {
+        Vec::new()
+    };
     let (secs_legacy, profile_data) = if profile {
         // The legacy reference is doubly golden: naive kernels AND
         // strictly sequential intervals.
-        let (legacy_s, out_legacy, _, _) = timed(
+        let (legacy_s, out_legacy, _, _, _) = timed(
             &prog,
             &parts,
             &x,
@@ -598,8 +669,10 @@ pub fn bench_executor(
     ExecBench {
         workers,
         pipeline,
+        kernel,
         secs_single,
         secs_parallel,
+        secs_simd,
         secs_pipeline_off,
         secs_legacy,
         vertices: g.num_vertices(),
@@ -608,6 +681,8 @@ pub fn bench_executor(
         profile: profile_data,
         scratch,
         prepared_intervals,
+        pool,
+        sweep: sweep_points,
     }
 }
 
@@ -702,7 +777,9 @@ mod tests {
             2,
             1,
             false,
+            KernelMode::Blocked,
             PipelineMode::Interval,
+            false,
         );
         assert!(b.bit_identical, "parallel executor diverged bitwise");
         assert!(b.secs_single > 0.0 && b.secs_parallel > 0.0);
@@ -713,9 +790,45 @@ mod tests {
         assert_eq!(b.pipeline, PipelineMode::Interval);
         let off = b.secs_pipeline_off.expect("pipeline-off baseline measured");
         assert!(off > 0.0 && b.pipeline_speedup().unwrap() > 0.0);
-        // Non-profiled probes skip the legacy run and the phase profile.
+        // The SIMD layer is probed alongside even on a Blocked bench.
+        assert!(b.secs_simd > 0.0 && b.simd_speedup() > 0.0);
+        // The parallel run went through the persistent pool: threads
+        // spawned once, every drained batch accounted.
+        assert_eq!(b.pool.spawned, 2, "pool must spawn exactly `workers` threads");
+        assert!(b.pool.batches > 0 && b.pool.shards > 0);
+        // Non-profiled, non-sweep probes skip legacy/profile/sweep.
         assert!(b.secs_legacy.is_none() && b.profile.is_none());
+        assert!(b.sweep.is_empty());
         assert!(b.scratch.hits + b.scratch.misses > 0);
+    }
+
+    #[test]
+    fn bench_executor_sweeps_workers_on_the_simd_layer() {
+        let cache = GraphCache::new(11);
+        let g = cache.get(Dataset::Ak);
+        let ir = ModelZoo::builtin()
+            .get("gcn")
+            .unwrap()
+            .build(ModelDims::uniform(2, 16))
+            .unwrap();
+        let b = bench_executor(
+            &ir,
+            &g,
+            &AcceleratorConfig::switchblade(),
+            2,
+            1,
+            false,
+            KernelMode::Simd,
+            PipelineMode::Interval,
+            true,
+        );
+        assert!(b.bit_identical, "simd sweep diverged bitwise");
+        assert_eq!(b.kernel, KernelMode::Simd);
+        // A Simd probe reuses its own parallel run as the simd number.
+        assert_eq!(b.secs_simd, b.secs_parallel);
+        let widths: Vec<usize> = b.sweep.iter().map(|&(w, _)| w).collect();
+        assert_eq!(widths, vec![1, 2, 4, 8]);
+        assert!(b.sweep.iter().all(|&(_, s)| s > 0.0));
     }
 
     #[test]
@@ -734,7 +847,9 @@ mod tests {
             2,
             1,
             true,
+            KernelMode::Blocked,
             PipelineMode::Interval,
+            false,
         );
         assert!(b.bit_identical, "kernel/legacy/pipeline/parallel runs diverged");
         let legacy = b.secs_legacy.expect("legacy timing measured");
@@ -761,7 +876,9 @@ mod tests {
             1,
             1,
             false,
+            KernelMode::Blocked,
             PipelineMode::Off,
+            false,
         );
         assert!(b.bit_identical);
         assert_eq!(b.pipeline, PipelineMode::Off);

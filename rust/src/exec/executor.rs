@@ -7,49 +7,64 @@
 //!
 //! * **Partition-level multi-threading in software**: shards within an
 //!   interval are independent (paper §IV-C), so their GatherPhases run
-//!   across a scoped-thread worker pool (default width = the
-//!   partitioning's simulated sThread count). Each shard produces
-//!   *partial* gather accumulators that are merged in canonical shard
-//!   order after the pool drains, so the output is bit-identical for
-//!   every worker count — including the forced single-worker mode the
-//!   differential tests pin.
+//!   across a *persistent* worker pool ([`exec::pool`](super::pool);
+//!   default width = the partitioning's simulated sThread count).
+//!   Workers are spawned once per executor and own their scratch
+//!   outright; interval batches reach them over an epoch protocol with
+//!   a static strided shard→worker affinity, so a shard position
+//!   revisits the same worker's warm pools on every interval and every
+//!   rerun. Each shard produces *partial* gather accumulators that are
+//!   merged in canonical shard order after the batch drains, so the
+//!   output is bit-identical for every worker count — including the
+//!   threadless single-worker mode the differential tests pin.
 //! * **Dense slot arenas**: symbols and DRAM arrays are addressed by
 //!   `Vec` index (`Program::slot_layout`), not by hashing `Sym`/`DataRef`
 //!   per instruction.
 //! * **Kernel-layer inner loops** ([`exec::kernels`](crate::exec::kernels)):
 //!   cache-blocked branch-free DMM and fused slice-based row kernels
 //!   drive every compute instruction, the gather inner loops, and the
-//!   shard merge. The pre-kernel per-element loops are preserved as
-//!   [`KernelMode::Naive`] purely as the bit-identity reference the
-//!   differential tests diff against.
+//!   shard merge. [`KernelMode::Simd`] swaps in the explicit
+//!   chunks-of-8 variants (bit-identical by construction); the
+//!   pre-kernel per-element loops are preserved as [`KernelMode::Naive`]
+//!   purely as the bit-identity reference the differential tests diff
+//!   against.
 //! * **Scratch arenas** ([`exec::scratch`](crate::exec::scratch)):
 //!   interval matrices, gather accumulators, and per-worker shard
 //!   matrices are recycled through slot-keyed buffer pools, so the walk
 //!   performs no per-shard / per-interval `Matrix` allocation once the
-//!   first interval of a group has sized the pools (steady state; exact
-//!   under deterministic single-worker assignment, asymptotic under the
-//!   racy multi-worker pool whose per-worker arenas warm independently).
+//!   first interval of a group has sized the pools. The guarantee is
+//!   exact at *any* worker count: assignment is deterministic, and
+//!   buffers the canonical-order merge finishes with travel back to the
+//!   worker that lent them through per-worker mailboxes.
 //! * **Interval pipelining** ([`PipelineMode::Interval`], the default):
-//!   the phases of consecutive intervals overlap on different resources,
-//!   exactly as the paper's partition-level multi-threading (§IV-C) and
-//!   the cycle simulator's SLMT timing model describe. While interval
-//!   *i*'s shards drain through the worker pool, the main (iThread)
-//!   thread prepares interval *i+1*'s DstBuffer state — ScatterPhase LDs
-//!   and computes plus the pre-created gather accumulators — into a
-//!   second `IntervalState` ping-ponged through the scratch pools
-//!   (pipeline depth 2). The walk order, merge order, and output bits
-//!   are untouched: only *when* next-interval state is materialised
-//!   changes, and only for groups where that is provably safe (no
-//!   ScatterPhase STs, no ScatterPhase LD of a DataRef the same group
-//!   stores — the prologue group stays strictly sequential).
-//!   [`PipelineMode::Off`] preserves the sequential order as the golden
-//!   reference of the pipelining differential tests.
+//!   while interval *i*'s shards drain through the pool, the driving
+//!   (iThread) thread prepares interval *i+1*'s DstBuffer state —
+//!   ScatterPhase LDs and computes plus the pre-created gather
+//!   accumulators — into a second `IntervalState` ping-ponged through
+//!   the scratch pools (pipeline depth 2). The walk order, merge order,
+//!   and output bits are untouched: only *when* next-interval state is
+//!   materialised changes, and only for groups where that is provably
+//!   safe (no ScatterPhase STs, no ScatterPhase LD of a DataRef the
+//!   same group stores — the prologue group stays strictly sequential).
+//! * **Group pipelining** ([`PipelineMode::Group`]): because the pool
+//!   outlives intervals, the prepare no longer has to finish inside the
+//!   gather drain — a persistent *prepare lane* thread carries the
+//!   prologue computes and accumulator pre-creation across the current
+//!   interval's ApplyPhase and, when the cross-group dependence gate
+//!   allows, into the next group's prologue window. The DRAM-reading LD
+//!   prefix still runs on the driving thread at the dispatch point
+//!   (inside the safety window the prefetch gates establish), so the
+//!   lane touches only its own state + the immutable weights. The
+//!   rendezvous is the target's `begin_interval`. Bit-identical to
+//!   [`PipelineMode::Off`], which preserves the strictly sequential
+//!   order as the golden reference of the pipelining differential
+//!   tests.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::exec::kernels;
+use crate::exec::pool::{PoolStats, RetBuf, WorkerPool};
 use crate::exec::reference::{apply_binary, apply_unary};
 use crate::exec::scratch::{IntervalScratch, Pool, ScratchStats, WorkerScratch};
 use crate::exec::{weights, Matrix};
@@ -67,13 +82,30 @@ pub enum KernelMode {
     /// RSCALE / CAT writing into scratch-arena buffers. The default.
     #[default]
     Blocked,
+    /// The explicit-width tier: chunks-of-8 `[f32; 8]`-accumulator
+    /// kernels for DMM and the gather/merge row ops (safe portable
+    /// code, no intrinsics). Bit-identical to [`KernelMode::Blocked`]
+    /// — same per-element FP order — so it shares the same golden
+    /// reference.
+    Simd,
     /// The preserved pre-kernel reference: naive zero-skipping matmul and
     /// per-element `get`/`set` loops, allocating fresh matrices. Kept
-    /// only so tests can prove the kernel path bit-identical.
+    /// only so tests can prove the kernel paths bit-identical.
     Naive,
 }
 
-/// Whether the executor overlaps consecutive destination intervals.
+impl KernelMode {
+    /// CLI rendering (`bench --kernel naive|blocked|simd`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelMode::Blocked => "blocked",
+            KernelMode::Simd => "simd",
+            KernelMode::Naive => "naive",
+        }
+    }
+}
+
+/// Whether (and how far) the executor overlaps consecutive intervals.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum PipelineMode {
     /// Double-buffered interval pipelining: while one interval's shards
@@ -82,16 +114,23 @@ pub enum PipelineMode {
     /// module docs). Bit-identical to [`PipelineMode::Off`]. The default.
     #[default]
     Interval,
+    /// Interval pipelining plus the persistent prepare lane: the next
+    /// interval's prologue computes overlap the current ApplyPhase, and
+    /// dependence-free group boundaries prefetch the next group's first
+    /// interval (see the module docs). Bit-identical to
+    /// [`PipelineMode::Off`].
+    Group,
     /// Strictly sequential intervals — the golden reference the
     /// pipelining differential tests diff against.
     Off,
 }
 
 impl PipelineMode {
-    /// CLI rendering (`bench --pipeline on|off`, trailer lines).
+    /// CLI rendering (`bench --pipeline on|group|off`, trailer lines).
     pub fn label(&self) -> &'static str {
         match self {
             PipelineMode::Interval => "on",
+            PipelineMode::Group => "group",
             PipelineMode::Off => "off",
         }
     }
@@ -105,6 +144,15 @@ struct Prepared {
     state: IntervalState,
 }
 
+/// The ScatterPhase instruction suffix the prepare lane runs (everything
+/// after the LD prefix) plus the gather list it pre-creates accumulators
+/// from — cloned out of the program once per group so the lane borrows
+/// nothing from the executor.
+struct PrepInstrs {
+    computes: Vec<Instr>,
+    gathers: Vec<Instr>,
+}
+
 /// Functional executor over one (program, partitions) pair.
 pub struct Executor<'a> {
     program: &'a Program,
@@ -113,25 +161,37 @@ pub struct Executor<'a> {
     /// Off-chip storage arena indexed by [`DataRef::slot`]: vertex arrays
     /// are `[N, cols]`, edge arrays `[M, cols]`.
     dram: Vec<Option<Matrix>>,
-    /// Weight arena indexed by W-symbol id.
-    weights: Vec<Option<Matrix>>,
+    /// Weight arena indexed by W-symbol id. Shared with the prepare lane
+    /// (weights are immutable after construction).
+    weights: Arc<Vec<Option<Matrix>>>,
     /// GatherPhase worker-pool width (the software sThread count).
     workers: usize,
     mode: KernelMode,
     /// Live state of the interval currently being walked. Never dropped:
-    /// `begin_interval` drains its matrices back into `iv_scratch` and
-    /// re-arms it (or swaps in a prepared standby and keeps this one as
-    /// the spare), so at most two interval states — pipeline depth 2 —
+    /// `begin_interval` drains its matrices back into its scratch bank
+    /// and re-arms it (or swaps in a prepared standby and keeps this one
+    /// as the spare), so at most two interval states — pipeline depth 2 —
     /// are ever allocated per executor.
     iv: Option<IntervalState>,
     /// Shard indices queued by `gather_shard`, drained at `end_gather`.
     pending: Vec<usize>,
-    /// iThread-side buffer pools (D matrices + gather accumulators).
-    iv_scratch: IntervalScratch,
-    /// One scratch arena per GatherPhase worker, grown lazily to the pool
-    /// width. Merged buffers return to the worker they came from, so each
-    /// arena's contents stay effectively thread-private.
-    shard_scratch: Vec<Mutex<WorkerScratch>>,
+    /// iThread-side buffer-pool banks (D matrices + gather accumulators).
+    /// Bank 0 always exists; bank 1 is created on the first Group-mode
+    /// dispatch. An `IntervalState` records which bank its buffers came
+    /// from, and a bank is `None` exactly while it is checked out to the
+    /// prepare lane — the pairing is what keeps loan accounting exact
+    /// when a prepared state and the live state coexist.
+    banks: [Option<IntervalScratch>; 2],
+    /// The persistent worker pool, created at the first drain and
+    /// dropped (threads joined) with the executor. `None` until then —
+    /// zero thread spawns per interval in steady state.
+    pool: Option<WorkerPool>,
+    /// Reusable batch-output buffer (canonical order).
+    outs: Vec<ShardOut>,
+    /// Per-worker return mailbox staging: the canonical-order merge
+    /// pushes finished buffers here, one `deposit_returns` per drain
+    /// hands them back to the owning workers.
+    ret_bufs: Vec<Vec<RetBuf>>,
     /// Per `(group, gather-instr)` flag: true when an `ST.E` is the last
     /// use of its symbol in the phase, so the spill can move the matrix
     /// out of the arena instead of cloning it.
@@ -146,8 +206,28 @@ pub struct Executor<'a> {
     /// practice this keeps the prologue sweep sequential; groups are DRAM
     /// barriers for everything else.)
     prefetchable: Vec<bool>,
-    /// The walker's `lookahead_interval` notice: `(group, next interval)`
-    /// to prepare during the coming `end_gather` drain.
+    /// Per-group cross-boundary safety: group g's last interval may
+    /// prefetch group g+1's first interval only when g+1 is itself
+    /// prefetch-safe, its ScatterPhase stores nothing, and none of its
+    /// ScatterPhase LDs read a DataRef group g stores — g's remaining
+    /// ApplyPhase STs are the only writes between the dispatch point and
+    /// g+1's own ScatterPhase slot.
+    cross_prefetchable: Vec<bool>,
+    /// Per-group async-prepare shape: `Some(k)` when the ScatterPhase is
+    /// an LD prefix `scatter[..k]` followed by pure computes (no further
+    /// LD/ST) — the split the prepare lane requires, since it runs the
+    /// computes away from DRAM.
+    scatter_split: Vec<Option<usize>>,
+    /// Lazily built per-group instruction clones for the prepare lane.
+    prep_cache: Vec<Option<Arc<PrepInstrs>>>,
+    /// The persistent prepare lane (Group mode only), spawned on first
+    /// dispatch and joined on drop.
+    prep_lane: Option<PrepareLane>,
+    /// Target `(group, interval)` of an in-flight lane job; its
+    /// `begin_interval` is the rendezvous.
+    pending_prepare: Option<(usize, usize)>,
+    /// The walker's `lookahead_interval` notice: `(group, interval)` to
+    /// prepare during the coming `end_gather` drain.
     lookahead: Option<(usize, usize)>,
     /// A prepared next-interval state (pipeline depth 2: this plus `iv`).
     standby: Option<Prepared>,
@@ -185,39 +265,86 @@ impl<'a> Executor<'a> {
                     .collect()
             })
             .collect();
-        let prefetchable = program
+        let group_stores: Vec<Vec<usize>> = program
             .groups
             .iter()
             .map(|g| {
-                let stores: Vec<usize> = g
-                    .all_instrs()
+                g.all_instrs()
                     .filter_map(|i| match i {
                         Instr::St { data, .. } => Some(data.slot()),
                         _ => None,
                     })
-                    .collect();
+                    .collect()
+            })
+            .collect();
+        let prefetchable: Vec<bool> = program
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
                 g.scatter.iter().all(|i| match i {
                     Instr::St { .. } => false,
-                    Instr::Ld { data, .. } => !stores.contains(&data.slot()),
+                    Instr::Ld { data, .. } => !group_stores[gi].contains(&data.slot()),
                     _ => true,
                 })
             })
             .collect();
+        let cross_prefetchable = program
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(gi, _)| {
+                let Some(next) = program.groups.get(gi + 1) else {
+                    return false;
+                };
+                if !prefetchable[gi + 1] {
+                    return false;
+                }
+                next.scatter.iter().all(|i| match i {
+                    Instr::St { .. } => false,
+                    Instr::Ld { data, .. } => !group_stores[gi].contains(&data.slot()),
+                    _ => true,
+                })
+            })
+            .collect();
+        let scatter_split = program
+            .groups
+            .iter()
+            .map(|g| {
+                let k = g
+                    .scatter
+                    .iter()
+                    .position(|i| !matches!(i, Instr::Ld { .. }))
+                    .unwrap_or(g.scatter.len());
+                g.scatter[k..]
+                    .iter()
+                    .all(|i| !matches!(i, Instr::Ld { .. } | Instr::St { .. }))
+                    .then_some(k)
+            })
+            .collect();
+        let groups = program.groups.len();
         Executor {
             program,
             parts,
-            iv_scratch: IntervalScratch::new(&layout),
+            banks: [Some(IntervalScratch::new(&layout)), None],
             layout,
             dram: Vec::new(),
-            weights: w,
+            weights: Arc::new(w),
             workers: parts.config.num_sthreads.max(1) as usize,
             mode: KernelMode::default(),
             iv: None,
             pending: Vec::new(),
-            shard_scratch: Vec::new(),
+            pool: None,
+            outs: Vec::new(),
+            ret_bufs: Vec::new(),
             movable_spills,
             pipeline: PipelineMode::default(),
             prefetchable,
+            cross_prefetchable,
+            scatter_split,
+            prep_cache: vec![None; groups],
+            prep_lane: None,
+            pending_prepare: None,
             lookahead: None,
             standby: None,
             spare: None,
@@ -227,10 +354,14 @@ impl<'a> Executor<'a> {
     }
 
     /// Override the GatherPhase worker-pool width. Defaults to the
-    /// partitioning's simulated sThread count; `1` forces the serial
-    /// path. Outputs are bit-identical across widths.
+    /// partitioning's simulated sThread count; `1` forces the threadless
+    /// inline path. Outputs are bit-identical across widths. Resizing
+    /// drops an already-spawned pool (threads join) so the next run
+    /// spawns at the new width.
     pub fn with_workers(mut self, n: usize) -> Self {
         self.workers = n.max(1);
+        self.pool = None;
+        self.ret_bufs.clear();
         self
     }
 
@@ -270,19 +401,34 @@ impl<'a> Executor<'a> {
         self.prep_stats.iter().map(|&(n, _)| n).sum()
     }
 
-    /// Aggregate scratch-arena hit/miss counters (interval pools + every
-    /// worker arena). In steady state — after the first interval of each
-    /// group has sized the pools — `misses` stops growing. That guarantee
-    /// is exact for deterministic shard assignment (a single worker, as
-    /// `scratch_arena_steady_state_no_new_misses` pins); with a racy
-    /// multi-worker pool a worker can still meet a shard size its private
-    /// arena has never seen, so misses taper rather than stop.
+    /// Worker-pool counters for the last runs (all zeros before the
+    /// first drain creates the pool).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.as_ref().map(WorkerPool::stats).unwrap_or_default()
+    }
+
+    /// Aggregate scratch-arena hit/miss counters (interval banks + the
+    /// pool's inline and per-worker arenas). In steady state — after the
+    /// first interval of each group has sized the pools — `misses` stops
+    /// growing, and the guarantee is exact at any worker count: shard
+    /// assignment is static/strided, and merged buffers return to the
+    /// worker that lent them.
     pub fn scratch_stats(&self) -> ScratchStats {
-        let mut st = self.iv_scratch.stats();
-        for ws in &self.shard_scratch {
-            st.merge(ws.lock().unwrap().stats());
+        let mut st = ScratchStats::default();
+        for b in self.banks.iter().flatten() {
+            st.merge(b.stats());
+        }
+        if let Some(p) = &self.pool {
+            st.merge(p.scratch_stats());
         }
         st
+    }
+
+    /// Liveness witness over the pool's worker threads (test probe: dead
+    /// once the executor drops and every worker joined).
+    #[cfg(test)]
+    pub(crate) fn pool_probe(&self) -> Option<std::sync::Weak<()>> {
+        self.pool.as_ref().map(WorkerPool::probe)
     }
 
     /// Run the whole program. `x` is `[N, in_dim]`; `degree` the in-degree
@@ -334,15 +480,39 @@ impl<'a> Executor<'a> {
         self.dram[DataRef::Input.slot()] = Some(x.clone());
         self.dram[DataRef::Degree.slot()] = Some(degree.clone());
         // Re-arm the pipeline for a fresh walk. A completed walk leaves no
-        // standby (the last interval has no lookahead), but recycle one
-        // defensively so its buffers flow back into the pools.
+        // standby or in-flight lane job (the last interval has no
+        // lookahead), but drain both defensively so buffers flow back.
         self.lookahead = None;
         self.scatter_prepared = false;
         self.prep_stats.clear();
+        if self.pending_prepare.take().is_some() {
+            let done = self
+                .prep_lane
+                .as_ref()
+                .expect("pending prepare has a lane")
+                .recv();
+            let b = done.state.bank;
+            self.banks[b] = Some(done.scratch);
+            let mut st = done.state;
+            st.recycle(bank_mut(&mut self.banks, b));
+            if self.spare.is_none() {
+                self.spare = Some(st);
+            }
+        }
         if let Some(p) = self.standby.take() {
             let mut st = p.state;
-            st.recycle(&mut self.iv_scratch);
+            st.recycle(bank_mut(&mut self.banks, st.bank));
             self.spare = Some(st);
+        }
+        // Normalise container↔bank pairing so every run starts from the
+        // same pool state (Group-mode runs may end on either bank).
+        if let Some(mut st) = self.iv.take() {
+            st.recycle(bank_mut(&mut self.banks, st.bank));
+            st.bank = 0;
+            self.iv = Some(st);
+        }
+        if let Some(st) = self.spare.as_mut() {
+            st.bank = 0; // always recycled before becoming the spare
         }
     }
 
@@ -390,14 +560,8 @@ impl<'a> Executor<'a> {
             }
             return;
         }
-        exec_interval_read_instr(
-            i,
-            iv,
-            &self.dram,
-            &self.weights,
-            &mut self.iv_scratch,
-            self.mode,
-        );
+        let scratch = bank_mut(&mut self.banks, iv.bank);
+        exec_interval_read_instr(i, iv, &self.dram, &self.weights, scratch, self.mode);
     }
 
     // ---- shard-phase execution (Gather) ---------------------------------------
@@ -410,56 +574,63 @@ impl<'a> Executor<'a> {
     /// When the walker announced a lookahead (pipelining on, group
     /// prefetch-safe), the next interval's DstBuffer state is prepared on
     /// this thread *while the workers drain* — the software realisation
-    /// of the paper's interval overlap. The standby state is swapped in
-    /// by the next `begin_interval`; the serial (≤1 worker) path prepares
-    /// after the drain so buffer-pool traffic stays deterministic at any
-    /// width.
+    /// of the paper's interval overlap — or, in [`PipelineMode::Group`]
+    /// with a splittable prologue, handed to the persistent prepare lane
+    /// so the overlap extends across the ApplyPhase. The standby state is
+    /// swapped in by the target's `begin_interval`; the inline (≤1
+    /// worker) path prepares after the drain so buffer-pool traffic stays
+    /// deterministic at any width.
     fn run_pending_shards(&mut self, cx: &StepCtx) {
         let mut pending = std::mem::take(&mut self.pending);
-        let prefetch = self
-            .lookahead
-            .take()
-            .and_then(|(g, i)| (g == cx.group_idx).then_some(i));
+        let prefetch = self.lookahead.take();
         if pending.is_empty() && prefetch.is_none() {
             self.pending = pending; // keep the capacity for the next interval
             return;
         }
-        // Rebind the standby container up front (recycling whatever the
-        // spare held) so pool take order is independent of the drain.
-        let mut standby = prefetch.map(|ni| {
-            let mut st = self
-                .spare
-                .take()
-                .unwrap_or_else(|| IntervalState::empty(&self.layout));
-            st.reset(&self.parts.intervals[ni], &mut self.iv_scratch);
-            (ni, st)
-        });
+        if self.pool.is_none() {
+            // The one spawn point: workers outlive every interval and
+            // every run of this executor.
+            self.pool = Some(WorkerPool::new(&self.layout, self.workers));
+            self.ret_bufs.resize_with(self.workers, Vec::new);
+        }
+        // Worker/lane spans gate on a flag sampled here, per drain, on
+        // the driving thread — persistent threads cannot see this
+        // thread's TLS session flag, and sampling per batch means a
+        // session opened *after* the pool spawned is observed on the
+        // very next drain.
+        let tracing = trace::active();
+        // Plan the lookahead: offload to the prepare lane (Group mode,
+        // splittable prologue) or rebind a standby container for the
+        // under-drain prepare on this thread.
+        let mut standby: Option<(usize, usize, IntervalState)> = None;
+        if let Some((tg, ni)) = prefetch {
+            if self.pipeline == PipelineMode::Group && self.scatter_split[tg].is_some() {
+                self.dispatch_prepare(tg, ni, tracing);
+            } else {
+                let mut st = self
+                    .spare
+                    .take()
+                    .unwrap_or_else(|| IntervalState::empty(&self.layout));
+                reset_state(&mut self.banks, &mut st, &self.parts.intervals[ni], 0);
+                standby = Some((tg, ni, st));
+            }
+        }
         let mut prep_s = 0.0f64;
         if pending.is_empty() {
             // An interval with no shards still pipelines the next one.
             prep_s = timed_prepare(
-                cx.group_idx,
-                cx.group,
+                self.program,
                 &mut standby,
                 &self.dram,
                 &self.weights,
-                &mut self.iv_scratch,
+                bank_mut(&mut self.banks, 0),
                 self.mode,
             );
         } else {
-            let workers = self.workers.min(pending.len()).max(1);
-            while self.shard_scratch.len() < workers {
-                self.shard_scratch
-                    .push(Mutex::new(WorkerScratch::new(&self.layout)));
-            }
             let mut iv = self.iv.take().expect("interval state");
-            let outs: Vec<ShardOut> = {
-                // `scratch` (the main thread's prepare arena) and the
-                // worker-facing borrows inside `env` are disjoint fields,
-                // so the prepare can run under the pool without touching
-                // anything a worker reads.
-                let scratch = &mut self.iv_scratch;
-                let worker_arenas = &self.shard_scratch;
+            let mut outs = std::mem::take(&mut self.outs);
+            {
+                let pool = self.pool.as_mut().expect("pool created above");
                 let env = ShardEnv {
                     layout: &self.layout,
                     weights: &self.weights,
@@ -470,106 +641,127 @@ impl<'a> Executor<'a> {
                     movable: &self.movable_spills[cx.group_idx][..],
                     mode: self.mode,
                 };
-                // Worker spans gate on an explicit flag captured here:
-                // spawned pool threads cannot see this thread's
-                // trace-session flag.
-                let tracing = trace::active();
                 let (g_arg, i_arg) = (cx.group_idx as i32, cx.interval_idx as i32);
-                if workers <= 1 {
-                    let outs: Vec<ShardOut> = {
-                        let mut ws = worker_arenas[0].lock().unwrap();
-                        pending
-                            .iter()
-                            .map(|&si| {
-                                let _span = trace::span_if(
-                                    tracing,
-                                    trace::names::SHARD,
-                                    trace::cat::EXEC,
-                                    trace::worker_track(0),
-                                    g_arg,
-                                    i_arg,
-                                    si as i32,
-                                );
-                                env.run_shard(si, &mut ws, 0)
-                            })
-                            .collect()
-                    };
-                    prep_s = timed_prepare(
-                        cx.group_idx,
-                        cx.group,
-                        &mut standby,
-                        env.dram,
-                        env.weights,
-                        scratch,
-                        env.mode,
+                let (env_ref, pending_ref) = (&env, &pending);
+                let run = move |k: usize, w: usize, ws: &mut WorkerScratch| {
+                    let si = pending_ref[k];
+                    let _span = trace::span_if(
+                        tracing,
+                        trace::names::SHARD,
+                        trace::cat::EXEC,
+                        trace::worker_track(w),
+                        g_arg,
+                        i_arg,
+                        si as i32,
                     );
-                    outs
+                    env_ref.run_shard(si, ws, w)
+                };
+                if pool.is_inline() {
+                    // Single-worker mode: the driving thread owns the
+                    // scratch outright — no Mutex, no threads — and the
+                    // prepare runs after the drain so pool traffic stays
+                    // deterministic.
+                    let t0 = Instant::now();
+                    let ws = pool.inline_scratch();
+                    for k in 0..pending.len() {
+                        outs.push(run(k, 0, &mut *ws));
+                    }
+                    pool.note_inline_batch(pending.len(), t0.elapsed().as_nanos() as u64);
+                    prep_s = timed_prepare(
+                        self.program,
+                        &mut standby,
+                        &self.dram,
+                        &self.weights,
+                        bank_mut(&mut self.banks, 0),
+                        self.mode,
+                    );
                 } else {
-                    let cells: Vec<Mutex<Option<ShardOut>>> =
-                        pending.iter().map(|_| Mutex::new(None)).collect();
-                    let next = AtomicUsize::new(0);
-                    let (env_ref, cells_ref, next_ref, pending_ref) =
-                        (&env, &cells, &next, &pending);
-                    std::thread::scope(|scope| {
-                        for (w, ws_cell) in worker_arenas[..workers].iter().enumerate() {
-                            scope.spawn(move || {
-                                let mut ws = ws_cell.lock().unwrap();
-                                loop {
-                                    // Dynamic assignment: the next shard goes to
-                                    // whichever worker frees first (the software
-                                    // analogue of the phase scheduler, §V-B2).
-                                    let k = next_ref.fetch_add(1, Ordering::Relaxed);
-                                    if k >= pending_ref.len() {
-                                        break;
-                                    }
-                                    let _span = trace::span_if(
-                                        tracing,
-                                        trace::names::SHARD,
-                                        trace::cat::EXEC,
-                                        trace::worker_track(w),
-                                        g_arg,
-                                        i_arg,
-                                        pending_ref[k] as i32,
-                                    );
-                                    let out = env_ref.run_shard(pending_ref[k], &mut ws, w);
-                                    *cells_ref[k].lock().unwrap() = Some(out);
-                                }
-                            });
-                        }
-                        // The overlap: interval i+1's iThread preparation
-                        // runs here, concurrent with interval i's sThread
-                        // drain above.
-                        prep_s = timed_prepare(
-                            cx.group_idx,
-                            cx.group,
-                            &mut standby,
-                            env.dram,
-                            env.weights,
-                            scratch,
-                            env.mode,
-                        );
-                    });
-                    cells
-                        .into_iter()
-                        .map(|c| c.into_inner().unwrap().expect("worker filled its slot"))
-                        .collect()
+                    let ticket = pool.begin_batch(pending.len(), &run);
+                    // The overlap: the next interval's iThread
+                    // preparation runs here, concurrent with the
+                    // workers' drain.
+                    prep_s = timed_prepare(
+                        self.program,
+                        &mut standby,
+                        &self.dram,
+                        &self.weights,
+                        bank_mut(&mut self.banks, 0),
+                        self.mode,
+                    );
+                    ticket.finish(&mut outs);
                 }
-            };
-            for (&si, out) in pending.iter().zip(outs) {
+            }
+            for (&si, out) in pending.iter().zip(outs.drain(..)) {
                 self.merge_shard(&mut iv, si, out);
             }
+            self.outs = outs; // keep the capacity
+            self.pool
+                .as_mut()
+                .expect("pool exists")
+                .deposit_returns(&mut self.ret_bufs);
             pending.clear();
             self.iv = Some(iv);
         }
         self.pending = pending; // keep the capacity for the next interval
-        if let Some((ni, st)) = standby {
-            self.note_prepared(cx.group_idx, prep_s);
+        if let Some((tg, ni, st)) = standby {
+            self.note_prepared(tg, prep_s);
             self.standby = Some(Prepared {
-                group: cx.group_idx,
+                group: tg,
                 interval: ni,
                 state: st,
             });
         }
+    }
+
+    /// Hand a `(group, interval)` preparation to the persistent lane:
+    /// run the DRAM-reading LD prefix here (inside the safety window the
+    /// prefetch gates establish), then ship the state, its scratch bank,
+    /// and the compute suffix to the lane thread. The rendezvous is the
+    /// target's `begin_interval`.
+    fn dispatch_prepare(&mut self, tg: usize, ni: usize, tracing: bool) {
+        let live_bank = self.iv.as_ref().map_or(0, |s| s.bank);
+        let b = 1 - live_bank;
+        if self.banks[b].is_none() {
+            self.banks[b] = Some(IntervalScratch::new(&self.layout));
+        }
+        let mut st = self
+            .spare
+            .take()
+            .unwrap_or_else(|| IntervalState::empty(&self.layout));
+        reset_state(&mut self.banks, &mut st, &self.parts.intervals[ni], b);
+        let mut scratch = self.banks[b].take().expect("bank present");
+        let split = self.scatter_split[tg].expect("dispatch requires a split prologue");
+        let group = &self.program.groups[tg];
+        for i in &group.scatter[..split] {
+            exec_interval_read_instr(i, &mut st, &self.dram, &self.weights, &mut scratch, self.mode);
+        }
+        let instrs = self.prep_instrs(tg);
+        let job = PrepJob {
+            state: st,
+            scratch,
+            instrs,
+            weights: Arc::clone(&self.weights),
+            mode: self.mode,
+            tracing,
+            // One lane past the pool's worker tracks.
+            track: trace::worker_track(self.workers),
+            group: tg as i32,
+            interval: ni as i32,
+        };
+        self.prep_lane.get_or_insert_with(PrepareLane::new).send(job);
+        self.pending_prepare = Some((tg, ni));
+    }
+
+    fn prep_instrs(&mut self, g: usize) -> Arc<PrepInstrs> {
+        if self.prep_cache[g].is_none() {
+            let split = self.scatter_split[g].expect("splittable group");
+            let group = &self.program.groups[g];
+            self.prep_cache[g] = Some(Arc::new(PrepInstrs {
+                computes: group.scatter[split..].to_vec(),
+                gathers: group.gather.clone(),
+            }));
+        }
+        Arc::clone(self.prep_cache[g].as_ref().expect("just filled"))
     }
 
     /// Record one prepared interval in the per-group pipeline telemetry.
@@ -583,11 +775,12 @@ impl<'a> Executor<'a> {
     }
 
     /// Fold one shard's partial accumulators and spills into the interval
-    /// state, then recycle the shard's buffers into the arena of the
-    /// worker that produced them. Called in canonical shard order only.
+    /// state, staging the shard's buffers for return to the worker that
+    /// produced them. Called in canonical shard order only.
     fn merge_shard(&mut self, iv: &mut IntervalState, shard_idx: usize, mut out: ShardOut) {
         let shard = &self.parts.shards[shard_idx];
-        let mut ws = self.shard_scratch[out.worker].lock().unwrap();
+        let mode = self.mode;
+        let rets = &mut self.ret_bufs[out.worker];
         for &slot in &out.touched {
             let slot = slot as usize;
             let p = out.partials[slot]
@@ -606,14 +799,14 @@ impl<'a> Executor<'a> {
                 let ar = p.base + r;
                 match acc.reduce {
                     Reduce::Sum | Reduce::Mean => {
-                        kernels::axpy(acc.m.row_mut(ar), p.acc.m.row(r))
+                        k_axpy(mode, acc.m.row_mut(ar), p.acc.m.row(r))
                     }
-                    Reduce::Max => kernels::max_assign(acc.m.row_mut(ar), p.acc.m.row(r)),
+                    Reduce::Max => k_max_assign(mode, acc.m.row_mut(ar), p.acc.m.row(r)),
                 }
                 acc.counts[ar] += cnt;
             }
-            ws.pm.give(slot, p.acc.m.data);
-            ws.pc.give(slot, p.acc.counts);
+            rets.push(RetBuf::Pm(slot, p.acc.m.data));
+            rets.push(RetBuf::Pc(slot, p.acc.counts));
         }
         for (dram_slot, e_slot, m) in out.spills.drain(..) {
             // ST.E rows land at canonical edge ids; shards own disjoint
@@ -625,7 +818,7 @@ impl<'a> Executor<'a> {
             for (r, e) in shard.edges.iter().enumerate() {
                 dst.row_mut(e.edge_id as usize).copy_from_slice(m.row(r));
             }
-            ws.e.give(e_slot as usize, m.data);
+            self.ret_bufs[out.worker].push(RetBuf::E(e_slot as usize, m.data));
         }
     }
 }
@@ -633,6 +826,37 @@ impl<'a> Executor<'a> {
 impl PhaseVisitor for Executor<'_> {
     fn begin_interval(&mut self, cx: &StepCtx) {
         self.scatter_prepared = false;
+        // Join an in-flight lane preparation (Group mode): the lane
+        // worked through the previous ApplyPhase (and, cross-group, the
+        // group boundary); this is the rendezvous.
+        if let Some(target) = self.pending_prepare.take() {
+            let done = self
+                .prep_lane
+                .as_ref()
+                .expect("pending prepare has a lane")
+                .recv();
+            let b = done.state.bank;
+            debug_assert!(self.banks[b].is_none(), "bank returned twice");
+            self.banks[b] = Some(done.scratch);
+            if target == (cx.group_idx, cx.interval_idx) {
+                self.note_prepared(target.0, done.secs);
+                if let Some(mut old) = self.iv.take() {
+                    old.recycle(bank_mut(&mut self.banks, old.bank));
+                    self.spare = Some(old);
+                }
+                self.iv = Some(done.state);
+                self.scatter_prepared = true;
+                self.pending.clear();
+                return;
+            }
+            // Stale lane result (unreachable under the walk contract —
+            // defensive): recycle its buffers into its bank.
+            let mut st = done.state;
+            st.recycle(bank_mut(&mut self.banks, b));
+            if self.spare.is_none() {
+                self.spare = Some(st);
+            }
+        }
         if let Some(p) = self.standby.take() {
             if p.group == cx.group_idx && p.interval == cx.interval_idx {
                 // The pipeline ping-pong: the prepared state becomes the
@@ -640,7 +864,7 @@ impl PhaseVisitor for Executor<'_> {
                 // into the pools and its container becomes the spare for
                 // the next preparation.
                 if let Some(mut old) = self.iv.take() {
-                    old.recycle(&mut self.iv_scratch);
+                    old.recycle(bank_mut(&mut self.banks, old.bank));
                     self.spare = Some(old);
                 }
                 self.iv = Some(p.state);
@@ -651,14 +875,14 @@ impl PhaseVisitor for Executor<'_> {
             // Stale standby (unreachable under the walk contract —
             // defensive): recycle its buffers and container.
             let mut st = p.state;
-            st.recycle(&mut self.iv_scratch);
+            st.recycle(bank_mut(&mut self.banks, st.bank));
             self.spare = Some(st);
         }
         let mut st = self
             .iv
             .take()
             .unwrap_or_else(|| IntervalState::empty(&self.layout));
-        st.reset(cx.interval, &mut self.iv_scratch);
+        reset_state(&mut self.banks, &mut st, cx.interval, 0);
         self.iv = Some(st);
         self.pending.clear();
     }
@@ -666,8 +890,8 @@ impl PhaseVisitor for Executor<'_> {
     fn scatter_phase(&mut self, cx: &StepCtx) {
         if std::mem::take(&mut self.scatter_prepared) {
             // Already ran at prepare time, under the previous interval's
-            // gather drain — LDs, computes and the pre-created gather
-            // accumulators are in place, verbatim.
+            // gather drain (or on the prepare lane) — LDs, computes and
+            // the pre-created gather accumulators are in place, verbatim.
             return;
         }
         let mut iv = self.iv.take().expect("interval state");
@@ -676,7 +900,8 @@ impl PhaseVisitor for Executor<'_> {
         }
         // Gather accumulators exist per interval even when the interval
         // has no shards (isolated destination ranges).
-        ensure_accs(cx.group, &mut iv, &mut self.iv_scratch);
+        let b = iv.bank;
+        ensure_accs(&cx.group.gather, &mut iv, bank_mut(&mut self.banks, b));
         self.iv = Some(iv);
     }
 
@@ -689,10 +914,20 @@ impl PhaseVisitor for Executor<'_> {
     fn lookahead_interval(&mut self, cx: &StepCtx, next: &StepCtx) {
         // Record the walker's lookahead; the coming `end_gather` drain
         // consumes it and prepares that interval's DstBuffer state under
-        // the worker pool. Gated on the group's prefetch safety so the
-        // ST-bearing prologue (and any intra-group DRAM dependence) keeps
-        // the strictly sequential order.
-        if self.pipeline == PipelineMode::Interval && self.prefetchable[cx.group_idx] {
+        // the worker pool (or on the prepare lane). Gated on the group's
+        // prefetch safety so the ST-bearing prologue (and any DRAM
+        // dependence) keeps the strictly sequential order; crossing a
+        // group boundary additionally needs Group mode and the
+        // cross-group dependence gate.
+        if self.pipeline == PipelineMode::Off {
+            return;
+        }
+        let safe = if next.group_idx == cx.group_idx {
+            self.prefetchable[cx.group_idx]
+        } else {
+            self.pipeline == PipelineMode::Group && self.cross_prefetchable[cx.group_idx]
+        };
+        if safe {
             self.lookahead = Some((next.group_idx, next.interval_idx));
         }
     }
@@ -704,7 +939,7 @@ impl PhaseVisitor for Executor<'_> {
     fn apply_phase(&mut self, cx: &StepCtx) {
         let mut iv = self.iv.take().expect("interval state");
         // Mean finalisation + empty-row convention.
-        iv.finalize_gathers(&mut self.iv_scratch);
+        iv.finalize_gathers(bank_mut(&mut self.banks, iv.bank));
         for i in &cx.group.apply {
             self.exec_interval_instr(i, &mut iv);
         }
@@ -717,12 +952,137 @@ impl PhaseVisitor for Executor<'_> {
     // allocator.
 }
 
+// ---- the prepare lane (PipelineMode::Group) ---------------------------------
+
+/// One job for the lane: a state whose LD prefix already ran, the
+/// scratch bank its buffers are paired with, and the instruction suffix
+/// to execute. Everything is owned or `Arc`-shared — the lane borrows
+/// nothing from the executor.
+struct PrepJob {
+    state: IntervalState,
+    scratch: IntervalScratch,
+    instrs: Arc<PrepInstrs>,
+    weights: Arc<Vec<Option<Matrix>>>,
+    mode: KernelMode,
+    tracing: bool,
+    track: u32,
+    group: i32,
+    interval: i32,
+}
+
+struct PrepDone {
+    state: IntervalState,
+    scratch: IntervalScratch,
+    secs: f64,
+}
+
+/// The persistent prepare thread: one job in flight at a time, fed and
+/// joined by the driving thread (`dispatch_prepare` / `begin_interval`).
+/// Plain `mpsc` — the executor never blocks on `send` (channel is
+/// unbounded, at most one job queued) and blocks on `recv` only at the
+/// rendezvous.
+struct PrepareLane {
+    tx: Option<mpsc::Sender<PrepJob>>,
+    rx: mpsc::Receiver<PrepDone>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PrepareLane {
+    fn new() -> Self {
+        let (tx, jrx) = mpsc::channel::<PrepJob>();
+        let (dtx, rx) = mpsc::channel::<PrepDone>();
+        let handle = std::thread::Builder::new()
+            .name("sb-prepare".into())
+            .spawn(move || {
+                while let Ok(job) = jrx.recv() {
+                    let t0 = Instant::now();
+                    let mut st = job.state;
+                    let mut scratch = job.scratch;
+                    {
+                        let _span = trace::span_if(
+                            job.tracing,
+                            trace::names::PREPARE,
+                            trace::cat::EXEC,
+                            job.track,
+                            job.group,
+                            job.interval,
+                            -1,
+                        );
+                        for i in &job.instrs.computes {
+                            // The compute suffix never touches DRAM (the
+                            // split guarantees no LD/ST), hence the empty
+                            // arena.
+                            exec_interval_read_instr(
+                                i,
+                                &mut st,
+                                &[],
+                                &job.weights,
+                                &mut scratch,
+                                job.mode,
+                            );
+                        }
+                        ensure_accs(&job.instrs.gathers, &mut st, &mut scratch);
+                    }
+                    // Persistent thread: hand spans to the session now —
+                    // the thread-exit flush would come far too late.
+                    trace::flush_thread();
+                    let secs = t0.elapsed().as_secs_f64();
+                    if dtx
+                        .send(PrepDone {
+                            state: st,
+                            scratch,
+                            secs,
+                        })
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn prepare lane");
+        PrepareLane {
+            tx: Some(tx),
+            rx,
+            handle: Some(handle),
+        }
+    }
+
+    fn send(&self, job: PrepJob) {
+        self.tx
+            .as_ref()
+            .expect("lane channel open")
+            .send(job)
+            .expect("prepare lane alive");
+    }
+
+    fn recv(&self) -> PrepDone {
+        self.rx.recv().expect("prepare lane alive")
+    }
+}
+
+impl Drop for PrepareLane {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel; the lane loop exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---- interval state ---------------------------------------------------------
+
 /// Per-interval state: resident D slots + gather accumulators. One
-/// instance lives for the whole executor; `reset` re-arms it per interval
-/// and drains retired buffers into the scratch pools.
+/// instance lives for the whole executor; `reset_state` re-arms it per
+/// interval and drains retired buffers into the scratch bank it is
+/// paired with.
 struct IntervalState {
     begin: usize,
     end: usize,
+    /// Which scratch bank this state's buffers came from (and return
+    /// to). Interval/Off pipelining keeps everything on bank 0; the
+    /// Group-mode lane alternates so a prepared state and the live state
+    /// never share a bank.
+    bank: usize,
     /// DstBuffer arena, indexed by D-symbol id.
     d: Vec<Option<Matrix>>,
     /// Gather accumulators, indexed by D-symbol id; moved into `d` by
@@ -735,13 +1095,15 @@ impl IntervalState {
         IntervalState {
             begin: 0,
             end: 0,
+            bank: 0,
             d: (0..layout.d).map(|_| None).collect(),
             accs: (0..layout.d).map(|_| None).collect(),
         }
     }
 
     /// Drain every buffer this state holds back into the scratch pools
-    /// (the state stays usable as an empty container).
+    /// (the state stays usable as an empty container). `scratch` must be
+    /// the bank recorded in `self.bank`.
     fn recycle(&mut self, scratch: &mut IntervalScratch) {
         for (slot, m) in self.d.iter_mut().enumerate() {
             if let Some(m) = m.take() {
@@ -756,16 +1118,18 @@ impl IntervalState {
         }
     }
 
-    /// Point the state at a new interval, recycling every buffer the
-    /// previous interval left behind.
-    fn reset(&mut self, iv: &Interval, scratch: &mut IntervalScratch) {
-        self.recycle(scratch);
+    /// Point the (already recycled) state at a new interval.
+    fn rearm(&mut self, iv: &Interval) {
         self.begin = iv.begin as usize;
         self.end = iv.end as usize;
     }
 
     fn len(&self) -> usize {
         self.end - self.begin
+    }
+
+    fn holds_buffers(&self) -> bool {
+        self.d.iter().any(Option::is_some) || self.accs.iter().any(Option::is_some)
     }
 
     /// Pre-create a gather accumulator (first touch in this interval
@@ -807,6 +1171,31 @@ impl IntervalState {
     }
 }
 
+/// The live bank accessor — panics if the bank is checked out to the
+/// prepare lane, which the dispatch/join protocol makes impossible at
+/// any point this is called.
+fn bank_mut(banks: &mut [Option<IntervalScratch>; 2], b: usize) -> &mut IntervalScratch {
+    banks[b].as_mut().expect("scratch bank checked out")
+}
+
+/// Recycle `st` into its own bank, repoint it at `bank`, and re-arm it
+/// for `iv`. The one place a state changes banks.
+fn reset_state(
+    banks: &mut [Option<IntervalScratch>; 2],
+    st: &mut IntervalState,
+    iv: &Interval,
+    bank: usize,
+) {
+    match banks[st.bank].as_mut() {
+        Some(sc) => st.recycle(sc),
+        // The state's bank is checked out — only reachable for an empty
+        // container (spare states are always recycled first).
+        None => debug_assert!(!st.holds_buffers(), "recycle with bank checked out"),
+    }
+    st.bank = bank;
+    st.rearm(iv);
+}
+
 /// The reduce-specific accumulator identity element.
 fn reduce_identity(reduce: Reduce) -> f32 {
     match reduce {
@@ -814,6 +1203,48 @@ fn reduce_identity(reduce: Reduce) -> f32 {
         Reduce::Max => f32::NEG_INFINITY,
     }
 }
+
+// ---- kernel-mode dispatch ---------------------------------------------------
+//
+// The row kernels are per-element independent, so the explicit-width
+// variants are bit-identical to the scalar ones — the dispatch exists to
+// keep the whole hot path (gather inner loops AND the merge) on the
+// selected tier. `Naive` mode intentionally takes the scalar kernel arm:
+// these row ops were never part of the naive compute reference.
+
+#[inline]
+fn k_axpy(mode: KernelMode, o: &mut [f32], x: &[f32]) {
+    match mode {
+        KernelMode::Simd => kernels::axpy_simd(o, x),
+        _ => kernels::axpy(o, x),
+    }
+}
+
+#[inline]
+fn k_scale_axpy(mode: KernelMode, o: &mut [f32], x: &[f32], f: f32) {
+    match mode {
+        KernelMode::Simd => kernels::scale_axpy_simd(o, x, f),
+        _ => kernels::scale_axpy(o, x, f),
+    }
+}
+
+#[inline]
+fn k_max_assign(mode: KernelMode, o: &mut [f32], x: &[f32]) {
+    match mode {
+        KernelMode::Simd => kernels::max_assign_simd(o, x),
+        _ => kernels::max_assign(o, x),
+    }
+}
+
+#[inline]
+fn k_scale_max_assign(mode: KernelMode, o: &mut [f32], x: &[f32], f: f32) {
+    match mode {
+        KernelMode::Simd => kernels::scale_max_assign_simd(o, x, f),
+        _ => kernels::scale_max_assign(o, x, f),
+    }
+}
+
+// ---- shard execution --------------------------------------------------------
 
 /// A gather accumulator (interval-level or per-shard partial).
 struct Acc {
@@ -833,7 +1264,7 @@ struct Partial {
 /// (merged in shard order) and queued ST.E spills. Matrix buffers inside
 /// come from — and return to — the producing worker's scratch arena; the
 /// three container `Vec`s are the only per-shard heap traffic left.
-struct ShardOut {
+pub(super) struct ShardOut {
     /// Worker index that ran the shard (owner of the buffers inside).
     worker: usize,
     /// Partials indexed by D slot (`SlotLayout::d` wide) — no linear
@@ -1060,10 +1491,10 @@ impl ShardEnv<'_> {
                     let f = scale_m.map_or(1.0, |m| m.get(r, 0));
                     match reduce {
                         Reduce::Sum | Reduce::Mean => {
-                            kernels::scale_axpy(acc.m.row_mut(local), row, f)
+                            k_scale_axpy(self.mode, acc.m.row_mut(local), row, f)
                         }
                         Reduce::Max => {
-                            kernels::scale_max_assign(acc.m.row_mut(local), row, f)
+                            k_scale_max_assign(self.mode, acc.m.row_mut(local), row, f)
                         }
                     }
                 }
@@ -1093,9 +1524,9 @@ impl ShardEnv<'_> {
                     let row = ev.row(r);
                     match reduce {
                         Reduce::Sum | Reduce::Mean => {
-                            kernels::axpy(acc.m.row_mut(local), row)
+                            k_axpy(self.mode, acc.m.row_mut(local), row)
                         }
-                        Reduce::Max => kernels::max_assign(acc.m.row_mut(local), row),
+                        Reduce::Max => k_max_assign(self.mode, acc.m.row_mut(local), row),
                     }
                 }
             }
@@ -1106,7 +1537,7 @@ impl ShardEnv<'_> {
                 let def = i.def().expect("compute defines");
                 let slot = def.id as usize;
                 let m = match self.mode {
-                    KernelMode::Blocked => {
+                    KernelMode::Blocked | KernelMode::Simd => {
                         // The def's pool is a field disjoint from the
                         // operand arenas, so this borrow-splits cleanly.
                         let pool = match def.space {
@@ -1123,6 +1554,7 @@ impl ShardEnv<'_> {
                             &iv.d,
                             pool,
                             slot,
+                            self.mode,
                         )
                     }
                     KernelMode::Naive => compute_instr_naive(
@@ -1150,8 +1582,8 @@ impl ShardEnv<'_> {
 /// Execute one ScatterPhase/ApplyPhase instruction that only *reads*
 /// DRAM — `LD` or compute. `ST`, the one DRAM-writing interval
 /// instruction, is handled by the sequential caller
-/// (`Executor::exec_interval_instr`); the pipelined prepare path never
-/// sees one because ST-bearing ScatterPhases are not prefetch-safe.
+/// (`Executor::exec_interval_instr`); the pipelined prepare paths never
+/// see one because ST-bearing ScatterPhases are not prefetch-safe.
 fn exec_interval_read_instr(
     i: &Instr,
     iv: &mut IntervalState,
@@ -1180,9 +1612,17 @@ fn exec_interval_read_instr(
             let def = i.def().expect("compute defines");
             let slot = def.id as usize;
             let out = match mode {
-                KernelMode::Blocked => {
-                    compute_instr_kernel(i, v, weights, None, None, &iv.d, &mut scratch.m, slot)
-                }
+                KernelMode::Blocked | KernelMode::Simd => compute_instr_kernel(
+                    i,
+                    v,
+                    weights,
+                    None,
+                    None,
+                    &iv.d,
+                    &mut scratch.m,
+                    slot,
+                    mode,
+                ),
                 KernelMode::Naive => compute_instr_naive(i, v, weights, None, None, &iv.d),
             };
             if let Some(old) = iv.d[slot].replace(out) {
@@ -1194,9 +1634,10 @@ fn exec_interval_read_instr(
 
 /// Pre-create the interval's gather accumulators (first touch zeroes them
 /// — mirrors the hardware's phase-scheduler reset). Shared by the
-/// sequential `scatter_phase` and the pipelined prepare.
-fn ensure_accs(group: &PhaseGroup, iv: &mut IntervalState, scratch: &mut IntervalScratch) {
-    for i in &group.gather {
+/// sequential `scatter_phase`, the pipelined prepare, and the prepare
+/// lane (hence the instruction-slice parameter).
+fn ensure_accs(gather: &[Instr], iv: &mut IntervalState, scratch: &mut IntervalScratch) {
+    for i in gather {
         match i {
             Instr::Gather { reduce, dst, cols, .. }
             | Instr::FusedGather { reduce, dst, cols, .. } => {
@@ -1207,32 +1648,32 @@ fn ensure_accs(group: &PhaseGroup, iv: &mut IntervalState, scratch: &mut Interva
     }
 }
 
-/// The single timed entry point all three `run_pending_shards` arms
-/// (empty-pending, serial, threaded) share: run [`prepare_interval`] for
+/// The single timed entry point the `run_pending_shards` arms
+/// (empty-pending, inline, threaded) share: run [`prepare_interval`] for
 /// the standby, if one is planned, and return the seconds spent.
 ///
 /// Always called on the walk's driving thread (the threaded arm calls it
-/// from inside the scope, not from a spawned worker), so the `prepare`
+/// between `begin_batch` and the ticket's `finish`), so the `prepare`
 /// trace span gates on this thread's session flag and lands on the main
 /// track — in a trace it shows up *under* the enclosing `gather_drain`
 /// span, which is exactly the pipelining overlap being claimed.
 fn timed_prepare(
-    group_idx: usize,
-    group: &PhaseGroup,
-    standby: &mut Option<(usize, IntervalState)>,
+    program: &Program,
+    standby: &mut Option<(usize, usize, IntervalState)>,
     dram: &[Option<Matrix>],
     weights: &[Option<Matrix>],
     scratch: &mut IntervalScratch,
     mode: KernelMode,
 ) -> f64 {
-    let Some((ni, st)) = standby.as_mut() else {
+    let Some((tg, ni, st)) = standby.as_mut() else {
         return 0.0;
     };
+    let group = &program.groups[*tg];
     let _span = trace::span_args(
         trace::names::PREPARE,
         trace::cat::EXEC,
         trace::TRACK_MAIN,
-        group_idx as i32,
+        *tg as i32,
         *ni as i32,
         -1,
     );
@@ -1259,7 +1700,7 @@ fn prepare_interval(
     for i in &group.scatter {
         exec_interval_read_instr(i, st, dram, weights, scratch, mode);
     }
-    ensure_accs(group, st, scratch);
+    ensure_accs(&group.gather, st, scratch);
 }
 
 /// Resolve a compute operand against the slot arenas: W from `weights`,
@@ -1285,8 +1726,10 @@ fn look_operand<'m>(
 
 /// Evaluate a compute instruction through the kernel layer, writing into
 /// a scratch buffer taken from `pool` at `slot` (blocked branch-free DMM,
-/// flat-slice ELW/RSCALE/CAT — no per-element `get`/`set`). Results are
-/// bit-identical to [`compute_instr_naive`] for finite inputs.
+/// flat-slice ELW/RSCALE/CAT — no per-element `get`/`set`).
+/// [`KernelMode::Simd`] swaps the DMM for its explicit-width twin.
+/// Results are bit-identical to [`compute_instr_naive`] for finite
+/// inputs.
 #[allow(clippy::too_many_arguments)]
 fn compute_instr_kernel(
     i: &Instr,
@@ -1297,6 +1740,7 @@ fn compute_instr_kernel(
     d: &[Option<Matrix>],
     pool: &mut Pool<f32>,
     slot: usize,
+    mode: KernelMode,
 ) -> Matrix {
     match i {
         Instr::Elw {
@@ -1357,7 +1801,10 @@ fn compute_instr_kernel(
             let am = look_operand(a, weights, s, e, d);
             let wm = look_operand(w, weights, s, e, d);
             let mut out = pool.take_matrix_any(slot, am.rows, wm.cols);
-            kernels::matmul_blocked(am, wm, &mut out);
+            match mode {
+                KernelMode::Simd => kernels::matmul_simd(am, wm, &mut out),
+                _ => kernels::matmul_blocked(am, wm, &mut out),
+            }
             out
         }
         _ => panic!("not a compute instruction: {}", i.render()),
@@ -1367,7 +1814,8 @@ fn compute_instr_kernel(
 /// The pre-kernel-layer compute path, preserved verbatim: naive
 /// zero-skipping matmul, per-element `get`/`set` loops, and a fresh
 /// allocation per result. This is the golden reference the differential
-/// tests diff [`KernelMode::Blocked`] against — do not "optimise" it.
+/// tests diff [`KernelMode::Blocked`] and [`KernelMode::Simd`] against —
+/// do not "optimise" it.
 fn compute_instr_naive(
     i: &Instr,
     rows: usize,

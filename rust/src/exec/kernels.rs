@@ -3,10 +3,21 @@
 //! iteration so the compiler's autovectorizer can keep the SIMD lanes
 //! full (the software analogue of keeping the VU/MU saturated, §IV).
 //!
+//! Two tiers above the preserved naive loops:
+//!
+//! * the `*_blocked` / plain row kernels rely on autovectorization over
+//!   variable-length slices;
+//! * the `*_simd` kernels (`KernelMode::Simd`) commit to an explicit
+//!   width — [`SIMD_LANES`]-element `[f32; 8]` chunks via
+//!   `chunks_exact`, so the compiler sees fixed-trip-count inner loops
+//!   it can lower to full vector registers without a length check —
+//!   with a scalar tail for the remainder. Portable safe Rust: no
+//!   `unsafe`, no feature flags, no intrinsics.
+//!
 //! Every kernel preserves the *exact* floating-point operation order of
 //! the naive loops it replaced, so the executor's output stays
-//! bit-identical — the differential tests in `exec::tests` pin the kernel
-//! path against the preserved naive reference
+//! bit-identical — the differential tests in `exec::tests` pin both
+//! kernel paths against the preserved naive reference
 //! ([`matmul_naive`] / `compute_instr_naive`) on every zoo model.
 
 use crate::exec::matrix::Matrix;
@@ -72,6 +83,133 @@ pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
         }
     }
     out
+}
+
+// ---- explicit-width SIMD kernels (KernelMode::Simd) -------------------------
+
+/// Lane count of the explicit-width kernels: 8 f32 elements, matching
+/// [`MM_TILE`] (one AVX2 register / two NEON registers).
+pub const SIMD_LANES: usize = 8;
+
+/// Explicit-width matmul: per output row, the column range is walked in
+/// exact [`SIMD_LANES`]-wide chunks with a `[f32; 8]` register
+/// accumulator (fixed-trip-count inner loop), then a scalar tail. Per
+/// output element the k-summation is the same ascending `acc += a·b`
+/// chain as [`matmul_blocked`], so results are bit-identical to it and
+/// to [`matmul_naive`] for finite inputs.
+pub fn matmul_simd(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul shape");
+    assert_eq!(out.cols, b.cols, "matmul out cols");
+    assert!(a.rows >= out.rows, "matmul out rows");
+    let n = b.cols;
+    let whole = n - n % SIMD_LANES;
+    for i in 0..out.rows {
+        let arow = a.row(i);
+        let mut j = 0;
+        while j < whole {
+            let mut acc = [0.0f32; SIMD_LANES];
+            for (k, &av) in arow.iter().enumerate() {
+                let brow: &[f32; SIMD_LANES] =
+                    b.row(k)[j..j + SIMD_LANES].try_into().unwrap();
+                for (x, &bv) in acc.iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+            out.row_mut(i)[j..j + SIMD_LANES].copy_from_slice(&acc);
+            j += SIMD_LANES;
+        }
+        if j < n {
+            let jw = n - j;
+            let mut acc = [0.0f32; SIMD_LANES];
+            for (k, &av) in arow.iter().enumerate() {
+                let brow = &b.row(k)[j..];
+                for (x, &bv) in acc[..jw].iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+            out.row_mut(i)[j..].copy_from_slice(&acc[..jw]);
+        }
+    }
+}
+
+/// `o += x` in exact 8-lane chunks plus a scalar tail. Element-wise ops
+/// are independent, so any chunking is bit-identical to [`axpy`].
+#[inline]
+pub fn axpy_simd(o: &mut [f32], x: &[f32]) {
+    let n = o.len().min(x.len());
+    let (o, x) = (&mut o[..n], &x[..n]);
+    let mut oc = o.chunks_exact_mut(SIMD_LANES);
+    let mut xc = x.chunks_exact(SIMD_LANES);
+    for (ob, xb) in (&mut oc).zip(&mut xc) {
+        let ob: &mut [f32; SIMD_LANES] = ob.try_into().unwrap();
+        let xb: &[f32; SIMD_LANES] = xb.try_into().unwrap();
+        for (o, &v) in ob.iter_mut().zip(xb) {
+            *o += v;
+        }
+    }
+    for (o, &v) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o += v;
+    }
+}
+
+/// `o += f · x` in exact 8-lane chunks plus a scalar tail; bit-identical
+/// to [`scale_axpy`].
+#[inline]
+pub fn scale_axpy_simd(o: &mut [f32], x: &[f32], f: f32) {
+    let n = o.len().min(x.len());
+    let (o, x) = (&mut o[..n], &x[..n]);
+    let mut oc = o.chunks_exact_mut(SIMD_LANES);
+    let mut xc = x.chunks_exact(SIMD_LANES);
+    for (ob, xb) in (&mut oc).zip(&mut xc) {
+        let ob: &mut [f32; SIMD_LANES] = ob.try_into().unwrap();
+        let xb: &[f32; SIMD_LANES] = xb.try_into().unwrap();
+        for (o, &v) in ob.iter_mut().zip(xb) {
+            *o += v * f;
+        }
+    }
+    for (o, &v) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o += v * f;
+    }
+}
+
+/// `o = max(o, x)` in exact 8-lane chunks plus a scalar tail;
+/// bit-identical to [`max_assign`].
+#[inline]
+pub fn max_assign_simd(o: &mut [f32], x: &[f32]) {
+    let n = o.len().min(x.len());
+    let (o, x) = (&mut o[..n], &x[..n]);
+    let mut oc = o.chunks_exact_mut(SIMD_LANES);
+    let mut xc = x.chunks_exact(SIMD_LANES);
+    for (ob, xb) in (&mut oc).zip(&mut xc) {
+        let ob: &mut [f32; SIMD_LANES] = ob.try_into().unwrap();
+        let xb: &[f32; SIMD_LANES] = xb.try_into().unwrap();
+        for (o, &v) in ob.iter_mut().zip(xb) {
+            *o = o.max(v);
+        }
+    }
+    for (o, &v) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o = o.max(v);
+    }
+}
+
+/// `o = max(o, f · x)` in exact 8-lane chunks plus a scalar tail;
+/// bit-identical to [`scale_max_assign`].
+#[inline]
+pub fn scale_max_assign_simd(o: &mut [f32], x: &[f32], f: f32) {
+    let n = o.len().min(x.len());
+    let (o, x) = (&mut o[..n], &x[..n]);
+    let mut oc = o.chunks_exact_mut(SIMD_LANES);
+    let mut xc = x.chunks_exact(SIMD_LANES);
+    for (ob, xb) in (&mut oc).zip(&mut xc) {
+        let ob: &mut [f32; SIMD_LANES] = ob.try_into().unwrap();
+        let xb: &[f32; SIMD_LANES] = xb.try_into().unwrap();
+        for (o, &v) in ob.iter_mut().zip(xb) {
+            *o = o.max(v * f);
+        }
+    }
+    for (o, &v) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o = o.max(v * f);
+    }
 }
 
 // ---- fused row kernels (gather inner loops + shard merge) -------------------
@@ -212,6 +350,59 @@ mod tests {
         let mut sm = [2.9f32, 0.0, 0.0, 0.0];
         scale_max_assign(&mut sm, &x, 2.0);
         assert_eq!(sm, [3.0, 0.0, 0.5, 6.0]);
+    }
+
+    #[test]
+    fn simd_matmul_matches_naive_on_tail_shapes() {
+        // Deliberately non-multiple-of-8 column counts: every tail width
+        // 1..=7, plus exact-lane and just-over-lane widths, must be
+        // bit-identical to the naive reference.
+        for n in 1..=17 {
+            let a = weights::init_weight(200 + n as u64, 3, 5);
+            let b = weights::init_weight(300 + n as u64, 5, n as u32);
+            let want = matmul_naive(&a, &b);
+            let mut got = Matrix::filled(3, n, f32::NAN);
+            matmul_simd(&a, &b, &mut got);
+            assert!(got.bits_eq(&want), "simd != naive at 3x5x{n}");
+        }
+        // And a lane-aligned big-ish shape.
+        let a = weights::init_weight(42, 16, 32);
+        let b = weights::init_weight(43, 32, 24);
+        let want = matmul_naive(&a, &b);
+        let mut got = Matrix::zeros(16, 24);
+        matmul_simd(&a, &b, &mut got);
+        assert!(got.bits_eq(&want));
+    }
+
+    #[test]
+    fn simd_row_kernels_handle_non_multiple_of_8_tails() {
+        // Row widths 1..=19 cover empty-chunk, one-chunk and chunk+tail
+        // layouts; each SIMD kernel must be bit-identical to its scalar
+        // twin on the same data.
+        for len in 1..=19usize {
+            let x: Vec<f32> = (0..len).map(|i| (i as f32 - 7.5) * 0.37).collect();
+            let base: Vec<f32> = (0..len).map(|i| (i as f32) * -0.21 + 1.0).collect();
+
+            let (mut a, mut b) = (base.clone(), base.clone());
+            axpy(&mut a, &x);
+            axpy_simd(&mut b, &x);
+            assert_eq!(a, b, "axpy tail at len {len}");
+
+            let (mut a, mut b) = (base.clone(), base.clone());
+            scale_axpy(&mut a, &x, 1.7);
+            scale_axpy_simd(&mut b, &x, 1.7);
+            assert_eq!(a, b, "scale_axpy tail at len {len}");
+
+            let (mut a, mut b) = (base.clone(), base.clone());
+            max_assign(&mut a, &x);
+            max_assign_simd(&mut b, &x);
+            assert_eq!(a, b, "max_assign tail at len {len}");
+
+            let (mut a, mut b) = (base.clone(), base);
+            scale_max_assign(&mut a, &x, -0.9);
+            scale_max_assign_simd(&mut b, &x, -0.9);
+            assert_eq!(a, b, "scale_max_assign tail at len {len}");
+        }
     }
 
     #[test]

@@ -17,30 +17,39 @@
 //! core correctness property of the whole stack (tested here and, against
 //! the JAX/PJRT oracle, in `rust/tests/integration_runtime.rs`).
 //!
-//! The executor's hot path is built from two support layers: [`kernels`]
+//! The executor's hot path is built from three support layers: [`kernels`]
 //! (cache-blocked branch-free matmul + fused slice-based row kernels,
-//! bit-identical to the preserved naive loops) and [`scratch`]
-//! (slot-keyed buffer pools making the walk allocation-free in steady
-//! state). [`KernelMode::Naive`] keeps the pre-kernel compute path alive
-//! purely as the differential-test reference.
+//! with explicit chunks-of-8 variants behind [`KernelMode::Simd`], all
+//! bit-identical to the preserved naive loops), [`scratch`] (slot-keyed
+//! buffer pools making the walk allocation-free in steady state), and
+//! [`pool`] (the persistent worker pool: sThreads spawned once per
+//! executor, each owning its scratch — no per-interval spawn/join and no
+//! `Mutex` on the hot path). [`KernelMode::Naive`] keeps the pre-kernel
+//! compute path alive purely as the differential-test reference.
 //!
 //! Consecutive destination intervals are pipelined by default
 //! ([`PipelineMode::Interval`]): while one interval's shards drain
 //! through the worker pool, the next interval's DstBuffer state is
 //! prepared from a second buffer set ping-ponged through the scratch
 //! pools — the functional realisation of the simulator's interval-overlap
-//! timing. [`PipelineMode::Off`] preserves the strictly sequential order
-//! as the golden reference of the pipelining differential tests.
+//! timing. [`PipelineMode::Group`] extends the overlap past the gather
+//! drain: a persistent prepare lane carries the prologue computes across
+//! the ApplyPhase and, where the cross-group dependence gate allows,
+//! across the group boundary. [`PipelineMode::Off`] preserves the
+//! strictly sequential order as the golden reference of the pipelining
+//! differential tests.
 
 mod executor;
 pub mod kernels;
 mod matrix;
+mod pool;
 pub mod reference;
 pub mod scratch;
 pub mod weights;
 
 pub use executor::{Executor, KernelMode, PipelineMode};
 pub use matrix::Matrix;
+pub use pool::PoolStats;
 pub use scratch::ScratchStats;
 
 #[cfg(test)]

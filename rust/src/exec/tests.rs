@@ -200,7 +200,7 @@ fn kernel_executor_bit_identical_to_naive_reference() {
                 .with_kernel_mode(KernelMode::Naive)
                 .with_workers(1)
                 .run(&x, &deg);
-            for workers in [1usize, 4] {
+            for workers in [1usize, 4, 8] {
                 let got = Executor::new(&prog, &parts)
                     .with_workers(workers)
                     .run(&x, &deg);
@@ -211,6 +211,56 @@ fn kernel_executor_bit_identical_to_naive_reference() {
                     m.name(),
                     parts.method,
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_executor_bit_identical_to_naive_reference() {
+    // The explicit-width differential property: KernelMode::Simd (chunks
+    // of 8 with array-of-8 accumulators, in the DMM *and* the gather/
+    // merge row kernels) must be bit-identical to the naive reference on
+    // every zoo model, both partition methods, every pool width and every
+    // pipeline mode — tails included, since dims of 8 across graph-sized
+    // rows still leave non-multiple-of-8 shard windows everywhere.
+    use crate::exec::{KernelMode, PipelineMode};
+    use crate::ir::spec::ModelDims;
+    use crate::ir::zoo::ModelZoo;
+    let g = Csr::from_edge_list(&generators::rmat(1 << 8, 3_000, 0.57, 0.19, 0.19, 41));
+    let deg = degree_col(&g);
+    for m in ModelZoo::builtin().entries() {
+        let ir = m.build(ModelDims::uniform(2, 8)).unwrap();
+        let prog = compile(&ir);
+        let mut cfg = cfg_for(&prog, 2 * 1024, 4 * 1024);
+        cfg.num_sthreads = 4;
+        let x = weights::init_features(7, g.num_vertices(), ir.input_dim() as usize);
+        for parts in [partition_fggp(&g, cfg), partition_dsw(&g, cfg)] {
+            let golden = Executor::new(&prog, &parts)
+                .with_kernel_mode(KernelMode::Naive)
+                .with_pipeline_mode(PipelineMode::Off)
+                .with_workers(1)
+                .run(&x, &deg);
+            for workers in [1usize, 4, 8] {
+                for pipeline in [
+                    PipelineMode::Off,
+                    PipelineMode::Interval,
+                    PipelineMode::Group,
+                ] {
+                    let got = Executor::new(&prog, &parts)
+                        .with_kernel_mode(KernelMode::Simd)
+                        .with_pipeline_mode(pipeline)
+                        .with_workers(workers)
+                        .run(&x, &deg);
+                    assert!(
+                        got.bits_eq(&golden),
+                        "{} ({:?}, {workers} workers, pipeline {}): SIMD path \
+                         diverged bitwise from the naive reference",
+                        m.name(),
+                        parts.method,
+                        pipeline.label(),
+                    );
+                }
             }
         }
     }
@@ -264,6 +314,112 @@ fn pipelined_executor_bit_identical_to_sequential() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn group_pipelined_executor_bit_identical_and_engages() {
+    // PipelineMode::Group hands the prologue computes to the persistent
+    // prepare lane (overlapping the ApplyPhase, and group boundaries
+    // where the dependence gate allows) — outputs must stay bit-identical
+    // to the strictly sequential reference, and the pipeline must
+    // actually engage.
+    use crate::exec::PipelineMode;
+    use crate::ir::spec::ModelDims;
+    use crate::ir::zoo::ModelZoo;
+    let g = Csr::from_edge_list(&generators::rmat(1 << 8, 3_000, 0.57, 0.19, 0.19, 43));
+    let deg = degree_col(&g);
+    for m in ModelZoo::builtin().entries() {
+        let ir = m.build(ModelDims::uniform(2, 8)).unwrap();
+        let prog = compile(&ir);
+        let mut cfg = cfg_for(&prog, 2 * 1024, 4 * 1024);
+        cfg.num_sthreads = 4;
+        let x = weights::init_features(7, g.num_vertices(), ir.input_dim() as usize);
+        for parts in [partition_fggp(&g, cfg), partition_dsw(&g, cfg)] {
+            assert!(parts.intervals.len() > 1, "need intervals to pipeline");
+            let golden = Executor::new(&prog, &parts)
+                .with_pipeline_mode(PipelineMode::Off)
+                .with_workers(1)
+                .run(&x, &deg);
+            for workers in [1usize, 4] {
+                let mut ex = Executor::new(&prog, &parts)
+                    .with_pipeline_mode(PipelineMode::Group)
+                    .with_workers(workers);
+                let got = ex.run(&x, &deg);
+                assert!(
+                    ex.prepared_intervals() > 0,
+                    "{} ({:?}, {workers} workers): group pipelining never engaged",
+                    m.name(),
+                    parts.method,
+                );
+                assert!(
+                    got.bits_eq(&golden),
+                    "{} ({:?}, {workers} workers): group-pipelined run diverged \
+                     bitwise from the sequential reference",
+                    m.name(),
+                    parts.method,
+                );
+                // Reruns on a live pool + prepare lane stay bit-identical.
+                let again = ex.run(&x, &deg);
+                assert!(again.bits_eq(&golden), "rerun diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_lifecycle_reuses_threads_and_scratch() {
+    // The persistent-pool lifecycle pins the "zero thread spawns per
+    // interval in steady state" acceptance criterion: threads are spawned
+    // once at the first drain (none at all for a single worker), reruns
+    // reuse them (`spawned` frozen) and their warm scratch (no new pool
+    // misses), and dropping the executor joins everything (the liveness
+    // probe dies — no leaked threads).
+    let g = Csr::from_edge_list(&generators::rmat(1 << 8, 3_000, 0.57, 0.19, 0.19, 47));
+    let ir = Model::Gcn.build(2, 8, 8, 8);
+    let prog = compile(&ir);
+    let cfg = cfg_for(&prog, 2 * 1024, 4 * 1024);
+    let parts = partition_fggp(&g, cfg);
+    let x = weights::init_features(7, g.num_vertices(), 8);
+    let deg = degree_col(&g);
+    for workers in [1usize, 2, 8] {
+        let mut ex = Executor::new(&prog, &parts).with_workers(workers);
+        assert!(ex.pool_probe().is_none(), "pool must not exist before a run");
+        let out1 = ex.run(&x, &deg);
+        let after_warmup = ex.pool_stats();
+        assert_eq!(
+            after_warmup.spawned,
+            if workers > 1 { workers as u64 } else { 0 },
+            "{workers} workers: pool spawned the wrong number of threads"
+        );
+        assert!(after_warmup.batches > 0, "no batches recorded");
+        let warm = ex.scratch_stats();
+        assert!(warm.misses > 0, "first run must populate the pools");
+        let probe = ex.pool_probe().expect("pool exists after a run");
+        assert!(probe.upgrade().is_some(), "pool probe dead while pool lives");
+        // Idle gap, then rerun: same threads (spawn counter frozen — zero
+        // spawns per interval in steady state), warm scratch (miss counter
+        // frozen — exact at any width, thanks to the static shard→worker
+        // affinity), identical bits.
+        let out2 = ex.run(&x, &deg);
+        let steady = ex.pool_stats();
+        assert_eq!(
+            steady.spawned, after_warmup.spawned,
+            "{workers} workers: rerun spawned threads"
+        );
+        assert_eq!(steady.workers, workers.max(1));
+        assert!(steady.batches > after_warmup.batches, "rerun ran no batches");
+        let steady_scratch = ex.scratch_stats();
+        assert_eq!(
+            steady_scratch.misses, warm.misses,
+            "{workers} workers: steady-state rerun allocated fresh buffers"
+        );
+        assert!(out1.bits_eq(&out2), "{workers} workers: rerun diverged bitwise");
+        drop(ex);
+        assert!(
+            probe.upgrade().is_none(),
+            "{workers} workers: worker threads leaked past executor drop"
+        );
     }
 }
 

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use switchblade::compiler::compile;
 use switchblade::coordinator::{bench_executor, Caches, Harness};
 use switchblade::dse::{self, Objective, TuneOptions};
-use switchblade::exec::{weights, PipelineMode};
+use switchblade::exec::{weights, KernelMode, PipelineMode};
 use switchblade::graph::datasets::{Dataset, DEFAULT_SCALE};
 use switchblade::ir::spec::{ModelDims, ModelSpec};
 use switchblade::ir::zoo::ModelZoo;
@@ -50,11 +50,12 @@ COMMANDS:
                                            PJRT serving demo over AOT artifacts
                                            (requests >= 1; artifacts exist for the
                                            four paper models only)
-    validate  [--scale N] [--layers N] [--dim D] [--model M] [--pipeline on|off]
+    validate  [--scale N] [--layers N] [--dim D] [--model M] [--pipeline on|group|off]
               [--trace F] [--metrics F]    executor-vs-oracle numerics check over the
                                            zoo (or one model / spec file)
     bench     [--model M] [--dataset D] [--scale N] [--iters N] [--workers W]
-              [--layers N] [--dim D] [--pipeline on|off] [--profile]
+              [--pool-workers W] [--layers N] [--dim D] [--kernel naive|blocked|simd]
+              [--pipeline on|group|off] [--sweep] [--profile]
               [--trace F] [--metrics F]    functional-executor throughput probe
                                            (single vs shard-parallel; bench.sh
                                            folds this into BENCH_exec.json)
@@ -73,22 +74,43 @@ TUNED CONFIGS (--config):
     additionally prints the predicted accelerator latency for the
     serving shape.
 
-PIPELINE (bench/validate --pipeline on|off, default on):
+PIPELINE (bench/validate --pipeline on|group|off, default on):
     The functional executor overlaps consecutive destination intervals
     (PipelineMode::Interval): while interval i's shards drain through the
     worker pool, interval i+1's DstBuffer state is prepared from a second
     buffer set — the software analogue of the paper's partition-level
     multi-threading (§IV-C), bit-identical to the sequential order.
-    `--pipeline off` forces the strictly sequential reference — the
-    escape hatch for diffing a suspected pipelining issue (`validate
-    --pipeline off` re-runs the oracle check that way). When on, bench
-    also times the off mode at the same worker count; all per-mode
-    numbers land in the `--metrics` registry and the OBSERVABILITY
-    trailers. `repro` figures come from the cycle simulator, whose SLMT
-    timing always models this overlap — there is no executor mode to
-    toggle there. `bench --trace` makes the overlap visible: `prepare`
-    spans sit under `gather_drain` on the main lane while `shard` spans
-    fill the worker lanes.
+    `--pipeline group` stretches the overlap further: a dedicated
+    prepare lane carries the next interval's prologue past the gather
+    drain, across the ApplyPhase and — where the conservative slot-
+    disjointness gate allows — across the group boundary into the next
+    group's prologue. `--pipeline off` forces the strictly sequential
+    reference — the escape hatch for diffing a suspected pipelining
+    issue (`validate --pipeline off` re-runs the oracle check that way).
+    When pipelined, bench also times the off mode at the same worker
+    count; all per-mode numbers land in the `--metrics` registry and the
+    OBSERVABILITY trailers. `repro` figures come from the cycle
+    simulator, whose SLMT timing always models this overlap — there is
+    no executor mode to toggle there. `bench --trace` makes the overlap
+    visible: `prepare` spans sit under `gather_drain` on the main lane
+    (or on their own lane in group mode) while `shard` spans fill the
+    worker lanes.
+
+WORKER POOL + KERNELS (bench --pool-workers / --kernel / --sweep):
+    Shards run on a persistent worker pool: sThreads are spawned once
+    per executor (never per interval), each owning its scratch arenas,
+    with static strided shard→worker affinity (shard k goes to worker
+    k mod W — deterministic placement, so per-worker scratch stays warm
+    across intervals and runs). `--pool-workers W` (alias: `--workers`)
+    sets the pool width; W=1 runs shards inline on the driving thread
+    with no pool at all. `--kernel naive|blocked|simd` picks the compute
+    layer of the timed runs: `blocked` (default) is the cache-blocked
+    kernel tier, `simd` the explicit chunks-of-8 accumulator tier
+    (portable safe code, bit-identical to blocked), `naive` the
+    preserved pre-kernel reference. A simd probe is timed alongside
+    either way (`exec_ms_simd=`). `--sweep` adds a 1/2/4/8-worker
+    scaling ladder at the chosen kernel (`exec_ms_w1..w8=`); every
+    width must reproduce the same bits.
 
 PROFILER (bench --profile):
     Adds a walk-level profile of one shard-parallel run: a table with one
@@ -114,10 +136,15 @@ OBSERVABILITY (--trace F / --metrics F on bench, simulate, validate, serve, tune
                  flat JSON (one \"name\": value per line), or Prometheus
                  text when F ends in `.prom`. Series include the
                  executor probe (exec_ms_single / exec_ms_parallel /
-                 exec_ms_pipeline_off / exec_ms_legacy / exec_workers /
-                 exec_speedup / exec_pipeline_speedup / exec_prepared /
-                 exec_bitmatch / exec_scratch_hits / exec_scratch_misses /
-                 exec_scratch_hit_rate), the simulator (sim_cycles /
+                 exec_ms_simd / exec_ms_pipeline_off / exec_ms_legacy /
+                 exec_ms_w1..w8 under --sweep / exec_workers /
+                 exec_speedup / exec_simd_speedup /
+                 exec_pipeline_speedup / exec_prepared / exec_bitmatch /
+                 exec_scratch_hits / exec_scratch_misses /
+                 exec_scratch_hit_rate / exec_pool_spawned /
+                 exec_pool_batches / exec_pool_shards /
+                 exec_pool_utilization / exec_pool_queue_depth),
+                 the simulator (sim_cycles /
                  sim_latency_s / sim_vu|mu|bw|overall_utilization /
                  sim_traffic_bytes_* per tag), serving latency
                  percentiles (serve_latency_s histogram, serve_p50_s /
@@ -167,7 +194,7 @@ fn main() -> ExitCode {
 const VALUE_OPTS: &[&str] = &[
     "--scale", "--method", "--model", "--model-file", "--sthreads", "--budget", "--objective",
     "--out", "--fig", "--tbl", "--config", "--requests", "--dataset", "--iters", "--workers",
-    "--layers", "--dim", "--pipeline", "--trace", "--metrics",
+    "--pool-workers", "--layers", "--dim", "--kernel", "--pipeline", "--trace", "--metrics",
 ];
 
 /// Positional arguments: whatever is not an option or an option's value.
@@ -274,13 +301,25 @@ fn opt_dims(
     }
 }
 
-/// `--pipeline on|off` for the executor-running subcommands
+/// `--pipeline on|group|off` for the executor-running subcommands
 /// (bench / validate); defaults to the pipelined executor.
 fn opt_pipeline(rest: &[String]) -> Result<PipelineMode, String> {
     match opt_val(rest, "--pipeline").unwrap_or("on") {
         "on" | "interval" => Ok(PipelineMode::Interval),
+        "group" => Ok(PipelineMode::Group),
         "off" => Ok(PipelineMode::Off),
-        other => Err(format!("bad --pipeline value '{other}' (on|off)")),
+        other => Err(format!("bad --pipeline value '{other}' (on|group|off)")),
+    }
+}
+
+/// `bench --kernel naive|blocked|simd`: the compute layer of the timed
+/// runs; defaults to the blocked kernel tier.
+fn opt_kernel(rest: &[String]) -> Result<KernelMode, String> {
+    match opt_val(rest, "--kernel").unwrap_or("blocked") {
+        "blocked" => Ok(KernelMode::Blocked),
+        "simd" => Ok(KernelMode::Simd),
+        "naive" => Ok(KernelMode::Naive),
+        other => Err(format!("bad --kernel value '{other}' (naive|blocked|simd)")),
     }
 }
 
@@ -575,8 +614,15 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     let d = parse_dataset(opt_val(rest, "--dataset").unwrap_or("AK"))?;
     let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
     let iters = opt_u32(rest, "--iters", 3)?.max(1) as usize;
-    let workers = opt_u32(rest, "--workers", 0)? as usize; // 0 = sThread count
+    // `--pool-workers` is the pool-centric spelling of `--workers`
+    // (either sets the persistent pool's width; 0 = sThread count).
+    let workers = match opt_val(rest, "--pool-workers") {
+        Some(_) => opt_u32(rest, "--pool-workers", 0)? as usize,
+        None => opt_u32(rest, "--workers", 0)? as usize,
+    };
     let profile = has_flag(rest, "--profile");
+    let sweep = has_flag(rest, "--sweep");
+    let kernel = opt_kernel(rest)?;
     let pipeline = opt_pipeline(rest)?;
     let dims = opt_dims(rest, &spec, 2, 32)?;
     let ir = spec
@@ -586,10 +632,11 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     eprintln!("generating {} at scale {scale}...", d.full_name());
     let g = d.load(scale);
     let obs = obs_begin(rest);
-    let b = bench_executor(&ir, &g, &accel, workers, iters, profile, pipeline);
+    let b = bench_executor(&ir, &g, &accel, workers, iters, profile, kernel, pipeline, sweep);
     if !b.bit_identical {
         return Err(
-            "executor runs diverged bitwise (single vs parallel vs pipeline-off vs legacy)"
+            "executor runs diverged bitwise (single vs parallel vs simd vs pipeline-off \
+             vs legacy vs sweep)"
                 .into(),
         );
     }
@@ -604,6 +651,7 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     );
     t.row(vec!["vertices".into(), b.vertices.to_string()]);
     t.row(vec!["workers".into(), b.workers.to_string()]);
+    t.row(vec!["kernel".into(), b.kernel.label().into()]);
     t.row(vec![
         "single-worker".into(),
         format!("{:.3} ms/run", b.secs_single * 1e3),
@@ -611,6 +659,10 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     t.row(vec![
         "shard-parallel".into(),
         format!("{:.3} ms/run", b.secs_parallel * 1e3),
+    ]);
+    t.row(vec![
+        "simd kernels".into(),
+        format!("{:.3} ms/run", b.secs_simd * 1e3),
     ]);
     t.row(vec!["pipeline".into(), b.pipeline.label().into()]);
     if let Some(off) = b.secs_pipeline_off {
@@ -651,6 +703,22 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
             b.scratch.misses
         ),
     ]);
+    t.row(vec![
+        "pool".into(),
+        format!(
+            "{} threads spawned, {} batches / {} shards, {:.0}% busy",
+            b.pool.spawned,
+            b.pool.batches,
+            b.pool.shards,
+            b.pool.utilization() * 100.0
+        ),
+    ]);
+    for &(w, s) in &b.sweep {
+        t.row(vec![
+            format!("sweep w={w}"),
+            format!("{:.3} ms/run", s * 1e3),
+        ]);
+    }
     t.print();
     if let Some(p) = &b.profile {
         println!();
@@ -663,9 +731,20 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     b.record_metrics();
     println!("exec_ms_single={:.3}", b.secs_single * 1e3);
     println!("exec_ms_parallel={:.3}", b.secs_parallel * 1e3);
+    println!("exec_ms_simd={:.3}", b.secs_simd * 1e3);
+    println!("exec_simd_speedup={:.3}", b.simd_speedup());
+    println!("exec_kernel={}", b.kernel.label());
     println!("exec_workers={}", b.workers);
     println!("exec_speedup={:.3}", b.speedup());
     println!("exec_bitmatch={}", b.bit_identical);
+    println!("exec_pool_spawned={}", b.pool.spawned);
+    println!("exec_pool_batches={}", b.pool.batches);
+    println!("exec_pool_shards={}", b.pool.shards);
+    println!("exec_pool_utilization={:.4}", b.pool.utilization());
+    println!("exec_pool_queue_depth={:.3}", b.pool.queue_depth());
+    for &(w, s) in &b.sweep {
+        println!("exec_ms_w{w}={:.3}", s * 1e3);
+    }
     println!("exec_scratch_hits={}", b.scratch.hits);
     println!("exec_scratch_misses={}", b.scratch.misses);
     println!("exec_scratch_hit_rate={:.4}", b.scratch.hit_rate());

@@ -208,6 +208,15 @@ fn flush_tls() {
     BUF.with(|b| flush_vec(&mut b.borrow_mut().0));
 }
 
+/// Hand this thread's buffered spans to the open session immediately.
+/// The `TlsBuf` drop flush covers threads that *exit* while a session
+/// is open (PR 5's scoped workers); persistent pool threads never exit
+/// mid-session, so they call this at the end of every batch — before
+/// the driving thread passes the barrier that lets the session end.
+pub fn flush_thread() {
+    flush_tls();
+}
+
 // ---- sessions --------------------------------------------------------------
 
 /// An open recording session (see module docs). End it on the thread

@@ -27,7 +27,9 @@
 //!         scatter_phase(g, i)              # iThread: group.scatter instrs
 //!         for shard s of interval i (ascending global shard index):
 //!             gather_shard(g, i, s)        # sThreads: group.gather instrs
-//!         lookahead_interval(g, i, i+1)    # only when interval i+1 exists
+//!         lookahead_interval(g, i, next)   # next = (g, i+1), or (g+1, 0) at
+//!                                          # g's last interval; skipped only
+//!                                          # at the very end of the walk
 //!         end_gather(g, i)                 # barrier: all shards of i done
 //!         apply_phase(g, i)                # iThread: group.apply instrs
 //!         end_interval(g, i)
@@ -53,12 +55,17 @@
 //! * `lookahead_interval` is the interval-pipelining hook (paper §IV-C:
 //!   consecutive intervals overlap on different hardware resources). It
 //!   fires between the last `gather_shard` of interval *i* and
-//!   `end_gather(i)`, naming interval *i+1* of the same group. It is
-//!   advisory — not a traced step, never reordering the walk — and a
-//!   pipelined backend may use it to prepare the next interval's
-//!   DstBuffer state while the current interval's shards drain (the
-//!   executor's `PipelineMode::Interval` does exactly that, against a
-//!   second buffer set ping-ponged through its scratch pools).
+//!   `end_gather(i)`, naming the *next* interval in walk order: interval
+//!   *i+1* of the same group or — at a group's last interval — interval 0
+//!   of the following group, so a backend whose resources outlive a group
+//!   can also pipeline across the boundary. Only the walk's very last
+//!   interval gets no lookahead. It is advisory — not a traced step,
+//!   never reordering the walk — and a pipelined backend may use it to
+//!   prepare the next interval's DstBuffer state while the current
+//!   interval's shards drain (the executor's `PipelineMode::Interval`
+//!   does exactly that, against a second buffer set ping-ponged through
+//!   its scratch pools; `PipelineMode::Group` additionally takes the
+//!   cross-group notices, gated on its own dependence analysis).
 //!
 //! # Traces
 //!
@@ -133,11 +140,15 @@ pub trait PhaseVisitor {
     /// One shard's GatherPhase (sThreads). `shard_idx` is the global
     /// index into `Partitions::shards`.
     fn gather_shard(&mut self, _cx: &StepCtx, _shard_idx: usize, _shard: &Shard) {}
-    /// Pipelining lookahead: `next` is the following interval of the same
-    /// group (the hook is skipped for the last interval). Fired before
-    /// `end_gather`, so a pipelined backend can overlap next-interval
-    /// preparation with the current interval's gather drain. Advisory —
-    /// it is not a walk step and must not change observable order.
+    /// Pipelining lookahead: `next` is the following interval in walk
+    /// order — interval `i+1` of the same group, or interval 0 of the
+    /// next group at a group's last interval (skipped only at the very
+    /// end of the walk). Fired before `end_gather`, so a pipelined
+    /// backend can overlap next-interval preparation with the current
+    /// interval's gather drain. Advisory — it is not a walk step and must
+    /// not change observable order; backends are expected to apply their
+    /// own safety gates (the executor ignores cross-group notices unless
+    /// its dependence analysis proves them safe).
     fn lookahead_interval(&mut self, _cx: &StepCtx, _next: &StepCtx) {}
     /// All shards of the interval have been offered; gather results may
     /// now be reduced.
@@ -217,6 +228,20 @@ impl<'a> PartitionWalk<'a> {
                         group,
                         interval_idx: ii + 1,
                         interval: next,
+                    };
+                    v.lookahead_interval(&cx, &ncx);
+                } else if let (Some(ngroup), Some(first)) = (
+                    self.program.groups.get(gi + 1),
+                    self.parts.intervals.first(),
+                ) {
+                    // A group's last interval looks across the boundary:
+                    // the next thing the walk runs is interval 0 of the
+                    // following group.
+                    let ncx = StepCtx {
+                        group_idx: gi + 1,
+                        group: ngroup,
+                        interval_idx: 0,
+                        interval: first,
                     };
                     v.lookahead_interval(&cx, &ncx);
                 }
@@ -616,49 +641,76 @@ mod tests {
     #[test]
     fn hooks_fire_in_contract_order() {
         #[derive(Default)]
-        struct Log(Vec<&'static str>);
+        struct Log {
+            hooks: Vec<&'static str>,
+            lookaheads: Vec<(usize, usize)>,
+        }
         impl PhaseVisitor for Log {
             fn begin_group(&mut self, _: &GroupCtx) {
-                self.0.push("bg");
+                self.hooks.push("bg");
             }
             fn end_group(&mut self, _: &GroupCtx) {
-                self.0.push("eg");
+                self.hooks.push("eg");
             }
             fn begin_interval(&mut self, _: &StepCtx) {
-                self.0.push("bi");
+                self.hooks.push("bi");
             }
             fn scatter_phase(&mut self, _: &StepCtx) {
-                self.0.push("s");
+                self.hooks.push("s");
             }
             fn gather_shard(&mut self, _: &StepCtx, _: usize, _: &Shard) {
-                self.0.push("g");
+                self.hooks.push("g");
             }
-            fn lookahead_interval(&mut self, _: &StepCtx, next: &StepCtx) {
-                assert_eq!(next.interval_idx, 1, "lookahead names the next interval");
-                self.0.push("la");
+            fn lookahead_interval(&mut self, cx: &StepCtx, next: &StepCtx) {
+                // The lookahead always names the next interval in walk
+                // order: (g, i+1), or (g+1, 0) across the boundary.
+                if next.group_idx == cx.group_idx {
+                    assert_eq!(next.interval_idx, cx.interval_idx + 1);
+                } else {
+                    assert_eq!(next.group_idx, cx.group_idx + 1);
+                    assert_eq!(next.interval_idx, 0);
+                }
+                self.lookaheads.push((next.group_idx, next.interval_idx));
+                self.hooks.push("la");
             }
             fn end_gather(&mut self, _: &StepCtx) {
-                self.0.push("G");
+                self.hooks.push("G");
             }
             fn apply_phase(&mut self, _: &StepCtx) {
-                self.0.push("a");
+                self.hooks.push("a");
             }
             fn end_interval(&mut self, _: &StepCtx) {
-                self.0.push("ei");
+                self.hooks.push("ei");
             }
         }
         let mut log = Log::default();
         PartitionWalk::new(&toy_program(1), &toy_parts()).drive(&mut log);
-        // The lookahead fires only while a next interval exists (between
-        // the last gather_shard and end_gather of interval 0, never for
-        // the group's final interval).
+        // With a single group the lookahead fires only while a next
+        // interval exists (between the last gather_shard and end_gather
+        // of interval 0, never at the walk's final interval).
         assert_eq!(
-            log.0,
+            log.hooks,
             vec![
                 "bg", "bi", "s", "g", "g", "la", "G", "a", "ei", "bi", "s", "G", "a", "ei",
                 "eg"
             ]
         );
+        assert_eq!(log.lookaheads, vec![(0, 1)]);
+
+        // With two groups the boundary interval also gets a lookahead,
+        // naming interval 0 of the next group; only the very last
+        // interval of the walk goes without one.
+        let mut log = Log::default();
+        PartitionWalk::new(&toy_program(2), &toy_parts()).drive(&mut log);
+        assert_eq!(
+            log.hooks,
+            vec![
+                "bg", "bi", "s", "g", "g", "la", "G", "a", "ei", "bi", "s", "la", "G", "a",
+                "ei", "eg", "bg", "bi", "s", "g", "g", "la", "G", "a", "ei", "bi", "s", "G",
+                "a", "ei", "eg"
+            ]
+        );
+        assert_eq!(log.lookaheads, vec![(0, 1), (1, 0), (1, 1)]);
     }
 
     #[test]

@@ -144,6 +144,34 @@ fn untraced_run_records_nothing() {
 }
 
 #[test]
+fn session_opened_after_pool_creation_sees_worker_lanes() {
+    // The persistent-pool trace-gating fix: workers spawn once, at the
+    // first drain, and must still record spans for sessions opened
+    // *afterwards* — the enable flag is sampled per drain on the driving
+    // thread and handed to the pool with each batch, not captured at
+    // spawn time. An untraced warmup run creates the pool; a session
+    // opened only then must still see shard spans on the worker lanes.
+    let (prog, parts, x, deg) = workload();
+    let mut ex = Executor::new(&prog, &parts)
+        .with_workers(2)
+        .with_pipeline_mode(PipelineMode::Interval);
+    let warm = ex.run(&x, &deg); // pool threads spawn here, untraced
+    let sess = trace::begin();
+    let traced = ex.run(&x, &deg); // same threads, now-open session
+    let tr = sess.end();
+    assert!(warm.bits_eq(&traced), "traced rerun diverged bitwise");
+    let shards = tr.named(names::SHARD);
+    assert!(
+        !shards.is_empty(),
+        "persistent workers recorded no shard spans for a late-opened session"
+    );
+    assert!(
+        shards.iter().all(|s| s.track != trace::TRACK_MAIN),
+        "pooled shard spans must live on worker lanes"
+    );
+}
+
+#[test]
 fn run_profiled_composes_with_an_open_session() {
     // `--profile` under `--trace`: run_profiled borrows the open session
     // (re-entrant begin), folds its profile from a tail slice of the

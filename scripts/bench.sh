@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Perf trajectory seeder: times `repro --fig 7` end-to-end and the
 # functional executor (single-worker vs shard-parallel, interval pipeline
-# on vs off, kernel vs legacy) and writes the results to BENCH_exec.json
-# at the repo root. Re-run before and after a perf-relevant change and
+# on vs off, blocked vs simd vs legacy kernels, plus a 1/2/4/8-worker
+# sweep over the persistent pool) and writes the results to
+# BENCH_exec.json at the repo root. Re-run before and after a perf-relevant change and
 # diff the two files (scripts/bench_diff.sh automates the diff and is
 # what CI's bench-diff gate runs). CI's bench job uploads this file as
 # an artifact (.github/workflows/ci.yml).
@@ -38,9 +39,9 @@ repro_s=$(awk -v a="$t0" -v b="$t1" 'BEGIN { printf "%.3f", b - a }')
 METRICS=$(mktemp "${TMPDIR:-/tmp}/bench_metrics.XXXXXX.json")
 trap 'rm -f "$METRICS"' EXIT
 
-echo "timing executor ($MODEL on $DATASET, $ITERS iters, profiled)..." >&2
+echo "timing executor ($MODEL on $DATASET, $ITERS iters, profiled, worker sweep)..." >&2
 bench_out=$("$BIN" bench --model "$MODEL" --dataset "$DATASET" --scale "$SCALE" \
-  --iters "$ITERS" --profile --metrics "$METRICS")
+  --iters "$ITERS" --profile --sweep --metrics "$METRICS")
 
 # Pull one value out of the flat metrics JSON (one "name": value per line).
 m() { sed -n "s/^ *\"$1\": *\(.*\)$/\1/p" "$METRICS" | head -1 | tr -d ','; }
@@ -62,10 +63,20 @@ cat > "$OUT" <<EOF
   "bench_dataset": "$DATASET",
   "exec_ms_single": $(m exec_ms_single),
   "exec_ms_parallel": $(m exec_ms_parallel),
+  "exec_ms_simd": $(md exec_ms_simd null),
   "exec_ms_pipeline_off": $(md exec_ms_pipeline_off null),
   "exec_ms_legacy": $(md exec_ms_legacy null),
+  "exec_ms_w1": $(md exec_ms_w1 null),
+  "exec_ms_w2": $(md exec_ms_w2 null),
+  "exec_ms_w4": $(md exec_ms_w4 null),
+  "exec_ms_w8": $(md exec_ms_w8 null),
   "exec_workers": $(m exec_workers),
   "exec_speedup": $(m exec_speedup),
+  "exec_simd_speedup": $(md exec_simd_speedup null),
+  "exec_pool_spawned": $(md exec_pool_spawned 0),
+  "exec_pool_batches": $(md exec_pool_batches 0),
+  "exec_pool_utilization": $(md exec_pool_utilization 0),
+  "exec_pool_queue_depth": $(md exec_pool_queue_depth 0),
   "exec_pipeline": "$pipeline",
   "exec_pipeline_speedup": $(md exec_pipeline_speedup null),
   "exec_prepared": $(md exec_prepared 0),

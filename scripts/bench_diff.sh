@@ -9,7 +9,8 @@
 # "name": value pair per line, so the same sed extraction works on both.
 #
 # Gated keys (lower is better): exec_ms_parallel (the headline number),
-# exec_ms_single, exec_ms_pipeline_off, repro_fig7_s. A key missing or
+# exec_ms_single, exec_ms_simd, exec_ms_pipeline_off, the worker-sweep
+# points exec_ms_w1/w2/w4/w8, and repro_fig7_s. A key missing or
 # non-numeric on either side is reported and skipped, never fatal — a
 # raw metrics file has no repro_fig7_s, and an old baseline may predate
 # a key. The gate fails (exit 1) only when a key present on both sides
@@ -40,7 +41,8 @@ is_num() { [[ "$1" =~ ^-?[0-9]+([.][0-9]+)?([eE][+-]?[0-9]+)?$ ]]; }
 
 fail=0
 compared=0
-for key in exec_ms_parallel exec_ms_single exec_ms_pipeline_off repro_fig7_s; do
+for key in exec_ms_parallel exec_ms_single exec_ms_simd exec_ms_pipeline_off \
+           exec_ms_w1 exec_ms_w2 exec_ms_w4 exec_ms_w8 repro_fig7_s; do
   b=$(val "$BASE" "$key")
   c=$(val "$CAND" "$key")
   if ! is_num "${b:-x}" || ! is_num "${c:-x}"; then

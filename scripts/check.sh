@@ -9,6 +9,9 @@
 #   fmt        cargo fmt --check
 #   clippy     cargo clippy --all-targets -- -D warnings
 #   test       tier-1 gate: cargo build --release && cargo test -q
+#   test-simd  SIMD slice: every test with `simd` in its name (kernel
+#              tail shapes + the executor-level Simd differential) — the
+#              second leg of CI's test-job kernel matrix
 #   smoke      zoo smoke: compile + simulate + validate examples/models/*.gnn
 #   profiler   `bench --profile` at tiny scale + its machine-readable trailers
 #   trace      `bench --trace/--metrics` at tiny scale: Chrome-trace JSON
@@ -43,6 +46,15 @@ stage_test() {
   echo "== tier-1: cargo build --release && cargo test -q =="
   cargo build --release
   cargo test -q
+}
+
+# SIMD differential slice: every test whose name mentions `simd` — the
+# chunks-of-8 kernel tail-shape tests and the executor-level
+# Simd-vs-Naive bit-identity differential. Runs as its own CI matrix
+# leg so a SIMD regression is named in the job, not buried in tier-1.
+stage_test_simd() {
+  echo "== simd slice: cargo test -q simd =="
+  cargo test -q simd
 }
 
 # Zoo smoke: every shipped .gnn spec must survive the CLI pipeline —
@@ -140,6 +152,7 @@ run_stage() {
     fmt)        stage_fmt ;;
     clippy)     stage_clippy ;;
     test)       stage_test ;;
+    test-simd)  stage_test_simd ;;
     smoke)      stage_smoke ;;
     profiler)   stage_profiler ;;
     trace)      stage_trace ;;
@@ -157,7 +170,7 @@ run_stage() {
       fi
       ;;
     *)
-      echo "unknown stage '$1' (fmt|clippy|test|smoke|profiler|trace|bench|bench-diff|all)" >&2
+      echo "unknown stage '$1' (fmt|clippy|test|test-simd|smoke|profiler|trace|bench|bench-diff|all)" >&2
       exit 2
       ;;
   esac
