@@ -579,10 +579,7 @@ pub fn bench_executor(
         workers
     };
     let x = crate::exec::weights::init_features(11, g.num_vertices(), ir.input_dim() as usize);
-    let mut deg = Matrix::zeros(g.num_vertices(), 1);
-    for v in 0..g.num_vertices() {
-        deg.set(v, 0, g.in_degree(v as u32) as f32);
-    }
+    let deg = degree_column(g);
     let (secs_single, out_single, _, _, _) =
         timed(&prog, &parts, &x, &deg, 1, iters, kernel, pipeline);
     let (secs_parallel, out_parallel, scratch, prepared_intervals, pool) =
@@ -686,6 +683,49 @@ pub fn bench_executor(
     }
 }
 
+/// The in-degree column every executor run needs alongside the feature
+/// matrix (normalization input of the compiled programs) — one shared
+/// definition for the bench/validate harnesses and the serving engine.
+pub fn degree_column(g: &Csr) -> Matrix {
+    let mut deg = Matrix::zeros(g.num_vertices(), 1);
+    for v in 0..g.num_vertices() {
+        deg.set(v, 0, g.in_degree(v as u32) as f32);
+    }
+    deg
+}
+
+/// One direct, cold executor run of `ir` on `g` with `seed`-derived
+/// features: compile → partition (`method`) → execute, nothing cached,
+/// nothing reused. This is the golden reference the serving engine is
+/// differential-tested against — `serve --verify` and
+/// `tests/integration_serve.rs` pin engine outputs bit-identical to it
+/// (the engine's `submit_seeded` builds the same features from the same
+/// seed). `workers == 0` means the partitioning's sThread count, the
+/// same convention as [`crate::exec::Executor`] and the engine config.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_run(
+    ir: &IrGraph,
+    g: &Csr,
+    accel: &AcceleratorConfig,
+    method: Method,
+    workers: usize,
+    kernel: KernelMode,
+    pipeline: PipelineMode,
+    seed: u64,
+) -> Matrix {
+    let prog = compile(ir);
+    let parts = method.run(g, accel.partition_config(&prog));
+    let x = crate::exec::weights::init_features(seed, g.num_vertices(), ir.input_dim() as usize);
+    let deg = degree_column(g);
+    let mut ex = crate::exec::Executor::new(&prog, &parts)
+        .with_kernel_mode(kernel)
+        .with_pipeline_mode(pipeline);
+    if workers > 0 {
+        ex = ex.with_workers(workers);
+    }
+    ex.run(&x, &deg)
+}
+
 /// Validation harness used by the CLI/examples/tests: compare the
 /// compiled executor against the IR reference on a sampled graph. Works
 /// for any validated `IrGraph`, sized from the IR's own input width —
@@ -710,10 +750,7 @@ pub fn validate_numerics_pipelined(
     let pc = accel.partition_config(&prog);
     let parts = partition_fggp(g, pc);
     let x = crate::exec::weights::init_features(7, g.num_vertices(), ir.input_dim() as usize);
-    let mut deg = Matrix::zeros(g.num_vertices(), 1);
-    for v in 0..g.num_vertices() {
-        deg.set(v, 0, g.in_degree(v as u32) as f32);
-    }
+    let deg = degree_column(g);
     let got = crate::exec::Executor::new(&prog, &parts)
         .with_pipeline_mode(pipeline)
         .run(&x, &deg);

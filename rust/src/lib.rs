@@ -28,7 +28,11 @@
 //! * [`obs`] — observability: the span recorder behind `--trace`
 //!   (Chrome trace-event export, per-worker lanes) and the metrics
 //!   registry behind `--metrics` (JSON / Prometheus exporters, the
-//!   source of `BENCH_exec.json` and the CI perf-regression gate).
+//!   source of `BENCH_exec.json` and the CI perf-regression gate),
+//! * [`serve`] — the persistent inference service: per-(model, graph)
+//!   engine entries owning warm executors, bounded submission queues
+//!   with micro-batching + admission control, and the `serve --bench`
+//!   load generator behind `BENCH_serve.json`.
 
 pub mod coordinator;
 pub mod dse;
@@ -43,5 +47,6 @@ pub mod compiler;
 pub mod partition;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod util;

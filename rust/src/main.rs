@@ -46,10 +46,14 @@ COMMANDS:
                                            (budget 0 = exhaustive; default 64)
     repro     [--fig 7|8|9|10|11|12|13] [--tbl 4|5] [--all] [--scale N] [--out DIR]
               [--config FILE]              regenerate the paper's figures/tables
-    serve     [--model M] [--requests R] [--config FILE] [--trace F] [--metrics F]
-                                           PJRT serving demo over AOT artifacts
-                                           (requests >= 1; artifacts exist for the
-                                           four paper models only)
+    serve     [MODELS...] [--model M[,M,...]] [--model-file PATH] [--dataset D]
+              [--scale N] [--requests R] [--verify] [--queue-depth N] [--batch N]
+              [--pool-workers W] [--kernel K] [--pipeline P] [--layers N] [--dim D]
+              [--config FILE] [--backend native|pjrt]
+              [--bench [--qps N] [--duration S] [--out F]]
+              [--trace F] [--metrics F]    persistent inference engine over the
+                                           native executor; any zoo/spec model is
+                                           servable (see SERVING)
     validate  [--scale N] [--layers N] [--dim D] [--model M] [--pipeline on|group|off]
               [--trace F] [--metrics F]    executor-vs-oracle numerics check over the
                                            zoo (or one model / spec file)
@@ -71,8 +75,42 @@ TUNED CONFIGS (--config):
     artifact written by `switchblade tune`; its latency-champion row
     replaces the hard-coded Tbl III accelerator. `repro --config`
     re-renders every figure on the tuned hardware; `serve --config`
-    additionally prints the predicted accelerator latency for the
-    serving shape.
+    builds every engine entry's partitioning on the tuned
+    (accelerator, method) point (and, under `--backend pjrt`, prints
+    the predicted accelerator latency for the serving shape).
+
+SERVING (serve):
+    `serve` runs a persistent inference engine over the native
+    executor. Each registered (model, graph) entry owns its compiled
+    Program, partitions, and one warm executor — persistent worker
+    pool + scratch arenas reused across requests — on a dedicated
+    thread, so compile/partition/warm-up are paid once per entry, not
+    per request. Register several models at once (positionals, a
+    comma-separated `--model` list, and/or `--model-file`); entries
+    micro-batch independently and drain concurrently. Requests flow
+    through a bounded submission queue (`--queue-depth`, default 64)
+    with micro-batching (`--batch`, default 8: one wakeup serves the
+    whole queued burst up to the cap, no batching timer). A full queue
+    rejects new work with a typed error — admission control, never
+    unbounded latency — and a request producing non-finite output
+    fails alone (counted in `serve_errors`); the engine keeps serving.
+    `--verify` first pins every entry bit-identical to a direct
+    (cold) executor run of the same seed, then prints
+    `serve_verified=ok`. `--backend pjrt` instead serves the four
+    paper models' AOT artifacts through the PJRT runtime (requires
+    the `pjrt` feature + `make artifacts`); spec-defined models have
+    no artifacts and are exactly what the native engine is for.
+
+    `serve --bench` runs the load generator and writes BENCH_serve.json
+    (`--out`, default BENCH_serve.json): flat JSON with serve_qps,
+    serve_p50_ms / serve_p95_ms / serve_p99_ms / serve_mean_ms,
+    serve_requests / serve_rejected / serve_errors, serve_wall_s and
+    serve_mode. Closed loop by default (`--requests N` back to back
+    over a small in-flight window); `--qps N --duration S` switches to
+    open loop: fixed-rate arrivals, sojourn-time percentiles, and
+    rejections counted when the engine can't keep up.
+    scripts/bench.sh folds the artifact beside BENCH_exec.json and
+    scripts/bench_diff.sh gates its p50/p99 keys in CI.
 
 PIPELINE (bench/validate --pipeline on|group|off, default on):
     The functional executor overlaps consecutive destination intervals
@@ -146,9 +184,12 @@ OBSERVABILITY (--trace F / --metrics F on bench, simulate, validate, serve, tune
                  exec_pool_utilization / exec_pool_queue_depth),
                  the simulator (sim_cycles /
                  sim_latency_s / sim_vu|mu|bw|overall_utilization /
-                 sim_traffic_bytes_* per tag), serving latency
-                 percentiles (serve_latency_s histogram, serve_p50_s /
-                 serve_p99_s), validation deltas
+                 sim_traffic_bytes_* per tag), the serving engine
+                 (serve_requests / serve_batches / serve_rejected /
+                 serve_errors counters, serve_latency_s / serve_wait_s /
+                 serve_batch_size / serve_warm_s histograms, serve_qps +
+                 serve_p50_ms/p95/p99 gauges; `serve --trace` adds
+                 request/batch spans on per-entry lanes), validation deltas
                  (validate_max_abs_diff_*), and DSE cache accounting
                  (dse_cache_{graphs,programs,partitions}_*).
     The same `exec_*` names are also printed as `key=value` stdout
@@ -195,6 +236,7 @@ const VALUE_OPTS: &[&str] = &[
     "--scale", "--method", "--model", "--model-file", "--sthreads", "--budget", "--objective",
     "--out", "--fig", "--tbl", "--config", "--requests", "--dataset", "--iters", "--workers",
     "--pool-workers", "--layers", "--dim", "--kernel", "--pipeline", "--trace", "--metrics",
+    "--backend", "--queue-depth", "--batch", "--qps", "--duration",
 ];
 
 /// Positional arguments: whatever is not an option or an option's value.
@@ -223,6 +265,13 @@ fn opt_val<'a>(rest: &'a [String], name: &str) -> Option<&'a str> {
 }
 
 fn opt_u32(rest: &[String], name: &str, default: u32) -> Result<u32, String> {
+    match opt_val(rest, name) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| format!("bad {name} value '{v}'")),
+    }
+}
+
+fn opt_f64(rest: &[String], name: &str, default: f64) -> Result<f64, String> {
     match opt_val(rest, name) {
         None => Ok(default),
         Some(v) => v.parse().map_err(|_| format!("bad {name} value '{v}'")),
@@ -767,16 +816,208 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
 }
 
 fn cmd_serve(rest: &[String]) -> Result<(), String> {
+    match opt_val(rest, "--backend").unwrap_or("native") {
+        "native" => cmd_serve_native(rest),
+        "pjrt" => cmd_serve_pjrt(rest),
+        other => Err(format!("bad --backend value '{other}' (native|pjrt)")),
+    }
+}
+
+/// The default serving path: the persistent native engine
+/// (`switchblade::serve`). Any zoo or `--model-file` spec is servable
+/// — the old hard requirement for AOT artifacts now applies only to
+/// `--backend pjrt`.
+fn cmd_serve_native(rest: &[String]) -> Result<(), String> {
+    use switchblade::serve::{run_bench, BenchOptions, Engine, EngineConfig, EntryId};
+
+    // Models: positionals + a comma-separated `--model` list +
+    // `--model-file`; default GCN. Duplicate entries collapse in the
+    // engine (same model, dims, graph → same entry).
+    let mut specs: Vec<Arc<ModelSpec>> = Vec::new();
+    for name in positionals(rest) {
+        specs.push(ModelZoo::builtin().resolve(name)?);
+    }
+    if let Some(names) = opt_val(rest, "--model") {
+        for name in names.split(',').filter(|s| !s.is_empty()) {
+            specs.push(ModelZoo::builtin().resolve(name)?);
+        }
+    }
+    if let Some(p) = opt_val(rest, "--model-file") {
+        specs.push(
+            ModelSpec::from_file(std::path::Path::new(p))
+                .map(Arc::new)
+                .map_err(|e| e.to_string())?,
+        );
+    }
+    if specs.is_empty() {
+        specs.push(ModelZoo::builtin().resolve("gcn")?);
+    }
+
+    let d = parse_dataset(opt_val(rest, "--dataset").unwrap_or("AK"))?;
+    let scale = opt_u32(rest, "--scale", DEFAULT_SCALE)?;
+    let requests = opt_u32(rest, "--requests", 32)? as usize;
+    let qps = opt_f64(rest, "--qps", 0.0)?;
+    let duration = opt_f64(rest, "--duration", 2.0)?;
+    if requests == 0 && qps <= 0.0 {
+        return Err("serve needs --requests >= 1 (latency percentiles are undefined \
+                    over an empty run)"
+            .into());
+    }
+    let cfg = EngineConfig {
+        queue_depth: opt_u32(rest, "--queue-depth", 64)? as usize,
+        batch_max: opt_u32(rest, "--batch", 8)? as usize,
+        workers: opt_u32(rest, "--pool-workers", opt_u32(rest, "--workers", 0)?)? as usize,
+        kernel: opt_kernel(rest)?,
+        pipeline: opt_pipeline(rest)?,
+        ..EngineConfig::default()
+    };
+    let cfg = if let Some(dp) = opt_design(rest)? {
+        eprintln!("tuned engine config: {}", dp.label());
+        EngineConfig {
+            accel: dp.accel(),
+            method: dp.method,
+            ..cfg
+        }
+    } else {
+        cfg
+    };
+
+    let obs = obs_begin(rest);
+    eprintln!("generating {} at scale {scale}...", d.full_name());
+    let g = switchblade::coordinator::GraphCache::new(scale).get(d);
+    let mut engine = Engine::new(cfg);
+    let mut ids = Vec::new();
+    for spec in &specs {
+        let dims = opt_dims(rest, spec, 2, 32)?;
+        let id = engine.register(spec, dims, g.clone())?;
+        eprintln!("registered {}", engine.info(id).label);
+        ids.push(id);
+    }
+
+    // Differential pin: every entry must reproduce a direct (cold)
+    // executor run of the same seed bit for bit before anything is
+    // timed — the engine's warm reuse must not change a single bit.
+    let mut verified = false;
+    if has_flag(rest, "--verify") {
+        const VERIFY_SEED: u64 = 1;
+        for (spec, id) in specs.iter().zip(&ids) {
+            let dims = opt_dims(rest, spec, 2, 32)?;
+            let ir = spec.build(dims).map_err(|e| format!("{}: {e}", spec.name()))?;
+            let want = switchblade::coordinator::reference_run(
+                &ir,
+                &g,
+                &cfg.accel,
+                cfg.method,
+                cfg.workers,
+                cfg.kernel,
+                cfg.pipeline,
+                VERIFY_SEED,
+            );
+            let got = engine
+                .submit_seeded(*id, VERIFY_SEED)
+                .map_err(|e| e.to_string())?
+                .wait()
+                .map_err(|e| e.to_string())?;
+            if !got.out.bits_eq(&want) {
+                return Err(format!(
+                    "{}: engine output diverged from the direct executor run \
+                     (max |delta| {:.2e})",
+                    engine.info(*id).label,
+                    got.out.max_abs_diff(&want)
+                ));
+            }
+            eprintln!(
+                "verified {}: bit-identical to a direct executor run",
+                engine.info(*id).label
+            );
+        }
+        verified = true;
+    }
+
+    let report = run_bench(
+        &engine,
+        &ids,
+        &BenchOptions {
+            qps,
+            duration_s: duration,
+            requests,
+            ..BenchOptions::default()
+        },
+    );
+
+    // Per-entry engine health: each stats probe round-trips through its
+    // entry's queue, so it reflects everything the run admitted.
+    let mut t = Table::new(
+        &format!("serve [native] {} scale {scale}", d.full_name()),
+        &["entry", "requests", "batches", "max", "warm ms", "scratch hit%", "pool"],
+    );
+    let mut seen: Vec<EntryId> = Vec::new();
+    for id in &ids {
+        if seen.contains(id) {
+            continue;
+        }
+        seen.push(*id);
+        let st = engine.stats(*id).map_err(|e| e.to_string())?;
+        t.row(vec![
+            engine.info(*id).label.clone(),
+            st.requests.to_string(),
+            st.batches.to_string(),
+            st.max_batch.to_string(),
+            ff(st.warm_s * 1e3, 1),
+            ff(st.scratch.hit_rate() * 100.0, 1),
+            format!("{}w/{}sp", st.pool.workers, st.pool.spawned),
+        ]);
+    }
+    t.print();
+    report.table("latency / throughput").print();
+    report.record_metrics();
+
+    // Greppable trailers (check.sh's serve smoke stage pins these).
+    println!("serve_backend=native");
+    println!("serve_entries={}", engine.num_entries());
+    println!("serve_requests={}", report.completed);
+    println!("serve_rejected={}", report.rejected);
+    println!("serve_errors={}", report.errors);
+    println!("serve_qps={:.1}", report.qps());
+    println!("serve_p50_ms={:.3}", report.p50() * 1e3);
+    println!("serve_p95_ms={:.3}", report.p95() * 1e3);
+    println!("serve_p99_ms={:.3}", report.p99() * 1e3);
+    if verified {
+        println!("serve_verified=ok");
+    }
+
+    if has_flag(rest, "--bench") {
+        let out = PathBuf::from(opt_val(rest, "--out").unwrap_or("BENCH_serve.json"));
+        if let Some(dir) = out.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| format!("creating {}: {e}", dir.display()))?;
+            }
+        }
+        std::fs::write(&out, report.to_json())
+            .map_err(|e| format!("writing {}: {e}", out.display()))?;
+        eprintln!("wrote {}", out.display());
+    }
+
+    // Join the entry threads before the trace session ends, so their
+    // final spans are flushed into the export.
+    drop(engine);
+    obs.finish()
+}
+
+/// `--backend pjrt`: the original AOT-artifact serving demo over the
+/// PJRT runtime, kept for the four paper models that have baked
+/// artifacts.
+fn cmd_serve_pjrt(rest: &[String]) -> Result<(), String> {
     let spec = resolve_model(rest, Some(opt_val(rest, "--model").unwrap_or("gcn")), "serve")?;
-    // Serving runs AOT-compiled PJRT artifacts, which the Python side
-    // bakes for the four paper models only — fail fast with a clear
-    // message instead of a downstream load error (see ROADMAP: AOT for
-    // spec-defined models is an open item).
+    // The Python side bakes artifacts for the paper four only — anything
+    // else is exactly what the native engine (the default backend)
+    // serves, so point there instead of failing on a downstream load.
     if switchblade::ir::models::Model::parse(spec.name()).is_none() {
         return Err(format!(
-            "serve requires an AOT-compiled artifact model (GCN|GAT|SAGE|GGNN); \
-             '{}' has no artifacts — spec-defined models run via \
-             compile/simulate/validate/bench/tune instead",
+            "--backend pjrt requires an AOT-compiled artifact model (GCN|GAT|SAGE|GGNN); \
+             '{}' has no artifacts — drop `--backend pjrt` to serve it through the \
+             persistent native engine",
             spec.display()
         ));
     }
@@ -818,6 +1059,7 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
     // Serve `requests` random graphs at the artifact shape, executing the
     // AOT-compiled model on the PJRT CPU client. Python is NOT involved.
     let mut lat = Vec::with_capacity(requests);
+    let mut errors = 0u64;
     let t_all = std::time::Instant::now();
     for r in 0..requests {
         let el = switchblade::graph::generators::rmat(
@@ -853,10 +1095,21 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         };
         let dt = t0.elapsed();
         metrics::observe("serve_latency_s", dt.as_secs_f64());
-        lat.push(dt);
-        assert!(out.data.iter().all(|v| v.is_finite()));
+        // Per-request typed failure instead of the old server-wide
+        // assert: one poisoned request is counted, not fatal.
+        if out.data.iter().all(|v| v.is_finite()) {
+            lat.push(dt);
+        } else {
+            errors += 1;
+            metrics::counter("serve_errors", 1);
+            eprintln!("request {r}: non-finite output — dropped from the latency tally");
+        }
     }
     let total = t_all.elapsed();
+    if lat.is_empty() {
+        return Err(format!("all {requests} requests produced non-finite outputs"));
+    }
+    let n = lat.len();
     lat.sort();
     let mut t = Table::new(
         &format!(
@@ -865,26 +1118,28 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         ),
         &["metric", "value"],
     );
-    t.row(vec!["p50 latency".into(), format!("{:?}", lat[requests / 2])]);
+    t.row(vec!["completed".into(), n.to_string()]);
+    t.row(vec!["errors".into(), errors.to_string()]);
+    t.row(vec!["p50 latency".into(), format!("{:?}", lat[n / 2])]);
     t.row(vec![
         "p99 latency".into(),
-        format!("{:?}", lat[(requests * 99 / 100).min(requests - 1)]),
+        format!("{:?}", lat[(n * 99 / 100).min(n - 1)]),
     ]);
     t.row(vec![
         "throughput".into(),
-        format!("{:.1} req/s", requests as f64 / total.as_secs_f64()),
+        format!("{:.1} req/s", n as f64 / total.as_secs_f64()),
     ]);
     t.print();
-    metrics::gauge("serve_p50_s", lat[requests / 2].as_secs_f64());
+    metrics::gauge("serve_p50_s", lat[n / 2].as_secs_f64());
     metrics::gauge(
         "serve_p99_s",
-        lat[(requests * 99 / 100).min(requests - 1)].as_secs_f64(),
+        lat[(n * 99 / 100).min(n - 1)].as_secs_f64(),
     );
-    metrics::gauge(
-        "serve_requests_per_sec",
-        requests as f64 / total.as_secs_f64(),
-    );
-    metrics::counter_abs("serve_requests", requests as u64);
+    metrics::gauge("serve_requests_per_sec", n as f64 / total.as_secs_f64());
+    metrics::counter_abs("serve_requests", n as u64);
+    println!("serve_backend=pjrt");
+    println!("serve_requests={n}");
+    println!("serve_errors={errors}");
     obs.finish()
 }
 

@@ -54,6 +54,16 @@ pub fn worker_track(w: usize) -> u32 {
     1 + w as u32
 }
 
+/// First track reserved for serving-engine entry lanes. High enough
+/// that no realistic pool width collides with [`worker_track`].
+pub const SERVE_TRACK_BASE: u32 = 900;
+
+/// Track of serving-engine entry `i` (one lane per registered model, so
+/// Chrome traces show concurrent entries' request overlap side by side).
+pub fn serve_track(entry: usize) -> u32 {
+    SERVE_TRACK_BASE + entry as u32
+}
+
 /// Canonical span names. Walk-level names (category [`cat::WALK`]) are
 /// what [`crate::sched::PhaseProfile::from_spans`] folds into the
 /// per-(group, phase) profile — keep them in sync with it.
@@ -80,8 +90,12 @@ pub mod names {
     pub const PARTITION_FGGP: &str = "partition_fggp";
     /// DSW partitioning.
     pub const PARTITION_DSW: &str = "partition_dsw";
-    /// One end-to-end serving request (PJRT execute).
+    /// One end-to-end serving request (engine entry lane; `interval`
+    /// carries the request's sequence number).
     pub const REQUEST: &str = "request";
+    /// One serving micro-batch (engine entry lane; `shard` carries the
+    /// batch size) — request spans nest under it.
+    pub const BATCH: &str = "batch";
 }
 
 /// Span categories (Chrome `cat`, filterable in the viewer).
@@ -93,6 +107,8 @@ pub mod cat {
     pub const EXEC: &str = "exec";
     /// Frontend spans (compile, partition).
     pub const FRONTEND: &str = "frontend";
+    /// Serving-engine spans (request, batch) on per-entry lanes.
+    pub const SERVE: &str = "serve";
 }
 
 /// One recorded span. `group` / `interval` / `shard` are `-1` when the
@@ -453,6 +469,8 @@ impl Trace {
         for t in &tracks {
             let lane = if *t == TRACK_MAIN {
                 "main/prepare".to_string()
+            } else if *t >= SERVE_TRACK_BASE {
+                format!("serve entry {}", t - SERVE_TRACK_BASE)
             } else {
                 format!("worker {}", t - 1)
             };
@@ -523,6 +541,21 @@ mod tests {
         });
         assert_eq!(recorded_total() - before, 0);
         assert!(sess.end().spans.is_empty());
+    }
+
+    #[test]
+    fn serve_lanes_export_with_their_own_names() {
+        let sess = begin();
+        {
+            let _m = span(names::COMPILE, cat::FRONTEND, TRACK_MAIN);
+            let _b = span_if(true, names::BATCH, cat::SERVE, serve_track(0), -1, 0, 3);
+            let _r = span_if(true, names::REQUEST, cat::SERVE, serve_track(1), -1, 5, -1);
+        }
+        let json = sess.end().to_chrome_json();
+        assert!(json.contains("\"serve entry 0\""), "{json}");
+        assert!(json.contains("\"serve entry 1\""), "{json}");
+        assert!(json.contains("\"main/prepare\""), "{json}");
+        assert!(!json.contains("\"worker 899\""), "{json}");
     }
 
     #[test]

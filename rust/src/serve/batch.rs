@@ -1,0 +1,84 @@
+//! Micro-batch assembly: block for the first job, then greedily drain
+//! whatever else is already queued, up to a cap.
+//!
+//! This is the serving engine's batching policy in one function. It adds
+//! no artificial delay (no batching timer): a lone request is served
+//! immediately, while a burst that queued up behind a slow request is
+//! lifted out in one `recv` wakeup and amortizes the per-wakeup
+//! bookkeeping across the whole batch. FIFO order is preserved — the
+//! channel is the queue.
+
+use std::sync::mpsc::Receiver;
+
+/// Pull the next micro-batch from `rx`: block for the first item, then
+/// drain without blocking until the batch holds `max` items (clamped to
+/// >= 1) or the queue is momentarily empty. Returns `None` only when
+/// every sender is gone *and* the queue is drained — the entry thread's
+/// shutdown signal.
+pub fn next_batch<T>(rx: &Receiver<T>, max: usize) -> Option<Vec<T>> {
+    let max = max.max(1);
+    let first = rx.recv().ok()?;
+    let mut batch = Vec::with_capacity(max.min(8));
+    batch.push(first);
+    while batch.len() < max {
+        match rx.try_recv() {
+            Ok(item) => batch.push(item),
+            // Empty or Disconnected: serve what we have; a final
+            // Disconnected with residue is caught by the next call.
+            Err(_) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    #[test]
+    fn drains_queued_burst_in_fifo_order() {
+        let (tx, rx) = sync_channel(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let b = next_batch(&rx, 8).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn respects_the_batch_cap() {
+        let (tx, rx) = sync_channel(8);
+        for i in 0..6 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(next_batch(&rx, 4).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(next_batch(&rx, 4).unwrap(), vec![4, 5]);
+    }
+
+    #[test]
+    fn lone_request_is_served_without_waiting_for_more() {
+        let (tx, rx) = sync_channel(8);
+        tx.send(42).unwrap();
+        assert_eq!(next_batch(&rx, 8).unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn cap_zero_clamps_to_one() {
+        let (tx, rx) = sync_channel(8);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(next_batch(&rx, 0).unwrap(), vec![1]);
+        assert_eq!(next_batch(&rx, 0).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn residue_after_sender_drop_is_still_served_then_none() {
+        let (tx, rx) = sync_channel(8);
+        tx.send(9).unwrap();
+        tx.send(10).unwrap();
+        drop(tx);
+        assert_eq!(next_batch(&rx, 8).unwrap(), vec![9, 10]);
+        assert!(next_batch(&rx, 8).is_none());
+    }
+}

@@ -1,0 +1,322 @@
+//! Load generator for the serving engine: closed loop (a bounded
+//! in-flight window driven as fast as completions allow — the
+//! steady-state throughput probe) or open loop (fixed-rate arrivals at a
+//! target QPS regardless of completions — the latency-under-load probe,
+//! where admission-control rejections appear when the engine can't keep
+//! up). Latencies are sojourn times (queue wait + execution) measured
+//! engine-side from submission, and percentiles are computed exactly
+//! from the collected samples — not from the log-bucketed registry
+//! histograms. The report lands in `BENCH_serve.json` beside the exec
+//! trajectory and its `serve_p50_ms`/`serve_p99_ms` keys are gated by
+//! `scripts/bench_diff.sh`.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::obs::metrics;
+use crate::util::report::Table;
+
+use super::engine::{Engine, EntryId, ServeError, Ticket};
+
+/// Load-generator knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOptions {
+    /// Open-loop offered rate; 0 = closed loop.
+    pub qps: f64,
+    /// Open-loop duration, seconds.
+    pub duration_s: f64,
+    /// Closed-loop request count.
+    pub requests: usize,
+    /// Closed-loop in-flight window (keep it <= the engine's queue
+    /// depth or the closed loop will trip its own admission control).
+    pub window: usize,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions {
+            qps: 0.0,
+            duration_s: 2.0,
+            requests: 64,
+            window: 4,
+        }
+    }
+}
+
+/// What a load-generator run measured.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// `"closed"` or `"open"`.
+    pub mode: &'static str,
+    /// Open-loop target rate (0 for closed loop).
+    pub offered_qps: f64,
+    /// Wall time of the whole run including the drain, seconds.
+    pub wall_s: f64,
+    /// Requests that completed successfully.
+    pub completed: u64,
+    /// Submissions rejected by admission control.
+    pub rejected: u64,
+    /// Requests that failed with a typed per-request error.
+    pub errors: u64,
+    /// Sojourn times (queue wait + execution), seconds, sorted.
+    lat: Vec<f64>,
+}
+
+impl BenchReport {
+    pub(crate) fn from_parts(
+        mode: &'static str,
+        offered_qps: f64,
+        wall_s: f64,
+        mut lat: Vec<f64>,
+        rejected: u64,
+        errors: u64,
+    ) -> Self {
+        lat.sort_by(|a, b| a.total_cmp(b));
+        BenchReport {
+            mode,
+            offered_qps,
+            wall_s,
+            completed: lat.len() as u64,
+            rejected,
+            errors,
+            lat,
+        }
+    }
+
+    /// Achieved throughput, completed requests per second.
+    pub fn qps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.completed as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Exact (nearest-rank) latency percentile, `q` in [0, 1]; 0 when
+    /// nothing completed.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.lat.is_empty() {
+            return 0.0;
+        }
+        let idx = ((self.lat.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        self.lat[idx.min(self.lat.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.lat.is_empty() {
+            0.0
+        } else {
+            self.lat.iter().sum::<f64>() / self.lat.len() as f64
+        }
+    }
+
+    /// Publish the report into the process metrics registry (exported
+    /// by `--metrics`). The `serve_p50_s`/`serve_p99_s`/
+    /// `serve_requests_per_sec` names predate the engine and are kept.
+    pub fn record_metrics(&self) {
+        metrics::gauge("serve_qps", self.qps());
+        metrics::gauge("serve_p50_ms", self.p50() * 1e3);
+        metrics::gauge("serve_p95_ms", self.p95() * 1e3);
+        metrics::gauge("serve_p99_ms", self.p99() * 1e3);
+        metrics::gauge("serve_mean_ms", self.mean() * 1e3);
+        metrics::gauge("serve_p50_s", self.p50());
+        metrics::gauge("serve_p99_s", self.p99());
+        metrics::gauge("serve_requests_per_sec", self.qps());
+    }
+
+    /// `BENCH_serve.json`: flat JSON, one `"name": value` per line —
+    /// the same sed-greppable shape as BENCH_exec.json, so
+    /// `scripts/bench_diff.sh` extracts keys from either unchanged.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"serve_mode\": \"{}\",\n  \"serve_offered_qps\": {:.3},\n  \
+             \"serve_wall_s\": {:.6},\n  \"serve_requests\": {},\n  \
+             \"serve_rejected\": {},\n  \"serve_errors\": {},\n  \
+             \"serve_qps\": {:.3},\n  \"serve_mean_ms\": {:.6},\n  \
+             \"serve_p50_ms\": {:.6},\n  \"serve_p95_ms\": {:.6},\n  \
+             \"serve_p99_ms\": {:.6}\n}}\n",
+            self.mode,
+            self.offered_qps,
+            self.wall_s,
+            self.completed,
+            self.rejected,
+            self.errors,
+            self.qps(),
+            self.mean() * 1e3,
+            self.p50() * 1e3,
+            self.p95() * 1e3,
+            self.p99() * 1e3,
+        )
+    }
+
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["metric", "value"]);
+        t.row(vec!["loop".into(), self.mode.into()]);
+        if self.offered_qps > 0.0 {
+            t.row(vec!["offered qps".into(), format!("{:.1}", self.offered_qps)]);
+        }
+        t.row(vec!["completed".into(), self.completed.to_string()]);
+        t.row(vec!["rejected".into(), self.rejected.to_string()]);
+        t.row(vec!["errors".into(), self.errors.to_string()]);
+        t.row(vec!["throughput".into(), format!("{:.1} req/s", self.qps())]);
+        t.row(vec!["p50 latency".into(), format!("{:.3} ms", self.p50() * 1e3)]);
+        t.row(vec!["p95 latency".into(), format!("{:.3} ms", self.p95() * 1e3)]);
+        t.row(vec!["p99 latency".into(), format!("{:.3} ms", self.p99() * 1e3)]);
+        t.row(vec!["mean latency".into(), format!("{:.3} ms", self.mean() * 1e3)]);
+        t
+    }
+}
+
+fn settle(t: Ticket, lat: &mut Vec<f64>, errors: &mut u64) {
+    match t.wait() {
+        Ok(r) => lat.push(r.wait_s + r.exec_s),
+        Err(_) => *errors += 1,
+    }
+}
+
+/// Drive the engine with the configured load, round-robining requests
+/// across `ids` (each request's features are seeded by its index, so a
+/// run is reproducible end to end).
+pub fn run_bench(engine: &Engine, ids: &[EntryId], opts: &BenchOptions) -> BenchReport {
+    assert!(!ids.is_empty(), "run_bench needs at least one registered entry");
+    if opts.qps > 0.0 {
+        open_loop(engine, ids, opts)
+    } else {
+        closed_loop(engine, ids, opts)
+    }
+}
+
+fn closed_loop(engine: &Engine, ids: &[EntryId], opts: &BenchOptions) -> BenchReport {
+    let requests = opts.requests.max(1);
+    let window = opts.window.max(1);
+    let mut lat = Vec::with_capacity(requests);
+    let (mut rejected, mut errors) = (0u64, 0u64);
+    let mut inflight: VecDeque<Ticket> = VecDeque::with_capacity(window);
+    let t0 = Instant::now();
+    for r in 0..requests {
+        match engine.submit_seeded(ids[r % ids.len()], r as u64) {
+            Ok(t) => {
+                inflight.push_back(t);
+                if inflight.len() >= window {
+                    let t = inflight.pop_front().expect("window bound just checked");
+                    settle(t, &mut lat, &mut errors);
+                }
+            }
+            Err(ServeError::Rejected { .. }) => rejected += 1,
+            Err(_) => errors += 1,
+        }
+    }
+    while let Some(t) = inflight.pop_front() {
+        settle(t, &mut lat, &mut errors);
+    }
+    BenchReport::from_parts("closed", 0.0, t0.elapsed().as_secs_f64(), lat, rejected, errors)
+}
+
+fn open_loop(engine: &Engine, ids: &[EntryId], opts: &BenchOptions) -> BenchReport {
+    let interval = Duration::from_secs_f64(1.0 / opts.qps);
+    let deadline = Duration::from_secs_f64(opts.duration_s.max(1e-3));
+    let mut tickets = Vec::new();
+    let mut lat = Vec::new();
+    let (mut rejected, mut errors) = (0u64, 0u64);
+    let t0 = Instant::now();
+    let mut r: u32 = 0;
+    loop {
+        // Arrival schedule is absolute (r * interval from t0), so a slow
+        // submission doesn't shift every later arrival.
+        let target = interval * r;
+        if target >= deadline {
+            break;
+        }
+        let now = t0.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        match engine.submit_seeded(ids[r as usize % ids.len()], r as u64) {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::Rejected { .. }) => rejected += 1,
+            Err(_) => errors += 1,
+        }
+        r += 1;
+    }
+    for t in tickets {
+        settle(t, &mut lat, &mut errors);
+    }
+    BenchReport::from_parts(
+        "open",
+        opts.qps,
+        t0.elapsed().as_secs_f64(),
+        lat,
+        rejected,
+        errors,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(lat: Vec<f64>) -> BenchReport {
+        BenchReport::from_parts("closed", 0.0, 1.0, lat, 2, 1)
+    }
+
+    #[test]
+    fn percentiles_are_exact_over_the_samples() {
+        let r = report((1..=100).map(|i| i as f64).collect());
+        assert_eq!(r.p50(), 50.0);
+        assert_eq!(r.p95(), 95.0);
+        assert_eq!(r.p99(), 99.0);
+        assert_eq!(r.percentile(0.0), 1.0);
+        assert_eq!(r.percentile(1.0), 100.0);
+        assert_eq!(r.completed, 100);
+        assert_eq!(r.qps(), 100.0);
+    }
+
+    #[test]
+    fn from_parts_sorts_unordered_latencies() {
+        let r = report(vec![3.0, 1.0, 2.0]);
+        assert_eq!(r.percentile(0.0), 1.0);
+        assert_eq!(r.percentile(1.0), 3.0);
+        assert!((r.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_run_reports_zeroes_not_panics() {
+        let r = report(Vec::new());
+        assert_eq!(r.p50(), 0.0);
+        assert_eq!(r.p99(), 0.0);
+        assert_eq!(r.mean(), 0.0);
+        assert_eq!(r.qps(), 0.0);
+    }
+
+    #[test]
+    fn json_is_flat_and_carries_the_gated_keys() {
+        let j = report(vec![0.001, 0.002, 0.003]).to_json();
+        for key in [
+            "\"serve_qps\":",
+            "\"serve_p50_ms\":",
+            "\"serve_p95_ms\":",
+            "\"serve_p99_ms\":",
+            "\"serve_requests\":",
+            "\"serve_rejected\": 2",
+            "\"serve_errors\": 1",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        // One "name": value per line — the bench_diff.sh contract.
+        for line in j.lines().filter(|l| l.contains(':')) {
+            assert_eq!(line.matches(':').count(), 1, "not flat: {line}");
+        }
+    }
+}

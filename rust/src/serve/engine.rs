@@ -1,0 +1,575 @@
+//! The persistent inference engine.
+//!
+//! ## Why an entry is a thread
+//!
+//! `exec::Executor<'a>` borrows its `Program` and `Partitions`, so a
+//! long-lived engine cannot park warm executors in a struct field
+//! without self-referential borrows. Instead, every registered
+//! (model, graph) entry gets a dedicated OS thread that owns the whole
+//! chain on its stack — built `IrGraph` → compiled `Program` →
+//! `Partitions` → one warm `Executor` (persistent worker pool + scratch
+//! arenas, reused for every request the entry ever serves) — and drains
+//! micro-batches from a bounded submission queue. Safe Rust, no new
+//! `unsafe`, and the expensive compile/partition/warm-up happens once
+//! per entry while early requests queue behind it.
+//!
+//! ## Request flow
+//!
+//! [`Engine::submit`] validates the feature shape, then try-sends the
+//! job into the entry's [`SubmitQueue`] — a full queue is a typed
+//! [`ServeError::Rejected`] (admission control), never unbounded
+//! latency. The entry thread lifts whole bursts out with
+//! [`next_batch`], runs each request through the warm executor, and
+//! answers on a per-request reply channel held by the caller's
+//! [`Ticket`]. A request that produces non-finite output fails alone
+//! ([`ServeError::NonFinite`], counted in `serve_errors`) — the engine
+//! keeps serving.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::compiler::compile;
+use crate::coordinator::degree_column;
+use crate::exec::{weights, Executor, KernelMode, Matrix, PipelineMode, PoolStats, ScratchStats};
+use crate::graph::Csr;
+use crate::ir::spec::{ModelDims, ModelSpec};
+use crate::ir::IrGraph;
+use crate::obs::{metrics, trace};
+use crate::partition::Method;
+use crate::sim::AcceleratorConfig;
+
+use super::batch::next_batch;
+use super::queue::{self, SubmitError, SubmitQueue};
+
+/// Engine-wide configuration, applied to every entry registered after.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Bounded per-entry submission-queue depth; a full queue rejects
+    /// ([`ServeError::Rejected`]) instead of queueing unboundedly.
+    pub queue_depth: usize,
+    /// Micro-batch cap: how many queued requests one entry wakeup may
+    /// serve back to back (see [`next_batch`]).
+    pub batch_max: usize,
+    /// Executor pool width; 0 = the partitioning's sThread count.
+    pub workers: usize,
+    /// Compute tier of the warm executor.
+    pub kernel: KernelMode,
+    /// Interval-pipelining mode of the warm executor.
+    pub pipeline: PipelineMode,
+    /// Accelerator model that shapes the partitioning (shard bytes,
+    /// DstBuffer bytes, sThreads).
+    pub accel: AcceleratorConfig,
+    /// Partitioning method entries are built with.
+    pub method: Method,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            queue_depth: 64,
+            batch_max: 8,
+            workers: 0,
+            kernel: KernelMode::default(),
+            pipeline: PipelineMode::default(),
+            accel: AcceleratorConfig::switchblade(),
+            method: Method::Fggp,
+        }
+    }
+}
+
+/// Typed serving failures. None of these takes the engine down: a
+/// rejected or poisoned request fails alone and the entry keeps
+/// draining its queue.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control: the entry's bounded queue held `depth`
+    /// requests already.
+    Rejected { entry: String, depth: usize },
+    /// The request's feature matrix does not match the entry's
+    /// (vertices, input-dim) shape.
+    BadRequest { entry: String, reason: String },
+    /// The model produced a non-finite output for this request.
+    /// Previously an `assert!` here panicked the whole server; now the
+    /// one request fails and the error lands in the `serve_errors`
+    /// metric.
+    NonFinite { entry: String, seq: u64 },
+    /// The entry's thread is gone (engine shutting down).
+    EngineDown { entry: String },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Rejected { entry, depth } => {
+                write!(f, "{entry}: rejected — submission queue full (depth {depth})")
+            }
+            ServeError::BadRequest { entry, reason } => {
+                write!(f, "{entry}: bad request — {reason}")
+            }
+            ServeError::NonFinite { entry, seq } => {
+                write!(f, "{entry}: request {seq} produced non-finite output")
+            }
+            ServeError::EngineDown { entry } => {
+                write!(f, "{entry}: engine is shutting down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Identity of an engine entry: which model (stable spec fingerprint
+/// covering name + source), at which build dims, over which graph shape.
+/// [`Engine::register`] dedups on this.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct EntryKey {
+    pub model: u64,
+    pub dims: String,
+    pub vertices: usize,
+    pub edges: usize,
+}
+
+/// Static facts about a registered entry.
+#[derive(Debug, Clone)]
+pub struct EntryInfo {
+    /// Human label: model display name + dims.
+    pub label: String,
+    pub key: EntryKey,
+    /// Expected feature width of a request.
+    pub in_dim: usize,
+    /// Expected feature rows of a request (graph vertices).
+    pub vertices: usize,
+}
+
+/// Opaque handle to a registered entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EntryId(pub(crate) usize);
+
+/// One completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub out: Matrix,
+    /// Per-entry request sequence number.
+    pub seq: u64,
+    /// Queue wait: submission → picked into a micro-batch.
+    pub wait_s: f64,
+    /// Execution time inside the warm executor.
+    pub exec_s: f64,
+    /// Size of the micro-batch this request was served in.
+    pub batched: usize,
+}
+
+/// Handle to an admitted request; [`Ticket::wait`] blocks for the
+/// result. Dropping the ticket abandons the request (it still runs).
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<Response, ServeError>>,
+    entry: String,
+    pub seq: u64,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<Response, ServeError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::EngineDown { entry: self.entry }),
+        }
+    }
+}
+
+/// Counters snapshotted from a live entry via [`Engine::stats`].
+#[derive(Debug, Clone, Default)]
+pub struct EntryStats {
+    /// Requests served (including ones that failed `NonFinite`).
+    pub requests: u64,
+    /// Micro-batches drained.
+    pub batches: u64,
+    /// Largest micro-batch served so far.
+    pub max_batch: usize,
+    /// Requests that failed with a typed per-request error.
+    pub errors: u64,
+    /// Submissions rejected by admission control (counted engine-side).
+    pub rejected: u64,
+    /// One-time compile + partition + warm-up cost, seconds.
+    pub warm_s: f64,
+    /// The warm executor's scratch-pool counters — `misses` staying
+    /// flat across requests is the "steady state allocates nothing" pin.
+    pub scratch: ScratchStats,
+    /// The warm executor's worker-pool counters — `spawned` staying
+    /// flat is the "threads spawn once per entry" pin.
+    pub pool: PoolStats,
+}
+
+enum Job {
+    Infer(InferJob),
+    /// Control-plane probe: snapshot the entry's counters + executor
+    /// stats. Round-trips through the same queue so it observes every
+    /// request admitted before it.
+    Stats(mpsc::SyncSender<EntryStats>),
+}
+
+struct InferJob {
+    seq: u64,
+    x: Matrix,
+    enq: Instant,
+    reply: mpsc::SyncSender<Result<Response, ServeError>>,
+}
+
+struct Entry {
+    info: EntryInfo,
+    /// `None` once shutdown has begun.
+    queue: Option<SubmitQueue<Job>>,
+    seq: AtomicU64,
+    rejected: AtomicU64,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The persistent multi-model serving engine. Entries register once and
+/// stay warm until the engine drops; see the module docs for the
+/// threading model.
+pub struct Engine {
+    cfg: EngineConfig,
+    entries: Vec<Entry>,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        Engine {
+            cfg,
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn num_entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn ids(&self) -> Vec<EntryId> {
+        (0..self.entries.len()).map(EntryId).collect()
+    }
+
+    pub fn info(&self, id: EntryId) -> &EntryInfo {
+        &self.entries[id.0].info
+    }
+
+    /// Register `spec` built at `dims` over graph `g`, spawning the
+    /// entry's thread (compile → partition → warm-up run happen there,
+    /// off the caller; early submissions queue behind the warm-up).
+    /// Re-registering an identical (model, dims, graph-shape) key
+    /// returns the existing entry.
+    pub fn register(
+        &mut self,
+        spec: &ModelSpec,
+        dims: ModelDims,
+        g: Arc<Csr>,
+    ) -> Result<EntryId, String> {
+        let key = EntryKey {
+            model: spec.fingerprint(),
+            dims: format!("{dims}"),
+            vertices: g.num_vertices(),
+            edges: g.num_edges(),
+        };
+        if let Some(i) = self.entries.iter().position(|e| e.info.key == key) {
+            return Ok(EntryId(i));
+        }
+        let ir = spec.build(dims).map_err(|e| format!("{}: {e}", spec.name()))?;
+        let label = format!("{} {dims}", spec.display());
+        let info = EntryInfo {
+            label: label.clone(),
+            key,
+            in_dim: ir.input_dim() as usize,
+            vertices: g.num_vertices(),
+        };
+        let (q, rx) = queue::bounded::<Job>(self.cfg.queue_depth);
+        let cfg = self.cfg;
+        let idx = self.entries.len();
+        // Thread-locals don't cross `spawn`: sample the tracing flag
+        // here, on the session-owning thread, and ship it in.
+        let tracing = trace::active();
+        let handle = std::thread::Builder::new()
+            .name(format!("sb-serve-{idx}"))
+            .spawn(move || entry_loop(ir, g, cfg, rx, idx, label, tracing))
+            .map_err(|e| format!("spawning serve entry thread: {e}"))?;
+        self.entries.push(Entry {
+            info,
+            queue: Some(q),
+            seq: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            handle: Some(handle),
+        });
+        Ok(EntryId(idx))
+    }
+
+    /// Submit a feature matrix for inference. Non-blocking: a full
+    /// queue returns [`ServeError::Rejected`] immediately.
+    pub fn submit(&self, id: EntryId, x: Matrix) -> Result<Ticket, ServeError> {
+        let e = &self.entries[id.0];
+        let entry = e.info.label.clone();
+        if x.rows != e.info.vertices || x.cols != e.info.in_dim {
+            return Err(ServeError::BadRequest {
+                entry,
+                reason: format!(
+                    "features are {}x{}, entry expects {}x{}",
+                    x.rows, x.cols, e.info.vertices, e.info.in_dim
+                ),
+            });
+        }
+        let q = e
+            .queue
+            .as_ref()
+            .ok_or_else(|| ServeError::EngineDown { entry: entry.clone() })?;
+        let seq = e.seq.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::sync_channel(1);
+        match q.submit(Job::Infer(InferJob {
+            seq,
+            x,
+            enq: Instant::now(),
+            reply,
+        })) {
+            Ok(()) => Ok(Ticket { rx, entry, seq }),
+            Err(SubmitError::Full(_)) => {
+                e.rejected.fetch_add(1, Ordering::Relaxed);
+                metrics::counter("serve_rejected", 1);
+                Err(ServeError::Rejected {
+                    entry,
+                    depth: q.depth(),
+                })
+            }
+            Err(SubmitError::Closed(_)) => Err(ServeError::EngineDown { entry }),
+        }
+    }
+
+    /// Submit deterministic features derived from `seed` — the request
+    /// body the load generator and the differential tests use (the same
+    /// construction as `coordinator::reference_run`, so equal seeds pin
+    /// bit-equal outputs).
+    pub fn submit_seeded(&self, id: EntryId, seed: u64) -> Result<Ticket, ServeError> {
+        let info = &self.entries[id.0].info;
+        let x = weights::init_features(seed, info.vertices, info.in_dim);
+        self.submit(id, x)
+    }
+
+    /// Blocking stats probe: queues a control message behind everything
+    /// already admitted and waits for the entry's answer.
+    pub fn stats(&self, id: EntryId) -> Result<EntryStats, ServeError> {
+        let e = &self.entries[id.0];
+        let entry = e.info.label.clone();
+        let q = e
+            .queue
+            .as_ref()
+            .ok_or_else(|| ServeError::EngineDown { entry: entry.clone() })?;
+        let (tx, rx) = mpsc::sync_channel(1);
+        q.push(Job::Stats(tx))
+            .map_err(|_| ServeError::EngineDown { entry: entry.clone() })?;
+        let mut st = rx.recv().map_err(|_| ServeError::EngineDown { entry })?;
+        st.rejected = e.rejected.load(Ordering::Relaxed);
+        Ok(st)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // Closing every queue ends each entry loop after its residue
+        // drains; join so in-flight batches finish (and their trace
+        // spans flush) before the engine is gone.
+        for e in &mut self.entries {
+            e.queue = None;
+        }
+        for e in &mut self.entries {
+            if let Some(h) = e.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The per-entry service loop: owns the compiled program, partitions,
+/// and the one warm executor for the entry's whole lifetime.
+fn entry_loop(
+    ir: IrGraph,
+    g: Arc<Csr>,
+    cfg: EngineConfig,
+    rx: mpsc::Receiver<Job>,
+    idx: usize,
+    label: String,
+    tracing: bool,
+) {
+    let t_warm = Instant::now();
+    let prog = compile(&ir);
+    let parts = cfg.method.run(&g, cfg.accel.partition_config(&prog));
+    let deg = degree_column(&g);
+    let mut ex = Executor::new(&prog, &parts)
+        .with_kernel_mode(cfg.kernel)
+        .with_pipeline_mode(cfg.pipeline);
+    if cfg.workers > 0 {
+        ex = ex.with_workers(cfg.workers);
+    }
+    // Warm-up inference: sizes every scratch arena and spawns the worker
+    // pool before the first real request, so steady state — no new
+    // scratch misses, no new thread spawns — starts at request 1.
+    let x0 = weights::init_features(0, g.num_vertices(), ir.input_dim() as usize);
+    let _ = ex.run(&x0, &deg);
+    let warm_s = t_warm.elapsed().as_secs_f64();
+    metrics::observe("serve_warm_s", warm_s);
+
+    let track = trace::serve_track(idx);
+    let mut requests = 0u64;
+    let mut batches = 0u64;
+    let mut errors = 0u64;
+    let mut max_batch = 0usize;
+    while let Some(batch) = next_batch(&rx, cfg.batch_max) {
+        let mut jobs = Vec::with_capacity(batch.len());
+        for job in batch {
+            match job {
+                Job::Infer(j) => jobs.push(j),
+                Job::Stats(tx) => {
+                    let _ = tx.try_send(EntryStats {
+                        requests,
+                        batches,
+                        max_batch,
+                        errors,
+                        rejected: 0, // merged engine-side
+                        warm_s,
+                        scratch: ex.scratch_stats(),
+                        pool: ex.pool_stats(),
+                    });
+                }
+            }
+        }
+        if jobs.is_empty() {
+            continue;
+        }
+        let size = jobs.len();
+        batches += 1;
+        max_batch = max_batch.max(size);
+        metrics::counter("serve_batches", 1);
+        metrics::observe("serve_batch_size", size as f64);
+        {
+            let _batch_span = trace::span_if(
+                tracing,
+                trace::names::BATCH,
+                trace::cat::SERVE,
+                track,
+                -1,
+                (batches - 1) as i32,
+                size as i32,
+            );
+            for j in jobs {
+                let wait_s = j.enq.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let out = {
+                    let _span = trace::span_if(
+                        tracing,
+                        trace::names::REQUEST,
+                        trace::cat::SERVE,
+                        track,
+                        -1,
+                        j.seq as i32,
+                        -1,
+                    );
+                    ex.run(&j.x, &deg)
+                };
+                let exec_s = t0.elapsed().as_secs_f64();
+                requests += 1;
+                metrics::counter("serve_requests", 1);
+                metrics::observe("serve_wait_s", wait_s);
+                metrics::observe("serve_latency_s", wait_s + exec_s);
+                let r = if out.data.iter().all(|v| v.is_finite()) {
+                    Ok(Response {
+                        out,
+                        seq: j.seq,
+                        wait_s,
+                        exec_s,
+                        batched: size,
+                    })
+                } else {
+                    errors += 1;
+                    metrics::counter("serve_errors", 1);
+                    Err(ServeError::NonFinite {
+                        entry: label.clone(),
+                        seq: j.seq,
+                    })
+                };
+                let _ = j.reply.try_send(r);
+            }
+        }
+        if tracing {
+            trace::flush_thread();
+        }
+    }
+    if tracing {
+        trace::flush_thread();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::Dataset;
+    use crate::ir::zoo::ModelZoo;
+
+    fn tiny() -> (Arc<Csr>, Arc<ModelSpec>) {
+        let g = Arc::new(Dataset::Ak.load(7));
+        let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+        (g, spec)
+    }
+
+    #[test]
+    fn register_dedups_identical_entries() {
+        let (g, spec) = tiny();
+        let mut e = Engine::new(EngineConfig::default());
+        let a = e
+            .register(&spec, ModelDims::uniform(1, 4), g.clone())
+            .unwrap();
+        let b = e
+            .register(&spec, ModelDims::uniform(1, 4), g.clone())
+            .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(e.num_entries(), 1);
+        // Different dims is a different entry.
+        let c = e.register(&spec, ModelDims::uniform(2, 4), g).unwrap();
+        assert_ne!(a, c);
+        assert_eq!(e.num_entries(), 2);
+    }
+
+    #[test]
+    fn serves_and_counts_requests() {
+        let (g, spec) = tiny();
+        let mut e = Engine::new(EngineConfig::default());
+        let id = e.register(&spec, ModelDims::uniform(1, 4), g.clone()).unwrap();
+        let r = e.submit_seeded(id, 5).unwrap().wait().unwrap();
+        assert_eq!(r.out.rows, g.num_vertices());
+        assert!(r.batched >= 1);
+        let st = e.stats(id).unwrap();
+        assert_eq!(st.requests, 1);
+        assert!(st.batches >= 1);
+        assert!(st.warm_s > 0.0);
+    }
+
+    #[test]
+    fn wrong_shape_is_a_bad_request() {
+        let (g, spec) = tiny();
+        let mut e = Engine::new(EngineConfig::default());
+        let id = e.register(&spec, ModelDims::uniform(1, 4), g).unwrap();
+        match e.submit(id, Matrix::zeros(3, 3)) {
+            Err(ServeError::BadRequest { .. }) => {}
+            other => panic!("expected BadRequest, got {:?}", other.map(|_| "ticket")),
+        }
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_across_requests() {
+        let (g, spec) = tiny();
+        let mut e = Engine::new(EngineConfig::default());
+        let id = e.register(&spec, ModelDims::uniform(1, 4), g).unwrap();
+        let a = e.submit_seeded(id, 9).unwrap().wait().unwrap();
+        let b = e.submit_seeded(id, 9).unwrap().wait().unwrap();
+        assert!(a.out.bits_eq(&b.out));
+    }
+}

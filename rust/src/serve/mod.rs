@@ -1,0 +1,36 @@
+//! `serve` — a persistent multi-model inference service over the native
+//! executor.
+//!
+//! The subsystem turns the repo from a benchmark harness into an
+//! inference engine: [`engine::Engine`] owns, per (model, graph) entry,
+//! the compiled `Program`, `Partitions`, and a warm `exec::Executor`
+//! (persistent worker pool + scratch arenas reused across requests) on
+//! a dedicated thread, so *any* zoo or `--model-file` spec is servable
+//! — not just the four paper models with baked PJRT artifacts.
+//!
+//! - [`queue`] — the bounded submission queue: admission control as a
+//!   channel-capacity fact (full → typed `Rejected`, never unbounded
+//!   latency).
+//! - [`batch`] — micro-batch assembly: block for one request, drain the
+//!   burst behind it up to a cap, no batching timer.
+//! - [`engine`] — the engine itself: registration, submission tickets,
+//!   typed per-request errors, live stats probes.
+//! - [`bench`] — the closed/open-loop load generator behind
+//!   `switchblade serve --bench`, reporting throughput + exact
+//!   p50/p95/p99 into `BENCH_serve.json`.
+//!
+//! Observability rides the existing rails: `serve_*` counters and
+//! histograms in [`crate::obs::metrics`], `request`/`batch` spans on
+//! per-entry [`crate::obs::trace`] lanes so Chrome traces show request
+//! overlap.
+
+pub mod batch;
+pub mod bench;
+pub mod engine;
+pub mod queue;
+
+pub use bench::{run_bench, BenchOptions, BenchReport};
+pub use engine::{
+    Engine, EngineConfig, EntryId, EntryInfo, EntryKey, EntryStats, Response, ServeError, Ticket,
+};
+pub use queue::{SubmitError, SubmitQueue};

@@ -1,0 +1,127 @@
+//! Bounded submission queue — the admission-control primitive of the
+//! serving engine.
+//!
+//! Built on `std::sync::mpsc::sync_channel`: the channel's buffer IS the
+//! per-entry request queue, so "queue full" is a channel-level fact, not
+//! a counter we maintain on the side. The data plane submits with
+//! [`SubmitQueue::submit`] (non-blocking — a full queue *rejects*, which
+//! the engine surfaces as a typed `Rejected` error instead of unbounded
+//! latency). The control plane (stats probes, which must never be
+//! load-shed) pushes with the blocking [`SubmitQueue::push`].
+
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+
+/// Sending half of a bounded queue. Cloneable so several submitters can
+/// feed one entry; the engine keeps one per entry.
+pub struct SubmitQueue<T> {
+    tx: SyncSender<T>,
+    depth: usize,
+}
+
+/// Why a submission did not enter the queue; returns the item so the
+/// caller can retry or drop it deliberately.
+#[derive(Debug)]
+pub enum SubmitError<T> {
+    /// Admission control: the queue held `depth` items already.
+    Full(T),
+    /// The consuming side is gone (engine shutting down).
+    Closed(T),
+}
+
+/// A bounded queue of depth `depth` (clamped to >= 1): the sender plus
+/// the receiver the owning entry thread drains.
+pub fn bounded<T>(depth: usize) -> (SubmitQueue<T>, Receiver<T>) {
+    let depth = depth.max(1);
+    let (tx, rx) = std::sync::mpsc::sync_channel(depth);
+    (SubmitQueue { tx, depth }, rx)
+}
+
+impl<T> SubmitQueue<T> {
+    /// Configured capacity.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Non-blocking admission: queue the item or reject it immediately.
+    pub fn submit(&self, item: T) -> Result<(), SubmitError<T>> {
+        match self.tx.try_send(item) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(it)) => Err(SubmitError::Full(it)),
+            Err(TrySendError::Disconnected(it)) => Err(SubmitError::Closed(it)),
+        }
+    }
+
+    /// Blocking push for control-plane messages that must not be
+    /// load-shed (waits for a slot instead of rejecting).
+    pub fn push(&self, item: T) -> Result<(), SubmitError<T>> {
+        self.tx.send(item).map_err(|e| SubmitError::Closed(e.0))
+    }
+}
+
+// Manual impl: `T` need not be `Clone` for the sender to be.
+impl<T> Clone for SubmitQueue<T> {
+    fn clone(&self) -> Self {
+        SubmitQueue {
+            tx: self.tx.clone(),
+            depth: self.depth,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_exactly_at_capacity() {
+        let (q, rx) = bounded::<u32>(2);
+        q.submit(1).unwrap();
+        q.submit(2).unwrap();
+        match q.submit(3) {
+            Err(SubmitError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        // Draining one slot re-admits exactly one submission.
+        assert_eq!(rx.recv().unwrap(), 1);
+        q.submit(4).unwrap();
+        match q.submit(5) {
+            Err(SubmitError::Full(5)) => {}
+            other => panic!("expected Full(5), got {other:?}"),
+        }
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert_eq!(rx.recv().unwrap(), 4);
+    }
+
+    #[test]
+    fn closed_when_receiver_dropped() {
+        let (q, rx) = bounded::<u32>(1);
+        drop(rx);
+        match q.submit(7) {
+            Err(SubmitError::Closed(7)) => {}
+            other => panic!("expected Closed(7), got {other:?}"),
+        }
+        match q.push(8) {
+            Err(SubmitError::Closed(8)) => {}
+            other => panic!("expected Closed(8), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn depth_clamps_to_one() {
+        let (q, _rx) = bounded::<u32>(0);
+        assert_eq!(q.depth(), 1);
+        q.submit(1).unwrap();
+        assert!(matches!(q.submit(2), Err(SubmitError::Full(2))));
+    }
+
+    #[test]
+    fn cloned_senders_share_capacity() {
+        let (q, rx) = bounded::<u32>(2);
+        let q2 = q.clone();
+        q.submit(1).unwrap();
+        q2.submit(2).unwrap();
+        assert!(matches!(q.submit(3), Err(SubmitError::Full(3))));
+        assert!(matches!(q2.submit(3), Err(SubmitError::Full(3))));
+        drop(rx);
+    }
+}

@@ -1,0 +1,239 @@
+//! Serving-engine integration: the persistent engine must be a pure
+//! performance layer over the executor — bit-identical outputs to a
+//! direct (cold) run for any zoo model *and* an out-of-zoo spec file,
+//! micro-batched or not; bounded queues must reject at capacity with a
+//! typed error; warm steady state must add no new scratch-pool misses
+//! or thread spawns; a poisoned request must fail alone instead of
+//! taking the engine down.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use switchblade::coordinator::reference_run;
+use switchblade::exec::Matrix;
+use switchblade::graph::datasets::Dataset;
+use switchblade::graph::Csr;
+use switchblade::ir::spec::{ModelDims, ModelSpec};
+use switchblade::ir::zoo::ModelZoo;
+use switchblade::serve::{run_bench, BenchOptions, Engine, EngineConfig, ServeError};
+
+fn graph(scale: u32) -> Arc<Csr> {
+    Arc::new(Dataset::Ak.load(scale))
+}
+
+/// The out-of-zoo spec the acceptance criteria name: cwd for
+/// integration tests is `rust/`, so the example lives one level up.
+fn gin() -> Arc<ModelSpec> {
+    Arc::new(ModelSpec::from_file(Path::new("../examples/models/gin.gnn")).unwrap())
+}
+
+#[test]
+fn engine_matches_direct_executor_bitwise() {
+    let g = graph(8);
+    let cfg = EngineConfig::default();
+    let mut engine = Engine::new(cfg);
+    let mut cases: Vec<(Arc<ModelSpec>, ModelDims)> = Vec::new();
+    for name in ["gcn", "gat"] {
+        let spec = ModelZoo::builtin().resolve(name).unwrap();
+        cases.push((spec, ModelDims::uniform(2, 8)));
+    }
+    let gin = gin();
+    let gin_dims = gin.dims();
+    cases.push((gin, gin_dims));
+    for (spec, dims) in &cases {
+        let id = engine.register(spec, *dims, g.clone()).unwrap();
+        let got = engine.submit_seeded(id, 42).unwrap().wait().unwrap();
+        let ir = spec.build(*dims).unwrap();
+        let want = reference_run(
+            &ir,
+            &g,
+            &cfg.accel,
+            cfg.method,
+            cfg.workers,
+            cfg.kernel,
+            cfg.pipeline,
+            42,
+        );
+        assert!(
+            got.out.bits_eq(&want),
+            "{}: engine output diverged from the direct executor run (max |delta| {})",
+            spec.name(),
+            got.out.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn micro_batched_equals_one_at_a_time() {
+    let g = graph(8);
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let dims = ModelDims::uniform(1, 8);
+
+    // Batched: flood all requests in before waiting on any, so the
+    // entry thread gets the chance to lift them out as bursts.
+    let mut batched = Engine::new(EngineConfig {
+        batch_max: 8,
+        ..EngineConfig::default()
+    });
+    let id = batched.register(&spec, dims, g.clone()).unwrap();
+    let tickets: Vec<_> = (0..8u64)
+        .map(|s| batched.submit_seeded(id, s).unwrap())
+        .collect();
+    let outs: Vec<Matrix> = tickets
+        .into_iter()
+        .map(|t| t.wait().unwrap().out)
+        .collect();
+
+    // One at a time: batch cap 1 and a wait between submissions.
+    let mut seq = Engine::new(EngineConfig {
+        batch_max: 1,
+        ..EngineConfig::default()
+    });
+    let id2 = seq.register(&spec, dims, g).unwrap();
+    for (s, batched_out) in outs.iter().enumerate() {
+        let r = seq.submit_seeded(id2, s as u64).unwrap().wait().unwrap();
+        assert_eq!(r.batched, 1);
+        assert!(
+            r.out.bits_eq(batched_out),
+            "request {s}: micro-batched output diverged from one-at-a-time"
+        );
+    }
+}
+
+#[test]
+fn admission_control_rejects_at_queue_capacity() {
+    // Depth-1 queue, no batching, and enough work per request (scale 10)
+    // that back-to-back submissions outrun the drain.
+    let g = graph(10);
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let mut engine = Engine::new(EngineConfig {
+        queue_depth: 1,
+        batch_max: 1,
+        ..EngineConfig::default()
+    });
+    let id = engine.register(&spec, ModelDims::uniform(2, 16), g).unwrap();
+    let mut tickets = Vec::new();
+    let mut rejected = 0u64;
+    for s in 0..64u64 {
+        match engine.submit_seeded(id, s) {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::Rejected { depth, .. }) => {
+                assert_eq!(depth, 1);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(
+        rejected > 0,
+        "64 back-to-back submissions into a depth-1 queue never tripped admission control"
+    );
+    // Every admitted request still completes, in order, successfully.
+    let mut last_seq = None;
+    for t in tickets {
+        let r = t.wait().unwrap();
+        if let Some(prev) = last_seq {
+            assert!(r.seq > prev, "FIFO order violated: {} after {prev}", r.seq);
+        }
+        last_seq = Some(r.seq);
+    }
+    // The engine-side rejection counter agrees with what we observed.
+    let st = engine.stats(id).unwrap();
+    assert_eq!(st.rejected, rejected);
+}
+
+#[test]
+fn warm_steady_state_adds_no_scratch_misses_or_spawns() {
+    let g = graph(8);
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let mut engine = Engine::new(EngineConfig::default());
+    let id = engine.register(&spec, ModelDims::uniform(1, 8), g).unwrap();
+    for s in 0..4u64 {
+        engine.submit_seeded(id, s).unwrap().wait().unwrap();
+    }
+    let st1 = engine.stats(id).unwrap();
+    for s in 4..12u64 {
+        engine.submit_seeded(id, s).unwrap().wait().unwrap();
+    }
+    let st2 = engine.stats(id).unwrap();
+    assert_eq!(st2.requests, 12);
+    assert_eq!(
+        st1.scratch.misses, st2.scratch.misses,
+        "warm engine allocated new scratch arenas in steady state"
+    );
+    assert!(
+        st2.scratch.hits > st1.scratch.hits,
+        "later requests should be served entirely from warm pools"
+    );
+    assert_eq!(
+        st1.pool.spawned, st2.pool.spawned,
+        "warm engine spawned new worker threads in steady state"
+    );
+}
+
+/// A spec built to blow up deterministically: exp of huge values makes
+/// +inf, and — unlike every zoo model — there is no trailing relu to
+/// launder non-finite values back to 0.
+const BLOWUP: &str = "
+model blowup
+dims 1 4 4 4
+
+h = input IN
+layer {
+  big = unary mul_scalar 1e20 h
+  e = unary exp big
+  msg = scatter_src e
+  agg = gather sum msg
+  W = weight DI DO seed 99
+  h = dmm agg W
+}
+output h
+";
+
+#[test]
+fn non_finite_output_is_a_typed_error_not_a_crash() {
+    let g = graph(8);
+    let spec = ModelSpec::parse("blowup", BLOWUP).unwrap();
+    let mut engine = Engine::new(EngineConfig::default());
+    let id = engine.register(&spec, spec.dims(), g.clone()).unwrap();
+    match engine.submit_seeded(id, 3).unwrap().wait() {
+        Err(ServeError::NonFinite { seq, .. }) => assert_eq!(seq, 0),
+        other => panic!("expected NonFinite, got {:?}", other.map(|r| r.seq)),
+    }
+    // The engine survives: the same entry answers again (still poisoned,
+    // still typed), and a healthy entry serves normally alongside it.
+    assert!(matches!(
+        engine.submit_seeded(id, 4).unwrap().wait(),
+        Err(ServeError::NonFinite { .. })
+    ));
+    let gcn = ModelZoo::builtin().resolve("gcn").unwrap();
+    let healthy = engine.register(&gcn, ModelDims::uniform(1, 8), g).unwrap();
+    engine.submit_seeded(healthy, 0).unwrap().wait().unwrap();
+    let st = engine.stats(id).unwrap();
+    assert_eq!(st.errors, 2);
+}
+
+#[test]
+fn bench_closed_loop_reports_and_serializes() {
+    let g = graph(8);
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let mut engine = Engine::new(EngineConfig::default());
+    let id = engine.register(&spec, ModelDims::uniform(1, 8), g).unwrap();
+    let report = run_bench(
+        &engine,
+        &[id],
+        &BenchOptions {
+            requests: 8,
+            ..BenchOptions::default()
+        },
+    );
+    assert_eq!(report.completed, 8);
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.errors, 0);
+    assert!(report.qps() > 0.0);
+    assert!(report.p50() > 0.0 && report.p50() <= report.p99());
+    let json = report.to_json();
+    for key in ["serve_qps", "serve_p50_ms", "serve_p95_ms", "serve_p99_ms"] {
+        assert!(json.contains(&format!("\"{key}\":")), "missing {key}");
+    }
+}

@@ -3,10 +3,12 @@
 # functional executor (single-worker vs shard-parallel, interval pipeline
 # on vs off, blocked vs simd vs legacy kernels, plus a 1/2/4/8-worker
 # sweep over the persistent pool) and writes the results to
-# BENCH_exec.json at the repo root. Re-run before and after a perf-relevant change and
-# diff the two files (scripts/bench_diff.sh automates the diff and is
-# what CI's bench-diff gate runs). CI's bench job uploads this file as
-# an artifact (.github/workflows/ci.yml).
+# BENCH_exec.json at the repo root, then drives the serving engine's
+# closed-loop load generator into BENCH_serve.json beside it. Re-run
+# before and after a perf-relevant change and diff the two files
+# (scripts/bench_diff.sh automates the diff and is what CI's bench-diff
+# gate runs). CI's bench job uploads both files as artifacts
+# (.github/workflows/ci.yml).
 #
 # The executor numbers come from `bench --metrics` — the process metrics
 # registry is the single source (the same numbers the table and the
@@ -14,7 +16,8 @@
 # snapshot into the historical BENCH_exec.json shape.
 #
 # Env knobs: SCALE (default 6, the harness default), ITERS (default 3),
-# OUT (default BENCH_exec.json), BENCH_MODEL / BENCH_DATASET (GCN / AK).
+# OUT (default BENCH_exec.json), BENCH_MODEL / BENCH_DATASET (GCN / AK),
+# SERVE_REQUESTS (default 64) / SERVE_OUT (default BENCH_serve.json).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -89,3 +92,14 @@ cat > "$OUT" <<EOF
 EOF
 echo "wrote $OUT:" >&2
 cat "$OUT"
+
+# Serving trajectory point: closed-loop load through the persistent
+# native engine. `serve --bench` writes the flat JSON itself — same
+# one-key-per-line shape as BENCH_exec.json, same bench_diff.sh gate.
+SERVE_OUT="${SERVE_OUT:-BENCH_serve.json}"
+SERVE_REQUESTS="${SERVE_REQUESTS:-64}"
+echo "timing serving engine ($MODEL on $DATASET, $SERVE_REQUESTS closed-loop requests)..." >&2
+"$BIN" serve --model "$MODEL" --dataset "$DATASET" --scale "$SCALE" \
+  --bench --requests "$SERVE_REQUESTS" --out "$SERVE_OUT" >/dev/null
+echo "wrote $SERVE_OUT:" >&2
+cat "$SERVE_OUT"

@@ -4,17 +4,20 @@
 #
 #   scripts/bench_diff.sh BASELINE.json CANDIDATE.json [MAX_PCT]
 #
-# Both files may be BENCH_exec.json (scripts/bench.sh) or a raw
-# `switchblade bench --metrics` snapshot — each is flat JSON with one
-# "name": value pair per line, so the same sed extraction works on both.
+# Both files may be BENCH_exec.json (scripts/bench.sh), BENCH_serve.json
+# (`switchblade serve --bench`) or a raw `switchblade bench --metrics`
+# snapshot — each is flat JSON with one "name": value pair per line, so
+# the same sed extraction works on all of them.
 #
 # Gated keys (lower is better): exec_ms_parallel (the headline number),
 # exec_ms_single, exec_ms_simd, exec_ms_pipeline_off, the worker-sweep
-# points exec_ms_w1/w2/w4/w8, and repro_fig7_s. A key missing or
-# non-numeric on either side is reported and skipped, never fatal — a
-# raw metrics file has no repro_fig7_s, and an old baseline may predate
-# a key. The gate fails (exit 1) only when a key present on both sides
-# regressed by more than MAX_PCT percent (default 10).
+# points exec_ms_w1/w2/w4/w8, repro_fig7_s, and the serving-engine tail
+# latencies serve_p50_ms/serve_p95_ms/serve_p99_ms. A key missing or
+# non-numeric on either side is reported and skipped, never fatal — an
+# exec artifact has no serve keys and vice versa, a raw metrics file has
+# no repro_fig7_s, and an old baseline may predate a key. The gate fails
+# (exit 1) only when a key present on both sides regressed by more than
+# MAX_PCT percent (default 10).
 #
 # Exit codes: 0 ok / nothing comparable, 1 regression, 2 usage error.
 set -euo pipefail
@@ -42,7 +45,8 @@ is_num() { [[ "$1" =~ ^-?[0-9]+([.][0-9]+)?([eE][+-]?[0-9]+)?$ ]]; }
 fail=0
 compared=0
 for key in exec_ms_parallel exec_ms_single exec_ms_simd exec_ms_pipeline_off \
-           exec_ms_w1 exec_ms_w2 exec_ms_w4 exec_ms_w8 repro_fig7_s; do
+           exec_ms_w1 exec_ms_w2 exec_ms_w4 exec_ms_w8 repro_fig7_s \
+           serve_p50_ms serve_p95_ms serve_p99_ms; do
   b=$(val "$BASE" "$key")
   c=$(val "$CAND" "$key")
   if ! is_num "${b:-x}" || ! is_num "${c:-x}"; then

@@ -16,11 +16,17 @@
 #   profiler   `bench --profile` at tiny scale + its machine-readable trailers
 #   trace      `bench --trace/--metrics` at tiny scale: Chrome-trace JSON
 #              schema sanity + metrics self-diff through bench_diff.sh
-#   bench      scripts/bench.sh -> BENCH_exec.json (perf trajectory point)
-#   bench-diff scripts/bench_diff.sh BENCH_exec.json against $BASELINE
-#              (skips gracefully when no baseline is present)
-#   all        fmt clippy test smoke profiler trace (+ bench when BENCH=1,
-#              the historical knob)
+#   serve      serving-engine smoke at tiny scale: native engine over a zoo
+#              model + the out-of-zoo gin spec with --verify (bit-identity
+#              to a direct executor run), trailer pins, and a
+#              `serve --bench` artifact that self-diffs clean
+#   bench      scripts/bench.sh -> BENCH_exec.json + BENCH_serve.json
+#              (perf trajectory point)
+#   bench-diff scripts/bench_diff.sh BENCH_exec.json (and BENCH_serve.json
+#              when present) against $BASELINE (skips gracefully when no
+#              baseline is present)
+#   all        fmt clippy test smoke profiler trace serve (+ bench when
+#              BENCH=1, the historical knob)
 set -euo pipefail
 SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
 cd "$SCRIPT_DIR/../rust"
@@ -127,15 +133,46 @@ PY
   echo "trace smoke OK"
 }
 
+# Serving-engine smoke: the persistent native engine must serve a zoo
+# model AND an out-of-zoo spec file, verified bit-identical to a direct
+# executor run, with the greppable trailers and the BENCH_serve.json
+# load-generator artifact intact.
+stage_serve() {
+  echo "== serve smoke: native engine + --verify + --bench at tiny scale =="
+  local dir out bench_json
+  dir=$(mktemp -d "${TMPDIR:-/tmp}/switchblade_serve.XXXXXX")
+  trap 'rm -rf "$dir"' RETURN
+  out=$(cargo run --release --quiet -- serve --model GCN \
+    --model-file "$SCRIPT_DIR"/../examples/models/gin.gnn \
+    --dataset AK --scale 12 --requests 8 --verify)
+  local key
+  for key in 'serve_backend=native' 'serve_entries=2' 'serve_requests=8' \
+             'serve_verified=ok' 'serve_p50_ms=' 'serve_p99_ms=' \
+             'serve_errors=0'; do
+    echo "$out" | grep -q "^$key" \
+      || { echo "serve lost its '$key' trailer" >&2; exit 1; }
+  done
+  bench_json="$dir/BENCH_serve.json"
+  cargo run --release --quiet -- serve --model GCN --dataset AK --scale 12 \
+    --requests 8 --bench --out "$bench_json" > /dev/null
+  for key in '"serve_qps"' '"serve_p50_ms"' '"serve_p95_ms"' '"serve_p99_ms"'; do
+    grep -q "$key" "$bench_json" \
+      || { echo "BENCH_serve.json lost $key" >&2; exit 1; }
+  done
+  "$SCRIPT_DIR/bench_diff.sh" "$bench_json" "$bench_json"
+  echo "serve smoke OK"
+}
+
 stage_bench() {
-  echo "== bench: scripts/bench.sh -> BENCH_exec.json =="
+  echo "== bench: scripts/bench.sh -> BENCH_exec.json + BENCH_serve.json =="
   "$SCRIPT_DIR/bench.sh"
 }
 
-# Perf-regression gate: diff this checkout's BENCH_exec.json against a
-# baseline (main's uploaded artifact in CI, any older run locally).
-# Skips — success — when either side is absent, so the gate never blocks
-# the first run or a fork without artifact access.
+# Perf-regression gate: diff this checkout's BENCH_exec.json (and, when
+# both sides carry one, BENCH_serve.json) against a baseline (main's
+# uploaded artifact in CI, any older run locally). Skips — success —
+# when either side is absent, so the gate never blocks the first run or
+# a fork without artifact access.
 stage_bench_diff() {
   echo "== bench-diff: BENCH_exec.json vs \${BASELINE:-baseline/BENCH_exec.json} =="
   local baseline="${BASELINE:-$SCRIPT_DIR/../baseline/BENCH_exec.json}"
@@ -145,6 +182,12 @@ stage_bench_diff() {
   fi
   "$SCRIPT_DIR/bench_diff.sh" "$baseline" "$SCRIPT_DIR/../BENCH_exec.json" \
     "${BENCH_DIFF_MAX_PCT:-10}"
+  local serve_baseline="${SERVE_BASELINE:-$(dirname "$baseline")/BENCH_serve.json}"
+  if [[ -f "$SCRIPT_DIR/../BENCH_serve.json" ]]; then
+    echo "== bench-diff: BENCH_serve.json vs $serve_baseline =="
+    "$SCRIPT_DIR/bench_diff.sh" "$serve_baseline" "$SCRIPT_DIR/../BENCH_serve.json" \
+      "${BENCH_DIFF_MAX_PCT:-10}"
+  fi
 }
 
 run_stage() {
@@ -156,6 +199,7 @@ run_stage() {
     smoke)      stage_smoke ;;
     profiler)   stage_profiler ;;
     trace)      stage_trace ;;
+    serve)      stage_serve ;;
     bench)      stage_bench ;;
     bench-diff) stage_bench_diff ;;
     all)
@@ -165,12 +209,13 @@ run_stage() {
       stage_smoke
       stage_profiler
       stage_trace
+      stage_serve
       if [[ "${BENCH:-0}" != "0" ]]; then
         stage_bench
       fi
       ;;
     *)
-      echo "unknown stage '$1' (fmt|clippy|test|test-simd|smoke|profiler|trace|bench|bench-diff|all)" >&2
+      echo "unknown stage '$1' (fmt|clippy|test|test-simd|smoke|profiler|trace|serve|bench|bench-diff|all)" >&2
       exit 2
       ;;
   esac
