@@ -64,14 +64,14 @@ use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::exec::kernels;
-use crate::exec::pool::{PoolStats, RetBuf, WorkerPool};
+use crate::exec::pool::{panic_message, PoolError, PoolStats, RetBuf, WorkerPool};
 use crate::exec::reference::{apply_binary, apply_unary};
 use crate::exec::scratch::{IntervalScratch, Pool, ScratchStats, WorkerScratch};
 use crate::exec::{weights, Matrix};
 use crate::isa::{
     DataRef, Dim, Instr, PhaseGroup, Program, Reduce, ScatterDir, SlotLayout, Space, Sym,
 };
-use crate::obs::trace;
+use crate::obs::{faultinject, metrics, trace};
 use crate::partition::{Interval, Partitions, Shard};
 use crate::sched::{PartitionWalk, PhaseProfile, PhaseVisitor, StepCtx, Traced, WalkStep};
 
@@ -240,6 +240,12 @@ pub struct Executor<'a> {
     /// Per-group `(prepared intervals, seconds)` pipelining telemetry for
     /// the last run; backfilled into `PhaseProfile` by `run_profiled`.
     prep_stats: Vec<(u64, f64)>,
+    /// First batch failure of the current walk. The walk continues
+    /// structurally after a failed batch (accumulators exist, their
+    /// values are garbage) so later phases stay well-formed; the fault
+    /// is surfaced — and the run's output discarded — by
+    /// [`Executor::try_run`].
+    fault: Option<PoolError>,
 }
 
 impl<'a> Executor<'a> {
@@ -350,6 +356,7 @@ impl<'a> Executor<'a> {
             spare: None,
             scatter_prepared: false,
             prep_stats: Vec::new(),
+            fault: None,
         }
     }
 
@@ -432,11 +439,28 @@ impl<'a> Executor<'a> {
     }
 
     /// Run the whole program. `x` is `[N, in_dim]`; `degree` the in-degree
-    /// column used by `DataRef::Degree`.
+    /// column used by `DataRef::Degree`. Panics on a worker-pool fault —
+    /// recoverable callers (the serve entry loop) use
+    /// [`Executor::try_run`].
     pub fn run(&mut self, x: &Matrix, degree: &Matrix) -> Matrix {
+        self.try_run(x, degree)
+            .unwrap_or_else(|e| panic!("executor fault: {e}"))
+    }
+
+    /// Run the whole program, surfacing worker-pool faults (a panicking
+    /// shard job) as a typed error instead of re-panicking. The executor
+    /// stays fully usable after an `Err`: the pool has healed (fresh
+    /// scratch, respawned threads), the next `try_run` reseeds DRAM, and
+    /// its output is bit-identical to a never-faulted run.
+    pub fn try_run(&mut self, x: &Matrix, degree: &Matrix) -> Result<Matrix, PoolError> {
         self.seed_inputs(x, degree);
         PartitionWalk::new(self.program, self.parts).drive(&mut *self);
-        self.take_output()
+        match self.fault.take() {
+            // The walk ran to completion structurally, but every value
+            // downstream of the failed batch is garbage — discard.
+            Some(e) => Err(e),
+            None => Ok(self.take_output()),
+        }
     }
 
     /// Like [`Executor::run`], additionally recording the walker's
@@ -448,6 +472,9 @@ impl<'a> Executor<'a> {
         let mut traced = Traced::new(&mut *self);
         walk.drive(&mut traced);
         let steps = traced.into_steps();
+        if let Some(e) = self.fault.take() {
+            panic!("executor fault: {e}");
+        }
         (self.take_output(), steps)
     }
 
@@ -470,12 +497,16 @@ impl<'a> Executor<'a> {
         drop(sess.end());
         let mut profile = PhaseProfile::from_spans(&spans);
         profile.pad_groups(self.program.groups.len());
+        if let Some(e) = self.fault.take() {
+            panic!("executor fault: {e}");
+        }
         (self.take_output(), profile)
     }
 
     fn seed_inputs(&mut self, x: &Matrix, degree: &Matrix) {
         assert_eq!(x.rows, self.parts.num_vertices);
         assert_eq!(x.cols as u32, self.program.in_dim);
+        self.fault = None;
         self.dram = vec![None; self.layout.dram];
         self.dram[DataRef::Input.slot()] = Some(x.clone());
         self.dram[DataRef::Degree.slot()] = Some(degree.clone());
@@ -654,19 +685,47 @@ impl<'a> Executor<'a> {
                         i_arg,
                         si as i32,
                     );
+                    // A single relaxed atomic load when disarmed; armed,
+                    // may sleep (`slow_shard`) or panic (`worker_panic`)
+                    // — the chaos tests' deterministic trigger.
+                    faultinject::shard_site(si);
                     env_ref.run_shard(si, ws, w)
                 };
+                let mut fault: Option<PoolError> = None;
                 if pool.is_inline() {
                     // Single-worker mode: the driving thread owns the
                     // scratch outright — no Mutex, no threads — and the
                     // prepare runs after the drain so pool traffic stays
-                    // deterministic.
+                    // deterministic. The per-shard catch mirrors the
+                    // threaded workers': a panicking shard fails the
+                    // batch, not the caller.
                     let t0 = Instant::now();
-                    let ws = pool.inline_scratch();
-                    for k in 0..pending.len() {
-                        outs.push(run(k, 0, &mut *ws));
+                    {
+                        let ws = pool.inline_scratch();
+                        for k in 0..pending.len() {
+                            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || run(k, 0, &mut *ws),
+                            ));
+                            match r {
+                                Ok(out) => outs.push(out),
+                                Err(payload) => {
+                                    fault = Some(PoolError::WorkerPanicked {
+                                        worker: 0,
+                                        shard: k,
+                                        msg: panic_message(&*payload),
+                                    });
+                                    break;
+                                }
+                            }
+                        }
                     }
                     pool.note_inline_batch(pending.len(), t0.elapsed().as_nanos() as u64);
+                    if fault.is_some() {
+                        // The panicking shard may have stranded loaned
+                        // buffers — restart the inline scratch clean.
+                        pool.note_inline_panic();
+                        outs.clear();
+                    }
                     prep_s = timed_prepare(
                         self.program,
                         &mut standby,
@@ -688,7 +747,27 @@ impl<'a> Executor<'a> {
                         bank_mut(&mut self.banks, 0),
                         self.mode,
                     );
-                    ticket.finish(&mut outs);
+                    if let Err(e) = ticket.finish(&mut outs) {
+                        fault = Some(e);
+                    }
+                }
+                if let Some(e) = fault {
+                    // Rewrite the pool's batch position to the canonical
+                    // shard id before surfacing.
+                    let e = match e {
+                        PoolError::WorkerPanicked { worker, shard, msg } => {
+                            PoolError::WorkerPanicked {
+                                worker,
+                                shard: pending[shard],
+                                msg,
+                            }
+                        }
+                        other => other,
+                    };
+                    metrics::counter("exec_worker_panics", 1);
+                    if self.fault.is_none() {
+                        self.fault = Some(e);
+                    }
                 }
             }
             for (&si, out) in pending.iter().zip(outs.drain(..)) {

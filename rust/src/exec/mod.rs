@@ -38,6 +38,12 @@
 //! across the group boundary. [`PipelineMode::Off`] preserves the
 //! strictly sequential order as the golden reference of the pipelining
 //! differential tests.
+//!
+//! Faults are isolated, not fatal: a shard job that panics fails only
+//! its batch — surfaced as a typed [`PoolError`] through
+//! [`Executor::try_run`] — while the pool heals itself (fresh scratch,
+//! respawned worker threads at the same affinity slot) and the executor
+//! stays usable for the next run, bit-identically.
 
 mod executor;
 pub mod kernels;
@@ -49,7 +55,7 @@ pub mod weights;
 
 pub use executor::{Executor, KernelMode, PipelineMode};
 pub use matrix::Matrix;
-pub use pool::PoolStats;
+pub use pool::{PoolError, PoolStats};
 pub use scratch::ScratchStats;
 
 #[cfg(test)]

@@ -31,6 +31,22 @@
 //! single inline [`WorkerScratch`] that the driving thread borrows
 //! directly — no `Mutex`, no channel, nothing on the hot path.
 //!
+//! ## Panic isolation
+//!
+//! A shard job that panics (a kernel bug, a pathological spec, an
+//! injected `worker_panic`) used to poison the batch and **re-panic the
+//! driving thread**, killing whatever owned the executor — for a
+//! serving entry, permanently. Now each shard job runs under
+//! `catch_unwind`: the worker records the failure, replaces its scratch
+//! with a fresh [`WorkerScratch`] (a panic mid-shard can strand loaned
+//! buffers, so the arena restarts clean), and keeps serving later
+//! epochs — counted in [`PoolStats::respawned`]. Only the affected
+//! batch fails, as a typed [`PoolError`] returned by
+//! [`BatchTicket::finish`]. Should a worker thread die anyway (a panic
+//! escaping the per-shard catch), the ticket's wait detects it and the
+//! pool respawns the thread at the same index before returning — the
+//! static shard→worker affinity survives the supervision.
+//!
 //! The one `unsafe` impl in the executor stack lives here: the batch
 //! closure borrows interval-lived state, so its reference is
 //! lifetime-erased to cross the thread boundary. Soundness is the
@@ -47,6 +63,52 @@ use crate::obs::trace;
 
 use super::executor::ShardOut;
 use super::scratch::{ScratchStats, WorkerScratch};
+
+/// Typed batch failure, surfaced by [`BatchTicket::finish`] instead of
+/// the old pool-wide re-panic. The pool itself has already healed
+/// (fresh scratch, respawned thread if needed) by the time the caller
+/// sees this — only the one batch's results are lost.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PoolError {
+    /// A shard job panicked; the owning worker caught it, rebuilt its
+    /// scratch, and kept running. `shard` is the batch position as the
+    /// pool saw it — the executor rewrites it to the canonical shard id.
+    WorkerPanicked {
+        worker: usize,
+        shard: usize,
+        msg: String,
+    },
+    /// A worker thread died outside the per-shard catch; it was joined
+    /// and respawned with fresh scratch at the same index.
+    WorkerDied { worker: usize },
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::WorkerPanicked { worker, shard, msg } => {
+                write!(f, "worker {worker} panicked on shard {shard}: {msg}")
+            }
+            PoolError::WorkerDied { worker } => {
+                write!(f, "worker {worker} died mid-batch (respawned)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// Render a `catch_unwind` payload — almost always the `&str`/`String`
+/// a `panic!` carries.
+pub(super) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// What a batch runs per shard: `(batch position, worker id, scratch)`.
 pub(super) type RunFn<'e> = &'e DynRun<'e>;
@@ -96,11 +158,21 @@ struct State {
     job: Option<Job>,
     /// Participating workers that have not yet signalled completion.
     remaining: usize,
-    /// A worker panicked mid-batch; surfaced by [`BatchTicket`].
+    /// A worker *thread* died mid-batch (panic escaping the per-shard
+    /// catch); surfaced by [`BatchTicket`] and healed by a respawn.
     poisoned: bool,
     shutdown: bool,
     /// One slot per batch position, filled by the owning worker.
     results: Vec<Option<ShardOut>>,
+    /// Caught shard-job panics this batch: `(worker, batch position,
+    /// panic message)`. Non-empty fails the batch with a typed error.
+    failures: Vec<(usize, usize, String)>,
+    /// Per-worker "thread died" flags set by [`DoneGuard`] on the
+    /// unwind path; consumed by the pool's respawn pass.
+    dead: Vec<bool>,
+    /// In-place worker recoveries: caught panics that rebuilt a
+    /// worker's scratch without losing the thread.
+    respawned: u64,
     /// Per-worker return mailboxes (see [`RetBuf`]).
     returns: Vec<Vec<RetBuf>>,
     /// Per-worker scratch-pool counters, refreshed at each batch end.
@@ -117,18 +189,34 @@ struct Shared {
     done: Condvar,
 }
 
+impl Shared {
+    /// The state lock, tolerant of mutex poisoning: a worker that dies
+    /// while holding the lock must not turn every later drain into a
+    /// `PoisonError` panic — the whole point of this module's fault
+    /// story is that one casualty stays one casualty.
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
 /// Decrements `remaining` exactly once per worker per epoch — also on
-/// the panic path, so the publisher unblocks (and sees `poisoned`)
-/// instead of deadlocking.
+/// the panic path, so the publisher unblocks (and sees `poisoned` plus
+/// the worker's `dead` flag) instead of deadlocking.
 struct DoneGuard<'a> {
     shared: &'a Shared,
+    w: usize,
 }
 
 impl Drop for DoneGuard<'_> {
     fn drop(&mut self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.lock();
         if std::thread::panicking() {
+            // Only reachable when a panic escapes the per-shard catch —
+            // this thread is about to die; mark it for respawn.
             st.poisoned = true;
+            st.dead[self.w] = true;
         }
         st.remaining -= 1;
         if st.remaining == 0 {
@@ -142,10 +230,11 @@ fn worker_loop(shared: Arc<Shared>, w: usize, layout: SlotLayout, probe: Arc<()>
     let mut ws = WorkerScratch::new(&layout);
     let mut ret: Vec<RetBuf> = Vec::new();
     let mut outs: Vec<(usize, ShardOut)> = Vec::new();
+    let mut failed: Vec<(usize, String)> = Vec::new();
     let mut seen = 0u64;
     'epochs: loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.lock();
             loop {
                 if st.shutdown {
                     st.stats[w] = ws.stats();
@@ -154,10 +243,15 @@ fn worker_loop(shared: Arc<Shared>, w: usize, layout: SlotLayout, probe: Arc<()>
                 if st.epoch != seen {
                     break;
                 }
-                st = shared.work.wait(st).unwrap();
+                st = shared.work.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
             }
             seen = st.epoch;
-            let job = st.job.expect("epoch published without a job");
+            // A respawned worker joins at whatever epoch the pool is on;
+            // the wait() that healed it has already cleared `job`, so a
+            // stale wake with no job just re-parks.
+            let Some(job) = st.job else {
+                continue 'epochs;
+            };
             if w >= job.width {
                 continue 'epochs;
             }
@@ -169,7 +263,7 @@ fn worker_loop(shared: Arc<Shared>, w: usize, layout: SlotLayout, probe: Arc<()>
         for buf in ret.drain(..) {
             give_back(&mut ws, buf);
         }
-        let done = DoneGuard { shared: &shared };
+        let done = DoneGuard { shared: &shared, w };
         let t0 = Instant::now();
         // SAFETY: see module docs — the pointee outlives this epoch
         // because the publisher blocks until `remaining == 0`, and
@@ -177,7 +271,17 @@ fn worker_loop(shared: Arc<Shared>, w: usize, layout: SlotLayout, probe: Arc<()>
         let run = unsafe { &*job.run.0 };
         let mut k = w;
         while k < job.len {
-            outs.push((k, run(k, w, &mut ws)));
+            // A panicking shard job may have taken buffers from the
+            // scratch pools without returning them, and may have left
+            // pool internals mid-update — rebuild the scratch from the
+            // layout rather than reason about its state.
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(k, w, &mut ws))) {
+                Ok(out) => outs.push((k, out)),
+                Err(payload) => {
+                    failed.push((k, panic_message(&*payload)));
+                    ws = WorkerScratch::new(&layout);
+                }
+            }
             k += job.width;
         }
         let busy = t0.elapsed().as_nanos() as u64;
@@ -186,9 +290,13 @@ fn worker_loop(shared: Arc<Shared>, w: usize, layout: SlotLayout, probe: Arc<()>
         // span buffer to the session before the batch completes.
         trace::flush_thread();
         {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.lock();
             for (k, out) in outs.drain(..) {
                 st.results[k] = Some(out);
+            }
+            st.respawned += failed.len() as u64;
+            for (k, msg) in failed.drain(..) {
+                st.failures.push((w, k, msg));
             }
             st.stats[w] = ws.stats();
             st.busy_ns += busy;
@@ -205,8 +313,15 @@ pub struct PoolStats {
     pub workers: usize,
     /// Threads spawned over the pool's lifetime. Spawning happens once,
     /// in `WorkerPool::new` — this staying constant across runs is the
-    /// "zero thread spawns per interval in steady state" pin.
+    /// "zero thread spawns per interval in steady state" pin (fault
+    /// recovery is the one sanctioned exception, counted in
+    /// `respawned`).
     pub spawned: u64,
+    /// Worker recoveries: caught shard-job panics that rebuilt a
+    /// worker's scratch in place, plus worker threads respawned after a
+    /// panic escaped the per-shard catch. Zero in healthy runs — the
+    /// disarmed-differential chaos test pins that.
+    pub respawned: u64,
     /// Batches published (incl. inline single-worker drains).
     pub batches: u64,
     /// Shards run across all batches.
@@ -255,7 +370,14 @@ pub(super) struct WorkerPool {
     /// `Weak` on it observes the joins (the lifecycle test's "no leaked
     /// threads" probe, race-free under parallel test execution).
     probe: Arc<()>,
+    /// Kept for respawns: a healed worker thread starts from a fresh
+    /// `WorkerScratch` over the same layout.
+    layout: SlotLayout,
     spawned: u64,
+    /// Thread-level respawns performed by [`WorkerPool::heal`] plus
+    /// inline-mode panic recoveries (the in-place scratch rebuilds are
+    /// counted inside `State::respawned`).
+    respawned: u64,
     batches: u64,
     shards: u64,
     max_batch: usize,
@@ -272,7 +394,9 @@ impl WorkerPool {
             inline: WorkerScratch::new(layout),
             max_workers,
             probe: Arc::new(()),
+            layout: *layout,
             spawned: 0,
+            respawned: 0,
             batches: 0,
             shards: 0,
             max_batch: 0,
@@ -288,6 +412,9 @@ impl WorkerPool {
                     poisoned: false,
                     shutdown: false,
                     results: Vec::new(),
+                    failures: Vec::new(),
+                    dead: vec![false; max_workers],
+                    respawned: 0,
                     returns: (0..max_workers).map(|_| Vec::new()).collect(),
                     stats: vec![ScratchStats::default(); max_workers],
                     busy_ns: 0,
@@ -333,6 +460,51 @@ impl WorkerPool {
         self.drain_ns += wall_ns;
     }
 
+    /// Inline-mode recovery: a caught shard panic may have stranded
+    /// loaned buffers, so the inline scratch restarts clean — the same
+    /// treatment a threaded worker gives itself.
+    pub(super) fn note_inline_panic(&mut self) {
+        self.inline = WorkerScratch::new(&self.layout);
+        self.respawned += 1;
+    }
+
+    /// Join and respawn every worker thread whose `dead` flag is set,
+    /// preserving the static shard→worker affinity by reusing the slot
+    /// index. Returns the indices of the workers that died. Called by
+    /// [`BatchTicket::wait`] once the batch has fully drained, so no
+    /// epoch is in flight while threads are replaced.
+    fn heal(&mut self) -> Vec<usize> {
+        let Some(shared) = self.shared.as_ref().map(Arc::clone) else {
+            return Vec::new();
+        };
+        let died: Vec<usize> = {
+            let mut st = shared.lock();
+            let died = (0..st.dead.len()).filter(|&w| st.dead[w]).collect();
+            for d in st.dead.iter_mut() {
+                *d = false;
+            }
+            died
+        };
+        for &w in &died {
+            let old = std::mem::replace(
+                &mut self.handles[w],
+                std::thread::Builder::new()
+                    .name(format!("sb-worker-{w}"))
+                    .spawn({
+                        let sh = Arc::clone(&shared);
+                        let lay = self.layout;
+                        let probe = Arc::clone(&self.probe);
+                        move || worker_loop(sh, w, lay, probe)
+                    })
+                    .expect("respawn pool worker"),
+            );
+            let _ = old.join(); // already dead; reap the panic payload
+            self.spawned += 1;
+            self.respawned += 1;
+        }
+        died
+    }
+
     /// Publish a batch of `len` shards to the worker threads and return
     /// immediately — the caller overlaps its own work (the executor runs
     /// the next interval's prepare) before [`BatchTicket::finish`].
@@ -352,10 +524,11 @@ impl WorkerPool {
             std::mem::transmute::<*const DynRun<'e>, *const DynRun<'static>>(ptr)
         });
         {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.lock();
             debug_assert_eq!(st.remaining, 0, "overlapping batches");
             st.results.clear();
             st.results.resize_with(len, || None);
+            st.failures.clear();
             st.job = Some(Job {
                 run: erased,
                 len,
@@ -369,6 +542,7 @@ impl WorkerPool {
             pool: self,
             t0: Instant::now(),
             waited: false,
+            err: None,
             _run: std::marker::PhantomData,
         }
     }
@@ -385,7 +559,7 @@ impl WorkerPool {
                 }
             }
             Some(sh) => {
-                let mut st = sh.state.lock().unwrap();
+                let mut st = sh.lock();
                 for (w, per) in rets.iter_mut().enumerate() {
                     debug_assert!(per.is_empty() || w < st.returns.len());
                     if w < st.returns.len() {
@@ -401,7 +575,7 @@ impl WorkerPool {
     pub(super) fn scratch_stats(&self) -> ScratchStats {
         let mut s = self.inline.stats();
         if let Some(sh) = &self.shared {
-            let st = sh.state.lock().unwrap();
+            let st = sh.lock();
             for ws in &st.stats {
                 s.merge(*ws);
             }
@@ -410,14 +584,18 @@ impl WorkerPool {
     }
 
     pub(super) fn stats(&self) -> PoolStats {
-        let busy_ns = self.inline_busy_ns
-            + self
-                .shared
-                .as_ref()
-                .map_or(0, |sh| sh.state.lock().unwrap().busy_ns);
+        let (busy, in_place) = self
+            .shared
+            .as_ref()
+            .map_or((0, 0), |sh| {
+                let st = sh.lock();
+                (st.busy_ns, st.respawned)
+            });
+        let busy_ns = self.inline_busy_ns + busy;
         PoolStats {
             workers: self.max_workers,
             spawned: self.spawned,
+            respawned: self.respawned + in_place,
             batches: self.batches,
             shards: self.shards,
             max_batch: self.max_batch,
@@ -438,7 +616,7 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         if let Some(sh) = &self.shared {
-            sh.state.lock().unwrap().shutdown = true;
+            sh.lock().shutdown = true;
             sh.work.notify_all();
         }
         for h in self.handles.drain(..) {
@@ -458,44 +636,71 @@ pub(super) struct BatchTicket<'p, 'e> {
     pool: &'p mut WorkerPool,
     t0: Instant,
     waited: bool,
+    err: Option<PoolError>,
     _run: std::marker::PhantomData<RunFn<'e>>,
 }
 
 impl BatchTicket<'_, '_> {
-    fn wait(&mut self) {
+    /// Block until every participating worker signalled, heal any
+    /// casualties (respawn dead threads at their slot index), and
+    /// return the batch's failure, if any. Idempotent; also runs from
+    /// `Drop` as the soundness backstop.
+    fn wait(&mut self) -> Option<PoolError> {
         if self.waited {
-            return;
+            return self.err.clone();
         }
         self.waited = true;
-        let shared = self.pool.shared.as_ref().expect("ticket without threads");
-        let poisoned = {
-            let mut st = shared.state.lock().unwrap();
+        let shared = Arc::clone(self.pool.shared.as_ref().expect("ticket without threads"));
+        let (mut failures, poisoned) = {
+            let mut st = shared.lock();
             while st.remaining > 0 {
-                st = shared.done.wait(st).unwrap();
+                st = shared
+                    .done
+                    .wait(st)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
             }
             st.job = None;
-            std::mem::take(&mut st.poisoned)
+            (
+                std::mem::take(&mut st.failures),
+                std::mem::take(&mut st.poisoned),
+            )
         };
         self.pool.drain_ns += self.t0.elapsed().as_nanos() as u64;
-        if poisoned && !std::thread::panicking() {
-            panic!("worker pool thread panicked during a batch");
-        }
+        let died = if poisoned { self.pool.heal() } else { Vec::new() };
+        failures.sort_by_key(|f| f.1);
+        self.err = if let Some((worker, shard, msg)) = failures.into_iter().next() {
+            Some(PoolError::WorkerPanicked { worker, shard, msg })
+        } else if poisoned {
+            Some(PoolError::WorkerDied {
+                worker: died.first().copied().unwrap_or(0),
+            })
+        } else {
+            None
+        };
+        self.err.clone()
     }
 
     /// Block until every worker signalled, then move the batch's outputs
-    /// into `out` in canonical batch order.
-    pub(super) fn finish(mut self, out: &mut Vec<ShardOut>) {
-        self.wait();
+    /// into `out` in canonical batch order — or surface the batch's
+    /// failure, discarding its partial results (the pool has already
+    /// healed; the executor owns the retry/report policy).
+    pub(super) fn finish(mut self, out: &mut Vec<ShardOut>) -> Result<(), PoolError> {
+        if let Some(err) = self.wait() {
+            let shared = self.pool.shared.as_ref().expect("ticket without threads");
+            shared.lock().results.clear();
+            return Err(err);
+        }
         let shared = self.pool.shared.as_ref().expect("ticket without threads");
-        let mut st = shared.state.lock().unwrap();
+        let mut st = shared.lock();
         for r in st.results.drain(..) {
             out.push(r.expect("a worker left its batch slot empty"));
         }
+        Ok(())
     }
 }
 
 impl Drop for BatchTicket<'_, '_> {
     fn drop(&mut self) {
-        self.wait();
+        let _ = self.wait();
     }
 }

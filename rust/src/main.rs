@@ -50,10 +50,11 @@ COMMANDS:
               [--scale N] [--requests R] [--verify] [--queue-depth N] [--batch N]
               [--pool-workers W] [--kernel K] [--pipeline P] [--layers N] [--dim D]
               [--config FILE] [--backend native|pjrt]
+              [--inject SPEC] [--deadline-ms N]
               [--bench [--qps N] [--duration S] [--out F]]
               [--trace F] [--metrics F]    persistent inference engine over the
                                            native executor; any zoo/spec model is
-                                           servable (see SERVING)
+                                           servable (see SERVING, RELIABILITY)
     validate  [--scale N] [--layers N] [--dim D] [--model M] [--pipeline on|group|off]
               [--trace F] [--metrics F]    executor-vs-oracle numerics check over the
                                            zoo (or one model / spec file)
@@ -111,6 +112,41 @@ SERVING (serve):
     rejections counted when the engine can't keep up.
     scripts/bench.sh folds the artifact beside BENCH_exec.json and
     scripts/bench_diff.sh gates its p50/p99 keys in CI.
+
+RELIABILITY (serve --inject / --deadline-ms):
+    The serving stack survives a misbehaving model without taking the
+    process — or its neighbor entries — down. A worker-pool panic fails
+    only the in-flight batch (typed `Faulted` errors on its tickets);
+    the pool catches the panic, rebuilds the worker's scratch (thread
+    respawn if needed — PoolStats `respawned`), and the entry rebuilds
+    its warm executor with capped exponential backoff and resumes
+    bit-identically (`serve_entry_restarts`). Persistent faults walk a
+    degradation ladder of bit-identical rungs — configured modes →
+    pipelining off → naive kernel — and finally quarantine the entry:
+    alive, answering typed `Quarantined` rejections (`serve_degraded`,
+    `serve_quarantined`). Stats probes never block behind saturation:
+    a full queue answers a typed `StatsUnavailable`.
+
+    --deadline-ms N  bound every bench request: expired-in-queue
+                 requests are answered `DeadlineExceeded` without
+                 running, and result waits use the same bound; both
+                 count into `serve_timeouts`.
+    --inject SPEC    deterministic fault injection (obs::faultinject),
+                 the chaos tests' driver. SPEC is comma-separated
+                 points `site[@key=val]...` with sites worker_panic |
+                 slow_shard | nonfinite_output | queue_stall and keys
+                 shard=K (worker_panic/slow_shard: fire only on shard
+                 K), skip=N (let N triggers pass first), count=N (fire
+                 at most N times, default 1), delay_ms=N (sleep length
+                 for slow_shard/queue_stall, default 5). Example:
+                 --inject 'worker_panic@shard=0@skip=1' panics the
+                 second visit to shard 0, exercising the whole
+                 recovery path in one bench run; disarmed (no flag),
+                 every injection site is a single relaxed atomic load.
+                 Armed runs print a `serve_faults_injected=` trailer.
+                 Fault/recovery counters (serve_errors, serve_timeouts,
+                 exec_worker_panics, serve_entry_restarts, ...) are
+                 deliberately NOT gated by bench_diff.sh.
 
 PIPELINE (bench/validate --pipeline on|group|off, default on):
     The functional executor overlaps consecutive destination intervals
@@ -236,7 +272,7 @@ const VALUE_OPTS: &[&str] = &[
     "--scale", "--method", "--model", "--model-file", "--sthreads", "--budget", "--objective",
     "--out", "--fig", "--tbl", "--config", "--requests", "--dataset", "--iters", "--workers",
     "--pool-workers", "--layers", "--dim", "--kernel", "--pipeline", "--trace", "--metrics",
-    "--backend", "--queue-depth", "--batch", "--qps", "--duration",
+    "--backend", "--queue-depth", "--batch", "--qps", "--duration", "--inject", "--deadline-ms",
 ];
 
 /// Positional arguments: whatever is not an option or an option's value.
@@ -863,6 +899,25 @@ fn cmd_serve_native(rest: &[String]) -> Result<(), String> {
                     over an empty run)"
             .into());
     }
+    let deadline_ms = match opt_val(rest, "--deadline-ms") {
+        Some(v) => Some(
+            v.parse::<u64>()
+                .map_err(|_| format!("bad --deadline-ms value '{v}'"))?,
+        ),
+        None => None,
+    };
+    // Deterministic fault injection (see RELIABILITY in `--help`): armed
+    // for the whole run; every site is a single atomic load when absent.
+    let injected = match opt_val(rest, "--inject") {
+        Some(spec) => {
+            let plan = switchblade::obs::faultinject::parse(spec)
+                .map_err(|e| format!("bad --inject spec: {e}"))?;
+            eprintln!("fault injection armed: {spec}");
+            switchblade::obs::faultinject::arm(plan);
+            true
+        }
+        None => false,
+    };
     let cfg = EngineConfig {
         queue_depth: opt_u32(rest, "--queue-depth", 64)? as usize,
         batch_max: opt_u32(rest, "--batch", 8)? as usize,
@@ -941,6 +996,7 @@ fn cmd_serve_native(rest: &[String]) -> Result<(), String> {
             qps,
             duration_s: duration,
             requests,
+            deadline_ms,
             ..BenchOptions::default()
         },
     );
@@ -949,7 +1005,7 @@ fn cmd_serve_native(rest: &[String]) -> Result<(), String> {
     // entry's queue, so it reflects everything the run admitted.
     let mut t = Table::new(
         &format!("serve [native] {} scale {scale}", d.full_name()),
-        &["entry", "requests", "batches", "max", "warm ms", "scratch hit%", "pool"],
+        &["entry", "requests", "batches", "max", "warm ms", "scratch hit%", "pool", "health"],
     );
     let mut seen: Vec<EntryId> = Vec::new();
     for id in &ids {
@@ -958,6 +1014,13 @@ fn cmd_serve_native(rest: &[String]) -> Result<(), String> {
         }
         seen.push(*id);
         let st = engine.stats(*id).map_err(|e| e.to_string())?;
+        let health = if st.quarantined {
+            "quarantined".to_string()
+        } else if st.restarts > 0 {
+            format!("{} restarts (rung {})", st.restarts, st.rung)
+        } else {
+            "ok".to_string()
+        };
         t.row(vec![
             engine.info(*id).label.clone(),
             st.requests.to_string(),
@@ -966,6 +1029,7 @@ fn cmd_serve_native(rest: &[String]) -> Result<(), String> {
             ff(st.warm_s * 1e3, 1),
             ff(st.scratch.hit_rate() * 100.0, 1),
             format!("{}w/{}sp", st.pool.workers, st.pool.spawned),
+            health,
         ]);
     }
     t.print();
@@ -978,12 +1042,20 @@ fn cmd_serve_native(rest: &[String]) -> Result<(), String> {
     println!("serve_requests={}", report.completed);
     println!("serve_rejected={}", report.rejected);
     println!("serve_errors={}", report.errors);
+    println!("serve_timeouts={}", report.timeouts);
     println!("serve_qps={:.1}", report.qps());
     println!("serve_p50_ms={:.3}", report.p50() * 1e3);
     println!("serve_p95_ms={:.3}", report.p95() * 1e3);
     println!("serve_p99_ms={:.3}", report.p99() * 1e3);
     if verified {
         println!("serve_verified=ok");
+    }
+    if injected {
+        println!(
+            "serve_faults_injected={}",
+            switchblade::obs::faultinject::fired_total()
+        );
+        switchblade::obs::faultinject::disarm();
     }
 
     if has_flag(rest, "--bench") {

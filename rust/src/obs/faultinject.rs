@@ -1,0 +1,395 @@
+//! Deterministic fault injection — the chaos half of the reliability
+//! layer.
+//!
+//! Production failures (a kernel panic on one worker, a stalled entry
+//! thread, a model emitting NaN) are rare and racy; reproducing them in
+//! a test requires making them *deterministic*. This module plants
+//! named, site-addressed injection points at the seams the recovery
+//! machinery defends — the worker pool's shard jobs, the serving
+//! entry's batch loop, the output finite-check — and fires them on a
+//! schedule fixed entirely by the armed [`Plan`]: which [`Site`], at
+//! which shard, after how many eligible passes (`skip`), how many times
+//! (`count`). Same plan + same workload → same failure, every run.
+//!
+//! ## Cost when disarmed
+//!
+//! The process-wide injector is **disarmed by default** and every hook
+//! is a single relaxed atomic load in that state — no lock, no clock,
+//! no allocation. `rust/tests/integration_chaos.rs` pins the behavioral
+//! half of that claim (bit-identical outputs, zero new scratch misses,
+//! zero fires) the same way `untraced_run_records_nothing` pins the
+//! disabled tracer.
+//!
+//! ## Grammar (CLI `--inject`, also [`parse`])
+//!
+//! Comma-separated points, each `site[@key=value]...`:
+//!
+//! ```text
+//! worker_panic@shard=3            panic the worker running shard 3
+//! worker_panic@shard=0@skip=1     ...skipping the first pass (the warm-up)
+//! slow_shard@shard=2@delay_ms=30  sleep 30ms inside shard 2's job
+//! nonfinite_output@count=2        poison the next two responses with NaN
+//! queue_stall@delay_ms=50         stall the entry loop 50ms per batch
+//! ```
+//!
+//! Keys: `shard` (shard-addressed sites only), `skip` (eligible passes
+//! to let through first, default 0), `count` (fires before the point
+//! exhausts, default 1), `delay_ms` (sleep sites, default 5).
+//!
+//! The module is zero-dependency and process-global: [`arm`] installs a
+//! plan, [`disarm`] removes it, and each site's hook ([`shard_site`],
+//! [`poison_output`], [`queue_stall`]) consults the plan only while one
+//! is armed. Tests that arm the injector must serialize against each
+//! other (the chaos integration suite holds a lock for exactly this).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Where a fault can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Panic inside a worker-pool shard job (shard-addressed) — the
+    /// scenario the panic-isolated pool and self-healing serve entries
+    /// exist for.
+    WorkerPanic,
+    /// Sleep inside a shard job (shard-addressed): a straggler worker.
+    SlowShard,
+    /// Overwrite the first element of a response with NaN: a
+    /// misbehaving model, exercising the typed `NonFinite` path.
+    NonFiniteOutput,
+    /// Sleep the serving entry loop at the top of a batch: a stalled
+    /// consumer, exercising admission control and request deadlines.
+    QueueStall,
+}
+
+impl Site {
+    fn parse(s: &str) -> Result<Site, String> {
+        match s {
+            "worker_panic" => Ok(Site::WorkerPanic),
+            "slow_shard" => Ok(Site::SlowShard),
+            "nonfinite_output" => Ok(Site::NonFiniteOutput),
+            "queue_stall" => Ok(Site::QueueStall),
+            other => Err(format!(
+                "inject: unknown site '{other}' \
+                 (worker_panic|slow_shard|nonfinite_output|queue_stall)"
+            )),
+        }
+    }
+
+    /// The grammar spelling, for error messages and trailers.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Site::WorkerPanic => "worker_panic",
+            Site::SlowShard => "slow_shard",
+            Site::NonFiniteOutput => "nonfinite_output",
+            Site::QueueStall => "queue_stall",
+        }
+    }
+}
+
+/// One armed injection point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Point {
+    pub site: Site,
+    /// Shard address for shard-level sites; a `None` matches any shard.
+    pub shard: Option<usize>,
+    /// Eligible passes to let through unharmed before the first fire.
+    pub skip: u64,
+    /// Fires before the point exhausts.
+    pub count: u64,
+    /// Sleep length for `slow_shard` / `queue_stall`.
+    pub delay_ms: u64,
+}
+
+/// A full injection schedule: every point, evaluated independently.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Plan {
+    points: Vec<Point>,
+}
+
+impl Plan {
+    pub fn points(&self) -> &[Point] {
+        &self.points
+    }
+}
+
+/// Parse the `--inject` grammar (see the module docs).
+pub fn parse(s: &str) -> Result<Plan, String> {
+    let mut points = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let mut it = part.split('@');
+        let site = Site::parse(it.next().unwrap_or(""))?;
+        let mut p = Point {
+            site,
+            shard: None,
+            skip: 0,
+            count: 1,
+            delay_ms: 5,
+        };
+        for kv in it {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("inject: '{kv}' is not key=value"))?;
+            let num = || {
+                v.parse::<u64>()
+                    .map_err(|_| format!("inject: bad value '{v}' for '{k}'"))
+            };
+            match k {
+                "shard" => p.shard = Some(num()? as usize),
+                "skip" => p.skip = num()?,
+                "count" => p.count = num()?,
+                "delay_ms" => p.delay_ms = num()?,
+                other => {
+                    return Err(format!(
+                        "inject: unknown key '{other}' (shard|skip|count|delay_ms)"
+                    ))
+                }
+            }
+        }
+        points.push(p);
+    }
+    if points.is_empty() {
+        return Err("inject: empty plan".into());
+    }
+    Ok(Plan { points })
+}
+
+/// A point plus its firing history.
+struct PointState {
+    point: Point,
+    /// Eligible passes observed (matched site + address).
+    seen: u64,
+    /// Times this point has fired.
+    fired: u64,
+}
+
+/// The single disarmed-path cost: one relaxed load of this flag.
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// Total fires across every point since process start (monotone — not
+/// reset by [`disarm`], so tests can diff across a window).
+static FIRED: AtomicU64 = AtomicU64::new(0);
+static PLAN: Mutex<Option<Vec<PointState>>> = Mutex::new(None);
+
+fn plan_lock() -> std::sync::MutexGuard<'static, Option<Vec<PointState>>> {
+    // A panic between lock and unlock (worker_panic fires *outside* the
+    // lock, but stay defensive) must not poison every later hook.
+    PLAN.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Install `plan` process-wide, replacing any previous one. Firing
+/// history restarts from zero.
+pub fn arm(plan: Plan) {
+    let states = plan
+        .points
+        .into_iter()
+        .map(|point| PointState {
+            point,
+            seen: 0,
+            fired: 0,
+        })
+        .collect();
+    *plan_lock() = Some(states);
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Remove the armed plan; every hook returns to the one-atomic-load
+/// fast path.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    *plan_lock() = None;
+}
+
+/// Whether a plan is armed (one relaxed atomic load).
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Total injected faults since process start.
+pub fn fired_total() -> u64 {
+    FIRED.load(Ordering::Relaxed)
+}
+
+/// Evaluate `site` at `shard` against the armed plan; returns the fired
+/// point. Each matching point's `seen` advances whether or not it
+/// fires, so `skip`/`count` schedules are exact.
+fn check(site: Site, shard: Option<usize>) -> Option<Point> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut g = plan_lock();
+    let states = g.as_mut()?;
+    for ps in states.iter_mut() {
+        if ps.point.site != site {
+            continue;
+        }
+        match (ps.point.shard, shard) {
+            (Some(want), Some(got)) if want != got => continue,
+            (Some(_), None) => continue,
+            _ => {}
+        }
+        ps.seen += 1;
+        if ps.seen <= ps.point.skip || ps.fired >= ps.point.count {
+            continue;
+        }
+        ps.fired += 1;
+        FIRED.fetch_add(1, Ordering::Relaxed);
+        return Some(ps.point.clone());
+    }
+    None
+}
+
+/// Shard-level hook, called by the executor at the top of every shard
+/// job (on the owning pool worker, or inline on the driving thread).
+/// May sleep (`slow_shard`) and then panic (`worker_panic`) when an
+/// armed point fires; both are caught and typed by the pool's panic
+/// isolation.
+pub fn shard_site(shard: usize) {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(p) = check(Site::SlowShard, Some(shard)) {
+        std::thread::sleep(Duration::from_millis(p.delay_ms));
+    }
+    if check(Site::WorkerPanic, Some(shard)).is_some() {
+        panic!("fault injected: worker_panic@shard={shard}");
+    }
+}
+
+/// Response-poisoning hook: overwrite the first element with NaN when a
+/// `nonfinite_output` point fires. Returns whether it did.
+pub fn poison_output(out: &mut [f32]) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    if check(Site::NonFiniteOutput, None).is_some() {
+        if let Some(v) = out.first_mut() {
+            *v = f32::NAN;
+            return true;
+        }
+    }
+    false
+}
+
+/// Entry-loop stall hook, called at the top of every serving batch.
+pub fn queue_stall() {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(p) = check(Site::QueueStall, None) {
+        std::thread::sleep(Duration::from_millis(p.delay_ms));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+    /// Unit tests share the process with every other `cargo test`
+    /// thread, so (a) they serialize among themselves, and (b) they
+    /// only arm shard-addressed points at an address no real workload
+    /// reaches — arming an unaddressed `worker_panic` here would fault
+    /// a concurrently running executor test.
+    const FAR: usize = usize::MAX - 1;
+
+    fn serial() -> MutexGuard<'static, ()> {
+        static L: OnceLock<Mutex<()>> = OnceLock::new();
+        L.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+
+    struct DisarmOnDrop;
+    impl Drop for DisarmOnDrop {
+        fn drop(&mut self) {
+            disarm();
+        }
+    }
+
+    #[test]
+    fn grammar_round_trips() {
+        let plan = parse("worker_panic@shard=3@skip=1,slow_shard@shard=2@delay_ms=30@count=4")
+            .unwrap();
+        assert_eq!(
+            plan.points(),
+            &[
+                Point {
+                    site: Site::WorkerPanic,
+                    shard: Some(3),
+                    skip: 1,
+                    count: 1,
+                    delay_ms: 5,
+                },
+                Point {
+                    site: Site::SlowShard,
+                    shard: Some(2),
+                    skip: 0,
+                    count: 4,
+                    delay_ms: 30,
+                },
+            ]
+        );
+    }
+
+    #[test]
+    fn grammar_rejects_unknowns() {
+        assert!(parse("").is_err());
+        assert!(parse("explode").is_err());
+        assert!(parse("worker_panic@shard").is_err());
+        assert!(parse("worker_panic@color=red").is_err());
+        assert!(parse("worker_panic@shard=x").is_err());
+    }
+
+    #[test]
+    fn disarmed_hooks_observe_and_record_nothing() {
+        let _s = serial();
+        assert!(!armed());
+        let before = fired_total();
+        shard_site(0);
+        let mut out = [1.0f32];
+        assert!(!poison_output(&mut out));
+        assert_eq!(out[0], 1.0);
+        queue_stall();
+        assert_eq!(fired_total(), before);
+    }
+
+    #[test]
+    fn skip_and_count_schedule_is_exact() {
+        let _s = serial();
+        let _d = DisarmOnDrop;
+        // delay_ms=0: fires are observable yet harmless even if another
+        // test somehow addressed the same shard.
+        arm(parse(&format!("slow_shard@shard={FAR}@skip=2@count=2@delay_ms=0")).unwrap());
+        let before = fired_total();
+        for _ in 0..2 {
+            assert!(check(Site::SlowShard, Some(FAR)).is_none(), "skipped pass fired");
+        }
+        assert!(check(Site::SlowShard, Some(FAR)).is_some());
+        assert!(check(Site::SlowShard, Some(FAR)).is_some());
+        assert!(check(Site::SlowShard, Some(FAR)).is_none(), "exhausted point fired");
+        assert_eq!(fired_total() - before, 2);
+    }
+
+    #[test]
+    fn shard_addressing_is_respected() {
+        let _s = serial();
+        let _d = DisarmOnDrop;
+        arm(parse(&format!("slow_shard@shard={FAR}@delay_ms=0")).unwrap());
+        assert!(check(Site::SlowShard, Some(FAR - 1)).is_none());
+        assert!(check(Site::SlowShard, None).is_none());
+        // Misses must not consume the schedule.
+        assert!(check(Site::SlowShard, Some(FAR)).is_some());
+    }
+
+    #[test]
+    fn rearm_resets_history() {
+        let _s = serial();
+        let _d = DisarmOnDrop;
+        arm(parse(&format!("slow_shard@shard={FAR}@delay_ms=0")).unwrap());
+        assert!(check(Site::SlowShard, Some(FAR)).is_some());
+        assert!(check(Site::SlowShard, Some(FAR)).is_none());
+        arm(parse(&format!("slow_shard@shard={FAR}@delay_ms=0")).unwrap());
+        assert!(check(Site::SlowShard, Some(FAR)).is_some());
+    }
+}

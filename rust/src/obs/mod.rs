@@ -1,6 +1,7 @@
-//! Observability: structured tracing + metrics for the whole pipeline.
+//! Observability: structured tracing, metrics, and deterministic fault
+//! injection for the whole pipeline.
 //!
-//! Two independent halves, both zero-dependency:
+//! Three independent pieces, all zero-dependency:
 //!
 //! * [`trace`] — a lightweight span recorder. Code anywhere in the crate
 //!   brackets work in [`trace::span`] guards; when a [`trace::Session`]
@@ -14,6 +15,13 @@
 //!   and histograms with JSON and Prometheus-text exporters. The
 //!   single source for `scripts/bench.sh`'s `BENCH_exec.json` and the
 //!   `bench_diff.sh` perf-regression gate.
+//! * [`faultinject`] — seeded, site-addressed fault injection
+//!   (`worker_panic@shard=k`, `slow_shard`, `nonfinite_output`,
+//!   `queue_stall`), armed via `--inject` / [`faultinject::arm`] and a
+//!   single relaxed atomic load when disarmed. The deterministic driver
+//!   of the reliability layer's chaos tests: the panic-isolated worker
+//!   pool and the self-healing serve entries are exercised on a fixed,
+//!   reproducible schedule instead of by luck.
 //!
 //! The CLI wires both: `bench` / `simulate` / `validate` / `serve`
 //! accept `--trace out.json` and `--metrics out.json`.
@@ -24,5 +32,6 @@
 //! drives the walk, and folds the recorded walk spans into the familiar
 //! per-(group, phase) table.
 
+pub mod faultinject;
 pub mod metrics;
 pub mod trace;

@@ -96,6 +96,10 @@ pub mod names {
     /// One serving micro-batch (engine entry lane; `shard` carries the
     /// batch size) — request spans nest under it.
     pub const BATCH: &str = "batch";
+    /// A serve entry rebuilding its warm executor after an executor
+    /// fault (engine entry lane; `interval` carries the restart count,
+    /// `shard` the degradation rung).
+    pub const RECOVER: &str = "recover";
 }
 
 /// Span categories (Chrome `cat`, filterable in the viewer).

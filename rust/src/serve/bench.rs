@@ -30,6 +30,11 @@ pub struct BenchOptions {
     /// Closed-loop in-flight window (keep it <= the engine's queue
     /// depth or the closed loop will trip its own admission control).
     pub window: usize,
+    /// Per-request deadline, milliseconds; `None` = unbounded waits.
+    /// Set, each request is submitted with a queue deadline and settled
+    /// with `Ticket::wait_timeout` — expiries count as `timeouts`, not
+    /// errors.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for BenchOptions {
@@ -39,6 +44,7 @@ impl Default for BenchOptions {
             duration_s: 2.0,
             requests: 64,
             window: 4,
+            deadline_ms: None,
         }
     }
 }
@@ -58,6 +64,9 @@ pub struct BenchReport {
     pub rejected: u64,
     /// Requests that failed with a typed per-request error.
     pub errors: u64,
+    /// Requests that exceeded their deadline (queue-side expiry or
+    /// `wait_timeout`); only non-zero when `deadline_ms` is set.
+    pub timeouts: u64,
     /// Sojourn times (queue wait + execution), seconds, sorted.
     lat: Vec<f64>,
 }
@@ -70,6 +79,7 @@ impl BenchReport {
         mut lat: Vec<f64>,
         rejected: u64,
         errors: u64,
+        timeouts: u64,
     ) -> Self {
         lat.sort_by(|a, b| a.total_cmp(b));
         BenchReport {
@@ -79,6 +89,7 @@ impl BenchReport {
             completed: lat.len() as u64,
             rejected,
             errors,
+            timeouts,
             lat,
         }
     }
@@ -144,6 +155,7 @@ impl BenchReport {
             "{{\n  \"serve_mode\": \"{}\",\n  \"serve_offered_qps\": {:.3},\n  \
              \"serve_wall_s\": {:.6},\n  \"serve_requests\": {},\n  \
              \"serve_rejected\": {},\n  \"serve_errors\": {},\n  \
+             \"serve_timeouts\": {},\n  \
              \"serve_qps\": {:.3},\n  \"serve_mean_ms\": {:.6},\n  \
              \"serve_p50_ms\": {:.6},\n  \"serve_p95_ms\": {:.6},\n  \
              \"serve_p99_ms\": {:.6}\n}}\n",
@@ -153,6 +165,7 @@ impl BenchReport {
             self.completed,
             self.rejected,
             self.errors,
+            self.timeouts,
             self.qps(),
             self.mean() * 1e3,
             self.p50() * 1e3,
@@ -170,6 +183,9 @@ impl BenchReport {
         t.row(vec!["completed".into(), self.completed.to_string()]);
         t.row(vec!["rejected".into(), self.rejected.to_string()]);
         t.row(vec!["errors".into(), self.errors.to_string()]);
+        if self.timeouts > 0 {
+            t.row(vec!["timeouts".into(), self.timeouts.to_string()]);
+        }
         t.row(vec!["throughput".into(), format!("{:.1} req/s", self.qps())]);
         t.row(vec!["p50 latency".into(), format!("{:.3} ms", self.p50() * 1e3)]);
         t.row(vec!["p95 latency".into(), format!("{:.3} ms", self.p95() * 1e3)]);
@@ -179,10 +195,33 @@ impl BenchReport {
     }
 }
 
-fn settle(t: Ticket, lat: &mut Vec<f64>, errors: &mut u64) {
-    match t.wait() {
+fn settle(
+    t: Ticket,
+    deadline: Option<Duration>,
+    lat: &mut Vec<f64>,
+    errors: &mut u64,
+    timeouts: &mut u64,
+) {
+    let r = match deadline {
+        Some(d) => t.wait_timeout(d),
+        None => t.wait(),
+    };
+    match r {
         Ok(r) => lat.push(r.wait_s + r.exec_s),
+        Err(ServeError::DeadlineExceeded { .. }) => *timeouts += 1,
         Err(_) => *errors += 1,
+    }
+}
+
+fn submit(
+    engine: &Engine,
+    id: EntryId,
+    seed: u64,
+    deadline: Option<Duration>,
+) -> Result<Ticket, ServeError> {
+    match deadline {
+        Some(d) => engine.submit_seeded_deadline(id, seed, d),
+        None => engine.submit_seeded(id, seed),
     }
 }
 
@@ -201,17 +240,18 @@ pub fn run_bench(engine: &Engine, ids: &[EntryId], opts: &BenchOptions) -> Bench
 fn closed_loop(engine: &Engine, ids: &[EntryId], opts: &BenchOptions) -> BenchReport {
     let requests = opts.requests.max(1);
     let window = opts.window.max(1);
+    let dl = opts.deadline_ms.map(Duration::from_millis);
     let mut lat = Vec::with_capacity(requests);
-    let (mut rejected, mut errors) = (0u64, 0u64);
+    let (mut rejected, mut errors, mut timeouts) = (0u64, 0u64, 0u64);
     let mut inflight: VecDeque<Ticket> = VecDeque::with_capacity(window);
     let t0 = Instant::now();
     for r in 0..requests {
-        match engine.submit_seeded(ids[r % ids.len()], r as u64) {
+        match submit(engine, ids[r % ids.len()], r as u64, dl) {
             Ok(t) => {
                 inflight.push_back(t);
                 if inflight.len() >= window {
                     let t = inflight.pop_front().expect("window bound just checked");
-                    settle(t, &mut lat, &mut errors);
+                    settle(t, dl, &mut lat, &mut errors, &mut timeouts);
                 }
             }
             Err(ServeError::Rejected { .. }) => rejected += 1,
@@ -219,17 +259,26 @@ fn closed_loop(engine: &Engine, ids: &[EntryId], opts: &BenchOptions) -> BenchRe
         }
     }
     while let Some(t) = inflight.pop_front() {
-        settle(t, &mut lat, &mut errors);
+        settle(t, dl, &mut lat, &mut errors, &mut timeouts);
     }
-    BenchReport::from_parts("closed", 0.0, t0.elapsed().as_secs_f64(), lat, rejected, errors)
+    BenchReport::from_parts(
+        "closed",
+        0.0,
+        t0.elapsed().as_secs_f64(),
+        lat,
+        rejected,
+        errors,
+        timeouts,
+    )
 }
 
 fn open_loop(engine: &Engine, ids: &[EntryId], opts: &BenchOptions) -> BenchReport {
     let interval = Duration::from_secs_f64(1.0 / opts.qps);
     let deadline = Duration::from_secs_f64(opts.duration_s.max(1e-3));
+    let dl = opts.deadline_ms.map(Duration::from_millis);
     let mut tickets = Vec::new();
     let mut lat = Vec::new();
-    let (mut rejected, mut errors) = (0u64, 0u64);
+    let (mut rejected, mut errors, mut timeouts) = (0u64, 0u64, 0u64);
     let t0 = Instant::now();
     let mut r: u32 = 0;
     loop {
@@ -243,7 +292,7 @@ fn open_loop(engine: &Engine, ids: &[EntryId], opts: &BenchOptions) -> BenchRepo
         if target > now {
             std::thread::sleep(target - now);
         }
-        match engine.submit_seeded(ids[r as usize % ids.len()], r as u64) {
+        match submit(engine, ids[r as usize % ids.len()], r as u64, dl) {
             Ok(t) => tickets.push(t),
             Err(ServeError::Rejected { .. }) => rejected += 1,
             Err(_) => errors += 1,
@@ -251,7 +300,7 @@ fn open_loop(engine: &Engine, ids: &[EntryId], opts: &BenchOptions) -> BenchRepo
         r += 1;
     }
     for t in tickets {
-        settle(t, &mut lat, &mut errors);
+        settle(t, dl, &mut lat, &mut errors, &mut timeouts);
     }
     BenchReport::from_parts(
         "open",
@@ -260,6 +309,7 @@ fn open_loop(engine: &Engine, ids: &[EntryId], opts: &BenchOptions) -> BenchRepo
         lat,
         rejected,
         errors,
+        timeouts,
     )
 }
 
@@ -268,7 +318,7 @@ mod tests {
     use super::*;
 
     fn report(lat: Vec<f64>) -> BenchReport {
-        BenchReport::from_parts("closed", 0.0, 1.0, lat, 2, 1)
+        BenchReport::from_parts("closed", 0.0, 1.0, lat, 2, 1, 0)
     }
 
     #[test]
@@ -311,6 +361,7 @@ mod tests {
             "\"serve_requests\":",
             "\"serve_rejected\": 2",
             "\"serve_errors\": 1",
+            "\"serve_timeouts\": 0",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }

@@ -23,13 +23,33 @@
 //! answers on a per-request reply channel held by the caller's
 //! [`Ticket`]. A request that produces non-finite output fails alone
 //! ([`ServeError::NonFinite`], counted in `serve_errors`) — the engine
-//! keeps serving.
+//! keeps serving. Callers that need bounded waits attach a deadline
+//! ([`Engine::submit_deadline`] / [`Ticket::wait_timeout`]); a request
+//! whose deadline passes while it queues is answered
+//! [`ServeError::DeadlineExceeded`] without running, counted in
+//! `serve_timeouts`.
+//!
+//! ## Supervised recovery
+//!
+//! A worker-pool fault (a panicking shard job — see
+//! [`exec::PoolError`](crate::exec::PoolError)) used to kill the entry
+//! thread forever: every later request got `EngineDown` until process
+//! restart. Now the entry loop *supervises* its executor: a fault fails
+//! only the in-flight batch's tickets (typed [`ServeError::Faulted`]),
+//! then the warm executor is dropped and rebuilt — with capped
+//! exponential backoff — and serving resumes bit-identically
+//! (`serve_entry_restarts`). Repeated faults walk a degradation ladder
+//! whose rungs are all bit-identical by construction: configured modes →
+//! pipelining off → naive kernel — and, exhausted, the entry is
+//! *quarantined* (`serve_degraded` / `serve_quarantined`): it stays
+//! alive and answers every request with a typed
+//! [`ServeError::Quarantined`] instead of dying silently.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::compiler::compile;
 use crate::coordinator::degree_column;
@@ -37,7 +57,7 @@ use crate::exec::{weights, Executor, KernelMode, Matrix, PipelineMode, PoolStats
 use crate::graph::Csr;
 use crate::ir::spec::{ModelDims, ModelSpec};
 use crate::ir::IrGraph;
-use crate::obs::{metrics, trace};
+use crate::obs::{faultinject, metrics, trace};
 use crate::partition::Method;
 use crate::sim::AcceleratorConfig;
 
@@ -64,6 +84,13 @@ pub struct EngineConfig {
     pub accel: AcceleratorConfig,
     /// Partitioning method entries are built with.
     pub method: Method,
+    /// Consecutive executor faults before an entry descends one rung of
+    /// the degradation ladder (configured modes → pipelining off → naive
+    /// kernel → quarantined). Clamped to ≥ 1.
+    pub fault_threshold: u32,
+    /// Cap on the exponential backoff (milliseconds) between an
+    /// executor fault and the rebuild.
+    pub max_backoff_ms: u64,
 }
 
 impl Default for EngineConfig {
@@ -76,6 +103,8 @@ impl Default for EngineConfig {
             pipeline: PipelineMode::default(),
             accel: AcceleratorConfig::switchblade(),
             method: Method::Fggp,
+            fault_threshold: 3,
+            max_backoff_ms: 100,
         }
     }
 }
@@ -96,6 +125,22 @@ pub enum ServeError {
     /// one request fails and the error lands in the `serve_errors`
     /// metric.
     NonFinite { entry: String, seq: u64 },
+    /// The executor faulted (a worker-pool panic) while this request's
+    /// batch was in flight. Only the in-flight batch fails this way; the
+    /// entry rebuilds its warm executor and keeps serving
+    /// (`serve_entry_restarts`).
+    Faulted { entry: String, seq: u64, cause: String },
+    /// The request's deadline passed — either while it queued (the entry
+    /// skips execution and answers this) or in [`Ticket::wait_timeout`].
+    /// Counted in `serve_timeouts`.
+    DeadlineExceeded { entry: String, seq: u64 },
+    /// The control-plane stats probe could not be admitted because the
+    /// entry's queue is saturated — a typed "alive but busy", so health
+    /// checks degrade gracefully exactly when traffic peaks.
+    StatsUnavailable { entry: String },
+    /// The entry exhausted its degradation ladder (persistent faults)
+    /// and now rejects all work with this typed answer instead of dying.
+    Quarantined { entry: String, seq: u64 },
     /// The entry's thread is gone (engine shutting down).
     EngineDown { entry: String },
 }
@@ -111,6 +156,18 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::NonFinite { entry, seq } => {
                 write!(f, "{entry}: request {seq} produced non-finite output")
+            }
+            ServeError::Faulted { entry, seq, cause } => {
+                write!(f, "{entry}: request {seq} lost to an executor fault — {cause}")
+            }
+            ServeError::DeadlineExceeded { entry, seq } => {
+                write!(f, "{entry}: request {seq} exceeded its deadline")
+            }
+            ServeError::StatsUnavailable { entry } => {
+                write!(f, "{entry}: stats probe rejected — queue saturated")
+            }
+            ServeError::Quarantined { entry, seq } => {
+                write!(f, "{entry}: request {seq} rejected — entry quarantined after persistent faults")
             }
             ServeError::EngineDown { entry } => {
                 write!(f, "{entry}: engine is shutting down")
@@ -177,6 +234,26 @@ impl Ticket {
             Err(_) => Err(ServeError::EngineDown { entry: self.entry }),
         }
     }
+
+    /// Bounded wait: [`ServeError::DeadlineExceeded`] (counted in
+    /// `serve_timeouts`) if no reply lands within `timeout`. The request
+    /// itself keeps running; its eventual reply is discarded with the
+    /// ticket — the entry's `try_send` to a dropped receiver is a no-op.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Response, ServeError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                metrics::counter("serve_timeouts", 1);
+                Err(ServeError::DeadlineExceeded {
+                    entry: self.entry,
+                    seq: self.seq,
+                })
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(ServeError::EngineDown { entry: self.entry })
+            }
+        }
+    }
 }
 
 /// Counters snapshotted from a live entry via [`Engine::stats`].
@@ -192,7 +269,21 @@ pub struct EntryStats {
     pub errors: u64,
     /// Submissions rejected by admission control (counted engine-side).
     pub rejected: u64,
-    /// One-time compile + partition + warm-up cost, seconds.
+    /// Executor faults survived (each fails one in-flight batch).
+    pub faults: u64,
+    /// Requests answered `DeadlineExceeded` at dequeue (expired while
+    /// queued; `Ticket::wait_timeout` timeouts are counted caller-side).
+    pub timeouts: u64,
+    /// Warm-executor rebuilds after faults (`serve_entry_restarts`).
+    pub restarts: u64,
+    /// Current degradation rung: 0 = configured modes, 1 = pipelining
+    /// off, 2 = naive kernel, 3 = quarantined. Every serving rung is
+    /// bit-identical — degradation sheds machinery, not accuracy.
+    pub rung: u32,
+    /// True once the entry only answers [`ServeError::Quarantined`].
+    pub quarantined: bool,
+    /// One-time compile + partition + warm-up cost, seconds (summed
+    /// across fault-recovery rebuilds).
     pub warm_s: f64,
     /// The warm executor's scratch-pool counters — `misses` staying
     /// flat across requests is the "steady state allocates nothing" pin.
@@ -214,6 +305,9 @@ struct InferJob {
     seq: u64,
     x: Matrix,
     enq: Instant,
+    /// Absolute deadline; a job dequeued past it is answered
+    /// `DeadlineExceeded` without running.
+    deadline: Option<Instant>,
     reply: mpsc::SyncSender<Result<Response, ServeError>>,
 }
 
@@ -309,6 +403,29 @@ impl Engine {
     /// Submit a feature matrix for inference. Non-blocking: a full
     /// queue returns [`ServeError::Rejected`] immediately.
     pub fn submit(&self, id: EntryId, x: Matrix) -> Result<Ticket, ServeError> {
+        self.submit_inner(id, x, None)
+    }
+
+    /// Like [`Engine::submit`], with a queue-wait bound: if the request
+    /// is still queued when `deadline` has elapsed, the entry answers
+    /// [`ServeError::DeadlineExceeded`] without running it (counted in
+    /// `serve_timeouts`). Pair with [`Ticket::wait_timeout`] for a
+    /// fully bounded round trip.
+    pub fn submit_deadline(
+        &self,
+        id: EntryId,
+        x: Matrix,
+        deadline: Duration,
+    ) -> Result<Ticket, ServeError> {
+        self.submit_inner(id, x, Some(Instant::now() + deadline))
+    }
+
+    fn submit_inner(
+        &self,
+        id: EntryId,
+        x: Matrix,
+        deadline: Option<Instant>,
+    ) -> Result<Ticket, ServeError> {
         let e = &self.entries[id.0];
         let entry = e.info.label.clone();
         if x.rows != e.info.vertices || x.cols != e.info.in_dim {
@@ -330,6 +447,7 @@ impl Engine {
             seq,
             x,
             enq: Instant::now(),
+            deadline,
             reply,
         })) {
             Ok(()) => Ok(Ticket { rx, entry, seq }),
@@ -355,8 +473,24 @@ impl Engine {
         self.submit(id, x)
     }
 
-    /// Blocking stats probe: queues a control message behind everything
-    /// already admitted and waits for the entry's answer.
+    /// [`Engine::submit_seeded`] with a deadline (see
+    /// [`Engine::submit_deadline`]).
+    pub fn submit_seeded_deadline(
+        &self,
+        id: EntryId,
+        seed: u64,
+        deadline: Duration,
+    ) -> Result<Ticket, ServeError> {
+        let info = &self.entries[id.0].info;
+        let x = weights::init_features(seed, info.vertices, info.in_dim);
+        self.submit_deadline(id, x, deadline)
+    }
+
+    /// Stats probe through the entry's queue (so it observes every
+    /// request admitted before it). Non-blocking admission: a saturated
+    /// queue answers a typed [`ServeError::StatsUnavailable`] instead of
+    /// blocking the health check behind user traffic — "saturated but
+    /// alive" is itself the answer.
     pub fn stats(&self, id: EntryId) -> Result<EntryStats, ServeError> {
         let e = &self.entries[id.0];
         let entry = e.info.label.clone();
@@ -365,11 +499,26 @@ impl Engine {
             .as_ref()
             .ok_or_else(|| ServeError::EngineDown { entry: entry.clone() })?;
         let (tx, rx) = mpsc::sync_channel(1);
-        q.push(Job::Stats(tx))
-            .map_err(|_| ServeError::EngineDown { entry: entry.clone() })?;
+        match q.submit(Job::Stats(tx)) {
+            Ok(()) => {}
+            Err(SubmitError::Full(_)) => {
+                return Err(ServeError::StatsUnavailable { entry });
+            }
+            Err(SubmitError::Closed(_)) => return Err(ServeError::EngineDown { entry }),
+        }
         let mut st = rx.recv().map_err(|_| ServeError::EngineDown { entry })?;
         st.rejected = e.rejected.load(Ordering::Relaxed);
         Ok(st)
+    }
+
+    /// Begin shutdown: close every submission queue, so each entry loop
+    /// drains its residue and exits, and every later submit gets a typed
+    /// [`ServeError::EngineDown`] instead of racing the teardown.
+    /// Idempotent; [`Drop`] calls it and then joins the entry threads.
+    pub fn shutdown(&mut self) {
+        for e in &mut self.entries {
+            e.queue = None;
+        }
     }
 }
 
@@ -377,20 +526,41 @@ impl Drop for Engine {
     fn drop(&mut self) {
         // Closing every queue ends each entry loop after its residue
         // drains; join so in-flight batches finish (and their trace
-        // spans flush) before the engine is gone.
-        for e in &mut self.entries {
-            e.queue = None;
-        }
+        // spans flush) before the engine is gone. An entry thread that
+        // died of a panic is recorded, not swallowed — a corpse found at
+        // shutdown still names itself.
+        self.shutdown();
         for e in &mut self.entries {
             if let Some(h) = e.handle.take() {
-                let _ = h.join();
+                if h.join().is_err() {
+                    metrics::counter("serve_entry_panics", 1);
+                    eprintln!(
+                        "serve: entry '{}' thread panicked (found at shutdown)",
+                        e.info.label
+                    );
+                }
             }
         }
     }
 }
 
-/// The per-entry service loop: owns the compiled program, partitions,
-/// and the one warm executor for the entry's whole lifetime.
+/// The `(kernel, pipeline)` pair for a degradation rung. Every rung is
+/// bit-identical to the configured modes by construction (the
+/// differential tests pin this), so degradation sheds the machinery a
+/// fault might implicate — overlap threads, then the kernel tier —
+/// without ever changing answers.
+fn degraded_modes(cfg: &EngineConfig, rung: u32) -> (KernelMode, PipelineMode) {
+    match rung {
+        0 => (cfg.kernel, cfg.pipeline),
+        1 => (cfg.kernel, PipelineMode::Off),
+        _ => (KernelMode::Naive, PipelineMode::Off),
+    }
+}
+
+/// The per-entry service loop: owns the compiled program and partitions
+/// for the entry's whole lifetime, and *supervises* the warm executor —
+/// a fault fails only the in-flight batch, then the executor is rebuilt
+/// (capped exponential backoff, degradation ladder) and serving resumes.
 fn entry_loop(
     ir: IrGraph,
     g: Arc<Csr>,
@@ -400,107 +570,265 @@ fn entry_loop(
     label: String,
     tracing: bool,
 ) {
+    let track = trace::serve_track(idx);
+    // Compile + partition once: they are deterministic over immutable
+    // inputs, so a runtime fault cannot have corrupted them — only the
+    // executor (pool threads, scratch arenas) is rebuilt on recovery.
     let t_warm = Instant::now();
     let prog = compile(&ir);
     let parts = cfg.method.run(&g, cfg.accel.partition_config(&prog));
     let deg = degree_column(&g);
-    let mut ex = Executor::new(&prog, &parts)
-        .with_kernel_mode(cfg.kernel)
-        .with_pipeline_mode(cfg.pipeline);
-    if cfg.workers > 0 {
-        ex = ex.with_workers(cfg.workers);
-    }
-    // Warm-up inference: sizes every scratch arena and spawns the worker
-    // pool before the first real request, so steady state — no new
-    // scratch misses, no new thread spawns — starts at request 1.
-    let x0 = weights::init_features(0, g.num_vertices(), ir.input_dim() as usize);
-    let _ = ex.run(&x0, &deg);
-    let warm_s = t_warm.elapsed().as_secs_f64();
-    metrics::observe("serve_warm_s", warm_s);
+    let build_s = t_warm.elapsed().as_secs_f64();
 
-    let track = trace::serve_track(idx);
     let mut requests = 0u64;
     let mut batches = 0u64;
     let mut errors = 0u64;
+    let mut faults = 0u64;
+    let mut timeouts = 0u64;
+    let mut restarts = 0u64;
     let mut max_batch = 0usize;
-    while let Some(batch) = next_batch(&rx, cfg.batch_max) {
-        let mut jobs = Vec::with_capacity(batch.len());
-        for job in batch {
-            match job {
-                Job::Infer(j) => jobs.push(j),
-                Job::Stats(tx) => {
-                    let _ = tx.try_send(EntryStats {
-                        requests,
-                        batches,
-                        max_batch,
-                        errors,
-                        rejected: 0, // merged engine-side
-                        warm_s,
-                        scratch: ex.scratch_stats(),
-                        pool: ex.pool_stats(),
-                    });
-                }
-            }
-        }
-        if jobs.is_empty() {
-            continue;
-        }
-        let size = jobs.len();
-        batches += 1;
-        max_batch = max_batch.max(size);
-        metrics::counter("serve_batches", 1);
-        metrics::observe("serve_batch_size", size as f64);
-        {
-            let _batch_span = trace::span_if(
+    let mut warm_s = build_s;
+    // Consecutive faults since the last successful request.
+    let mut consecutive = 0u32;
+    let mut rung = 0u32;
+    let threshold = cfg.fault_threshold.max(1);
+
+    // One fault-and-recovery supervision step per iteration: (re)build
+    // the warm executor at the current rung, serve until the queue
+    // closes or a fault demands a rebuild.
+    let mut shutdown = false;
+    'serving: while !shutdown && rung < 3 {
+        let _rspan = (restarts > 0).then(|| {
+            trace::span_if(
                 tracing,
-                trace::names::BATCH,
+                trace::names::RECOVER,
                 trace::cat::SERVE,
                 track,
                 -1,
-                (batches - 1) as i32,
-                size as i32,
-            );
-            for j in jobs {
-                let wait_s = j.enq.elapsed().as_secs_f64();
-                let t0 = Instant::now();
-                let out = {
-                    let _span = trace::span_if(
-                        tracing,
-                        trace::names::REQUEST,
-                        trace::cat::SERVE,
-                        track,
-                        -1,
-                        j.seq as i32,
-                        -1,
-                    );
-                    ex.run(&j.x, &deg)
-                };
-                let exec_s = t0.elapsed().as_secs_f64();
-                requests += 1;
-                metrics::counter("serve_requests", 1);
-                metrics::observe("serve_wait_s", wait_s);
-                metrics::observe("serve_latency_s", wait_s + exec_s);
-                let r = if out.data.iter().all(|v| v.is_finite()) {
-                    Ok(Response {
-                        out,
-                        seq: j.seq,
-                        wait_s,
-                        exec_s,
-                        batched: size,
-                    })
-                } else {
-                    errors += 1;
-                    metrics::counter("serve_errors", 1);
-                    Err(ServeError::NonFinite {
-                        entry: label.clone(),
-                        seq: j.seq,
-                    })
-                };
-                let _ = j.reply.try_send(r);
+                restarts as i32,
+                rung as i32,
+            )
+        });
+        if restarts > 0 {
+            // Capped exponential backoff keeps a hard-failing entry from
+            // burning a core on rebuild churn.
+            let ms = (1u64 << consecutive.min(10)).min(cfg.max_backoff_ms.max(1));
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        let (kmode, pmode) = degraded_modes(&cfg, rung);
+        let t0 = Instant::now();
+        let mut ex = Executor::new(&prog, &parts)
+            .with_kernel_mode(kmode)
+            .with_pipeline_mode(pmode);
+        if cfg.workers > 0 {
+            ex = ex.with_workers(cfg.workers);
+        }
+        // Warm-up inference: sizes every scratch arena and spawns the
+        // worker pool before the first real request, so steady state —
+        // no new scratch misses, no new thread spawns — starts at
+        // request 1. A warm-up fault (an always-faulting model) walks
+        // the same recovery ladder as a serving fault, so it converges
+        // on quarantine instead of spinning.
+        let x0 = weights::init_features(0, g.num_vertices(), ir.input_dim() as usize);
+        if ex.try_run(&x0, &deg).is_err() {
+            faults += 1;
+            consecutive += 1;
+            restarts += 1;
+            metrics::counter("serve_entry_restarts", 1);
+            if consecutive >= threshold * (rung + 1) {
+                rung += 1;
+                metrics::counter("serve_degraded", 1);
+            }
+            continue 'serving;
+        }
+        warm_s += t0.elapsed().as_secs_f64();
+        metrics::observe("serve_warm_s", warm_s);
+
+        let mut faulted = false;
+        while let Some(batch) = next_batch(&rx, cfg.batch_max) {
+            // Injection site: stall the consumer so admission control
+            // (the bounded queue) is testable deterministically.
+            faultinject::queue_stall();
+            let mut jobs = Vec::with_capacity(batch.len());
+            for job in batch {
+                match job {
+                    Job::Infer(j) => jobs.push(j),
+                    Job::Stats(tx) => {
+                        let _ = tx.try_send(EntryStats {
+                            requests,
+                            batches,
+                            max_batch,
+                            errors,
+                            rejected: 0, // merged engine-side
+                            faults,
+                            timeouts,
+                            restarts,
+                            rung,
+                            quarantined: false,
+                            warm_s,
+                            scratch: ex.scratch_stats(),
+                            pool: ex.pool_stats(),
+                        });
+                    }
+                }
+            }
+            if jobs.is_empty() {
+                continue;
+            }
+            let size = jobs.len();
+            batches += 1;
+            max_batch = max_batch.max(size);
+            metrics::counter("serve_batches", 1);
+            metrics::observe("serve_batch_size", size as f64);
+            {
+                let _batch_span = trace::span_if(
+                    tracing,
+                    trace::names::BATCH,
+                    trace::cat::SERVE,
+                    track,
+                    -1,
+                    (batches - 1) as i32,
+                    size as i32,
+                );
+                let mut it = jobs.into_iter();
+                while let Some(j) = it.next() {
+                    if let Some(dl) = j.deadline {
+                        if Instant::now() >= dl {
+                            // Expired while queued: answer without
+                            // spending executor time on a result the
+                            // caller already gave up on.
+                            timeouts += 1;
+                            metrics::counter("serve_timeouts", 1);
+                            let _ = j.reply.try_send(Err(ServeError::DeadlineExceeded {
+                                entry: label.clone(),
+                                seq: j.seq,
+                            }));
+                            continue;
+                        }
+                    }
+                    let wait_s = j.enq.elapsed().as_secs_f64();
+                    let t0 = Instant::now();
+                    let res = {
+                        let _span = trace::span_if(
+                            tracing,
+                            trace::names::REQUEST,
+                            trace::cat::SERVE,
+                            track,
+                            -1,
+                            j.seq as i32,
+                            -1,
+                        );
+                        ex.try_run(&j.x, &deg)
+                    };
+                    let exec_s = t0.elapsed().as_secs_f64();
+                    requests += 1;
+                    metrics::counter("serve_requests", 1);
+                    metrics::observe("serve_wait_s", wait_s);
+                    metrics::observe("serve_latency_s", wait_s + exec_s);
+                    match res {
+                        Ok(mut out) => {
+                            consecutive = 0;
+                            // Injection site: feeds the existing
+                            // non-finite guard, proving a poisoned
+                            // output fails alone (no restart).
+                            faultinject::poison_output(&mut out.data);
+                            let r = if out.data.iter().all(|v| v.is_finite()) {
+                                Ok(Response {
+                                    out,
+                                    seq: j.seq,
+                                    wait_s,
+                                    exec_s,
+                                    batched: size,
+                                })
+                            } else {
+                                errors += 1;
+                                metrics::counter("serve_errors", 1);
+                                Err(ServeError::NonFinite {
+                                    entry: label.clone(),
+                                    seq: j.seq,
+                                })
+                            };
+                            let _ = j.reply.try_send(r);
+                        }
+                        Err(cause) => {
+                            // The executor faulted under this batch:
+                            // fail this request and the rest of the
+                            // in-flight batch with the typed cause, then
+                            // leave the batch loop to rebuild.
+                            faults += 1;
+                            let cause = cause.to_string();
+                            let _ = j.reply.try_send(Err(ServeError::Faulted {
+                                entry: label.clone(),
+                                seq: j.seq,
+                                cause: cause.clone(),
+                            }));
+                            for j2 in it.by_ref() {
+                                let _ = j2.reply.try_send(Err(ServeError::Faulted {
+                                    entry: label.clone(),
+                                    seq: j2.seq,
+                                    cause: cause.clone(),
+                                }));
+                            }
+                            faulted = true;
+                        }
+                    }
+                }
+            }
+            if tracing {
+                trace::flush_thread();
+            }
+            if faulted {
+                break;
             }
         }
-        if tracing {
-            trace::flush_thread();
+        if !faulted {
+            // `next_batch` returned `None`: the queue closed — shutdown.
+            shutdown = true;
+            break 'serving;
+        }
+        consecutive += 1;
+        restarts += 1;
+        metrics::counter("serve_entry_restarts", 1);
+        if consecutive >= threshold * (rung + 1) {
+            rung += 1;
+            metrics::counter("serve_degraded", 1);
+        }
+        // Drop `ex` (joins its pool) and rebuild on the next iteration.
+    }
+
+    if !shutdown && rung >= 3 {
+        // Degradation ladder exhausted: quarantine. The entry stays
+        // alive and answers typed rejections — visibly sick beats
+        // silently dead (`EngineDown` on every request forever).
+        metrics::counter("serve_quarantined", 1);
+        while let Some(batch) = next_batch(&rx, cfg.batch_max) {
+            for job in batch {
+                match job {
+                    Job::Infer(j) => {
+                        let _ = j.reply.try_send(Err(ServeError::Quarantined {
+                            entry: label.clone(),
+                            seq: j.seq,
+                        }));
+                    }
+                    Job::Stats(tx) => {
+                        let _ = tx.try_send(EntryStats {
+                            requests,
+                            batches,
+                            max_batch,
+                            errors,
+                            rejected: 0, // merged engine-side
+                            faults,
+                            timeouts,
+                            restarts,
+                            rung,
+                            quarantined: true,
+                            warm_s,
+                            scratch: ScratchStats::default(),
+                            pool: PoolStats::default(),
+                        });
+                    }
+                }
+            }
         }
     }
     if tracing {

@@ -3,11 +3,14 @@
 //!
 //! Built on `std::sync::mpsc::sync_channel`: the channel's buffer IS the
 //! per-entry request queue, so "queue full" is a channel-level fact, not
-//! a counter we maintain on the side. The data plane submits with
-//! [`SubmitQueue::submit`] (non-blocking — a full queue *rejects*, which
-//! the engine surfaces as a typed `Rejected` error instead of unbounded
-//! latency). The control plane (stats probes, which must never be
-//! load-shed) pushes with the blocking [`SubmitQueue::push`].
+//! a counter we maintain on the side. Everything — data plane and the
+//! stats probe — submits with [`SubmitQueue::submit`] (non-blocking — a
+//! full queue *rejects*, which the engine surfaces as typed `Rejected` /
+//! `StatsUnavailable` errors instead of unbounded latency): a health
+//! check that blocks behind the saturation it is trying to observe is
+//! worse than a typed "saturated but alive". The blocking
+//! [`SubmitQueue::push`] remains for callers that genuinely must not be
+//! load-shed.
 
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 

@@ -1,0 +1,404 @@
+//! Chaos integration: deterministic fault injection against the real
+//! stack — the panic-isolated worker pool, the self-healing serve
+//! entries, request deadlines — plus the disarmed differential that
+//! pins the injector's zero-cost claim.
+//!
+//! The injector is process-global, so every test that arms it holds
+//! [`chaos_lock`] and disarms on drop; this file is its own test binary,
+//! so nothing outside it can race the armed plans.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Duration;
+
+use switchblade::compiler::compile;
+use switchblade::coordinator::{degree_column, reference_run};
+use switchblade::exec::weights::init_features;
+use switchblade::exec::{Executor, Matrix, PoolError};
+use switchblade::graph::datasets::Dataset;
+use switchblade::graph::Csr;
+use switchblade::ir::spec::ModelDims;
+use switchblade::ir::zoo::ModelZoo;
+use switchblade::obs::faultinject;
+use switchblade::serve::{Engine, EngineConfig, ServeError};
+
+/// Serializes every test that arms the process-global injector.
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Disarm on every exit path, including assertion panics.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        faultinject::disarm();
+    }
+}
+
+fn graph(scale: u32) -> Arc<Csr> {
+    Arc::new(Dataset::Ak.load(scale))
+}
+
+fn arm(spec: &str) {
+    faultinject::arm(faultinject::parse(spec).unwrap());
+}
+
+/// How many times one full executor run passes shard 0's injection
+/// site (once per group the walk drives the shard through). Measured,
+/// not assumed: the schedule arithmetic of the panic tests — "skip the
+/// warm-up run exactly" — needs the real per-run pass count for the
+/// same model/graph/config the engine will serve.
+fn shard0_passes_per_run(cfg: &EngineConfig, g: &Csr) -> u64 {
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let ir = spec.build(ModelDims::uniform(2, 8)).unwrap();
+    arm("slow_shard@shard=0@delay_ms=0@count=1000000");
+    let before = faultinject::fired_total();
+    let _ = reference_run(
+        &ir,
+        g,
+        &cfg.accel,
+        cfg.method,
+        cfg.workers,
+        cfg.kernel,
+        cfg.pipeline,
+        0,
+    );
+    faultinject::disarm();
+    faultinject::fired_total() - before
+}
+
+/// The acceptance scenario: an injected worker panic fails exactly the
+/// in-flight request with a typed cause, the entry restarts its warm
+/// executor, and the next request is bit-identical to an uninjected
+/// reference run.
+#[test]
+fn serve_worker_panic_fails_only_in_flight_then_recovers() {
+    let _l = chaos_lock();
+    let _d = Disarm;
+    let g = graph(8);
+    let cfg = EngineConfig::default();
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let dims = ModelDims::uniform(2, 8);
+    let ir = spec.build(dims).unwrap();
+    // Uninjected reference for the post-recovery request, computed
+    // while disarmed.
+    let want = reference_run(
+        &ir,
+        &g,
+        &cfg.accel,
+        cfg.method,
+        cfg.workers,
+        cfg.kernel,
+        cfg.pipeline,
+        1,
+    );
+    let passes = shard0_passes_per_run(&cfg, &g);
+    assert!(passes >= 1, "probe run never reached shard 0's site");
+
+    // Skip exactly the warm-up run, so the fault lands on request 0.
+    arm(&format!("worker_panic@shard=0@skip={passes}"));
+    let mut engine = Engine::new(cfg);
+    let id = engine.register(&spec, dims, g.clone()).unwrap();
+    match engine.submit_seeded(id, 0).unwrap().wait() {
+        Err(ServeError::Faulted { seq, cause, .. }) => {
+            assert_eq!(seq, 0, "fault hit the wrong request");
+            assert!(
+                cause.contains("worker_panic"),
+                "cause lost the injected panic message: {cause}"
+            );
+        }
+        Err(other) => panic!("expected Faulted, got {other}"),
+        Ok(r) => panic!("injected panic did not surface (seq {})", r.seq),
+    }
+    // The rebuilt entry serves the next request bit-identically.
+    let r = engine.submit_seeded(id, 1).unwrap().wait().unwrap();
+    assert!(
+        r.out.bits_eq(&want),
+        "post-recovery output diverged bitwise from the uninjected reference \
+         (max |delta| {})",
+        r.out.max_abs_diff(&want)
+    );
+    let st = engine.stats(id).unwrap();
+    assert_eq!(st.faults, 1, "exactly one request faulted");
+    assert_eq!(st.restarts, 1, "exactly one executor rebuild");
+    assert_eq!(st.errors, 0);
+    assert_eq!(st.rung, 0, "one fault must not degrade the entry");
+    assert!(!st.quarantined);
+    assert_eq!(st.requests, 2);
+}
+
+/// Executor-direct: `try_run` surfaces the injected panic as a typed
+/// `WorkerPanicked` naming the canonical shard, the pool heals (visible
+/// in `respawned`), and the healed executor is bit-identical.
+#[test]
+fn executor_worker_panic_is_typed_and_the_pool_heals() {
+    let _l = chaos_lock();
+    let _d = Disarm;
+    let g = Dataset::Ak.load(8);
+    let cfg = EngineConfig::default();
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let ir = spec.build(ModelDims::uniform(2, 8)).unwrap();
+    let prog = compile(&ir);
+    let parts = cfg.method.run(&g, cfg.accel.partition_config(&prog));
+    let x = init_features(7, g.num_vertices(), ir.input_dim() as usize);
+    let deg = degree_column(&g);
+    let want = Executor::new(&prog, &parts).with_workers(4).run(&x, &deg);
+
+    let mut ex = Executor::new(&prog, &parts).with_workers(4);
+    arm("worker_panic@shard=0");
+    match ex.try_run(&x, &deg) {
+        Err(PoolError::WorkerPanicked { shard, msg, .. }) => {
+            assert_eq!(shard, 0, "fault reported at the wrong shard");
+            assert!(msg.contains("worker_panic"), "panic message lost: {msg}");
+        }
+        Err(other) => panic!("expected WorkerPanicked, got {other}"),
+        Ok(_) => panic!("injected panic did not surface"),
+    }
+    assert!(
+        ex.pool_stats().respawned >= 1,
+        "pool never recorded the heal (respawned = {})",
+        ex.pool_stats().respawned
+    );
+    let got = ex.try_run(&x, &deg).expect("healed executor must serve again");
+    assert!(
+        got.bits_eq(&want),
+        "healed executor diverged bitwise (max |delta| {})",
+        got.max_abs_diff(&want)
+    );
+}
+
+/// Same contract with a single worker: the inline (thread-free) path
+/// catches the panic, rebuilds its scratch, and stays bit-identical.
+#[test]
+fn inline_executor_worker_panic_heals_without_threads() {
+    let _l = chaos_lock();
+    let _d = Disarm;
+    let g = Dataset::Ak.load(8);
+    let cfg = EngineConfig::default();
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let ir = spec.build(ModelDims::uniform(2, 8)).unwrap();
+    let prog = compile(&ir);
+    let parts = cfg.method.run(&g, cfg.accel.partition_config(&prog));
+    let x = init_features(7, g.num_vertices(), ir.input_dim() as usize);
+    let deg = degree_column(&g);
+    let want = Executor::new(&prog, &parts).with_workers(1).run(&x, &deg);
+
+    let mut ex = Executor::new(&prog, &parts).with_workers(1);
+    arm("worker_panic@shard=0");
+    match ex.try_run(&x, &deg) {
+        Err(PoolError::WorkerPanicked { worker, shard, .. }) => {
+            assert_eq!(worker, 0);
+            assert_eq!(shard, 0);
+        }
+        Err(other) => panic!("expected WorkerPanicked, got {other}"),
+        Ok(_) => panic!("injected panic did not surface"),
+    }
+    assert!(ex.pool_stats().respawned >= 1);
+    let got = ex.try_run(&x, &deg).expect("healed inline executor serves again");
+    assert!(got.bits_eq(&want), "inline recovery diverged bitwise");
+}
+
+/// A straggler worker (injected sleep) must change timing only — the
+/// deterministic merge keeps the output bit-identical.
+#[test]
+fn slow_shard_changes_timing_not_bits() {
+    let _l = chaos_lock();
+    let _d = Disarm;
+    let g = Dataset::Ak.load(8);
+    let cfg = EngineConfig::default();
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let ir = spec.build(ModelDims::uniform(2, 8)).unwrap();
+    let prog = compile(&ir);
+    let parts = cfg.method.run(&g, cfg.accel.partition_config(&prog));
+    let x = init_features(7, g.num_vertices(), ir.input_dim() as usize);
+    let deg = degree_column(&g);
+    let want = Executor::new(&prog, &parts).with_workers(4).run(&x, &deg);
+
+    let before = faultinject::fired_total();
+    arm("slow_shard@shard=0@delay_ms=20@count=8");
+    let got = Executor::new(&prog, &parts).with_workers(4).run(&x, &deg);
+    assert!(
+        faultinject::fired_total() > before,
+        "slow_shard never fired — the site is not wired"
+    );
+    assert!(
+        got.bits_eq(&want),
+        "a straggler worker changed the output bits (max |delta| {})",
+        got.max_abs_diff(&want)
+    );
+}
+
+/// An injected NaN rides the existing non-finite guard: a typed
+/// `NonFinite` error for that request alone — no fault, no restart.
+#[test]
+fn nonfinite_injection_fails_one_request_without_a_restart() {
+    let _l = chaos_lock();
+    let _d = Disarm;
+    let g = graph(8);
+    let cfg = EngineConfig::default();
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let dims = ModelDims::uniform(1, 8);
+    let ir = spec.build(dims).unwrap();
+    let want = reference_run(
+        &ir,
+        &g,
+        &cfg.accel,
+        cfg.method,
+        cfg.workers,
+        cfg.kernel,
+        cfg.pipeline,
+        1,
+    );
+    let mut engine = Engine::new(cfg);
+    let id = engine.register(&spec, dims, g.clone()).unwrap();
+    arm("nonfinite_output");
+    match engine.submit_seeded(id, 0).unwrap().wait() {
+        Err(ServeError::NonFinite { seq, .. }) => assert_eq!(seq, 0),
+        other => panic!("expected NonFinite, got {:?}", other.map(|r| r.seq)),
+    }
+    let r = engine.submit_seeded(id, 1).unwrap().wait().unwrap();
+    assert!(r.out.bits_eq(&want), "request after a poisoned one diverged");
+    let st = engine.stats(id).unwrap();
+    assert_eq!(st.errors, 1);
+    assert_eq!(st.faults, 0, "a poisoned output is not an executor fault");
+    assert_eq!(st.restarts, 0, "a poisoned output must not trigger a rebuild");
+}
+
+/// A stalled entry loop makes the bounded queue observable: admitted
+/// work completes, the overflow is rejected with the typed error.
+#[test]
+fn queue_stall_trips_admission_control() {
+    let _l = chaos_lock();
+    let _d = Disarm;
+    let g = graph(8);
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let mut engine = Engine::new(EngineConfig {
+        queue_depth: 1,
+        batch_max: 1,
+        ..EngineConfig::default()
+    });
+    let id = engine.register(&spec, ModelDims::uniform(1, 8), g).unwrap();
+    arm("queue_stall@delay_ms=50@count=64");
+    let mut tickets = Vec::new();
+    let mut rejected = 0u64;
+    for s in 0..16u64 {
+        match engine.submit_seeded(id, s) {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::Rejected { depth, .. }) => {
+                assert_eq!(depth, 1);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(
+        rejected > 0,
+        "a stalled depth-1 queue never rejected a submission"
+    );
+    // The stats probe must not block behind the saturation it is
+    // observing: a typed answer either way, immediately.
+    match engine.stats(id) {
+        Ok(_) | Err(ServeError::StatsUnavailable { .. }) => {}
+        Err(e) => panic!("stats under saturation: unexpected {e}"),
+    }
+    for t in tickets {
+        t.wait().expect("admitted requests complete despite the stall");
+    }
+}
+
+/// Deadlines bound both halves of the round trip: a request expiring in
+/// the queue is answered `DeadlineExceeded` at dequeue without running,
+/// and `wait_timeout` bounds the caller even with no deadline set.
+#[test]
+fn deadlines_expire_under_a_stalled_entry() {
+    let _l = chaos_lock();
+    let _d = Disarm;
+    let g = graph(8);
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let mut engine = Engine::new(EngineConfig::default());
+    let id = engine.register(&spec, ModelDims::uniform(1, 8), g).unwrap();
+    arm("queue_stall@delay_ms=60@count=4");
+
+    // Entry-side: expired while queued → answered without execution.
+    let t = engine
+        .submit_seeded_deadline(id, 0, Duration::from_millis(5))
+        .unwrap();
+    match t.wait() {
+        Err(ServeError::DeadlineExceeded { seq, .. }) => assert_eq!(seq, 0),
+        other => panic!("expected DeadlineExceeded, got {:?}", other.map(|r| r.seq)),
+    }
+
+    // Caller-side: wait_timeout gives up during the stall even though
+    // the request itself carries no deadline.
+    let t = engine.submit_seeded(id, 1).unwrap();
+    match t.wait_timeout(Duration::from_millis(5)) {
+        Err(ServeError::DeadlineExceeded { .. }) => {}
+        other => panic!("expected DeadlineExceeded, got {:?}", other.map(|r| r.seq)),
+    }
+
+    faultinject::disarm();
+    // The entry recovers its cadence once the stalls exhaust.
+    engine.submit_seeded(id, 2).unwrap().wait().unwrap();
+    let st = engine.stats(id).unwrap();
+    assert_eq!(st.timeouts, 1, "only the queued expiry counts entry-side");
+    assert_eq!(st.faults, 0);
+    assert_eq!(st.restarts, 0);
+}
+
+/// The disarmed differential the module docs promise: with no plan
+/// armed, outputs are bit-identical to the reference, nothing fires,
+/// nothing restarts, and the warm steady state still adds no scratch
+/// misses — injection hooks cost one atomic load and change nothing.
+#[test]
+fn disarmed_injector_changes_nothing() {
+    let _l = chaos_lock();
+    assert!(!faultinject::armed());
+    let fired0 = faultinject::fired_total();
+    let g = graph(8);
+    let cfg = EngineConfig::default();
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let dims = ModelDims::uniform(1, 8);
+    let ir = spec.build(dims).unwrap();
+    let mut engine = Engine::new(cfg);
+    let id = engine.register(&spec, dims, g.clone()).unwrap();
+    let outs: Vec<Matrix> = (0..4u64)
+        .map(|s| engine.submit_seeded(id, s).unwrap().wait().unwrap().out)
+        .collect();
+    for (s, out) in outs.iter().enumerate() {
+        let want = reference_run(
+            &ir,
+            &g,
+            &cfg.accel,
+            cfg.method,
+            cfg.workers,
+            cfg.kernel,
+            cfg.pipeline,
+            s as u64,
+        );
+        assert!(
+            out.bits_eq(&want),
+            "seed {s}: output diverged with the injector merely present"
+        );
+    }
+    let st1 = engine.stats(id).unwrap();
+    for s in 4..12u64 {
+        engine.submit_seeded(id, s).unwrap().wait().unwrap();
+    }
+    let st2 = engine.stats(id).unwrap();
+    assert_eq!(
+        st1.scratch.misses, st2.scratch.misses,
+        "disarmed hooks cost scratch misses in steady state"
+    );
+    assert_eq!(st2.faults, 0);
+    assert_eq!(st2.restarts, 0);
+    assert_eq!(st2.timeouts, 0);
+    assert_eq!(st2.rung, 0);
+    assert_eq!(st2.pool.respawned, 0);
+    assert_eq!(
+        faultinject::fired_total(),
+        fired0,
+        "something fired with no plan armed"
+    );
+}

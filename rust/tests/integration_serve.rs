@@ -4,7 +4,8 @@
 //! micro-batched or not; bounded queues must reject at capacity with a
 //! typed error; warm steady state must add no new scratch-pool misses
 //! or thread spawns; a poisoned request must fail alone instead of
-//! taking the engine down.
+//! taking the engine down; ticket lifecycle edges (an abandoned
+//! ticket, a submit racing shutdown) must stay typed — never a hang.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -211,6 +212,43 @@ fn non_finite_output_is_a_typed_error_not_a_crash() {
     engine.submit_seeded(healthy, 0).unwrap().wait().unwrap();
     let st = engine.stats(id).unwrap();
     assert_eq!(st.errors, 2);
+}
+
+#[test]
+fn dropped_ticket_does_not_disturb_the_entry() {
+    let g = graph(8);
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let mut engine = Engine::new(EngineConfig::default());
+    let id = engine.register(&spec, ModelDims::uniform(1, 8), g).unwrap();
+    // The caller walks away; the entry's reply lands in a closed channel
+    // and must be dropped, not panicked over or blocked on.
+    drop(engine.submit_seeded(id, 0).unwrap());
+    let r = engine.submit_seeded(id, 1).unwrap().wait().unwrap();
+    assert_eq!(r.seq, 1);
+    let st = engine.stats(id).unwrap();
+    assert_eq!(st.requests, 2, "the abandoned request still executed");
+    assert_eq!(st.errors, 0);
+}
+
+#[test]
+fn submit_after_shutdown_is_typed_not_a_hang() {
+    let g = graph(8);
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let mut engine = Engine::new(EngineConfig::default());
+    let id = engine.register(&spec, ModelDims::uniform(1, 8), g).unwrap();
+    engine.submit_seeded(id, 0).unwrap().wait().unwrap();
+    engine.shutdown();
+    // Racing the teardown yields a typed error immediately — no hang,
+    // no panic — and the stats probe degrades the same way.
+    match engine.submit_seeded(id, 1) {
+        Err(ServeError::EngineDown { .. }) => {}
+        Ok(_) => panic!("submit after shutdown was admitted"),
+        Err(e) => panic!("expected EngineDown, got {e}"),
+    }
+    assert!(matches!(
+        engine.stats(id),
+        Err(ServeError::EngineDown { .. })
+    ));
 }
 
 #[test]

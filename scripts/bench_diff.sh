@@ -19,6 +19,11 @@
 # (exit 1) only when a key present on both sides regressed by more than
 # MAX_PCT percent (default 10).
 #
+# Fault/recovery counters (serve_errors, serve_timeouts, and the
+# exec_worker_panics / serve_entry_restarts / serve_degraded metrics) are
+# deliberately NOT gated: they are workload facts, not latencies — a
+# chaos run with injected faults must not trip the perf gate.
+#
 # Exit codes: 0 ok / nothing comparable, 1 regression, 2 usage error.
 set -euo pipefail
 

@@ -20,13 +20,16 @@
 #              model + the out-of-zoo gin spec with --verify (bit-identity
 #              to a direct executor run), trailer pins, and a
 #              `serve --bench` artifact that self-diffs clean
+#   chaos      reliability gate: the chaos integration suite (injected
+#              worker panics, stalls, NaNs against the real stack) + a
+#              `serve --inject` smoke pinning the recovery trailers
 #   bench      scripts/bench.sh -> BENCH_exec.json + BENCH_serve.json
 #              (perf trajectory point)
 #   bench-diff scripts/bench_diff.sh BENCH_exec.json (and BENCH_serve.json
 #              when present) against $BASELINE (skips gracefully when no
 #              baseline is present)
-#   all        fmt clippy test smoke profiler trace serve (+ bench when
-#              BENCH=1, the historical knob)
+#   all        fmt clippy test smoke profiler trace serve chaos (+ bench
+#              when BENCH=1, the historical knob)
 set -euo pipefail
 SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
 cd "$SCRIPT_DIR/../rust"
@@ -163,6 +166,32 @@ stage_serve() {
   echo "serve smoke OK"
 }
 
+# Reliability gate: the chaos integration suite runs the fault-injection
+# scenarios (worker panics, stragglers, NaNs, stalls, deadlines, and the
+# disarmed differential) against the real engine, then a `serve --inject`
+# smoke proves the CLI wiring end to end — an injected worker panic must
+# leave the serving run alive, with the fault visible in its trailers.
+stage_chaos() {
+  echo "== chaos: fault-injection suite + serve --inject smoke =="
+  cargo test -q --release --test integration_chaos
+  local out
+  out=$(cargo run --release --quiet -- serve --model GCN --dataset AK \
+    --scale 12 --requests 8 --inject 'worker_panic@shard=0@skip=1' 2>/dev/null)
+  local key
+  # No serve_requests pin: depending on where the injected panic lands
+  # (warm-up vs an in-flight request) a request may legitimately fail.
+  for key in 'serve_backend=native' 'serve_requests=' 'serve_p50_ms=' \
+             'serve_timeouts=' 'serve_faults_injected='; do
+    echo "$out" | grep -q "^$key" \
+      || { echo "serve --inject lost its '$key' trailer" >&2; exit 1; }
+  done
+  local fired
+  fired=$(echo "$out" | sed -n 's/^serve_faults_injected=//p')
+  [[ "$fired" -ge 1 ]] \
+    || { echo "serve --inject never fired (serve_faults_injected=$fired)" >&2; exit 1; }
+  echo "chaos OK (faults injected: $fired)"
+}
+
 stage_bench() {
   echo "== bench: scripts/bench.sh -> BENCH_exec.json + BENCH_serve.json =="
   "$SCRIPT_DIR/bench.sh"
@@ -200,6 +229,7 @@ run_stage() {
     profiler)   stage_profiler ;;
     trace)      stage_trace ;;
     serve)      stage_serve ;;
+    chaos)      stage_chaos ;;
     bench)      stage_bench ;;
     bench-diff) stage_bench_diff ;;
     all)
@@ -210,12 +240,13 @@ run_stage() {
       stage_profiler
       stage_trace
       stage_serve
+      stage_chaos
       if [[ "${BENCH:-0}" != "0" ]]; then
         stage_bench
       fi
       ;;
     *)
-      echo "unknown stage '$1' (fmt|clippy|test|test-simd|smoke|profiler|trace|serve|bench|bench-diff|all)" >&2
+      echo "unknown stage '$1' (fmt|clippy|test|test-simd|smoke|profiler|trace|serve|chaos|bench|bench-diff|all)" >&2
       exit 2
       ;;
   esac
