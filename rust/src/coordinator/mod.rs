@@ -11,7 +11,7 @@ use std::sync::{Arc, Mutex};
 use crate::baseline::{gpu_run, hygcn_run, GpuConfig, GpuResult, HygcnConfig, HygcnResult};
 use crate::compiler::compile;
 use crate::energy::{switchblade_energy, tbl5_rows, EnergyResult, TBL5};
-use crate::exec::{KernelMode, Matrix, PipelineMode, PoolStats, ScratchStats};
+use crate::exec::{KernelMode, Matrix, PipelineMode, PoolStats, RunRequest, ScratchStats};
 use crate::graph::datasets::Dataset;
 use crate::graph::Csr;
 use crate::ir::spec::ModelSpec;
@@ -432,6 +432,15 @@ pub struct ExecBench {
     /// widths 1/2/4/8 at the probe's kernel + pipeline mode), each folded
     /// into the bit-identity verdict.
     pub sweep: Vec<(usize, f64)>,
+    /// Cross-request batch width of the amortization probe (1 = not
+    /// probed).
+    pub batch: usize,
+    /// Cross-request amortization factor: B back-to-back solo runs over
+    /// one batched run of the same B inputs (higher is better; > 1
+    /// means sharing the partition walk paid off). `None` unless
+    /// `batch > 1`; per-request bit-identity vs the solo runs is folded
+    /// into the verdict.
+    pub batch_amortization: Option<f64>,
 }
 
 impl ExecBench {
@@ -513,6 +522,54 @@ impl ExecBench {
                 p.groups.iter().map(|g| g.shards).sum::<u64>(),
             );
         }
+        if let Some(a) = self.batch_amortization {
+            metrics::counter_abs("exec_batch", self.batch as u64);
+            metrics::gauge("exec_batch_amortization", a);
+        }
+    }
+}
+
+/// Everything [`bench_executor`] needs, named. The probe's positional
+/// argument list grew past readability (and the cross-request batch
+/// axis would have doubled it again) — construct with
+/// [`BenchRequest::new`] and set the knobs that differ from the
+/// defaults.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchRequest<'a> {
+    pub ir: &'a IrGraph,
+    pub g: &'a Csr,
+    pub accel: &'a AcceleratorConfig,
+    /// Worker-pool width; 0 = the partitioning's sThread count.
+    pub workers: usize,
+    /// Timed iterations per probe (clamped to >= 1).
+    pub iters: usize,
+    /// Also time the preserved naive path and record a phase profile.
+    pub profile: bool,
+    /// Kernel layer of the main timings (a Simd probe always rides
+    /// alongside).
+    pub kernel: KernelMode,
+    pub pipeline: PipelineMode,
+    /// Add the 1/2/4/8-worker scaling ladder.
+    pub sweep: bool,
+    /// Cross-request batch width for the amortization probe (B solo
+    /// runs vs one batched run over the same B inputs); <= 1 skips it.
+    pub batch: usize,
+}
+
+impl<'a> BenchRequest<'a> {
+    pub fn new(ir: &'a IrGraph, g: &'a Csr, accel: &'a AcceleratorConfig) -> Self {
+        BenchRequest {
+            ir,
+            g,
+            accel,
+            workers: 0,
+            iters: 1,
+            profile: false,
+            kernel: KernelMode::default(),
+            pipeline: PipelineMode::default(),
+            sweep: false,
+            batch: 1,
+        }
     }
 }
 
@@ -526,21 +583,11 @@ impl ExecBench {
 /// With `profile` set, additionally times the preserved naive kernel path
 /// and records a per-(group, phase) [`PhaseProfile`] of one parallel run.
 /// `kernel` picks the layer of the main timings (`bench` defaults to
-/// Blocked; a Simd probe is always timed alongside either way), and
-/// `sweep` adds a 1/2/4/8-worker scaling ladder at that layer.
-#[allow(clippy::too_many_arguments)]
-pub fn bench_executor(
-    ir: &IrGraph,
-    g: &Csr,
-    accel: &AcceleratorConfig,
-    workers: usize,
-    iters: usize,
-    profile: bool,
-    kernel: KernelMode,
-    pipeline: PipelineMode,
-    sweep: bool,
-) -> ExecBench {
-    #[allow(clippy::too_many_arguments)]
+/// Blocked; a Simd probe is always timed alongside either way), `sweep`
+/// adds a 1/2/4/8-worker scaling ladder at that layer, and `batch > 1`
+/// adds the cross-request amortization probe (B solo runs vs one
+/// batched run, bit-identity enforced per request).
+pub fn bench_executor(req: &BenchRequest) -> ExecBench {
     fn timed(
         prog: &Program,
         parts: &Partitions,
@@ -555,10 +602,11 @@ pub fn bench_executor(
             .with_workers(workers)
             .with_kernel_mode(mode)
             .with_pipeline_mode(pipeline);
+        let run = RunRequest::new(x, deg);
         let t0 = std::time::Instant::now();
-        let mut out = ex.run(x, deg);
+        let mut out = ex.try_run_with(&run).expect("bench run faulted").into_output();
         for _ in 1..iters {
-            out = ex.run(x, deg);
+            out = ex.try_run_with(&run).expect("bench run faulted").into_output();
         }
         (
             t0.elapsed().as_secs_f64() / iters as f64,
@@ -569,7 +617,10 @@ pub fn bench_executor(
         )
     }
 
-    let iters = iters.max(1);
+    let (ir, g, accel) = (req.ir, req.g, req.accel);
+    let (profile, kernel, pipeline, sweep) = (req.profile, req.kernel, req.pipeline, req.sweep);
+    let iters = req.iters.max(1);
+    let workers = req.workers;
     let prog = compile(ir);
     let pc = accel.partition_config(&prog);
     let parts = partition_fggp(g, pc);
@@ -657,11 +708,71 @@ pub fn bench_executor(
         let mut ex = crate::exec::Executor::new(&prog, &parts)
             .with_workers(workers)
             .with_pipeline_mode(pipeline);
-        let _ = ex.run(&x, &deg);
-        let (_, p) = ex.run_profiled(&x, &deg);
+        let _ = ex
+            .try_run_with(&RunRequest::new(&x, &deg))
+            .expect("profile warm-up faulted");
+        let mut out = ex
+            .try_run_with(&RunRequest::new(&x, &deg).with_profile(true))
+            .expect("profiled run faulted");
+        let p = out.profile.take().expect("profile requested");
         (Some(legacy_s), Some(p))
     } else {
         (None, None)
+    };
+    // Cross-request amortization probe: B solo runs vs one batched run
+    // over the same B seed-distinct inputs, on one warm executor.
+    let batch = req.batch.max(1);
+    let batch_amortization = if batch > 1 {
+        let inputs: Vec<Matrix> = (0..batch)
+            .map(|i| {
+                crate::exec::weights::init_features(
+                    11 + i as u64,
+                    g.num_vertices(),
+                    ir.input_dim() as usize,
+                )
+            })
+            .collect();
+        let refs: Vec<&Matrix> = inputs.iter().collect();
+        let mut ex = crate::exec::Executor::new(&prog, &parts)
+            .with_workers(workers)
+            .with_kernel_mode(kernel)
+            .with_pipeline_mode(pipeline);
+        // Untimed pass on both shapes: sizes the scratch pools and
+        // collects the outputs for the per-request bit verdict.
+        let solo_outs: Vec<Matrix> = inputs
+            .iter()
+            .map(|xi| {
+                let r = ex
+                    .try_run_with(&RunRequest::new(xi, &deg))
+                    .expect("bench solo run faulted");
+                r.into_output()
+            })
+            .collect();
+        let batched = ex
+            .try_run_with(&RunRequest::batched(refs.clone(), &deg))
+            .expect("bench batched run faulted");
+        bit_identical = bit_identical
+            && batched.outputs.len() == solo_outs.len()
+            && solo_outs.iter().zip(&batched.outputs).all(|(a, b)| a.bits_eq(b));
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            for xi in &inputs {
+                let _ = ex
+                    .try_run_with(&RunRequest::new(xi, &deg))
+                    .expect("bench solo run faulted");
+            }
+        }
+        let solo_s = t0.elapsed().as_secs_f64() / iters as f64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            let _ = ex
+                .try_run_with(&RunRequest::batched(refs.clone(), &deg))
+                .expect("bench batched run faulted");
+        }
+        let batched_s = t0.elapsed().as_secs_f64() / iters as f64;
+        Some(solo_s / batched_s.max(f64::MIN_POSITIVE))
+    } else {
+        None
     };
     ExecBench {
         workers,
@@ -680,6 +791,8 @@ pub fn bench_executor(
         prepared_intervals,
         pool,
         sweep: sweep_points,
+        batch,
+        batch_amortization,
     }
 }
 
@@ -723,7 +836,9 @@ pub fn reference_run(
     if workers > 0 {
         ex = ex.with_workers(workers);
     }
-    ex.run(&x, &deg)
+    ex.try_run_with(&RunRequest::new(&x, &deg))
+        .expect("reference run faulted")
+        .into_output()
 }
 
 /// Validation harness used by the CLI/examples/tests: compare the
@@ -753,7 +868,9 @@ pub fn validate_numerics_pipelined(
     let deg = degree_column(g);
     let got = crate::exec::Executor::new(&prog, &parts)
         .with_pipeline_mode(pipeline)
-        .run(&x, &deg);
+        .try_run_with(&RunRequest::new(&x, &deg))
+        .expect("validation run faulted")
+        .into_output();
     let want = crate::exec::reference::evaluate(ir, g, &x);
     got.max_abs_diff(&want)
 }
@@ -807,17 +924,13 @@ mod tests {
             .unwrap()
             .build(ModelDims::uniform(2, 32))
             .unwrap();
-        let b = bench_executor(
-            &ir,
-            &g,
-            &AcceleratorConfig::switchblade(),
-            2,
-            1,
-            false,
-            KernelMode::Blocked,
-            PipelineMode::Interval,
-            false,
-        );
+        let accel = AcceleratorConfig::switchblade();
+        let b = bench_executor(&BenchRequest {
+            workers: 2,
+            kernel: KernelMode::Blocked,
+            pipeline: PipelineMode::Interval,
+            ..BenchRequest::new(&ir, &g, &accel)
+        });
         assert!(b.bit_identical, "parallel executor diverged bitwise");
         assert!(b.secs_single > 0.0 && b.secs_parallel > 0.0);
         assert_eq!(b.workers, 2);
@@ -848,17 +961,14 @@ mod tests {
             .unwrap()
             .build(ModelDims::uniform(2, 16))
             .unwrap();
-        let b = bench_executor(
-            &ir,
-            &g,
-            &AcceleratorConfig::switchblade(),
-            2,
-            1,
-            false,
-            KernelMode::Simd,
-            PipelineMode::Interval,
-            true,
-        );
+        let accel = AcceleratorConfig::switchblade();
+        let b = bench_executor(&BenchRequest {
+            workers: 2,
+            kernel: KernelMode::Simd,
+            pipeline: PipelineMode::Interval,
+            sweep: true,
+            ..BenchRequest::new(&ir, &g, &accel)
+        });
         assert!(b.bit_identical, "simd sweep diverged bitwise");
         assert_eq!(b.kernel, KernelMode::Simd);
         // A Simd probe reuses its own parallel run as the simd number.
@@ -877,17 +987,14 @@ mod tests {
             .unwrap()
             .build(ModelDims::uniform(2, 16))
             .unwrap();
-        let b = bench_executor(
-            &ir,
-            &g,
-            &AcceleratorConfig::switchblade(),
-            2,
-            1,
-            true,
-            KernelMode::Blocked,
-            PipelineMode::Interval,
-            false,
-        );
+        let accel = AcceleratorConfig::switchblade();
+        let b = bench_executor(&BenchRequest {
+            workers: 2,
+            profile: true,
+            kernel: KernelMode::Blocked,
+            pipeline: PipelineMode::Interval,
+            ..BenchRequest::new(&ir, &g, &accel)
+        });
         assert!(b.bit_identical, "kernel/legacy/pipeline/parallel runs diverged");
         let legacy = b.secs_legacy.expect("legacy timing measured");
         assert!(legacy > 0.0 && b.kernel_speedup().unwrap() > 0.0);
@@ -906,22 +1013,44 @@ mod tests {
             .unwrap()
             .build(ModelDims::uniform(2, 16))
             .unwrap();
-        let b = bench_executor(
-            &ir,
-            &g,
-            &AcceleratorConfig::switchblade(),
-            1,
-            1,
-            false,
-            KernelMode::Blocked,
-            PipelineMode::Off,
-            false,
-        );
+        let accel = AcceleratorConfig::switchblade();
+        let b = bench_executor(&BenchRequest {
+            workers: 1,
+            kernel: KernelMode::Blocked,
+            pipeline: PipelineMode::Off,
+            ..BenchRequest::new(&ir, &g, &accel)
+        });
         assert!(b.bit_identical);
         assert_eq!(b.pipeline, PipelineMode::Off);
         // No pipelined run, no baseline to compare against, no prefetch.
         assert!(b.secs_pipeline_off.is_none() && b.pipeline_speedup().is_none());
         assert_eq!(b.prepared_intervals, 0, "off mode must not prefetch");
+        // Un-probed batch axis reports its absence.
+        assert_eq!(b.batch, 1);
+        assert!(b.batch_amortization.is_none());
+    }
+
+    #[test]
+    fn bench_executor_batch_probe_amortizes_and_matches_bits() {
+        let cache = GraphCache::new(11);
+        let g = cache.get(Dataset::Ak);
+        let ir = ModelZoo::builtin()
+            .get("gcn")
+            .unwrap()
+            .build(ModelDims::uniform(2, 16))
+            .unwrap();
+        let accel = AcceleratorConfig::switchblade();
+        let b = bench_executor(&BenchRequest {
+            workers: 2,
+            batch: 3,
+            ..BenchRequest::new(&ir, &g, &accel)
+        });
+        // The probe folds per-request batched-vs-solo bit equality into
+        // the overall verdict.
+        assert!(b.bit_identical, "batched outputs diverged from solo runs");
+        assert_eq!(b.batch, 3);
+        let a = b.batch_amortization.expect("batch probe measured");
+        assert!(a > 0.0, "amortization factor must be positive, got {a}");
     }
 
     #[test]

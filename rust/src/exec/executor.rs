@@ -46,6 +46,18 @@
 //!   materialised changes, and only for groups where that is provably
 //!   safe (no ScatterPhase STs, no ScatterPhase LD of a DataRef the
 //!   same group stores — the prologue group stays strictly sequential).
+//! * **Cross-request batching** ([`Executor::try_run_with`] with 2+
+//!   inputs): B feature matrices are column-stacked into one `[N, B·F]`
+//!   DRAM image, so a micro-batch shares *one* partition walk — the
+//!   per-interval scatter LDs, gather accumulator setup, and shard
+//!   traversal (the paper's bandwidth-dominant gather/scatter stream)
+//!   run once across the batch instead of once per request. Weights are
+//!   never stacked; the few instructions that mix a stacked operand with
+//!   an unstacked one (DMM against a weight, ELW/CAT/RSCALE with a W
+//!   operand, FusedGather with a per-edge scale) compute each request's
+//!   column lane separately in the exact iteration order of a sequential
+//!   run, so every batched output is bit-identical to running its
+//!   request alone.
 //! * **Group pipelining** ([`PipelineMode::Group`]): because the pool
 //!   outlives intervals, the prepare no longer has to finish inside the
 //!   gather drain — a persistent *prepare lane* thread carries the
@@ -136,6 +148,103 @@ impl PipelineMode {
     }
 }
 
+/// One executor run, described declaratively: 1..=B feature matrices
+/// (2+ inputs make the run *batched* — one partition walk serves every
+/// request, see the module docs) plus the trace/profile toggles that
+/// used to be separate `run_*` entry points.
+///
+/// This is the canonical run surface; `Executor::{run, try_run,
+/// run_traced, run_profiled}` are thin wrappers over it.
+pub struct RunRequest<'r> {
+    /// The per-request `[N, in_dim]` feature matrices, one per batch
+    /// member. Order is preserved into [`RunOutput::outputs`].
+    pub inputs: Vec<&'r Matrix>,
+    /// The `[N, 1]` in-degree column (`DataRef::Degree`), shared by
+    /// every batch member.
+    pub degree: &'r Matrix,
+    /// Record the walker's `(group, interval, shard, phase)` steps into
+    /// [`RunOutput::steps`]. The step count is independent of the batch
+    /// size — the witness that a batch performs exactly one walk.
+    pub trace: bool,
+    /// Time every walk phase into [`RunOutput::profile`].
+    pub profile: bool,
+}
+
+impl<'r> RunRequest<'r> {
+    /// A single-request run — what the legacy `run`/`try_run` wrappers
+    /// build.
+    pub fn new(x: &'r Matrix, degree: &'r Matrix) -> Self {
+        RunRequest {
+            inputs: vec![x],
+            degree,
+            trace: false,
+            profile: false,
+        }
+    }
+
+    /// A batched run over `inputs` (must be non-empty; every matrix
+    /// `[N, in_dim]`).
+    pub fn batched(inputs: Vec<&'r Matrix>, degree: &'r Matrix) -> Self {
+        RunRequest {
+            inputs,
+            degree,
+            trace: false,
+            profile: false,
+        }
+    }
+
+    /// Toggle walk-step tracing (see [`RunRequest::trace`]).
+    pub fn with_trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
+    /// Toggle phase profiling (see [`RunRequest::profile`]).
+    pub fn with_profile(mut self, on: bool) -> Self {
+        self.profile = on;
+        self
+    }
+
+    /// The batch size of this request.
+    pub fn batch(&self) -> usize {
+        self.inputs.len()
+    }
+}
+
+/// What [`Executor::try_run_with`] produced: one output matrix per
+/// request (same order as [`RunRequest::inputs`]) plus whatever optional
+/// instrumentation the request toggled on.
+pub struct RunOutput {
+    /// Per-request `[N, out_dim]` results, bit-identical to running each
+    /// request alone.
+    pub outputs: Vec<Matrix>,
+    /// The walk-step trace, when [`RunRequest::trace`] was set. Its
+    /// length equals the canonical walk's — independent of batch size.
+    pub steps: Option<Vec<WalkStep>>,
+    /// The per-(group, phase) wall-time profile, when
+    /// [`RunRequest::profile`] was set.
+    pub profile: Option<PhaseProfile>,
+    /// How many requests shared this run's single partition walk — the
+    /// amortization factor of the gather/scatter stream.
+    pub batch: usize,
+    /// Intervals whose DstBuffer state was prepared ahead of order
+    /// during this run (pipelining telemetry).
+    pub prepared_intervals: u64,
+}
+
+impl RunOutput {
+    /// Unwrap the single output of an unbatched run (what the legacy
+    /// wrappers return). Panics when the run was batched.
+    pub fn into_output(mut self) -> Matrix {
+        assert_eq!(
+            self.outputs.len(),
+            1,
+            "into_output on a batched run — use .outputs"
+        );
+        self.outputs.pop().expect("one output")
+    }
+}
+
 /// A next-interval state built under the previous interval's gather drain,
 /// waiting for its `begin_interval` to swap it in.
 struct Prepared {
@@ -167,6 +276,10 @@ pub struct Executor<'a> {
     /// GatherPhase worker-pool width (the software sThread count).
     workers: usize,
     mode: KernelMode,
+    /// Batch size of the current run: how many requests are column-
+    /// stacked into each D/S/E buffer (`cols · batch` wide). Set by
+    /// `seed_inputs` from the run request; 1 outside batched runs.
+    batch: usize,
     /// Live state of the interval currently being walked. Never dropped:
     /// `begin_interval` drains its matrices back into its scratch bank
     /// and re-arms it (or swaps in a prepared standby and keeps this one
@@ -338,6 +451,7 @@ impl<'a> Executor<'a> {
             weights: Arc::new(w),
             workers: parts.config.num_sthreads.max(1) as usize,
             mode: KernelMode::default(),
+            batch: 1,
             iv: None,
             pending: Vec::new(),
             pool: None,
@@ -438,78 +552,146 @@ impl<'a> Executor<'a> {
         self.pool.as_ref().map(WorkerPool::probe)
     }
 
-    /// Run the whole program. `x` is `[N, in_dim]`; `degree` the in-degree
-    /// column used by `DataRef::Degree`. Panics on a worker-pool fault —
-    /// recoverable callers (the serve entry loop) use
-    /// [`Executor::try_run`].
+    /// The canonical run entry point: execute the whole program for the
+    /// request's 1..=B feature matrices in **one partition walk**,
+    /// surfacing worker-pool faults (a panicking shard job) as a typed
+    /// error. The executor stays fully usable after an `Err`: the pool
+    /// has healed (fresh scratch, respawned threads), the next run
+    /// reseeds DRAM, and its output is bit-identical to a never-faulted
+    /// run.
+    ///
+    /// Batched runs column-stack the inputs into one `[N, B·F]` DRAM
+    /// image (see the module docs); each request's output is
+    /// bit-identical to running it alone, because every kernel either
+    /// operates column-independently on full stacked rows or computes
+    /// the request's lane in the exact sequential iteration order.
+    ///
+    /// With [`RunRequest::profile`] set, an
+    /// [`obs::trace`](crate::obs::trace) session is opened around the
+    /// walk (re-entrant — inside a surrounding `--trace` session this
+    /// borrows it and reads only the tail recorded here, leaving the
+    /// spans for the outer export) and [`PhaseProfile::from_spans`]
+    /// folds the recorded walk + `prepare` spans into the per-(group,
+    /// phase) profile.
+    pub fn try_run_with(&mut self, req: &RunRequest) -> Result<RunOutput, PoolError> {
+        self.seed_inputs(&req.inputs, req.degree);
+        let walk = PartitionWalk::new(self.program, self.parts);
+        let sess_mark = req.profile.then(|| {
+            let sess = trace::begin();
+            let mark = trace::mark();
+            (sess, mark)
+        });
+        let steps = if req.trace {
+            let mut traced = Traced::new(&mut *self);
+            walk.drive(&mut traced);
+            Some(traced.into_steps())
+        } else {
+            walk.drive(&mut *self);
+            None
+        };
+        let profile = sess_mark.map(|(sess, mark)| {
+            let spans = trace::since(mark);
+            drop(sess.end());
+            let mut profile = PhaseProfile::from_spans(&spans);
+            profile.pad_groups(self.program.groups.len());
+            profile
+        });
+        match self.fault.take() {
+            // The walk ran to completion structurally, but every value
+            // downstream of the failed batch is garbage — discard.
+            Some(e) => Err(e),
+            None => Ok(RunOutput {
+                outputs: self.take_outputs(),
+                steps,
+                profile,
+                batch: req.inputs.len(),
+                prepared_intervals: self.prepared_intervals(),
+            }),
+        }
+    }
+
+    /// Run the whole program for one request. `x` is `[N, in_dim]`;
+    /// `degree` the in-degree column used by `DataRef::Degree`. Panics
+    /// on a worker-pool fault — recoverable callers (the serve entry
+    /// loop) use [`Executor::try_run`].
+    ///
+    /// Deprecated: thin wrapper over [`Executor::try_run_with`], the
+    /// canonical (and batch-capable) run surface.
     pub fn run(&mut self, x: &Matrix, degree: &Matrix) -> Matrix {
         self.try_run(x, degree)
             .unwrap_or_else(|e| panic!("executor fault: {e}"))
     }
 
-    /// Run the whole program, surfacing worker-pool faults (a panicking
-    /// shard job) as a typed error instead of re-panicking. The executor
-    /// stays fully usable after an `Err`: the pool has healed (fresh
-    /// scratch, respawned threads), the next `try_run` reseeds DRAM, and
-    /// its output is bit-identical to a never-faulted run.
+    /// Run one request, surfacing worker-pool faults as a typed error.
+    ///
+    /// Deprecated: thin wrapper over [`Executor::try_run_with`], the
+    /// canonical (and batch-capable) run surface.
     pub fn try_run(&mut self, x: &Matrix, degree: &Matrix) -> Result<Matrix, PoolError> {
-        self.seed_inputs(x, degree);
-        PartitionWalk::new(self.program, self.parts).drive(&mut *self);
-        match self.fault.take() {
-            // The walk ran to completion structurally, but every value
-            // downstream of the failed batch is garbage — discard.
-            Some(e) => Err(e),
-            None => Ok(self.take_output()),
-        }
+        self.try_run_with(&RunRequest::new(x, degree))
+            .map(RunOutput::into_output)
     }
 
     /// Like [`Executor::run`], additionally recording the walker's
     /// `(group, interval, shard, phase)` trace — the order-equivalence
     /// witness the scheduler tests compare against the simulator's.
+    ///
+    /// Deprecated: thin wrapper over [`Executor::try_run_with`] with
+    /// [`RunRequest::trace`] set.
     pub fn run_traced(&mut self, x: &Matrix, degree: &Matrix) -> (Matrix, Vec<WalkStep>) {
-        self.seed_inputs(x, degree);
-        let walk = PartitionWalk::new(self.program, self.parts);
-        let mut traced = Traced::new(&mut *self);
-        walk.drive(&mut traced);
-        let steps = traced.into_steps();
-        if let Some(e) = self.fault.take() {
-            panic!("executor fault: {e}");
-        }
-        (self.take_output(), steps)
+        let mut out = self
+            .try_run_with(&RunRequest::new(x, degree).with_trace(true))
+            .unwrap_or_else(|e| panic!("executor fault: {e}"));
+        let steps = out.steps.take().expect("trace was requested");
+        (out.into_output(), steps)
     }
 
     /// Like [`Executor::run`], additionally timing every walk phase —
     /// the `switchblade bench --profile` path.
     ///
-    /// Implemented on the span stream: an [`obs::trace`](crate::obs::trace)
-    /// session is opened around the walk (re-entrant — inside a
-    /// surrounding `--trace` session this borrows it and reads only the
-    /// tail recorded here, leaving the spans for the outer export) and
-    /// [`PhaseProfile::from_spans`] folds the recorded walk + `prepare`
-    /// spans into the per-(group, phase) profile. The pipelining columns
-    /// need no backfill: the executor's `prepare` spans carry them.
+    /// Deprecated: thin wrapper over [`Executor::try_run_with`] with
+    /// [`RunRequest::profile`] set.
     pub fn run_profiled(&mut self, x: &Matrix, degree: &Matrix) -> (Matrix, PhaseProfile) {
-        self.seed_inputs(x, degree);
-        let sess = trace::begin();
-        let mark = trace::mark();
-        PartitionWalk::new(self.program, self.parts).drive(&mut *self);
-        let spans = trace::since(mark);
-        drop(sess.end());
-        let mut profile = PhaseProfile::from_spans(&spans);
-        profile.pad_groups(self.program.groups.len());
-        if let Some(e) = self.fault.take() {
-            panic!("executor fault: {e}");
-        }
-        (self.take_output(), profile)
+        let mut out = self
+            .try_run_with(&RunRequest::new(x, degree).with_profile(true))
+            .unwrap_or_else(|e| panic!("executor fault: {e}"));
+        let profile = out.profile.take().expect("profile was requested");
+        (out.into_output(), profile)
     }
 
-    fn seed_inputs(&mut self, x: &Matrix, degree: &Matrix) {
-        assert_eq!(x.rows, self.parts.num_vertices);
-        assert_eq!(x.cols as u32, self.program.in_dim);
+    /// Seed the DRAM arena for a (possibly batched) run: requests are
+    /// column-stacked into one `[N, B·F]` Input image and the degree
+    /// column is tiled to `[N, B]`, so every downstream LD/ST row copy
+    /// serves the whole batch at once. Batch size 1 clones the input
+    /// verbatim — the exact pre-batching path.
+    fn seed_inputs(&mut self, inputs: &[&Matrix], degree: &Matrix) {
+        assert!(!inputs.is_empty(), "a run needs at least one input");
+        for x in inputs {
+            assert_eq!(x.rows, self.parts.num_vertices);
+            assert_eq!(x.cols as u32, self.program.in_dim);
+        }
+        self.batch = inputs.len();
         self.fault = None;
         self.dram = vec![None; self.layout.dram];
-        self.dram[DataRef::Input.slot()] = Some(x.clone());
-        self.dram[DataRef::Degree.slot()] = Some(degree.clone());
+        if self.batch == 1 {
+            self.dram[DataRef::Input.slot()] = Some(inputs[0].clone());
+            self.dram[DataRef::Degree.slot()] = Some(degree.clone());
+        } else {
+            let n = self.parts.num_vertices;
+            let f = self.program.in_dim as usize;
+            let mut x = Matrix::zeros(n, f * self.batch);
+            for r in 0..n {
+                let row = x.row_mut(r);
+                for (l, m) in inputs.iter().enumerate() {
+                    row[l * f..(l + 1) * f].copy_from_slice(m.row(r));
+                }
+            }
+            let mut deg = Matrix::zeros(n, self.batch);
+            for r in 0..n {
+                deg.row_mut(r).fill(degree.get(r, 0));
+            }
+            self.dram[DataRef::Input.slot()] = Some(x);
+            self.dram[DataRef::Degree.slot()] = Some(deg);
+        }
         // Re-arm the pipeline for a fresh walk. A completed walk leaves no
         // standby or in-flight lane job (the last interval has no
         // lookahead), but drain both defensively so buffers flow back.
@@ -547,13 +729,29 @@ impl<'a> Executor<'a> {
         }
     }
 
-    /// Move the output matrix out of its DRAM slot (no copy — the run is
-    /// over and `seed_inputs` re-arms the arena for the next one).
-    fn take_output(&mut self) -> Matrix {
+    /// Move the output out of its DRAM slot and split the stacked
+    /// `[N, B·out]` image back into per-request `[N, out]` matrices
+    /// (batch 1 moves the matrix with no copy — the run is over and
+    /// `seed_inputs` re-arms the arena for the next one).
+    fn take_outputs(&mut self) -> Vec<Matrix> {
         let slot = self.output_ref().slot();
-        self.dram[slot]
+        let m = self.dram[slot]
             .take()
-            .unwrap_or_else(|| panic!("program never stored its output"))
+            .unwrap_or_else(|| panic!("program never stored its output"));
+        if self.batch == 1 {
+            return vec![m];
+        }
+        let per = m.cols / self.batch;
+        debug_assert_eq!(per * self.batch, m.cols, "stacked output width");
+        (0..self.batch)
+            .map(|l| {
+                let mut out = Matrix::zeros(m.rows, per);
+                for r in 0..m.rows {
+                    out.row_mut(r).copy_from_slice(&m.row(r)[l * per..(l + 1) * per]);
+                }
+                out
+            })
+            .collect()
     }
 
     /// The DataRef holding the final result: the last `ST.D` of the last
@@ -580,7 +778,10 @@ impl<'a> Executor<'a> {
             // reach the prepare-ahead code).
             let slot = data.slot();
             if self.dram[slot].is_none() {
-                self.dram[slot] = Some(Matrix::zeros(self.parts.num_vertices, *cols as usize));
+                self.dram[slot] = Some(Matrix::zeros(
+                    self.parts.num_vertices,
+                    *cols as usize * self.batch,
+                ));
             }
             let m = iv.d[sym.id as usize]
                 .as_ref()
@@ -592,7 +793,7 @@ impl<'a> Executor<'a> {
             return;
         }
         let scratch = bank_mut(&mut self.banks, iv.bank);
-        exec_interval_read_instr(i, iv, &self.dram, &self.weights, scratch, self.mode);
+        exec_interval_read_instr(i, iv, &self.dram, &self.weights, scratch, self.mode, self.batch);
     }
 
     // ---- shard-phase execution (Gather) ---------------------------------------
@@ -656,6 +857,7 @@ impl<'a> Executor<'a> {
                 &self.weights,
                 bank_mut(&mut self.banks, 0),
                 self.mode,
+                self.batch,
             );
         } else {
             let mut iv = self.iv.take().expect("interval state");
@@ -671,6 +873,7 @@ impl<'a> Executor<'a> {
                     gather: &cx.group.gather[..],
                     movable: &self.movable_spills[cx.group_idx][..],
                     mode: self.mode,
+                    batch: self.batch,
                 };
                 let (g_arg, i_arg) = (cx.group_idx as i32, cx.interval_idx as i32);
                 let (env_ref, pending_ref) = (&env, &pending);
@@ -733,6 +936,7 @@ impl<'a> Executor<'a> {
                         &self.weights,
                         bank_mut(&mut self.banks, 0),
                         self.mode,
+                        self.batch,
                     );
                 } else {
                     let ticket = pool.begin_batch(pending.len(), &run);
@@ -746,6 +950,7 @@ impl<'a> Executor<'a> {
                         &self.weights,
                         bank_mut(&mut self.banks, 0),
                         self.mode,
+                        self.batch,
                     );
                     if let Err(e) = ticket.finish(&mut outs) {
                         fault = Some(e);
@@ -812,7 +1017,15 @@ impl<'a> Executor<'a> {
         let split = self.scatter_split[tg].expect("dispatch requires a split prologue");
         let group = &self.program.groups[tg];
         for i in &group.scatter[..split] {
-            exec_interval_read_instr(i, &mut st, &self.dram, &self.weights, &mut scratch, self.mode);
+            exec_interval_read_instr(
+                i,
+                &mut st,
+                &self.dram,
+                &self.weights,
+                &mut scratch,
+                self.mode,
+                self.batch,
+            );
         }
         let instrs = self.prep_instrs(tg);
         let job = PrepJob {
@@ -821,6 +1034,7 @@ impl<'a> Executor<'a> {
             instrs,
             weights: Arc::clone(&self.weights),
             mode: self.mode,
+            batch: self.batch,
             tracing,
             // One lane past the pool's worker tracks.
             track: trace::worker_track(self.workers),
@@ -980,7 +1194,7 @@ impl PhaseVisitor for Executor<'_> {
         // Gather accumulators exist per interval even when the interval
         // has no shards (isolated destination ranges).
         let b = iv.bank;
-        ensure_accs(&cx.group.gather, &mut iv, bank_mut(&mut self.banks, b));
+        ensure_accs(&cx.group.gather, &mut iv, bank_mut(&mut self.banks, b), self.batch);
         self.iv = Some(iv);
     }
 
@@ -1043,6 +1257,7 @@ struct PrepJob {
     instrs: Arc<PrepInstrs>,
     weights: Arc<Vec<Option<Matrix>>>,
     mode: KernelMode,
+    batch: usize,
     tracing: bool,
     track: u32,
     group: i32,
@@ -1098,9 +1313,10 @@ impl PrepareLane {
                                 &job.weights,
                                 &mut scratch,
                                 job.mode,
+                                job.batch,
                             );
                         }
-                        ensure_accs(&job.instrs.gathers, &mut st, &mut scratch);
+                        ensure_accs(&job.instrs.gathers, &mut st, &mut scratch, job.batch);
                     }
                     // Persistent thread: hand spans to the session now —
                     // the thread-exit flush would come far too late.
@@ -1406,6 +1622,9 @@ struct ShardEnv<'x> {
     /// Per gather-instruction last-use flags for ST.E spills.
     movable: &'x [bool],
     mode: KernelMode,
+    /// Batch size of the run: every S/E/D buffer is `cols · batch` wide
+    /// (see the module docs on cross-request batching).
+    batch: usize,
 }
 
 impl ShardEnv<'_> {
@@ -1465,10 +1684,15 @@ impl ShardEnv<'_> {
                     .as_ref()
                     .unwrap_or_else(|| panic!("LD of unwritten {data}"));
                 let slot = sym.id as usize;
+                // One row copy of `cols · batch` floats serves every
+                // batch member — the amortized gather/scatter stream.
                 match sym.space {
                     Space::S => {
-                        let mut m =
-                            ws.s.take_matrix_any(slot, shard.num_src(), *cols as usize);
+                        let mut m = ws.s.take_matrix_any(
+                            slot,
+                            shard.num_src(),
+                            *cols as usize * self.batch,
+                        );
                         for (r, &gv) in shard.sources.iter().enumerate() {
                             m.row_mut(r).copy_from_slice(src.row(gv as usize));
                         }
@@ -1477,8 +1701,11 @@ impl ShardEnv<'_> {
                         }
                     }
                     Space::E => {
-                        let mut m =
-                            ws.e.take_matrix_any(slot, shard.num_edges(), *cols as usize);
+                        let mut m = ws.e.take_matrix_any(
+                            slot,
+                            shard.num_edges(),
+                            *cols as usize * self.batch,
+                        );
                         for (r, ed) in shard.edges.iter().enumerate() {
                             m.row_mut(r).copy_from_slice(src.row(ed.edge_id as usize));
                         }
@@ -1512,7 +1739,11 @@ impl ShardEnv<'_> {
             }
             Instr::Scatter { dir, dst, src, cols } => {
                 let slot = dst.id as usize;
-                let mut m = ws.e.take_matrix_any(slot, shard.num_edges(), *cols as usize);
+                let mut m = ws.e.take_matrix_any(
+                    slot,
+                    shard.num_edges(),
+                    *cols as usize * self.batch,
+                );
                 match dir {
                     ScatterDir::SrcToEdge => {
                         let sm = ws.s_arena[src.id as usize]
@@ -1554,12 +1785,13 @@ impl ShardEnv<'_> {
                         .as_ref()
                         .unwrap_or_else(|| panic!("E operand {sc} missing"))
                 });
+                let cw = *cols as usize;
                 let acc = self.windowed_partial(
                     out,
                     *dst,
                     *reduce,
                     span,
-                    *cols as usize,
+                    cw * self.batch,
                     &mut ws.pm,
                     &mut ws.pc,
                 );
@@ -1567,13 +1799,34 @@ impl ShardEnv<'_> {
                     let local = (ed.dst - lo) as usize;
                     acc.counts[local] += 1;
                     let row = sm.row(ed.src_slot as usize);
-                    let f = scale_m.map_or(1.0, |m| m.get(r, 0));
-                    match reduce {
-                        Reduce::Sum | Reduce::Mean => {
-                            k_scale_axpy(self.mode, acc.m.row_mut(local), row, f)
-                        }
-                        Reduce::Max => {
-                            k_scale_max_assign(self.mode, acc.m.row_mut(local), row, f)
+                    match scale_m {
+                        // Unscaled (f = 1.0 for every lane): one fused
+                        // row op covers the whole stacked row —
+                        // element-wise, so bit-identical per lane.
+                        None => match reduce {
+                            Reduce::Sum | Reduce::Mean => {
+                                k_scale_axpy(self.mode, acc.m.row_mut(local), row, 1.0)
+                            }
+                            Reduce::Max => {
+                                k_scale_max_assign(self.mode, acc.m.row_mut(local), row, 1.0)
+                            }
+                        },
+                        // Scaled: the stacked scale is `[edges, batch]`
+                        // — each lane applies its own request's factor,
+                        // in the sequential kernel's iteration order.
+                        Some(m) => {
+                            let arow = acc.m.row_mut(local);
+                            for l in 0..self.batch {
+                                let f = m.get(r, l);
+                                let o = &mut arow[l * cw..(l + 1) * cw];
+                                let x = &row[l * cw..(l + 1) * cw];
+                                match reduce {
+                                    Reduce::Sum | Reduce::Mean => {
+                                        k_scale_axpy(self.mode, o, x, f)
+                                    }
+                                    Reduce::Max => k_scale_max_assign(self.mode, o, x, f),
+                                }
+                            }
                         }
                     }
                 }
@@ -1593,7 +1846,7 @@ impl ShardEnv<'_> {
                     *dst,
                     *reduce,
                     span,
-                    *cols as usize,
+                    *cols as usize * self.batch,
                     &mut ws.pm,
                     &mut ws.pc,
                 );
@@ -1634,6 +1887,7 @@ impl ShardEnv<'_> {
                             pool,
                             slot,
                             self.mode,
+                            self.batch,
                         )
                     }
                     KernelMode::Naive => compute_instr_naive(
@@ -1643,6 +1897,7 @@ impl ShardEnv<'_> {
                         Some(&ws.s_arena[..]),
                         Some(&ws.e_arena[..]),
                         &iv.d,
+                        self.batch,
                     ),
                 };
                 let (arena, pool) = match def.space {
@@ -1663,6 +1918,7 @@ impl ShardEnv<'_> {
 /// instruction, is handled by the sequential caller
 /// (`Executor::exec_interval_instr`); the pipelined prepare paths never
 /// see one because ST-bearing ScatterPhases are not prefetch-safe.
+#[allow(clippy::too_many_arguments)]
 fn exec_interval_read_instr(
     i: &Instr,
     iv: &mut IntervalState,
@@ -1670,6 +1926,7 @@ fn exec_interval_read_instr(
     weights: &[Option<Matrix>],
     scratch: &mut IntervalScratch,
     mode: KernelMode,
+    batch: usize,
 ) {
     let v = iv.len();
     match i {
@@ -1678,7 +1935,9 @@ fn exec_interval_read_instr(
                 .as_ref()
                 .unwrap_or_else(|| panic!("LD of unwritten {data}"));
             let slot = sym.id as usize;
-            let mut m = scratch.m.take_matrix_any(slot, v, *cols as usize);
+            // DRAM arrays are batch-stacked, so one row copy of
+            // `cols · batch` floats serves every batch member.
+            let mut m = scratch.m.take_matrix_any(slot, v, *cols as usize * batch);
             for (r, gv) in (iv.begin..iv.end).enumerate() {
                 m.row_mut(r).copy_from_slice(src.row(gv));
             }
@@ -1701,8 +1960,11 @@ fn exec_interval_read_instr(
                     &mut scratch.m,
                     slot,
                     mode,
+                    batch,
                 ),
-                KernelMode::Naive => compute_instr_naive(i, v, weights, None, None, &iv.d),
+                KernelMode::Naive => {
+                    compute_instr_naive(i, v, weights, None, None, &iv.d, batch)
+                }
             };
             if let Some(old) = iv.d[slot].replace(out) {
                 scratch.m.give(slot, old.data);
@@ -1715,12 +1977,12 @@ fn exec_interval_read_instr(
 /// — mirrors the hardware's phase-scheduler reset). Shared by the
 /// sequential `scatter_phase`, the pipelined prepare, and the prepare
 /// lane (hence the instruction-slice parameter).
-fn ensure_accs(gather: &[Instr], iv: &mut IntervalState, scratch: &mut IntervalScratch) {
+fn ensure_accs(gather: &[Instr], iv: &mut IntervalState, scratch: &mut IntervalScratch, batch: usize) {
     for i in gather {
         match i {
             Instr::Gather { reduce, dst, cols, .. }
             | Instr::FusedGather { reduce, dst, cols, .. } => {
-                iv.ensure_acc(*dst, *reduce, *cols as usize, scratch);
+                iv.ensure_acc(*dst, *reduce, *cols as usize * batch, scratch);
             }
             _ => {}
         }
@@ -1736,6 +1998,7 @@ fn ensure_accs(gather: &[Instr], iv: &mut IntervalState, scratch: &mut IntervalS
 /// trace span gates on this thread's session flag and lands on the main
 /// track — in a trace it shows up *under* the enclosing `gather_drain`
 /// span, which is exactly the pipelining overlap being claimed.
+#[allow(clippy::too_many_arguments)]
 fn timed_prepare(
     program: &Program,
     standby: &mut Option<(usize, usize, IntervalState)>,
@@ -1743,6 +2006,7 @@ fn timed_prepare(
     weights: &[Option<Matrix>],
     scratch: &mut IntervalScratch,
     mode: KernelMode,
+    batch: usize,
 ) -> f64 {
     let Some((tg, ni, st)) = standby.as_mut() else {
         return 0.0;
@@ -1757,7 +2021,7 @@ fn timed_prepare(
         -1,
     );
     let t0 = Instant::now();
-    prepare_interval(group, st, dram, weights, scratch, mode);
+    prepare_interval(group, st, dram, weights, scratch, mode, batch);
     t0.elapsed().as_secs_f64()
 }
 
@@ -1768,6 +2032,7 @@ fn timed_prepare(
 /// arrays, weights) is provably unchanged until the interval's own
 /// `scatter_phase` slot in the sequential order, so the prepared state is
 /// bit-identical to what `PipelineMode::Off` would build there.
+#[allow(clippy::too_many_arguments)]
 fn prepare_interval(
     group: &PhaseGroup,
     st: &mut IntervalState,
@@ -1775,11 +2040,12 @@ fn prepare_interval(
     weights: &[Option<Matrix>],
     scratch: &mut IntervalScratch,
     mode: KernelMode,
+    batch: usize,
 ) {
     for i in &group.scatter {
-        exec_interval_read_instr(i, st, dram, weights, scratch, mode);
+        exec_interval_read_instr(i, st, dram, weights, scratch, mode, batch);
     }
-    ensure_accs(&group.gather, st, scratch);
+    ensure_accs(&group.gather, st, scratch, batch);
 }
 
 /// Resolve a compute operand against the slot arenas: W from `weights`,
@@ -1809,6 +2075,15 @@ fn look_operand<'m>(
 /// [`KernelMode::Simd`] swaps the DMM for its explicit-width twin.
 /// Results are bit-identical to [`compute_instr_naive`] for finite
 /// inputs.
+///
+/// `batch > 1` evaluates the column-stacked layout: every non-weight
+/// operand (and the output) is `cols · batch` wide. Purely element-wise
+/// work runs on the full stacked rows (bit-identical per lane by
+/// column independence); anywhere an *unstacked* W operand or a
+/// per-lane scalar enters — DMM, ELW/CAT with a W operand, RSCALE —
+/// each lane is computed separately in the sequential kernel's exact
+/// iteration order, so the result stays bit-identical to running every
+/// request alone. `batch == 1` takes the original code paths verbatim.
 #[allow(clippy::too_many_arguments)]
 fn compute_instr_kernel(
     i: &Instr,
@@ -1820,7 +2095,11 @@ fn compute_instr_kernel(
     pool: &mut Pool<f32>,
     slot: usize,
     mode: KernelMode,
+    batch: usize,
 ) -> Matrix {
+    // Stacked operand window: W-space operands are never stacked, so a
+    // lane reads them at offset 0 with their real width.
+    let lane_off = |sym: &Sym, l: usize, w: usize| if sym.space == Space::W { 0 } else { l * w };
     match i {
         Instr::Elw {
             op,
@@ -1832,22 +2111,59 @@ fn compute_instr_kernel(
         } => {
             let cols = *cols as usize;
             let am = look_operand(a, weights, s, e, d);
-            let mut out = pool.take_matrix_any(slot, rows, cols);
+            let mut out = pool.take_matrix_any(slot, rows, cols * batch);
+            let stacked = |sym: &Sym| sym.space != Space::W;
             match b {
-                None => kernels::elw_unary(*op, &am.data[..rows * cols], &mut out.data),
+                None if batch == 1 || stacked(a) => {
+                    kernels::elw_unary(*op, &am.data[..rows * cols * batch], &mut out.data)
+                }
+                None => {
+                    // Unstacked (W) source broadcast into every lane.
+                    for r in 0..rows {
+                        let orow = out.row_mut(r);
+                        for l in 0..batch {
+                            kernels::elw_unary(
+                                *op,
+                                &am.row(r)[..cols],
+                                &mut orow[l * cols..(l + 1) * cols],
+                            );
+                        }
+                    }
+                }
                 Some(bs) => {
                     let bm = look_operand(bs, weights, s, e, d);
-                    if *broadcast_b {
-                        for r in 0..rows {
-                            kernels::elw_binary(*op, am.row(r), bm.row(0), out.row_mut(r));
+                    if batch == 1 || (stacked(a) && stacked(bs)) {
+                        // Both operands stacked: the broadcast row and
+                        // the flat slices are themselves stacked, so the
+                        // unbatched code runs on the wider rows.
+                        if *broadcast_b {
+                            for r in 0..rows {
+                                kernels::elw_binary(*op, am.row(r), bm.row(0), out.row_mut(r));
+                            }
+                        } else {
+                            kernels::elw_binary(
+                                *op,
+                                &am.data[..rows * cols * batch],
+                                &bm.data[..rows * cols * batch],
+                                &mut out.data,
+                            );
                         }
                     } else {
-                        kernels::elw_binary(
-                            *op,
-                            &am.data[..rows * cols],
-                            &bm.data[..rows * cols],
-                            &mut out.data,
-                        );
+                        // A W operand is shared by every lane.
+                        for r in 0..rows {
+                            let orow = out.row_mut(r);
+                            for l in 0..batch {
+                                let ao = lane_off(a, l, cols);
+                                let bo = lane_off(bs, l, cols);
+                                let br = if *broadcast_b { 0 } else { r };
+                                kernels::elw_binary(
+                                    *op,
+                                    &am.row(r)[ao..ao + cols],
+                                    &bm.row(br)[bo..bo + cols],
+                                    &mut orow[l * cols..(l + 1) * cols],
+                                );
+                            }
+                        }
                     }
                 }
             }
@@ -1857,9 +2173,30 @@ fn compute_instr_kernel(
             let cols = *cols as usize;
             let am = look_operand(a, weights, s, e, d);
             let sm = look_operand(scale, weights, s, e, d);
-            let mut out = pool.take_matrix_any(slot, rows, cols);
-            for r in 0..rows {
-                kernels::row_scale(&am.row(r)[..cols], sm.get(r, 0), out.row_mut(r));
+            let mut out = pool.take_matrix_any(slot, rows, cols * batch);
+            if batch == 1 {
+                for r in 0..rows {
+                    kernels::row_scale(&am.row(r)[..cols], sm.get(r, 0), out.row_mut(r));
+                }
+            } else {
+                // The stacked scale column is `[rows, batch]`; each lane
+                // scales by its own request's factor.
+                for r in 0..rows {
+                    let orow = out.row_mut(r);
+                    for l in 0..batch {
+                        let f = if scale.space == Space::W {
+                            sm.get(r, 0)
+                        } else {
+                            sm.get(r, l)
+                        };
+                        let ao = lane_off(a, l, cols);
+                        kernels::row_scale(
+                            &am.row(r)[ao..ao + cols],
+                            f,
+                            &mut orow[l * cols..(l + 1) * cols],
+                        );
+                    }
+                }
             }
             out
         }
@@ -1869,20 +2206,58 @@ fn compute_instr_kernel(
             let (ca, cb) = (*cols_a as usize, *cols_b as usize);
             let am = look_operand(a, weights, s, e, d);
             let bm = look_operand(b, weights, s, e, d);
-            let mut out = pool.take_matrix_any(slot, rows, ca + cb);
-            for r in 0..rows {
-                out.row_mut(r)[..ca].copy_from_slice(am.row(r));
-                out.row_mut(r)[ca..].copy_from_slice(bm.row(r));
+            let mut out = pool.take_matrix_any(slot, rows, (ca + cb) * batch);
+            if batch == 1 {
+                for r in 0..rows {
+                    out.row_mut(r)[..ca].copy_from_slice(am.row(r));
+                    out.row_mut(r)[ca..].copy_from_slice(bm.row(r));
+                }
+            } else {
+                // Interleave per lane: `[a_0 | b_0 | a_1 | b_1 | ...]`.
+                for r in 0..rows {
+                    let orow = out.row_mut(r);
+                    for l in 0..batch {
+                        let ao = lane_off(a, l, ca);
+                        let bo = lane_off(b, l, cb);
+                        let base = l * (ca + cb);
+                        orow[base..base + ca].copy_from_slice(&am.row(r)[ao..ao + ca]);
+                        orow[base + ca..base + ca + cb]
+                            .copy_from_slice(&bm.row(r)[bo..bo + cb]);
+                    }
+                }
             }
             out
         }
         Instr::Dmm { a, w, .. } => {
             let am = look_operand(a, weights, s, e, d);
             let wm = look_operand(w, weights, s, e, d);
-            let mut out = pool.take_matrix_any(slot, am.rows, wm.cols);
-            match mode {
-                KernelMode::Simd => kernels::matmul_simd(am, wm, &mut out),
-                _ => kernels::matmul_blocked(am, wm, &mut out),
+            let mut out = pool.take_matrix_any(slot, am.rows, wm.cols * batch);
+            if batch == 1 {
+                match mode {
+                    KernelMode::Simd => kernels::matmul_simd(am, wm, &mut out),
+                    _ => kernels::matmul_blocked(am, wm, &mut out),
+                }
+            } else {
+                // Stacked activation × shared weight: one lane-windowed
+                // matmul per request, each in the sequential kernel's
+                // exact tile/summation order.
+                assert_eq!(w.space, Space::W, "batched DMM needs an unstacked weight");
+                let k = wm.rows;
+                for l in 0..batch {
+                    match mode {
+                        KernelMode::Simd => {
+                            kernels::matmul_simd_lane(am, l * k, k, wm, &mut out, l * wm.cols)
+                        }
+                        _ => kernels::matmul_blocked_lane(
+                            am,
+                            l * k,
+                            k,
+                            wm,
+                            &mut out,
+                            l * wm.cols,
+                        ),
+                    }
+                }
             }
             out
         }
@@ -1902,7 +2277,12 @@ fn compute_instr_naive(
     s: Option<&[Option<Matrix>]>,
     e: Option<&[Option<Matrix>]>,
     d: &[Option<Matrix>],
+    batch: usize,
 ) -> Matrix {
+    // Batched lane windows mirror `compute_instr_kernel`'s: W operands
+    // are unstacked (offset 0), everything else offsets by lane. Each
+    // lane's element order matches the unbatched loops exactly.
+    let lane_off = |sym: &Sym, l: usize, w: usize| if sym.space == Space::W { 0 } else { l * w };
     match i {
         Instr::Elw {
             op,
@@ -1912,13 +2292,17 @@ fn compute_instr_naive(
             cols,
             ..
         } => {
+            let cols = *cols as usize;
             let am = look_operand(a, weights, s, e, d);
-            let mut out = Matrix::zeros(rows, *cols as usize);
+            let mut out = Matrix::zeros(rows, cols * batch);
             match b {
                 None => {
                     for r in 0..rows {
-                        for c in 0..*cols as usize {
-                            out.set(r, c, apply_unary(*op, am.get(r, c)));
+                        for l in 0..batch {
+                            let ao = lane_off(a, l, cols);
+                            for c in 0..cols {
+                                out.set(r, l * cols + c, apply_unary(*op, am.get(r, ao + c)));
+                            }
                         }
                     }
                 }
@@ -1926,8 +2310,16 @@ fn compute_instr_naive(
                     let bm = look_operand(bs, weights, s, e, d);
                     for r in 0..rows {
                         let br = if *broadcast_b { 0 } else { r };
-                        for c in 0..*cols as usize {
-                            out.set(r, c, apply_binary(*op, am.get(r, c), bm.get(br, c)));
+                        for l in 0..batch {
+                            let ao = lane_off(a, l, cols);
+                            let bo = lane_off(bs, l, cols);
+                            for c in 0..cols {
+                                out.set(
+                                    r,
+                                    l * cols + c,
+                                    apply_binary(*op, am.get(r, ao + c), bm.get(br, bo + c)),
+                                );
+                            }
                         }
                     }
                 }
@@ -1935,13 +2327,21 @@ fn compute_instr_naive(
             out
         }
         Instr::RowScale { a, scale, cols, .. } => {
+            let cols = *cols as usize;
             let am = look_operand(a, weights, s, e, d);
             let sm = look_operand(scale, weights, s, e, d);
-            let mut out = Matrix::zeros(rows, *cols as usize);
+            let mut out = Matrix::zeros(rows, cols * batch);
             for r in 0..rows {
-                let f = sm.get(r, 0);
-                for c in 0..*cols as usize {
-                    out.set(r, c, am.get(r, c) * f);
+                for l in 0..batch {
+                    let f = if scale.space == Space::W {
+                        sm.get(r, 0)
+                    } else {
+                        sm.get(r, l)
+                    };
+                    let ao = lane_off(a, l, cols);
+                    for c in 0..cols {
+                        out.set(r, l * cols + c, am.get(r, ao + c) * f);
+                    }
                 }
             }
             out
@@ -1949,19 +2349,36 @@ fn compute_instr_naive(
         Instr::Concat {
             a, b, cols_a, cols_b, ..
         } => {
+            let (ca, cb) = (*cols_a as usize, *cols_b as usize);
             let am = look_operand(a, weights, s, e, d);
             let bm = look_operand(b, weights, s, e, d);
-            let mut out = Matrix::zeros(rows, (*cols_a + *cols_b) as usize);
+            let mut out = Matrix::zeros(rows, (ca + cb) * batch);
             for r in 0..rows {
-                out.row_mut(r)[..*cols_a as usize].copy_from_slice(am.row(r));
-                out.row_mut(r)[*cols_a as usize..].copy_from_slice(bm.row(r));
+                let orow = out.row_mut(r);
+                for l in 0..batch {
+                    let ao = lane_off(a, l, ca);
+                    let bo = lane_off(b, l, cb);
+                    let base = l * (ca + cb);
+                    orow[base..base + ca].copy_from_slice(&am.row(r)[ao..ao + ca]);
+                    orow[base + ca..base + ca + cb].copy_from_slice(&bm.row(r)[bo..bo + cb]);
+                }
             }
             out
         }
         Instr::Dmm { a, w, .. } => {
             let am = look_operand(a, weights, s, e, d);
             let wm = look_operand(w, weights, s, e, d);
-            kernels::matmul_naive(am, wm)
+            if batch == 1 {
+                kernels::matmul_naive(am, wm)
+            } else {
+                assert_eq!(w.space, Space::W, "batched DMM needs an unstacked weight");
+                let k = wm.rows;
+                let mut out = Matrix::zeros(am.rows, wm.cols * batch);
+                for l in 0..batch {
+                    kernels::matmul_naive_lane(am, l * k, k, wm, &mut out, l * wm.cols);
+                }
+                out
+            }
         }
         _ => panic!("not a compute instruction: {}", i.render()),
     }

@@ -85,6 +85,132 @@ pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
     out
 }
 
+// ---- lane-windowed matmul variants (batched execution) ----------------------
+//
+// Batched runs column-stack B feature matrices into one `[rows, B·F]`
+// buffer (see `exec::RunRequest`). Element-wise kernels are column-
+// independent, so they run on full stacked rows unchanged — but a Dmm
+// multiplies a *stacked* activation against an *unstacked* weight, so
+// each request's lane must be computed separately: lane `l` reads
+// `a[i, a_off .. a_off + k]` and writes `out[i, out_off .. out_off + n]`.
+// Every lane variant walks its window in the exact iteration order of
+// its sequential twin, so a batched lane is bit-identical to the same
+// request run alone.
+
+/// [`matmul_blocked`] over one lane window: `out[i, out_off + j] =
+/// Σ_k a[i, a_off + k] · b[k, j]`. Same 8-wide column tiles, same
+/// ascending-k register accumulation — bit-identical to running
+/// [`matmul_blocked`] on the lane's sub-matrices.
+pub fn matmul_blocked_lane(
+    a: &Matrix,
+    a_off: usize,
+    k: usize,
+    b: &Matrix,
+    out: &mut Matrix,
+    out_off: usize,
+) {
+    assert_eq!(k, b.rows, "matmul lane shape");
+    assert!(a.cols >= a_off + k, "matmul lane a window");
+    assert!(out.cols >= out_off + b.cols, "matmul lane out window");
+    assert!(a.rows >= out.rows, "matmul out rows");
+    let n = b.cols;
+    let mut j = 0;
+    while j < n {
+        let jw = MM_TILE.min(n - j);
+        for i in 0..out.rows {
+            let arow = &a.row(i)[a_off..a_off + k];
+            let mut acc = [0.0f32; MM_TILE];
+            for (k, &av) in arow.iter().enumerate() {
+                let brow = &b.row(k)[j..j + jw];
+                for (x, &bv) in acc[..jw].iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+            out.row_mut(i)[out_off + j..out_off + j + jw].copy_from_slice(&acc[..jw]);
+        }
+        j += MM_TILE;
+    }
+}
+
+/// [`matmul_simd`] over one lane window; same exact-8-chunk walk and
+/// ascending-k accumulation as the unwindowed kernel, so a batched lane
+/// is bit-identical to the same request run alone.
+pub fn matmul_simd_lane(
+    a: &Matrix,
+    a_off: usize,
+    k: usize,
+    b: &Matrix,
+    out: &mut Matrix,
+    out_off: usize,
+) {
+    assert_eq!(k, b.rows, "matmul lane shape");
+    assert!(a.cols >= a_off + k, "matmul lane a window");
+    assert!(out.cols >= out_off + b.cols, "matmul lane out window");
+    assert!(a.rows >= out.rows, "matmul out rows");
+    let n = b.cols;
+    let whole = n - n % SIMD_LANES;
+    for i in 0..out.rows {
+        let arow = &a.row(i)[a_off..a_off + k];
+        let mut j = 0;
+        while j < whole {
+            let mut acc = [0.0f32; SIMD_LANES];
+            for (k, &av) in arow.iter().enumerate() {
+                let brow: &[f32; SIMD_LANES] =
+                    b.row(k)[j..j + SIMD_LANES].try_into().unwrap();
+                for (x, &bv) in acc.iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+            out.row_mut(i)[out_off + j..out_off + j + SIMD_LANES].copy_from_slice(&acc);
+            j += SIMD_LANES;
+        }
+        if j < n {
+            let jw = n - j;
+            let mut acc = [0.0f32; SIMD_LANES];
+            for (k, &av) in arow.iter().enumerate() {
+                let brow = &b.row(k)[j..];
+                for (x, &bv) in acc[..jw].iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+            out.row_mut(i)[out_off + j..out_off + n].copy_from_slice(&acc[..jw]);
+        }
+    }
+}
+
+/// [`matmul_naive`] over one lane window, writing into `out` instead of
+/// allocating: the window is zeroed, then accumulated with the same
+/// `a == 0.0` skip and the same loop order as the preserved reference,
+/// so a batched lane is bit-identical to the same request run alone.
+pub fn matmul_naive_lane(
+    a: &Matrix,
+    a_off: usize,
+    k: usize,
+    b: &Matrix,
+    out: &mut Matrix,
+    out_off: usize,
+) {
+    assert_eq!(k, b.rows, "matmul lane shape");
+    assert!(a.cols >= a_off + k, "matmul lane a window");
+    assert!(out.cols >= out_off + b.cols, "matmul lane out window");
+    assert!(a.rows >= out.rows, "matmul out rows");
+    let n = b.cols;
+    for i in 0..out.rows {
+        let arow = &a.row(i)[a_off..a_off + k];
+        let orow = &mut out.row_mut(i)[out_off..out_off + n];
+        orow.fill(0.0);
+        for (k, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = b.row(k);
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
 // ---- explicit-width SIMD kernels (KernelMode::Simd) -------------------------
 
 /// Lane count of the explicit-width kernels: 8 f32 elements, matching
@@ -403,6 +529,92 @@ mod tests {
             scale_max_assign_simd(&mut b, &x, -0.9);
             assert_eq!(a, b, "scale_max_assign tail at len {len}");
         }
+    }
+
+    /// Column-stack `parts` into one `[rows, Σ cols]` matrix, the
+    /// layout batched runs use for activations.
+    fn stack(parts: &[&Matrix]) -> Matrix {
+        let rows = parts[0].rows;
+        let total: usize = parts.iter().map(|m| m.cols).sum();
+        let mut s = Matrix::filled(rows, total, f32::NAN);
+        for i in 0..rows {
+            let mut off = 0;
+            for m in parts {
+                s.row_mut(i)[off..off + m.cols].copy_from_slice(m.row(i));
+                off += m.cols;
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn lane_matmuls_match_their_sequential_twins() {
+        // Three requests of width k stacked into [rows, 3k]; each lane
+        // of every variant must be bit-identical to the unwindowed
+        // kernel run on that request alone — including tail widths.
+        for n in [1usize, 5, 8, 11] {
+            let k = 6;
+            let rows = 7;
+            let reqs: Vec<Matrix> = (0..3)
+                .map(|b| weights::init_weight(400 + n as u64 * 10 + b, rows as u32, k as u32))
+                .collect();
+            let a = stack(&reqs.iter().collect::<Vec<_>>());
+            let w = weights::init_weight(500 + n as u64, k as u32, n as u32);
+
+            let mut blocked = Matrix::filled(rows, 3 * n, f32::NAN);
+            let mut simd = Matrix::filled(rows, 3 * n, f32::NAN);
+            let mut naive = Matrix::filled(rows, 3 * n, f32::NAN);
+            for lane in 0..3 {
+                matmul_blocked_lane(&a, lane * k, k, &w, &mut blocked, lane * n);
+                matmul_simd_lane(&a, lane * k, k, &w, &mut simd, lane * n);
+                matmul_naive_lane(&a, lane * k, k, &w, &mut naive, lane * n);
+            }
+            for (lane, req) in reqs.iter().enumerate() {
+                let want = matmul_naive(req, &w);
+                let mut want_b = Matrix::zeros(rows, n);
+                matmul_blocked(req, &w, &mut want_b);
+                for i in 0..rows {
+                    let wb: Vec<u32> = want_b.row(i).iter().map(|v| v.to_bits()).collect();
+                    let wn: Vec<u32> = want.row(i).iter().map(|v| v.to_bits()).collect();
+                    let gb: Vec<u32> = blocked.row(i)[lane * n..(lane + 1) * n]
+                        .iter()
+                        .map(|v| v.to_bits())
+                        .collect();
+                    let gs: Vec<u32> = simd.row(i)[lane * n..(lane + 1) * n]
+                        .iter()
+                        .map(|v| v.to_bits())
+                        .collect();
+                    let gn: Vec<u32> = naive.row(i)[lane * n..(lane + 1) * n]
+                        .iter()
+                        .map(|v| v.to_bits())
+                        .collect();
+                    assert_eq!(gb, wb, "blocked lane {lane} row {i} at n={n}");
+                    assert_eq!(gs, wb, "simd lane {lane} row {i} at n={n}");
+                    assert_eq!(gn, wn, "naive lane {lane} row {i} at n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_matmul_with_one_lane_matches_unwindowed() {
+        // Batch size 1 goes through the same lane code with offset 0;
+        // pin that it is literally the unwindowed result.
+        let a = weights::init_weight(600, 5, 7);
+        let w = weights::init_weight(601, 7, 9);
+        let mut want = Matrix::zeros(5, 9);
+        matmul_blocked(&a, &w, &mut want);
+        let mut got = Matrix::filled(5, 9, f32::NAN);
+        matmul_blocked_lane(&a, 0, 7, &w, &mut got, 0);
+        assert!(got.bits_eq(&want));
+        let mut got = Matrix::filled(5, 9, f32::NAN);
+        matmul_simd_lane(&a, 0, 7, &w, &mut got, 0);
+        let mut want_s = Matrix::zeros(5, 9);
+        matmul_simd(&a, &w, &mut want_s);
+        assert!(got.bits_eq(&want_s));
+        let mut got = Matrix::filled(5, 9, f32::NAN);
+        matmul_naive_lane(&a, 0, 7, &w, &mut got, 0);
+        assert!(got.bits_eq(&matmul_naive(&a, &w)));
     }
 
     #[test]

@@ -44,6 +44,16 @@
 //! [`Executor::try_run`] — while the pool heals itself (fresh scratch,
 //! respawned worker threads at the same affinity slot) and the executor
 //! stays usable for the next run, bit-identically.
+//!
+//! Cross-request batching rides the same walk: [`Executor::try_run_with`]
+//! takes a [`RunRequest`] carrying 1..=B feature matrices and performs
+//! *one* partition walk for all of them — every non-weight buffer is
+//! column-stacked to `[rows, B·cols]`, so the per-interval scatter LDs,
+//! gather accumulator setup and shard traversal are paid once per batch
+//! instead of once per request, while per-lane windows over weight
+//! operands keep each request's FP reduction order — and therefore its
+//! bits — identical to a solo run. The legacy `run`/`try_run`/
+//! `run_traced`/`run_profiled` surface survives as thin wrappers.
 
 mod executor;
 pub mod kernels;
@@ -53,7 +63,7 @@ pub mod reference;
 pub mod scratch;
 pub mod weights;
 
-pub use executor::{Executor, KernelMode, PipelineMode};
+pub use executor::{Executor, KernelMode, PipelineMode, RunOutput, RunRequest};
 pub use matrix::Matrix;
 pub use pool::{PoolError, PoolStats};
 pub use scratch::ScratchStats;

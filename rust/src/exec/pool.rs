@@ -31,6 +31,12 @@
 //! single inline [`WorkerScratch`] that the driving thread borrows
 //! directly — no `Mutex`, no channel, nothing on the hot path.
 //!
+//! The pool is batch-agnostic: a cross-request batched run
+//! (`Executor::try_run_with` with B inputs) widens the matrices flowing
+//! through each shard job to `B·cols`, but the `run` closure captures
+//! that via its `ShardEnv` — the epoch protocol, affinity, and buffer
+//! mailboxes are untouched, so one walk serves the whole micro-batch.
+//!
 //! ## Panic isolation
 //!
 //! A shard job that panics (a kernel bug, a pathological spec, an

@@ -29,6 +29,12 @@
 //! [`WorkerScratch`] is private to one GatherPhase worker thread, so the
 //! pools need no synchronisation beyond the per-worker `Mutex` the
 //! executor holds them in.
+//!
+//! The pools are *size-agnostic*: batched runs (`Executor::try_run_with`
+//! with B > 1 inputs) simply demand `B·cols`-wide buffers through the
+//! same slots, and best-fit selection plus capacity-based regrowth make
+//! the transition between batch sizes just another warm-up — no
+//! batch-keyed arenas needed.
 
 use crate::exec::matrix::Matrix;
 use crate::isa::SlotLayout;

@@ -516,3 +516,88 @@ fn executor_output_ref_points_at_result() {
     // The output ref must be a Node (not Input/Degree).
     assert!(matches!(ex.output_ref(), crate::isa::DataRef::Node(_)));
 }
+
+#[test]
+fn batched_executor_bit_identical_to_sequential() {
+    // The cross-request batching property: one batched run over B
+    // column-stacked feature matrices must reproduce, per request, the
+    // exact bits of B solo runs — on every zoo model, both partition
+    // methods, batch sizes 1/3/8 and both worker counts. Stacking never
+    // reorders any per-request FP reduction, so `bits_eq` (not allclose)
+    // is the bar.
+    use crate::exec::RunRequest;
+    use crate::ir::spec::ModelDims;
+    use crate::ir::zoo::ModelZoo;
+    let g = Csr::from_edge_list(&generators::rmat(1 << 8, 3_000, 0.57, 0.19, 0.19, 53));
+    let deg = degree_col(&g);
+    for m in ModelZoo::builtin().entries() {
+        let ir = m.build(ModelDims::uniform(2, 8)).unwrap();
+        let prog = compile(&ir);
+        let mut cfg = cfg_for(&prog, 2 * 1024, 4 * 1024);
+        cfg.num_sthreads = 4;
+        for parts in [partition_fggp(&g, cfg), partition_dsw(&g, cfg)] {
+            for batch in [1usize, 3, 8] {
+                let inputs: Vec<Matrix> = (0..batch)
+                    .map(|b| {
+                        weights::init_features(
+                            7 + b as u64,
+                            g.num_vertices(),
+                            ir.input_dim() as usize,
+                        )
+                    })
+                    .collect();
+                // Solo goldens go through the legacy wrapper, which also
+                // pins `run` as a faithful front for `try_run_with`.
+                let goldens: Vec<Matrix> = inputs
+                    .iter()
+                    .map(|x| Executor::new(&prog, &parts).with_workers(1).run(x, &deg))
+                    .collect();
+                for workers in [1usize, 4] {
+                    let mut ex = Executor::new(&prog, &parts).with_workers(workers);
+                    let out = ex
+                        .try_run_with(&RunRequest::batched(inputs.iter().collect(), &deg))
+                        .expect("batched run faulted");
+                    assert_eq!(out.batch, batch);
+                    assert_eq!(out.outputs.len(), batch);
+                    for (i, (got, want)) in out.outputs.iter().zip(&goldens).enumerate() {
+                        assert!(
+                            got.bits_eq(want),
+                            "{} ({:?}, {workers} workers, batch {batch}): request {i} \
+                             diverged bitwise from its solo run",
+                            m.name(),
+                            parts.method,
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_run_performs_one_partition_walk() {
+    // The amortization pin at the walk level: a traced batched run emits
+    // exactly the solo run's step stream — the executor walks the
+    // partitions once per micro-batch, not once per request.
+    use crate::exec::RunRequest;
+    let ir = Model::Gcn.build(2, 8, 8, 8);
+    let prog = compile(&ir);
+    let g = Csr::from_edge_list(&generators::rmat(1 << 7, 800, 0.57, 0.19, 0.19, 59));
+    let cfg = cfg_for(&prog, 2 * 1024, 4 * 1024);
+    let parts = partition_fggp(&g, cfg);
+    let deg = degree_col(&g);
+    let x0 = weights::init_features(7, g.num_vertices(), 8);
+    let (_, solo_steps) = Executor::new(&prog, &parts).run_traced(&x0, &deg);
+    let inputs: Vec<Matrix> = (0..8)
+        .map(|b| weights::init_features(7 + b as u64, g.num_vertices(), 8))
+        .collect();
+    let mut ex = Executor::new(&prog, &parts);
+    let out = ex
+        .try_run_with(&RunRequest::batched(inputs.iter().collect(), &deg).with_trace(true))
+        .expect("batched traced run faulted");
+    assert_eq!(
+        out.steps.expect("trace was requested"),
+        solo_steps,
+        "a batched run must drive exactly the solo partition walk"
+    );
+}

@@ -10,7 +10,7 @@ use std::process::ExitCode;
 use std::sync::Arc;
 
 use switchblade::compiler::compile;
-use switchblade::coordinator::{bench_executor, Caches, Harness};
+use switchblade::coordinator::{bench_executor, BenchRequest, Caches, Harness};
 use switchblade::dse::{self, Objective, TuneOptions};
 use switchblade::exec::{weights, KernelMode, PipelineMode};
 use switchblade::graph::datasets::{Dataset, DEFAULT_SCALE};
@@ -60,7 +60,7 @@ COMMANDS:
                                            zoo (or one model / spec file)
     bench     [--model M] [--dataset D] [--scale N] [--iters N] [--workers W]
               [--pool-workers W] [--layers N] [--dim D] [--kernel naive|blocked|simd]
-              [--pipeline on|group|off] [--sweep] [--profile]
+              [--pipeline on|group|off] [--sweep] [--profile] [--batch-size B]
               [--trace F] [--metrics F]    functional-executor throughput probe
                                            (single vs shard-parallel; bench.sh
                                            folds this into BENCH_exec.json)
@@ -147,6 +147,28 @@ RELIABILITY (serve --inject / --deadline-ms):
                  Fault/recovery counters (serve_errors, serve_timeouts,
                  exec_worker_panics, serve_entry_restarts, ...) are
                  deliberately NOT gated by bench_diff.sh.
+
+BATCHING (bench --batch-size / serve --batch):
+    Requests that share a (model, graph) entry also share its Program,
+    partitions, and degree column — so a micro-batch executes as ONE
+    batched run: the executor column-stacks the B feature matrices and
+    performs a single partition walk, applying each interval's scatter
+    LDs, gather accumulator setup, and shard traversal once across the
+    whole batch instead of once per request. Per-request FP reduction
+    order is preserved (weight operands get per-lane windows), so every
+    member's output is bit-identical to a solo run — differential- and
+    integration-tested. `serve --batch N` caps the micro-batch (the
+    serving engine drains up to N queued requests into one batched
+    run; deadlines stay per-request). `bench --batch-size B` adds the
+    executor-level amortization probe: B back-to-back solo runs timed
+    against one batched run of the same B inputs on a warm executor,
+    reported as the `exec_batch=` and `exec_batch_amortization=`
+    trailers (solo/batched, higher is better, > 1 means sharing the
+    walk paid off) and the matching metrics-registry gauges.
+    scripts/bench.sh records serve p50 at batch caps 1 and 8
+    (`serve_batch1_p50_ms` / `serve_batch8_p50_ms`, gated by
+    scripts/bench_diff.sh) plus the amortization factor in
+    BENCH_serve.json.
 
 PIPELINE (bench/validate --pipeline on|group|off, default on):
     The functional executor overlaps consecutive destination intervals
@@ -273,6 +295,7 @@ const VALUE_OPTS: &[&str] = &[
     "--out", "--fig", "--tbl", "--config", "--requests", "--dataset", "--iters", "--workers",
     "--pool-workers", "--layers", "--dim", "--kernel", "--pipeline", "--trace", "--metrics",
     "--backend", "--queue-depth", "--batch", "--qps", "--duration", "--inject", "--deadline-ms",
+    "--batch-size",
 ];
 
 /// Positional arguments: whatever is not an option or an option's value.
@@ -709,6 +732,7 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     let sweep = has_flag(rest, "--sweep");
     let kernel = opt_kernel(rest)?;
     let pipeline = opt_pipeline(rest)?;
+    let batch = opt_u32(rest, "--batch-size", 1)?.max(1) as usize;
     let dims = opt_dims(rest, &spec, 2, 32)?;
     let ir = spec
         .build(dims)
@@ -717,11 +741,20 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     eprintln!("generating {} at scale {scale}...", d.full_name());
     let g = d.load(scale);
     let obs = obs_begin(rest);
-    let b = bench_executor(&ir, &g, &accel, workers, iters, profile, kernel, pipeline, sweep);
+    let b = bench_executor(&BenchRequest {
+        workers,
+        iters,
+        profile,
+        kernel,
+        pipeline,
+        sweep,
+        batch,
+        ..BenchRequest::new(&ir, &g, &accel)
+    });
     if !b.bit_identical {
         return Err(
             "executor runs diverged bitwise (single vs parallel vs simd vs pipeline-off \
-             vs legacy vs sweep)"
+             vs legacy vs sweep vs batched)"
                 .into(),
         );
     }
@@ -804,6 +837,12 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
             format!("{:.3} ms/run", s * 1e3),
         ]);
     }
+    if let Some(a) = b.batch_amortization {
+        t.row(vec![
+            format!("batch B={}", b.batch),
+            format!("{a:.2}x amortization"),
+        ]);
+    }
     t.print();
     if let Some(p) = &b.profile {
         println!();
@@ -844,6 +883,10 @@ fn cmd_bench(rest: &[String]) -> Result<(), String> {
     }
     if let Some(legacy) = b.secs_legacy {
         println!("exec_ms_legacy={:.3}", legacy * 1e3);
+    }
+    if let Some(a) = b.batch_amortization {
+        println!("exec_batch={}", b.batch);
+        println!("exec_batch_amortization={a:.3}");
     }
     if let Some(p) = &b.profile {
         println!("exec_profile_json={}", p.to_json());

@@ -4,9 +4,14 @@
 //! This is the serving engine's batching policy in one function. It adds
 //! no artificial delay (no batching timer): a lone request is served
 //! immediately, while a burst that queued up behind a slow request is
-//! lifted out in one `recv` wakeup and amortizes the per-wakeup
-//! bookkeeping across the whole batch. FIFO order is preserved — the
-//! channel is the queue.
+//! lifted out in one `recv` wakeup and executed as **one batched run**
+//! through `Executor::try_run_with` — one partition walk for the whole
+//! micro-batch, the gather/scatter stream amortized across every member.
+//! FIFO order is preserved — the channel is the queue.
+//!
+//! Deadlines stay per-request: the entry loop expires each drained
+//! member against its *own* deadline before the batched run, so sharing
+//! a walk never extends (or shrinks) a batch-mate's budget.
 
 use std::sync::mpsc::Receiver;
 

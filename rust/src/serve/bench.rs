@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 use crate::obs::metrics;
 use crate::util::report::Table;
 
-use super::engine::{Engine, EntryId, ServeError, Ticket};
+use super::engine::{Engine, EntryId, Input, ServeError, SubmitOptions, Ticket};
 
 /// Load-generator knobs.
 #[derive(Clone, Copy, Debug)]
@@ -219,10 +219,7 @@ fn submit(
     seed: u64,
     deadline: Option<Duration>,
 ) -> Result<Ticket, ServeError> {
-    match deadline {
-        Some(d) => engine.submit_seeded_deadline(id, seed, d),
-        None => engine.submit_seeded(id, seed),
-    }
+    engine.submit_with(id, Input::Seeded(seed), SubmitOptions { deadline })
 }
 
 /// Drive the engine with the configured load, round-robining requests

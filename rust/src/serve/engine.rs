@@ -15,19 +15,28 @@
 //!
 //! ## Request flow
 //!
-//! [`Engine::submit`] validates the feature shape, then try-sends the
-//! job into the entry's [`SubmitQueue`] — a full queue is a typed
+//! [`Engine::submit_with`] takes an [`Input`] (a caller feature matrix
+//! or a deterministic seed) plus [`SubmitOptions`] (deadline),
+//! validates the feature shape, then try-sends the job into the
+//! entry's [`SubmitQueue`] — a full queue is a typed
 //! [`ServeError::Rejected`] (admission control), never unbounded
-//! latency. The entry thread lifts whole bursts out with
-//! [`next_batch`], runs each request through the warm executor, and
-//! answers on a per-request reply channel held by the caller's
-//! [`Ticket`]. A request that produces non-finite output fails alone
-//! ([`ServeError::NonFinite`], counted in `serve_errors`) — the engine
-//! keeps serving. Callers that need bounded waits attach a deadline
-//! ([`Engine::submit_deadline`] / [`Ticket::wait_timeout`]); a request
-//! whose deadline passes while it queues is answered
-//! [`ServeError::DeadlineExceeded`] without running, counted in
-//! `serve_timeouts`.
+//! latency. The legacy `submit`/`submit_deadline`/`submit_seeded`/
+//! `submit_seeded_deadline` surface survives as thin wrappers. The
+//! entry thread lifts whole bursts out with [`next_batch`], expires
+//! each member against its *own* deadline, then runs the survivors as
+//! **one batched executor run** ([`Executor::try_run_with`] with the
+//! live feature matrices stacked) — one partition walk per micro-batch,
+//! so the gather/scatter stream is amortized across every request in
+//! it — and answers on per-request reply channels held by the callers'
+//! [`Ticket`]s. A request whose lane of the batched output is
+//! non-finite fails alone ([`ServeError::NonFinite`], counted in
+//! `serve_errors`) — its batch-mates still get their (bit-identical to
+//! solo) results and the engine keeps serving. Callers that need
+//! bounded waits attach a deadline via the options (pair with
+//! [`Ticket::wait_timeout`]); a request whose deadline passes while it
+//! queues is answered [`ServeError::DeadlineExceeded`] without running,
+//! counted in `serve_timeouts` — batch-mates never extend each other's
+//! budget.
 //!
 //! ## Supervised recovery
 //!
@@ -53,7 +62,9 @@ use std::time::{Duration, Instant};
 
 use crate::compiler::compile;
 use crate::coordinator::degree_column;
-use crate::exec::{weights, Executor, KernelMode, Matrix, PipelineMode, PoolStats, ScratchStats};
+use crate::exec::{
+    weights, Executor, KernelMode, Matrix, PipelineMode, PoolStats, RunRequest, ScratchStats,
+};
 use crate::graph::Csr;
 use crate::ir::spec::{ModelDims, ModelSpec};
 use crate::ir::IrGraph;
@@ -293,6 +304,33 @@ pub struct EntryStats {
     pub pool: PoolStats,
 }
 
+/// Request body for [`Engine::submit_with`]: either caller-supplied
+/// features or a deterministic seed expanded entry-side (the same
+/// construction as `coordinator::reference_run`, so equal seeds pin
+/// bit-equal outputs — the load generator and differential tests lean
+/// on this).
+#[derive(Debug, Clone)]
+pub enum Input {
+    /// A `[vertices, in_dim]` feature matrix.
+    Features(Matrix),
+    /// Deterministic features derived from this seed at the entry's
+    /// (vertices, in_dim) shape.
+    Seeded(u64),
+}
+
+/// Per-request options for [`Engine::submit_with`]. `Default` is "no
+/// deadline" — add fields here instead of growing new `submit_*`
+/// method variants.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Queue-wait bound: if the request is still queued when this much
+    /// time has elapsed since submission, the entry answers
+    /// [`ServeError::DeadlineExceeded`] without running it (counted in
+    /// `serve_timeouts`). Pair with [`Ticket::wait_timeout`] for a
+    /// fully bounded round trip.
+    pub deadline: Option<Duration>,
+}
+
 enum Job {
     Infer(InferJob),
     /// Control-plane probe: snapshot the entry's counters + executor
@@ -400,24 +438,48 @@ impl Engine {
         Ok(EntryId(idx))
     }
 
-    /// Submit a feature matrix for inference. Non-blocking: a full
-    /// queue returns [`ServeError::Rejected`] immediately.
-    pub fn submit(&self, id: EntryId, x: Matrix) -> Result<Ticket, ServeError> {
-        self.submit_inner(id, x, None)
+    /// Submit a request for inference — the single submission entry
+    /// point. Non-blocking: a full queue returns
+    /// [`ServeError::Rejected`] immediately. [`Input::Seeded`] expands
+    /// to deterministic features at the entry's shape; a deadline in
+    /// `opts` bounds the queue wait (see [`SubmitOptions::deadline`]).
+    pub fn submit_with(
+        &self,
+        id: EntryId,
+        input: Input,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, ServeError> {
+        let x = match input {
+            Input::Features(x) => x,
+            Input::Seeded(seed) => {
+                let info = &self.entries[id.0].info;
+                weights::init_features(seed, info.vertices, info.in_dim)
+            }
+        };
+        self.submit_inner(id, x, opts.deadline.map(|d| Instant::now() + d))
     }
 
-    /// Like [`Engine::submit`], with a queue-wait bound: if the request
-    /// is still queued when `deadline` has elapsed, the entry answers
-    /// [`ServeError::DeadlineExceeded`] without running it (counted in
-    /// `serve_timeouts`). Pair with [`Ticket::wait_timeout`] for a
-    /// fully bounded round trip.
+    /// Deprecated: thin wrapper over [`Engine::submit_with`] with
+    /// [`Input::Features`] and default options.
+    pub fn submit(&self, id: EntryId, x: Matrix) -> Result<Ticket, ServeError> {
+        self.submit_with(id, Input::Features(x), SubmitOptions::default())
+    }
+
+    /// Deprecated: thin wrapper over [`Engine::submit_with`] with
+    /// [`Input::Features`] and a deadline.
     pub fn submit_deadline(
         &self,
         id: EntryId,
         x: Matrix,
         deadline: Duration,
     ) -> Result<Ticket, ServeError> {
-        self.submit_inner(id, x, Some(Instant::now() + deadline))
+        self.submit_with(
+            id,
+            Input::Features(x),
+            SubmitOptions {
+                deadline: Some(deadline),
+            },
+        )
     }
 
     fn submit_inner(
@@ -463,27 +525,27 @@ impl Engine {
         }
     }
 
-    /// Submit deterministic features derived from `seed` — the request
-    /// body the load generator and the differential tests use (the same
-    /// construction as `coordinator::reference_run`, so equal seeds pin
-    /// bit-equal outputs).
+    /// Deprecated: thin wrapper over [`Engine::submit_with`] with
+    /// [`Input::Seeded`] and default options.
     pub fn submit_seeded(&self, id: EntryId, seed: u64) -> Result<Ticket, ServeError> {
-        let info = &self.entries[id.0].info;
-        let x = weights::init_features(seed, info.vertices, info.in_dim);
-        self.submit(id, x)
+        self.submit_with(id, Input::Seeded(seed), SubmitOptions::default())
     }
 
-    /// [`Engine::submit_seeded`] with a deadline (see
-    /// [`Engine::submit_deadline`]).
+    /// Deprecated: thin wrapper over [`Engine::submit_with`] with
+    /// [`Input::Seeded`] and a deadline.
     pub fn submit_seeded_deadline(
         &self,
         id: EntryId,
         seed: u64,
         deadline: Duration,
     ) -> Result<Ticket, ServeError> {
-        let info = &self.entries[id.0].info;
-        let x = weights::init_features(seed, info.vertices, info.in_dim);
-        self.submit_deadline(id, x, deadline)
+        self.submit_with(
+            id,
+            Input::Seeded(seed),
+            SubmitOptions {
+                deadline: Some(deadline),
+            },
+        )
     }
 
     /// Stats probe through the entry's queue (so it observes every
@@ -690,8 +752,13 @@ fn entry_loop(
                     (batches - 1) as i32,
                     size as i32,
                 );
-                let mut it = jobs.into_iter();
-                while let Some(j) = it.next() {
+                // Expire each member against its *own* deadline at
+                // dequeue — batch-mates never extend another request's
+                // budget — then run the survivors as ONE batched
+                // executor run: a single partition walk serves the
+                // whole micro-batch.
+                let mut live = Vec::with_capacity(jobs.len());
+                for j in jobs {
                     if let Some(dl) = j.deadline {
                         if Instant::now() >= dl {
                             // Expired while queued: answer without
@@ -706,7 +773,11 @@ fn entry_loop(
                             continue;
                         }
                     }
-                    let wait_s = j.enq.elapsed().as_secs_f64();
+                    live.push(j);
+                }
+                if !live.is_empty() {
+                    let waits: Vec<f64> =
+                        live.iter().map(|j| j.enq.elapsed().as_secs_f64()).collect();
                     let t0 = Instant::now();
                     let res = {
                         let _span = trace::span_if(
@@ -715,57 +786,64 @@ fn entry_loop(
                             trace::cat::SERVE,
                             track,
                             -1,
-                            j.seq as i32,
-                            -1,
+                            live[0].seq as i32,
+                            live.len() as i32,
                         );
-                        ex.try_run(&j.x, &deg)
+                        let req =
+                            RunRequest::batched(live.iter().map(|j| &j.x).collect(), &deg);
+                        ex.try_run_with(&req)
                     };
                     let exec_s = t0.elapsed().as_secs_f64();
-                    requests += 1;
-                    metrics::counter("serve_requests", 1);
-                    metrics::observe("serve_wait_s", wait_s);
-                    metrics::observe("serve_latency_s", wait_s + exec_s);
+                    requests += live.len() as u64;
+                    metrics::counter("serve_requests", live.len() as u64);
+                    for &w in &waits {
+                        metrics::observe("serve_wait_s", w);
+                        metrics::observe("serve_latency_s", w + exec_s);
+                    }
                     match res {
-                        Ok(mut out) => {
+                        Ok(out) => {
                             consecutive = 0;
-                            // Injection site: feeds the existing
-                            // non-finite guard, proving a poisoned
-                            // output fails alone (no restart).
-                            faultinject::poison_output(&mut out.data);
-                            let r = if out.data.iter().all(|v| v.is_finite()) {
-                                Ok(Response {
-                                    out,
-                                    seq: j.seq,
-                                    wait_s,
-                                    exec_s,
-                                    batched: size,
-                                })
-                            } else {
-                                errors += 1;
-                                metrics::counter("serve_errors", 1);
-                                Err(ServeError::NonFinite {
-                                    entry: label.clone(),
-                                    seq: j.seq,
-                                })
-                            };
-                            let _ = j.reply.try_send(r);
+                            for ((j, mut m), wait_s) in
+                                live.into_iter().zip(out.outputs).zip(waits)
+                            {
+                                // Injection site: feeds the existing
+                                // non-finite guard, proving a poisoned
+                                // output fails alone (no restart).
+                                faultinject::poison_output(&mut m.data);
+                                // Lanes are column-disjoint through the
+                                // whole walk, so a non-finite member
+                                // fails alone: its batch-mates' lanes
+                                // are untouched.
+                                let r = if m.data.iter().all(|v| v.is_finite()) {
+                                    Ok(Response {
+                                        out: m,
+                                        seq: j.seq,
+                                        wait_s,
+                                        exec_s,
+                                        batched: size,
+                                    })
+                                } else {
+                                    errors += 1;
+                                    metrics::counter("serve_errors", 1);
+                                    Err(ServeError::NonFinite {
+                                        entry: label.clone(),
+                                        seq: j.seq,
+                                    })
+                                };
+                                let _ = j.reply.try_send(r);
+                            }
                         }
                         Err(cause) => {
                             // The executor faulted under this batch:
-                            // fail this request and the rest of the
-                            // in-flight batch with the typed cause, then
-                            // leave the batch loop to rebuild.
+                            // fail every in-flight member with the
+                            // typed cause attributed to its own seq,
+                            // then leave the batch loop to rebuild.
                             faults += 1;
                             let cause = cause.to_string();
-                            let _ = j.reply.try_send(Err(ServeError::Faulted {
-                                entry: label.clone(),
-                                seq: j.seq,
-                                cause: cause.clone(),
-                            }));
-                            for j2 in it.by_ref() {
-                                let _ = j2.reply.try_send(Err(ServeError::Faulted {
+                            for j in live {
+                                let _ = j.reply.try_send(Err(ServeError::Faulted {
                                     entry: label.clone(),
-                                    seq: j2.seq,
+                                    seq: j.seq,
                                     cause: cause.clone(),
                                 }));
                             }

@@ -31,6 +31,7 @@ pub mod queue;
 
 pub use bench::{run_bench, BenchOptions, BenchReport};
 pub use engine::{
-    Engine, EngineConfig, EntryId, EntryInfo, EntryKey, EntryStats, Response, ServeError, Ticket,
+    Engine, EngineConfig, EntryId, EntryInfo, EntryKey, EntryStats, Input, Response, ServeError,
+    SubmitOptions, Ticket,
 };
 pub use queue::{SubmitError, SubmitQueue};

@@ -16,7 +16,9 @@ use switchblade::graph::datasets::Dataset;
 use switchblade::graph::Csr;
 use switchblade::ir::spec::{ModelDims, ModelSpec};
 use switchblade::ir::zoo::ModelZoo;
-use switchblade::serve::{run_bench, BenchOptions, Engine, EngineConfig, ServeError};
+use switchblade::serve::{
+    run_bench, BenchOptions, Engine, EngineConfig, Input, ServeError, SubmitOptions,
+};
 
 fn graph(scale: u32) -> Arc<Csr> {
     Arc::new(Dataset::Ak.load(scale))
@@ -99,6 +101,106 @@ fn micro_batched_equals_one_at_a_time() {
             "request {s}: micro-batched output diverged from one-at-a-time"
         );
     }
+}
+
+#[test]
+fn flooded_micro_batch_is_one_batched_run() {
+    // The cross-request amortization pin at the serve layer: B requests
+    // drained as one micro-batch go down as ONE batched executor run —
+    // one partition walk for the whole batch (`EntryStats::batches`
+    // counts exactly those runs; the exec-layer trace test pins one run
+    // == one walk). Registration returns before the entry thread's
+    // compile + partition + warm-up, so requests submitted immediately
+    // after it queue up behind the warm-up and drain together.
+    let g = graph(10);
+    let spec = ModelZoo::builtin().resolve("gcn").unwrap();
+    let mut engine = Engine::new(EngineConfig {
+        batch_max: 8,
+        ..EngineConfig::default()
+    });
+    let id = engine.register(&spec, ModelDims::uniform(1, 8), g).unwrap();
+    // Mix the canonical entry point and a legacy wrapper: both feed the
+    // same batched path.
+    let tickets: Vec<_> = (0..6u64)
+        .map(|s| {
+            if s % 2 == 0 {
+                engine
+                    .submit_with(id, Input::Seeded(s), SubmitOptions::default())
+                    .unwrap()
+            } else {
+                engine.submit_seeded(id, s).unwrap()
+            }
+        })
+        .collect();
+    for (s, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().unwrap();
+        assert_eq!(r.seq, s as u64);
+        assert_eq!(
+            r.batched, 6,
+            "request {s} did not ride the flooded 6-request micro-batch"
+        );
+    }
+    let st = engine.stats(id).unwrap();
+    assert_eq!(st.requests, 6);
+    assert_eq!(
+        st.batches, 1,
+        "6 flooded requests must drive exactly one batched run (one partition walk)"
+    );
+    assert_eq!(st.max_batch, 6);
+}
+
+#[test]
+fn poisoned_batch_member_fails_alone_in_one_batched_run() {
+    // One NonFinite member of a batched run fails with its OWN seq while
+    // its batch-mates succeed: lanes are column-disjoint in the stacked
+    // run, so one request's inf never leaks into another's columns. The
+    // BLOWUP spec computes exp(1e20 * x): negative features collapse to
+    // exp(-inf) = 0 (finite), positive ones explode to +inf.
+    let g = graph(8);
+    let spec = ModelSpec::parse("blowup", BLOWUP).unwrap();
+    let dims = spec.dims();
+    let mut engine = Engine::new(EngineConfig {
+        batch_max: 8,
+        ..EngineConfig::default()
+    });
+    let id = engine.register(&spec, dims, g.clone()).unwrap();
+    let n = g.num_vertices();
+    let fill = |v: f32| {
+        let mut m = Matrix::zeros(n, 4);
+        for r in 0..n {
+            for c in 0..4 {
+                m.set(r, c, v);
+            }
+        }
+        m
+    };
+    // Flood during warm-up so all three drain as one micro-batch:
+    // healthy, poisoned, healthy.
+    let t0 = engine
+        .submit_with(id, Input::Features(fill(-1.0)), SubmitOptions::default())
+        .unwrap();
+    let t1 = engine
+        .submit_with(id, Input::Features(fill(1.0)), SubmitOptions::default())
+        .unwrap();
+    let t2 = engine
+        .submit_with(id, Input::Features(fill(-1.0)), SubmitOptions::default())
+        .unwrap();
+    let r0 = t0.wait().unwrap();
+    assert_eq!((r0.seq, r0.batched), (0, 3));
+    match t1.wait() {
+        Err(ServeError::NonFinite { seq, .. }) => assert_eq!(seq, 1),
+        other => panic!(
+            "poisoned member should fail NonFinite with its own seq, got {:?}",
+            other.map(|r| r.seq)
+        ),
+    }
+    let r2 = t2.wait().unwrap();
+    assert_eq!((r2.seq, r2.batched), (2, 3));
+    let st = engine.stats(id).unwrap();
+    assert_eq!(st.batches, 1, "the three requests must share one batched run");
+    assert_eq!(st.requests, 3);
+    assert_eq!(st.errors, 1, "exactly the poisoned member fails");
+    assert_eq!(st.faults, 0, "a NonFinite member is not an executor fault");
 }
 
 #[test]

@@ -4,7 +4,10 @@
 # on vs off, blocked vs simd vs legacy kernels, plus a 1/2/4/8-worker
 # sweep over the persistent pool) and writes the results to
 # BENCH_exec.json at the repo root, then drives the serving engine's
-# closed-loop load generator into BENCH_serve.json beside it. Re-run
+# closed-loop load generator into BENCH_serve.json beside it — at the
+# default micro-batch cap and again pinned to caps 1 and 8, landing the
+# serve_batch1_p50_ms / serve_batch8_p50_ms spread and the executor's
+# exec_batch_amortization probe in the same artifact. Re-run
 # before and after a perf-relevant change and diff the two files
 # (scripts/bench_diff.sh automates the diff and is what CI's bench-diff
 # gate runs). CI's bench job uploads both files as artifacts
@@ -101,5 +104,39 @@ SERVE_REQUESTS="${SERVE_REQUESTS:-64}"
 echo "timing serving engine ($MODEL on $DATASET, $SERVE_REQUESTS closed-loop requests)..." >&2
 "$BIN" serve --model "$MODEL" --dataset "$DATASET" --scale "$SCALE" \
   --bench --requests "$SERVE_REQUESTS" --out "$SERVE_OUT" >/dev/null
+
+# Cross-request batching trajectory: the same closed loop pinned to
+# micro-batch caps 1 and 8 — the p50 spread is the serving-side
+# amortization win — plus the executor-layer probe's solo/batched wall
+# ratio from `bench --batch-size`. All three keys are spliced into
+# BENCH_serve.json so bench_diff.sh gates the batched latencies the same
+# way it gates the rest of the serving trajectory.
+echo "timing serving engine at micro-batch caps 1 and 8..." >&2
+B1=$(mktemp "${TMPDIR:-/tmp}/bench_serve_b1.XXXXXX.json")
+B8=$(mktemp "${TMPDIR:-/tmp}/bench_serve_b8.XXXXXX.json")
+trap 'rm -f "$METRICS" "$B1" "$B8"' EXIT
+"$BIN" serve --model "$MODEL" --dataset "$DATASET" --scale "$SCALE" \
+  --bench --requests "$SERVE_REQUESTS" --batch 1 --out "$B1" >/dev/null
+"$BIN" serve --model "$MODEL" --dataset "$DATASET" --scale "$SCALE" \
+  --bench --requests "$SERVE_REQUESTS" --batch 8 --out "$B8" >/dev/null
+sv() { sed -n "s/^ *\"serve_p50_ms\": *\(.*\)$/\1/p" "$1" | head -1 | tr -d ','; }
+batch1_p50=$(sv "$B1")
+batch8_p50=$(sv "$B8")
+
+echo "probing executor batch amortization (batch 8)..." >&2
+amort=$("$BIN" bench --model "$MODEL" --dataset "$DATASET" --scale "$SCALE" \
+  --iters "$ITERS" --batch-size 8 | sed -n 's/^exec_batch_amortization=//p' | head -1)
+
+awk -v b1="${batch1_p50:-null}" -v b8="${batch8_p50:-null}" -v am="${amort:-null}" '
+  NR == 1 && /^{/ {
+    print
+    printf "  \"serve_batch1_p50_ms\": %s,\n", b1
+    printf "  \"serve_batch8_p50_ms\": %s,\n", b8
+    printf "  \"exec_batch_amortization\": %s,\n", am
+    next
+  }
+  { print }
+' "$SERVE_OUT" > "$SERVE_OUT.tmp" && mv "$SERVE_OUT.tmp" "$SERVE_OUT"
+
 echo "wrote $SERVE_OUT:" >&2
 cat "$SERVE_OUT"

@@ -11,18 +11,22 @@
 #
 # Gated keys (lower is better): exec_ms_parallel (the headline number),
 # exec_ms_single, exec_ms_simd, exec_ms_pipeline_off, the worker-sweep
-# points exec_ms_w1/w2/w4/w8, repro_fig7_s, and the serving-engine tail
-# latencies serve_p50_ms/serve_p95_ms/serve_p99_ms. A key missing or
-# non-numeric on either side is reported and skipped, never fatal — an
-# exec artifact has no serve keys and vice versa, a raw metrics file has
-# no repro_fig7_s, and an old baseline may predate a key. The gate fails
-# (exit 1) only when a key present on both sides regressed by more than
-# MAX_PCT percent (default 10).
+# points exec_ms_w1/w2/w4/w8, repro_fig7_s, the serving-engine tail
+# latencies serve_p50_ms/serve_p95_ms/serve_p99_ms, and the batched
+# serving points serve_batch1_p50_ms/serve_batch8_p50_ms. A key missing
+# or non-numeric on either side is reported and skipped, never fatal —
+# an exec artifact has no serve keys and vice versa, a raw metrics file
+# has no repro_fig7_s, and an old baseline may predate a key. The gate
+# fails (exit 1) only when a key present on both sides regressed by more
+# than MAX_PCT percent (default 10).
 #
 # Fault/recovery counters (serve_errors, serve_timeouts, and the
 # exec_worker_panics / serve_entry_restarts / serve_degraded metrics) are
 # deliberately NOT gated: they are workload facts, not latencies — a
-# chaos run with injected faults must not trip the perf gate.
+# chaos run with injected faults must not trip the perf gate. Neither is
+# exec_batch_amortization: it is a higher-is-better ratio, so the
+# lower-is-better latency gate would read an improvement as a
+# regression; it rides in BENCH_serve.json for the trajectory record.
 #
 # Exit codes: 0 ok / nothing comparable, 1 regression, 2 usage error.
 set -euo pipefail
@@ -51,7 +55,8 @@ fail=0
 compared=0
 for key in exec_ms_parallel exec_ms_single exec_ms_simd exec_ms_pipeline_off \
            exec_ms_w1 exec_ms_w2 exec_ms_w4 exec_ms_w8 repro_fig7_s \
-           serve_p50_ms serve_p95_ms serve_p99_ms; do
+           serve_p50_ms serve_p95_ms serve_p99_ms \
+           serve_batch1_p50_ms serve_batch8_p50_ms; do
   b=$(val "$BASE" "$key")
   c=$(val "$CAND" "$key")
   if ! is_num "${b:-x}" || ! is_num "${c:-x}"; then

@@ -23,13 +23,16 @@
 #   chaos      reliability gate: the chaos integration suite (injected
 #              worker panics, stalls, NaNs against the real stack) + a
 #              `serve --inject` smoke pinning the recovery trailers
+#   batch      cross-request batching smoke: the batched differential
+#              tests + `bench --batch-size` trailer pins (bit-identity
+#              and amortization) + a `serve --batch 8 --verify` run
 #   bench      scripts/bench.sh -> BENCH_exec.json + BENCH_serve.json
 #              (perf trajectory point)
 #   bench-diff scripts/bench_diff.sh BENCH_exec.json (and BENCH_serve.json
 #              when present) against $BASELINE (skips gracefully when no
 #              baseline is present)
-#   all        fmt clippy test smoke profiler trace serve chaos (+ bench
-#              when BENCH=1, the historical knob)
+#   all        fmt clippy test smoke profiler trace serve chaos batch
+#              (+ bench when BENCH=1, the historical knob)
 set -euo pipefail
 SCRIPT_DIR="$(cd "$(dirname "$0")" && pwd)"
 cd "$SCRIPT_DIR/../rust"
@@ -192,6 +195,33 @@ stage_chaos() {
   echo "chaos OK (faults injected: $fired)"
 }
 
+# Cross-request batching smoke: the batched-vs-sequential differential
+# tests (bit-identity + the one-walk trace pin + the serve micro-batch
+# integration), then `bench --batch-size` at tiny scale pinning the
+# machine-readable trailers (the probe verifies bit-identity in-process:
+# exec_bitmatch covers the batched outputs too), then a batched
+# `serve --verify` run proving the serving path end to end.
+stage_batch() {
+  echo "== batch smoke: batched differentials + bench --batch-size + serve --batch =="
+  cargo test -q --release batched
+  cargo test -q --release --test integration_serve batch
+  local out
+  out=$(cargo run --release --quiet -- bench --model GCN --dataset AK \
+    --scale 12 --iters 1 --batch-size 4)
+  local key
+  for key in 'exec_batch=4' 'exec_batch_amortization=' 'exec_bitmatch=true'; do
+    echo "$out" | grep -q "^$key" \
+      || { echo "bench --batch-size lost its '$key' trailer" >&2; exit 1; }
+  done
+  out=$(cargo run --release --quiet -- serve --model GCN --dataset AK \
+    --scale 12 --requests 8 --batch 8 --verify)
+  for key in 'serve_backend=native' 'serve_verified=ok' 'serve_errors=0'; do
+    echo "$out" | grep -q "^$key" \
+      || { echo "serve --batch lost its '$key' trailer" >&2; exit 1; }
+  done
+  echo "batch smoke OK"
+}
+
 stage_bench() {
   echo "== bench: scripts/bench.sh -> BENCH_exec.json + BENCH_serve.json =="
   "$SCRIPT_DIR/bench.sh"
@@ -230,6 +260,7 @@ run_stage() {
     trace)      stage_trace ;;
     serve)      stage_serve ;;
     chaos)      stage_chaos ;;
+    batch)      stage_batch ;;
     bench)      stage_bench ;;
     bench-diff) stage_bench_diff ;;
     all)
@@ -241,12 +272,13 @@ run_stage() {
       stage_trace
       stage_serve
       stage_chaos
+      stage_batch
       if [[ "${BENCH:-0}" != "0" ]]; then
         stage_bench
       fi
       ;;
     *)
-      echo "unknown stage '$1' (fmt|clippy|test|test-simd|smoke|profiler|trace|serve|chaos|bench|bench-diff|all)" >&2
+      echo "unknown stage '$1' (fmt|clippy|test|test-simd|smoke|profiler|trace|serve|chaos|batch|bench|bench-diff|all)" >&2
       exit 2
       ;;
   esac
